@@ -1,0 +1,45 @@
+//! Quickstart: the smallest complete use of the public API — build a
+//! cluster, generate a workload, run the Bayes scheduler, read the metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::metrics::stats;
+use bayes_sched::scheduler;
+use bayes_sched::workload::generator::{generate, WorkloadConfig};
+
+fn main() {
+    // 1. a 10-node, 2-rack cluster of standard TaskTrackers
+    let cluster = Cluster::homogeneous(10, 2);
+
+    // 2. 50 mixed jobs arriving as a Poisson process (0.5 jobs/s)
+    let workload = WorkloadConfig {
+        n_jobs: 50,
+        arrival_rate: 0.5,
+        seed: 42,
+        ..Default::default()
+    };
+    let specs = generate(&workload);
+
+    // 3. the paper's scheduler: online Naive Bayes with overload feedback
+    let sched = scheduler::by_name("bayes", workload.seed).unwrap();
+
+    // 4. run the JobTracker to completion
+    let mut jt = JobTracker::new(cluster, sched, specs, workload.seed, TrackerConfig::default());
+    let makespan = jt.run();
+
+    // 5. read the results
+    let m = &jt.metrics;
+    let lat = m.latencies();
+    println!("scheduler        : bayes");
+    println!("jobs completed   : {}", m.outcomes.len());
+    println!("makespan         : {makespan:.1} s (virtual)");
+    println!("throughput       : {:.3} jobs/s", m.throughput());
+    println!("mean job latency : {:.1} s", stats::mean(&lat));
+    println!("p95 job latency  : {:.1} s", stats::percentile(&lat, 95.0));
+    println!("overload rate    : {:.3}", m.overload_rate());
+    println!("node-local maps  : {:.1} %", 100.0 * m.locality_fraction("node_local"));
+    println!("feedback samples : good={} bad={}", m.feedback[0], m.feedback[1]);
+    assert!(jt.jobs.all_complete());
+}

@@ -1,0 +1,63 @@
+//! Trace workflow: generate a workload trace, persist it as JSON, reload
+//! it, and replay the identical job stream under several schedulers —
+//! the apples-to-apples comparison methodology the experiments use.
+//!
+//!     cargo run --release --example trace_explorer
+
+use std::collections::BTreeMap;
+
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::builder::{build_tracker_with, RunConfig};
+use bayes_sched::report::table::{fnum, Table};
+use bayes_sched::workload::generator::{generate, WorkloadConfig};
+use bayes_sched::workload::trace;
+
+fn main() -> anyhow::Result<()> {
+    // 1. generate + save
+    let workload = WorkloadConfig { n_jobs: 80, arrival_rate: 0.8, seed: 5, ..Default::default() };
+    let specs = generate(&workload);
+    let path = std::env::temp_dir().join("bayes_sched_demo_trace.json");
+    trace::save(&specs, &path)?;
+    println!("wrote {} jobs to {}", specs.len(), path.display());
+
+    // 2. inspect the trace composition
+    let mut by_class: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for s in &specs {
+        let e = by_class.entry(s.class.name()).or_default();
+        e.0 += 1;
+        e.1 += s.map_works.len() + s.reduce_works.len();
+    }
+    let mut comp = Table::new("trace composition", &["class", "jobs", "tasks"]);
+    for (class, (jobs, tasks)) in by_class {
+        comp.row(vec![class.into(), jobs.to_string(), tasks.to_string()]);
+    }
+    println!("{}", comp.render());
+
+    // 3. reload + replay under every scheduler
+    let loaded = trace::load(&path)?;
+    assert_eq!(loaded.len(), specs.len());
+    let mut table = Table::new(
+        "identical trace replayed per scheduler",
+        &["scheduler", "makespan_s", "throughput", "overload_rate"],
+    );
+    for sched in ["fifo", "fair", "capacity", "bayes", "random"] {
+        let cfg = RunConfig {
+            scheduler: sched.into(),
+            n_nodes: 16,
+            n_racks: 4,
+            workload: workload.clone(),
+            ..Default::default()
+        };
+        let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+        let mut jt = build_tracker_with(&cfg, cluster, loaded.clone())?;
+        jt.run();
+        table.row(vec![
+            sched.into(),
+            fnum(jt.metrics.makespan),
+            fnum(jt.metrics.throughput()),
+            fnum(jt.metrics.overload_rate()),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! YARN-mode scenario (paper §2 + E10): the Bayes policy inside the
+//! ResourceManager, against YARN-FIFO and YARN-Fair, under the
+//! declared-vs-actual container demand mismatch that defeats pure fit
+//! checking.
+//!
+//!     cargo run --release --example yarn_mode
+
+use bayes_sched::cluster::Cluster;
+use bayes_sched::metrics::stats;
+use bayes_sched::report::table::{fnum, Table};
+use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
+use bayes_sched::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+fn main() {
+    let workload = WorkloadConfig {
+        n_jobs: 120,
+        arrival_rate: 0.6,
+        mix: Mix::cpu_fraction(0.4),
+        seed: 10,
+        ..Default::default()
+    };
+    let mut table = Table::new(
+        "YARN mode: RM policies under misdeclared container demands",
+        &[
+            "policy",
+            "makespan_s",
+            "mean_latency_s",
+            "overload_rate",
+            "overload_seconds",
+            "oom_kills",
+            "failed_jobs",
+        ],
+    );
+    for policy in ["yarn-fifo", "yarn-fair", "yarn-bayes"] {
+        let mut rm = ResourceManager::new(
+            Cluster::homogeneous(24, 4),
+            yarn_policy_by_name(policy, 1.0).expect("policy"),
+            generate(&workload),
+            workload.seed,
+            YarnConfig::default(),
+        );
+        rm.run();
+        let m = &rm.metrics;
+        let lat = m.latencies();
+        table.row(vec![
+            policy.into(),
+            fnum(m.makespan),
+            fnum(stats::mean(&lat)),
+            fnum(m.overload_rate()),
+            fnum(m.overload_seconds),
+            format!("{}", m.oom_kills),
+            format!("{}", m.failed_jobs),
+        ]);
+        assert!(rm.jobs.all_complete());
+    }
+    println!("{}", table.render());
+    println!(
+        "the RM fit-checks DECLARED demands; ACTUAL usage diverges (users\n\
+         misdeclare), so fit-only policies still overload. the bayes policy\n\
+         learns the gap from overload feedback — the paper's algorithm\n\
+         transplanted into the architecture its §2 motivates."
+    );
+}

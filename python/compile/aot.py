@@ -1,0 +1,136 @@
+"""AOT-lower the L2 entry points to HLO *text* for the rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla`` 0.1.6
+crate links) rejects (``proto.id() <= INT_MAX``). The HLO text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_classify():
+    """Lower classify_jobs at the fixed artifact shapes (DESIGN.md §2.1)."""
+    fn = functools.partial(model.classify_jobs, n_bins=C.N_BINS, tile_n=C.TILE_N)
+    specs = (
+        jax.ShapeDtypeStruct((C.N_CLASSES,), jnp.float32),            # log_prior
+        jax.ShapeDtypeStruct((C.N_CLASSES, C.FEATURE_DIM), jnp.float32),  # log_lik
+        jax.ShapeDtypeStruct((C.MAX_JOBS, C.N_FEATURES), jnp.int32),  # feats
+        jax.ShapeDtypeStruct((C.MAX_JOBS,), jnp.float32),             # utility
+        jax.ShapeDtypeStruct((C.MAX_JOBS,), jnp.float32),             # mask
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_update():
+    """Lower update_model at the fixed artifact shapes (DESIGN.md §2.1)."""
+    fn = functools.partial(model.update_model, n_bins=C.N_BINS, tile_m=C.MAX_BATCH)
+    specs = (
+        jax.ShapeDtypeStruct((C.N_CLASSES, C.FEATURE_DIM), jnp.float32),  # counts
+        jax.ShapeDtypeStruct((C.N_CLASSES,), jnp.float32),            # class_counts
+        jax.ShapeDtypeStruct((C.MAX_BATCH, C.N_FEATURES), jnp.int32),  # feats
+        jax.ShapeDtypeStruct((C.MAX_BATCH,), jnp.int32),              # labels
+        jax.ShapeDtypeStruct((C.MAX_BATCH,), jnp.float32),            # mask
+        jax.ShapeDtypeStruct((), jnp.float32),                        # alpha
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+MANIFEST_SHAPES = {
+    "classify": {
+        "inputs": [
+            ["log_prior", "f32", [C.N_CLASSES]],
+            ["log_lik", "f32", [C.N_CLASSES, C.FEATURE_DIM]],
+            ["feats", "i32", [C.MAX_JOBS, C.N_FEATURES]],
+            ["utility", "f32", [C.MAX_JOBS]],
+            ["mask", "f32", [C.MAX_JOBS]],
+        ],
+        "outputs": [
+            ["p_good", "f32", [C.MAX_JOBS]],
+            ["score", "f32", [C.MAX_JOBS]],
+            ["best", "i32", [1]],
+        ],
+    },
+    "update": {
+        "inputs": [
+            ["counts", "f32", [C.N_CLASSES, C.FEATURE_DIM]],
+            ["class_counts", "f32", [C.N_CLASSES]],
+            ["feats", "i32", [C.MAX_BATCH, C.N_FEATURES]],
+            ["labels", "i32", [C.MAX_BATCH]],
+            ["mask", "f32", [C.MAX_BATCH]],
+            ["alpha", "f32", []],
+        ],
+        "outputs": [
+            ["new_counts", "f32", [C.N_CLASSES, C.FEATURE_DIM]],
+            ["new_class_counts", "f32", [C.N_CLASSES]],
+            ["log_prior", "f32", [C.N_CLASSES]],
+            ["log_lik", "f32", [C.N_CLASSES, C.FEATURE_DIM]],
+        ],
+    },
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with the scaffold Makefile target name.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = {}
+    for name, lower in (("classify", lower_classify), ("update", lower_update)):
+        text = to_hlo_text(lower())
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            **MANIFEST_SHAPES[name],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "constants": {
+            "max_jobs": C.MAX_JOBS,
+            "n_features": C.N_FEATURES,
+            "n_bins": C.N_BINS,
+            "n_classes": C.N_CLASSES,
+            "max_batch": C.MAX_BATCH,
+            "feature_dim": C.FEATURE_DIM,
+        },
+        "entries": entries,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

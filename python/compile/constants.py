@@ -1,0 +1,24 @@
+"""Fixed artifact shapes shared by the L1/L2 compile path and the rust runtime.
+
+AOT-lowered HLO has static shapes; the rust coordinator pads/masks its job
+queue and feedback batches to these sizes. Keep in sync with
+``rust/src/runtime/artifacts.rs`` (checked at load time via manifest.json).
+"""
+
+# Job-queue scoring batch (padded, masked).
+MAX_JOBS = 256
+# Feature variables per (job, node) pair: 4 job features (avg cpu, mem, io,
+# net usage declared at submit, 1-10) + 4 node features (cpu usage, idle mem,
+# io load, net load from the last heartbeat, 1-10).
+N_FEATURES = 8
+# The paper's 1-10 discretization -> bins 0..9.
+N_BINS = 10
+# good / bad (class 0 = good, class 1 = bad).
+N_CLASSES = 2
+# Feedback-update batch (padded, masked).
+MAX_BATCH = 128
+
+# MXU-friendly row tile for the scoring matmul.
+TILE_N = 128
+
+FEATURE_DIM = N_FEATURES * N_BINS  # flattened one-hot width (80)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: batch Naive-Bayes joint log-probability scoring.
+
+Hardware adaptation (DESIGN.md §2.2): the natural GPU formulation is a
+gather per (job, feature) — poor on TPU. We one-hot encode the discretized
+features (done in L2, cheap VPU work) so the whole batch score becomes a
+single ``[N, F*B] @ [F*B, C]`` matmul plus a broadcast prior add — the exact
+shape the MXU systolic array wants. The grid streams row tiles of N; the
+flattened table (F*B x C = 80x2 f32 = 640 B) and a 128-row activation tile
+(40 KiB) are both VMEM-resident, so no K-tiling or double buffering is
+needed.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both jax-CPU (tests)
+and the rust xla/PJRT runtime can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(onehot_ref, loglik_t_ref, prior_ref, out_ref):
+    """One row-tile: out = onehot @ loglik_t + prior.
+
+    onehot_ref:   f32[TILE_N, F*B]  one-hot encoded features for this tile
+    loglik_t_ref: f32[F*B, C]       transposed flattened log-likelihood table
+    prior_ref:    f32[1, C]         log class priors (broadcast over rows)
+    out_ref:      f32[TILE_N, C]    joint log-probability per (job, class)
+    """
+    oh = onehot_ref[...]
+    llt = loglik_t_ref[...]
+    pr = prior_ref[...]
+    out_ref[...] = jnp.dot(oh, llt, preferred_element_type=jnp.float32) + pr
+
+
+def _score_kernel_bf16(onehot_ref, loglik_t_ref, prior_ref, out_ref):
+    """bf16-input variant: the MXU's native matmul dtype. The one-hot
+    activations are exact in bf16 (values 0/1); only the log-likelihood
+    table is rounded (8-bit mantissa -> ~3 decimal digits), and the
+    accumulation stays f32 (`preferred_element_type`), mirroring TPU MXU
+    semantics. Error bound per output: F * |log_lik| * 2^-8.
+    """
+    oh = onehot_ref[...].astype(jnp.bfloat16)
+    llt = loglik_t_ref[...].astype(jnp.bfloat16)
+    pr = prior_ref[...]
+    out_ref[...] = jnp.dot(oh, llt, preferred_element_type=jnp.float32) + pr
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "use_bf16"))
+def score_onehot(onehot, log_lik, log_prior, *, tile_n=128, use_bf16=False):
+    """Joint log-probability of each row under each class.
+
+    Args:
+      onehot:    f32[N, F*B] one-hot encoded feature rows.
+      log_lik:   f32[C, F*B] flattened log-likelihood table.
+      log_prior: f32[C] log class priors.
+      tile_n:    row tile; N must be a multiple (callers pad).
+      use_bf16:  cast matmul inputs to bfloat16 with f32 accumulation
+                 (MXU-native mode; ~3-digit table precision).
+
+    Returns:
+      f32[N, C] joint log-probabilities.
+    """
+    n, fb = onehot.shape
+    c = log_prior.shape[0]
+    if n % tile_n != 0:
+        raise ValueError(f"N={n} must be a multiple of tile_n={tile_n}")
+    loglik_t = log_lik.T  # [F*B, C]
+    prior2d = log_prior.reshape(1, c)
+    grid = (n // tile_n,)
+    kernel = _score_kernel_bf16 if use_bf16 else _score_kernel
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, fb), lambda i: (i, 0)),
+            pl.BlockSpec((fb, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(onehot, loglik_t, prior2d)

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: Naive-Bayes count accumulation from a feedback batch.
+
+The scatter-add ``counts[label[m], flat[m, j]] += mask[m]`` is reformulated
+as a matmul (DESIGN.md §2.2): with L (masked label one-hots, ``[M, C]``) and
+X (feature one-hots, ``[M, F*B]``), the count delta is ``Lᵀ @ X`` — an MXU
+contraction over the batch dimension M. The kernel computes one (C, F*B)
+output block per grid step, accumulating over M tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(lab_t_ref, onehot_ref, out_ref):
+    """Accumulate one M-tile: out += lab_t @ onehot.
+
+    lab_t_ref:  f32[C, TILE_M] masked label one-hots, transposed
+    onehot_ref: f32[TILE_M, F*B] feature one-hots
+    out_ref:    f32[C, F*B] count delta (accumulated across the grid)
+    """
+    m_idx = pl.program_id(0)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        lab_t_ref[...], onehot_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def count_delta(labels_onehot, onehot, *, tile_m=128):
+    """Count-table delta from a masked feedback batch.
+
+    Args:
+      labels_onehot: f32[M, C] label one-hots, already multiplied by the
+        sample mask (padding rows are all-zero).
+      onehot:        f32[M, F*B] feature one-hots.
+      tile_m:        batch tile; M must be a multiple (callers pad).
+
+    Returns:
+      f32[C, F*B] delta such that new_counts = counts + delta.
+    """
+    m, c = labels_onehot.shape
+    _, fb = onehot.shape
+    if m % tile_m != 0:
+        raise ValueError(f"M={m} must be a multiple of tile_m={tile_m}")
+    lab_t = labels_onehot.T  # [C, M]
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, tile_m), lambda i: (0, i)),
+            pl.BlockSpec((tile_m, fb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, fb), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, fb), jnp.float32),
+        interpret=True,
+    )(lab_t, onehot)

@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracle for the Bayes kernels.
+
+Deliberately uses the *gather* formulation (index into the log-likelihood
+table per feature) rather than the one-hot matmul the Pallas kernels use, so
+the two paths are independent implementations of the same math.
+"""
+
+import jax.numpy as jnp
+
+
+def score_ref(log_prior, log_lik, feats):
+    """Joint log-probability of each job under each class.
+
+    Args:
+      log_prior: f32[C] log class priors.
+      log_lik:   f32[C, F*B] flattened log P(feature j = bin v | class).
+      feats:     i32[N, F] bin indices in [0, B).
+
+    Returns:
+      f32[N, C] where out[n, c] = log_prior[c] + sum_j log_lik[c, j*B + feats[n, j]].
+    """
+    n, f = feats.shape
+    b = log_lik.shape[1] // f
+    # flat index j*B + v per (job, feature)
+    flat = feats + jnp.arange(f, dtype=feats.dtype)[None, :] * b  # [N, F]
+    gathered = log_lik[:, flat]  # [C, N, F]
+    return log_prior[None, :] + jnp.transpose(gathered.sum(axis=-1))  # [N, C]
+
+
+def posterior_good_ref(log_prior, log_lik, feats):
+    """P(class 0 | feats) per job, numerically stable two-class softmax."""
+    s = score_ref(log_prior, log_lik, feats)  # [N, C] with C == 2
+    m = jnp.max(s, axis=1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e[:, 0] / jnp.sum(e, axis=1)
+
+
+def classify_ref(log_prior, log_lik, feats, utility, mask):
+    """Full reference classify: posterior, expected-utility score, argmax."""
+    p_good = posterior_good_ref(log_prior, log_lik, feats)
+    score = jnp.where(mask > 0, p_good * utility, -1e30)
+    best = jnp.argmax(score).astype(jnp.int32).reshape(1)
+    return p_good, score, best
+
+
+def update_counts_ref(counts, class_counts, feats, labels, mask):
+    """Accumulate masked feedback samples into the NB count tables.
+
+    Args:
+      counts:       f32[C, F*B] per-(class, feature, bin) counts.
+      class_counts: f32[C].
+      feats:        i32[M, F] bin indices.
+      labels:       i32[M] class ids in [0, C).
+      mask:         f32[M] 1.0 = real sample, 0.0 = padding.
+    """
+    c_dim, fb = counts.shape
+    m, f = feats.shape
+    b = fb // f
+    flat = feats + jnp.arange(f, dtype=feats.dtype)[None, :] * b  # [M, F]
+    cls_onehot = (labels[:, None] == jnp.arange(c_dim)[None, :]).astype(counts.dtype)
+    cls_onehot = cls_onehot * mask[:, None]  # [M, C]
+    pos_onehot = (flat[:, :, None] == jnp.arange(fb)[None, None, :]).astype(counts.dtype)
+    pos_onehot = pos_onehot.sum(axis=1)  # [M, F*B], one 1 per feature slot
+    delta = jnp.einsum("mc,mk->ck", cls_onehot, pos_onehot)
+    new_counts = counts + delta
+    new_class_counts = class_counts + cls_onehot.sum(axis=0)
+    return new_counts, new_class_counts
+
+
+def smoothed_tables_ref(counts, class_counts, alpha, n_bins):
+    """Laplace-smoothed log tables from counts.
+
+    P(J_j = v | c) = (counts[c, j*B+v] + alpha) / (class_counts[c] + alpha*B)
+    P(c)           = (class_counts[c] + alpha) / (sum + alpha*C)
+    """
+    c_dim = class_counts.shape[0]
+    log_lik = jnp.log(counts + alpha) - jnp.log(
+        class_counts[:, None] + alpha * n_bins
+    )
+    log_prior = jnp.log(class_counts + alpha) - jnp.log(
+        class_counts.sum() + alpha * c_dim
+    )
+    return log_prior, log_lik
+
+
+def update_ref(counts, class_counts, feats, labels, mask, alpha, n_bins):
+    """Full reference update: new counts + smoothed log tables."""
+    nc, ncc = update_counts_ref(counts, class_counts, feats, labels, mask)
+    lp, ll = smoothed_tables_ref(nc, ncc, alpha, n_bins)
+    return nc, ncc, lp, ll

@@ -1,0 +1,97 @@
+"""L2: the Bayes-scheduler compute graph in JAX, calling the L1 kernels.
+
+Two entry points, each AOT-lowered by ``aot.py`` to one HLO module the rust
+coordinator executes through PJRT:
+
+  * ``classify_jobs`` — score every queued job against a node's features and
+    pick the expected-utility argmax (paper §4.2 selection step).
+  * ``update_model``  — fold a batch of overload-rule feedback samples into
+    the classifier's count tables and re-derive the smoothed log tables
+    (paper §4.2 feedback step).
+
+Everything around the kernels (one-hot encoding, softmax, argmax, Laplace
+smoothing) is plain jnp so XLA fuses it into the same module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bayes_score import score_onehot
+from .kernels.bayes_update import count_delta
+
+
+def encode_onehot(feats, n_bins):
+    """f32 one-hot encoding of discretized features.
+
+    Args:
+      feats:  i32[N, F] bin indices in [0, n_bins).
+      n_bins: static bin count B.
+
+    Returns:
+      f32[N, F*B] flattened one-hot rows (exactly F ones per row).
+    """
+    n, f = feats.shape
+    oh = jax.nn.one_hot(feats, n_bins, dtype=jnp.float32)  # [N, F, B]
+    return oh.reshape(n, f * n_bins)
+
+
+def classify_jobs(log_prior, log_lik, feats, utility, mask, *, n_bins, tile_n=128):
+    """Classify the padded job queue against one node and select the best job.
+
+    Args:
+      log_prior: f32[2] log priors (class 0 = good, 1 = bad).
+      log_lik:   f32[2, F*B] flattened log-likelihood table.
+      feats:     i32[N, F] per-job feature bins (job features + node features).
+      utility:   f32[N] utility U(i) per job.
+      mask:      f32[N] 1.0 = real job, 0.0 = queue padding.
+
+    Returns:
+      p_good: f32[N] posterior P(good | J).
+      score:  f32[N] masked expected utility P(good|J) * U(i); padding -> -1e30.
+      best:   i32[1] argmax index into the padded queue.
+    """
+    onehot = encode_onehot(feats, n_bins)
+    joint = score_onehot(onehot, log_lik, log_prior, tile_n=tile_n)  # [N, 2]
+    # Stable two-class softmax -> P(good).
+    m = jnp.max(joint, axis=1, keepdims=True)
+    e = jnp.exp(joint - m)
+    p_good = e[:, 0] / jnp.sum(e, axis=1)
+    score = jnp.where(mask > 0, p_good * utility, -1e30)
+    best = jnp.argmax(score).astype(jnp.int32).reshape(1)
+    return p_good, score, best
+
+
+def update_model(
+    counts, class_counts, feats, labels, mask, alpha, *, n_bins, tile_m=128
+):
+    """Fold a masked feedback batch into the classifier state.
+
+    Args:
+      counts:       f32[2, F*B] per-(class, feature, bin) counts.
+      class_counts: f32[2] per-class sample counts.
+      feats:        i32[M, F] feature bins of the feedback samples.
+      labels:       i32[M] observed class (0 = good, 1 = bad).
+      mask:         f32[M] 1.0 = real sample, 0.0 = batch padding.
+      alpha:        f32[] Laplace smoothing strength.
+
+    Returns:
+      new_counts:       f32[2, F*B]
+      new_class_counts: f32[2]
+      log_prior:        f32[2]   smoothed, ready for ``classify_jobs``
+      log_lik:          f32[2, F*B]
+    """
+    c_dim = class_counts.shape[0]
+    onehot = encode_onehot(feats, n_bins)  # [M, F*B]
+    lab_oh = jax.nn.one_hot(labels, c_dim, dtype=jnp.float32) * mask[:, None]
+    delta = count_delta(lab_oh, onehot, tile_m=tile_m)  # [2, F*B]
+    new_counts = counts + delta
+    new_class_counts = class_counts + jnp.sum(lab_oh, axis=0)
+    # Laplace smoothing: each feature slot contributes one of B bins per
+    # sample, so the per-feature denominator is class_count + alpha*B.
+    log_lik = jnp.log(new_counts + alpha) - jnp.log(
+        new_class_counts[:, None] + alpha * n_bins
+    )
+    log_prior = jnp.log(new_class_counts + alpha) - jnp.log(
+        jnp.sum(new_class_counts) + alpha * c_dim
+    )
+    return new_counts, new_class_counts, log_prior, log_lik

@@ -1,0 +1,120 @@
+"""AOT path: lowering produces parseable HLO text with the manifest's
+entry signature, and the lowered computation (run through jax CPU) matches
+the eager L2 functions — i.e. what rust will execute is what we tested."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import constants as C
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def classify_text():
+    return aot.to_hlo_text(aot.lower_classify())
+
+
+@pytest.fixture(scope="module")
+def update_text():
+    return aot.to_hlo_text(aot.lower_update())
+
+
+class TestHloText:
+    def test_classify_is_hlo_module(self, classify_text):
+        assert classify_text.startswith("HloModule")
+        assert "ENTRY" in classify_text
+
+    def test_update_is_hlo_module(self, update_text):
+        assert update_text.startswith("HloModule")
+
+    def test_classify_signature(self, classify_text):
+        # 5 params with the manifest shapes, tuple of 3 results (HLO text
+        # carries layout annotations like f32[256]{0}).
+        assert f"f32[{C.N_CLASSES}]" in classify_text
+        assert f"f32[{C.N_CLASSES},{C.FEATURE_DIM}]" in classify_text
+        assert f"s32[{C.MAX_JOBS},{C.N_FEATURES}]" in classify_text
+        assert (
+            f"(f32[{C.MAX_JOBS}]{{0}}, f32[{C.MAX_JOBS}]{{0}}, s32[1]{{0}}) tuple"
+            in classify_text
+        )
+
+    def test_update_signature(self, update_text):
+        assert f"s32[{C.MAX_BATCH},{C.N_FEATURES}]" in update_text
+        assert (
+            f"(f32[{C.N_CLASSES},{C.FEATURE_DIM}]{{1,0}}, f32[{C.N_CLASSES}]{{0}}, "
+            f"f32[{C.N_CLASSES}]{{0}}, f32[{C.N_CLASSES},{C.FEATURE_DIM}]{{1,0}}) tuple"
+        ) in update_text
+
+    def test_no_custom_calls(self, classify_text, update_text):
+        # interpret=True must have eliminated all Mosaic custom-calls; the
+        # rust CPU PJRT client cannot execute them.
+        assert "custom-call" not in classify_text
+        assert "custom-call" not in update_text
+
+
+class TestLoweredSemantics:
+    def test_compiled_classify_matches_eager(self):
+        compiled = aot.lower_classify().compile()
+        rng = np.random.default_rng(0)
+        lp = jnp.log(jnp.asarray([0.6, 0.4], jnp.float32))
+        ll = jnp.log(
+            jnp.asarray(
+                rng.dirichlet(np.ones(C.N_BINS), size=(2, C.N_FEATURES))
+                .reshape(2, C.FEATURE_DIM),
+                jnp.float32,
+            )
+        )
+        feats = jnp.asarray(
+            rng.integers(0, C.N_BINS, size=(C.MAX_JOBS, C.N_FEATURES)), jnp.int32
+        )
+        utility = jnp.asarray(rng.random(C.MAX_JOBS), jnp.float32)
+        mask = jnp.ones(C.MAX_JOBS, jnp.float32)
+        got = compiled(lp, ll, feats, utility, mask)
+        want = model.classify_jobs(lp, ll, feats, utility, mask, n_bins=C.N_BINS)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-6)
+
+    def test_compiled_update_matches_eager(self):
+        compiled = aot.lower_update().compile()
+        rng = np.random.default_rng(1)
+        counts = jnp.asarray(rng.gamma(2.0, 5.0, (2, C.FEATURE_DIM)), jnp.float32)
+        class_counts = jnp.asarray([30.0, 20.0], jnp.float32)
+        feats = jnp.asarray(
+            rng.integers(0, C.N_BINS, size=(C.MAX_BATCH, C.N_FEATURES)), jnp.int32
+        )
+        labels = jnp.asarray(rng.integers(0, 2, C.MAX_BATCH), jnp.int32)
+        mask = jnp.asarray((rng.random(C.MAX_BATCH) < 0.5), jnp.float32)
+        alpha = jnp.float32(1.0)
+        got = compiled(counts, class_counts, feats, labels, mask, alpha)
+        want = model.update_model(
+            counts, class_counts, feats, labels, mask, alpha, n_bins=C.N_BINS
+        )
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+class TestAotCli:
+    def test_writes_artifacts_and_manifest(self, tmp_path):
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["constants"]["max_jobs"] == C.MAX_JOBS
+        for name in ("classify", "update"):
+            text = (tmp_path / f"{name}.hlo.txt").read_text()
+            assert text.startswith("HloModule")
+            assert manifest["entries"][name]["file"] == f"{name}.hlo.txt"

@@ -1,0 +1,208 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp gather oracle (ref.py).
+
+This is the CORE correctness signal for the compiled artifacts — the same
+kernel code lowers into the HLO the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile.kernels import ref
+from compile.kernels.bayes_score import score_onehot
+from compile.kernels.bayes_update import count_delta
+from compile.model import encode_onehot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_tables(rng, f, b):
+    """Random but valid smoothed NB tables."""
+    counts = rng.gamma(2.0, 10.0, size=(2, f * b)).astype(np.float32)
+    class_counts = counts.reshape(2, f, b).sum(axis=2).mean(axis=1).astype(np.float32)
+    lp, ll = ref.smoothed_tables_ref(
+        jnp.asarray(counts), jnp.asarray(class_counts), 1.0, b
+    )
+    return np.asarray(lp), np.asarray(ll)
+
+
+# ---------------------------------------------------------------- score ---
+
+
+class TestScoreKernel:
+    def _check(self, seed, n, f, b, tile_n):
+        rng = np.random.default_rng(seed)
+        lp, ll = make_tables(rng, f, b)
+        feats = rng.integers(0, b, size=(n, f), dtype=np.int32)
+        onehot = encode_onehot(jnp.asarray(feats), b)
+        got = score_onehot(onehot, jnp.asarray(ll), jnp.asarray(lp), tile_n=tile_n)
+        want = ref.score_ref(jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_artifact_shape(self):
+        self._check(0, C.MAX_JOBS, C.N_FEATURES, C.N_BINS, C.TILE_N)
+
+    def test_single_tile(self):
+        self._check(1, 128, 8, 10, 128)
+
+    def test_many_tiles(self):
+        self._check(2, 512, 8, 10, 128)
+
+    def test_tiny_tile(self):
+        self._check(3, 32, 4, 5, 8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        tiles=st.integers(1, 4),
+        tile_n=st.sampled_from([8, 16, 32, 64, 128]),
+        f=st.integers(1, 8),
+        b=st.integers(2, 12),
+    )
+    def test_hypothesis_sweep(self, seed, tiles, tile_n, f, b):
+        self._check(seed, tiles * tile_n, f, b, tile_n)
+
+    def test_rejects_unaligned_n(self):
+        with pytest.raises(ValueError, match="multiple"):
+            score_onehot(
+                jnp.zeros((100, 80)), jnp.zeros((2, 80)), jnp.zeros((2,)), tile_n=128
+            )
+
+    def test_extreme_loglik_values(self):
+        # Very negative log-liks (near-zero probabilities) must not produce
+        # NaN/Inf in the joint scores.
+        n, f, b = 128, 8, 10
+        rng = np.random.default_rng(7)
+        feats = rng.integers(0, b, size=(n, f), dtype=np.int32)
+        ll = np.full((2, f * b), -50.0, dtype=np.float32)
+        lp = np.log(np.array([0.5, 0.5], dtype=np.float32))
+        onehot = encode_onehot(jnp.asarray(feats), b)
+        got = np.asarray(score_onehot(onehot, jnp.asarray(ll), jnp.asarray(lp)))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, -50.0 * f + np.log(0.5), rtol=1e-5)
+
+
+# --------------------------------------------------------------- update ---
+
+
+class TestUpdateKernel:
+    def _check(self, seed, m, f, b, tile_m, mask_frac=0.7):
+        rng = np.random.default_rng(seed)
+        feats = rng.integers(0, b, size=(m, f), dtype=np.int32)
+        labels = rng.integers(0, 2, size=(m,), dtype=np.int32)
+        mask = (rng.random(m) < mask_frac).astype(np.float32)
+        lab_oh = jax.nn.one_hot(jnp.asarray(labels), 2, dtype=jnp.float32)
+        lab_oh = lab_oh * jnp.asarray(mask)[:, None]
+        onehot = encode_onehot(jnp.asarray(feats), b)
+        got = count_delta(lab_oh, onehot, tile_m=tile_m)
+        want, _ = ref.update_counts_ref(
+            jnp.zeros((2, f * b)),
+            jnp.zeros((2,)),
+            jnp.asarray(feats),
+            jnp.asarray(labels),
+            jnp.asarray(mask),
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    def test_artifact_shape(self):
+        self._check(0, C.MAX_BATCH, C.N_FEATURES, C.N_BINS, C.MAX_BATCH)
+
+    def test_multi_tile_accumulation(self):
+        self._check(1, 256, 8, 10, 64)
+
+    def test_all_masked(self):
+        self._check(2, 128, 8, 10, 128, mask_frac=0.0)
+
+    def test_none_masked(self):
+        self._check(3, 128, 8, 10, 128, mask_frac=1.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        tiles=st.integers(1, 4),
+        tile_m=st.sampled_from([8, 32, 64, 128]),
+        f=st.integers(1, 8),
+        b=st.integers(2, 12),
+        mask_frac=st.floats(0.0, 1.0),
+    )
+    def test_hypothesis_sweep(self, seed, tiles, tile_m, f, b, mask_frac):
+        self._check(seed, tiles * tile_m, f, b, tile_m, mask_frac)
+
+    def test_rejects_unaligned_m(self):
+        with pytest.raises(ValueError, match="multiple"):
+            count_delta(jnp.zeros((100, 2)), jnp.zeros((100, 80)), tile_m=128)
+
+    def test_delta_total_equals_masked_samples_times_features(self):
+        # Each real sample contributes exactly F ones to the count table.
+        m, f, b = 128, 8, 10
+        rng = np.random.default_rng(11)
+        feats = rng.integers(0, b, size=(m, f), dtype=np.int32)
+        labels = rng.integers(0, 2, size=(m,), dtype=np.int32)
+        mask = (rng.random(m) < 0.5).astype(np.float32)
+        lab_oh = jax.nn.one_hot(jnp.asarray(labels), 2) * jnp.asarray(mask)[:, None]
+        delta = count_delta(lab_oh, encode_onehot(jnp.asarray(feats), b))
+        assert float(jnp.sum(delta)) == pytest.approx(float(mask.sum()) * f)
+
+
+# --------------------------------------------------------------- onehot ---
+
+
+class TestEncodeOnehot:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(1, 64),
+        f=st.integers(1, 8),
+        b=st.integers(2, 12),
+    )
+    def test_row_structure(self, seed, n, f, b):
+        rng = np.random.default_rng(seed)
+        feats = rng.integers(0, b, size=(n, f), dtype=np.int32)
+        oh = np.asarray(encode_onehot(jnp.asarray(feats), b))
+        assert oh.shape == (n, f * b)
+        # exactly one 1 per feature slot
+        np.testing.assert_array_equal(oh.reshape(n, f, b).sum(axis=2), 1.0)
+        # and it's at the right bin
+        recon = oh.reshape(n, f, b).argmax(axis=2)
+        np.testing.assert_array_equal(recon, feats)
+
+
+# ---------------------------------------------------------------- bf16 ----
+
+
+class TestBf16Variant:
+    """The MXU-native bf16 kernel must match f32 within the rounding bound
+    F * max|log_lik| * 2^-8 and must never flip a confident good/bad call."""
+
+    def _pair(self, seed, n=128, f=8, b=10):
+        rng = np.random.default_rng(seed)
+        lp, ll = make_tables(rng, f, b)
+        feats = rng.integers(0, b, size=(n, f), dtype=np.int32)
+        onehot = encode_onehot(jnp.asarray(feats), b)
+        f32 = score_onehot(onehot, jnp.asarray(ll), jnp.asarray(lp))
+        bf16 = score_onehot(
+            onehot, jnp.asarray(ll), jnp.asarray(lp), use_bf16=True
+        )
+        bound = f * np.abs(ll).max() * 2.0**-8 + 1e-5
+        return np.asarray(f32), np.asarray(bf16), bound
+
+    def test_within_rounding_bound(self):
+        f32, bf16, bound = self._pair(0)
+        assert np.abs(f32 - bf16).max() <= bound
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_bound(self, seed):
+        f32, bf16, bound = self._pair(seed)
+        assert np.abs(f32 - bf16).max() <= bound
+
+    def test_confident_decisions_stable(self):
+        # margins larger than 2x the bound cannot flip sign
+        f32, bf16, bound = self._pair(7)
+        margin_f32 = f32[:, 0] - f32[:, 1]
+        margin_bf16 = bf16[:, 0] - bf16[:, 1]
+        confident = np.abs(margin_f32) > 2 * bound
+        assert (np.sign(margin_f32[confident]) == np.sign(margin_bf16[confident])).all()

@@ -1,0 +1,206 @@
+"""L2 correctness: the full classify/update entry points vs ref.py, plus the
+semantic properties the rust coordinator depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_state(rng, f=C.N_FEATURES, b=C.N_BINS):
+    counts = rng.gamma(2.0, 10.0, size=(2, f * b)).astype(np.float32)
+    class_counts = np.array(
+        [counts[0].sum() / f, counts[1].sum() / f], dtype=np.float32
+    )
+    lp, ll = ref.smoothed_tables_ref(
+        jnp.asarray(counts), jnp.asarray(class_counts), 1.0, b
+    )
+    return counts, class_counts, np.asarray(lp), np.asarray(ll)
+
+
+def random_queue(rng, n=C.MAX_JOBS, f=C.N_FEATURES, b=C.N_BINS, fill=0.6):
+    feats = rng.integers(0, b, size=(n, f), dtype=np.int32)
+    utility = rng.random(n).astype(np.float32) * 10.0
+    mask = np.zeros(n, dtype=np.float32)
+    k = max(1, int(n * fill))
+    mask[:k] = 1.0
+    return feats, utility, mask
+
+
+class TestClassifyJobs:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        _, _, lp, ll = random_state(rng)
+        feats, utility, mask = random_queue(rng)
+        p, s, best = model.classify_jobs(
+            jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats),
+            jnp.asarray(utility), jnp.asarray(mask), n_bins=C.N_BINS,
+        )
+        pr, sr, br = ref.classify_ref(
+            jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats),
+            jnp.asarray(utility), jnp.asarray(mask),
+        )
+        np.testing.assert_allclose(np.asarray(p), np.asarray(pr), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5, atol=1e-5)
+        assert int(best[0]) == int(br[0])
+
+    def test_posterior_in_unit_interval(self):
+        rng = np.random.default_rng(1)
+        _, _, lp, ll = random_state(rng)
+        feats, utility, mask = random_queue(rng)
+        p, _, _ = model.classify_jobs(
+            jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats),
+            jnp.asarray(utility), jnp.asarray(mask), n_bins=C.N_BINS,
+        )
+        p = np.asarray(p)
+        assert ((p >= 0) & (p <= 1)).all()
+
+    def test_best_never_padding(self):
+        rng = np.random.default_rng(2)
+        _, _, lp, ll = random_state(rng)
+        for fill in (0.01, 0.25, 1.0):
+            feats, utility, mask = random_queue(rng, fill=fill)
+            _, _, best = model.classify_jobs(
+                jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats),
+                jnp.asarray(utility), jnp.asarray(mask), n_bins=C.N_BINS,
+            )
+            assert mask[int(best[0])] == 1.0
+
+    def test_utility_breaks_ties(self):
+        # Identical features => selection driven purely by utility.
+        rng = np.random.default_rng(3)
+        _, _, lp, ll = random_state(rng)
+        n = C.MAX_JOBS
+        feats = np.full((n, C.N_FEATURES), 4, dtype=np.int32)
+        utility = np.ones(n, dtype=np.float32)
+        utility[17] = 5.0
+        mask = np.ones(n, dtype=np.float32)
+        _, _, best = model.classify_jobs(
+            jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats),
+            jnp.asarray(utility), jnp.asarray(mask), n_bins=C.N_BINS,
+        )
+        assert int(best[0]) == 17
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(4)
+        _, _, lp, ll = random_state(rng)
+        feats, utility, mask = random_queue(rng)
+        args = (
+            jnp.asarray(lp), jnp.asarray(ll), jnp.asarray(feats),
+            jnp.asarray(utility), jnp.asarray(mask),
+        )
+        a = model.classify_jobs(*args, n_bins=C.N_BINS)
+        b = model.classify_jobs(*args, n_bins=C.N_BINS)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestUpdateModel:
+    def _batch(self, rng, m=C.MAX_BATCH, f=C.N_FEATURES, b=C.N_BINS, fill=0.5):
+        feats = rng.integers(0, b, size=(m, f), dtype=np.int32)
+        labels = rng.integers(0, 2, size=(m,), dtype=np.int32)
+        mask = (rng.random(m) < fill).astype(np.float32)
+        return feats, labels, mask
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        counts, class_counts, _, _ = random_state(rng)
+        feats, labels, mask = self._batch(rng)
+        got = model.update_model(
+            jnp.asarray(counts), jnp.asarray(class_counts), jnp.asarray(feats),
+            jnp.asarray(labels), jnp.asarray(mask), jnp.float32(1.0),
+            n_bins=C.N_BINS,
+        )
+        want = ref.update_ref(
+            jnp.asarray(counts), jnp.asarray(class_counts), jnp.asarray(feats),
+            jnp.asarray(labels), jnp.asarray(mask), 1.0, C.N_BINS,
+        )
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        alpha=st.sampled_from([0.1, 0.5, 1.0, 10.0]),
+        fill=st.floats(0.0, 1.0),
+    )
+    def test_hypothesis_matches_ref(self, seed, alpha, fill):
+        rng = np.random.default_rng(seed)
+        counts, class_counts, _, _ = random_state(rng)
+        feats, labels, mask = self._batch(rng, fill=fill)
+        got = model.update_model(
+            jnp.asarray(counts), jnp.asarray(class_counts), jnp.asarray(feats),
+            jnp.asarray(labels), jnp.asarray(mask), jnp.float32(alpha),
+            n_bins=C.N_BINS,
+        )
+        want = ref.update_ref(
+            jnp.asarray(counts), jnp.asarray(class_counts), jnp.asarray(feats),
+            jnp.asarray(labels), jnp.asarray(mask), alpha, C.N_BINS,
+        )
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-5)
+
+    def test_counts_monotone(self):
+        rng = np.random.default_rng(5)
+        counts, class_counts, _, _ = random_state(rng)
+        feats, labels, mask = self._batch(rng)
+        nc, ncc, _, _ = model.update_model(
+            jnp.asarray(counts), jnp.asarray(class_counts), jnp.asarray(feats),
+            jnp.asarray(labels), jnp.asarray(mask), jnp.float32(1.0),
+            n_bins=C.N_BINS,
+        )
+        assert (np.asarray(nc) >= counts - 1e-6).all()
+        assert (np.asarray(ncc) >= class_counts - 1e-6).all()
+
+    def test_tables_are_log_probabilities(self):
+        # Start from the empty state (as the coordinator does) so the NB
+        # invariant counts[c, j*B:(j+1)*B].sum() == class_counts[c] holds.
+        rng = np.random.default_rng(6)
+        counts = jnp.zeros((2, C.FEATURE_DIM), jnp.float32)
+        class_counts = jnp.zeros((2,), jnp.float32)
+        feats, labels, mask = self._batch(rng)
+        _, _, lp, ll = model.update_model(
+            counts, class_counts, jnp.asarray(feats),
+            jnp.asarray(labels), jnp.asarray(mask), jnp.float32(1.0),
+            n_bins=C.N_BINS,
+        )
+        # priors sum to 1
+        assert float(jnp.sum(jnp.exp(lp))) == pytest.approx(1.0, rel=1e-5)
+        # each per-feature likelihood block sums to 1 per class
+        blocks = np.exp(np.asarray(ll)).reshape(2, C.N_FEATURES, C.N_BINS)
+        np.testing.assert_allclose(blocks.sum(axis=2), 1.0, rtol=1e-4)
+
+    def test_learning_separates_classes(self):
+        # Feed the classifier overload feedback that is perfectly predictable
+        # from feature 0 and check classify flips accordingly: the paper's
+        # feedback loop in miniature.
+        f, b = C.N_FEATURES, C.N_BINS
+        counts = jnp.zeros((2, f * b), jnp.float32)
+        class_counts = jnp.zeros((2,), jnp.float32)
+        m = C.MAX_BATCH
+        rng = np.random.default_rng(7)
+        feats = rng.integers(0, b, size=(m, f), dtype=np.int32)
+        feats[: m // 2, 0] = 9  # high cpu -> bad
+        feats[m // 2 :, 0] = 0  # low cpu -> good
+        labels = np.r_[np.ones(m // 2, np.int32), np.zeros(m // 2, np.int32)]
+        mask = np.ones(m, np.float32)
+        _, _, lp, ll = model.update_model(
+            counts, class_counts, jnp.asarray(feats), jnp.asarray(labels),
+            jnp.asarray(mask), jnp.float32(1.0), n_bins=C.N_BINS,
+        )
+        n = C.MAX_JOBS
+        qf = rng.integers(0, b, size=(n, f), dtype=np.int32)
+        qf[0, 0] = 0   # should classify good
+        qf[1, 0] = 9   # should classify bad
+        p, _, _ = model.classify_jobs(
+            lp, ll, jnp.asarray(qf), jnp.ones(n, jnp.float32),
+            jnp.ones(n, jnp.float32), n_bins=C.N_BINS,
+        )
+        assert float(p[0]) > 0.5 > float(p[1])

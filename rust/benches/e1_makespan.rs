@@ -1,0 +1,43 @@
+//! Bench e1_makespan: regenerates the E1/E2 efficiency+stability tables
+//! (DESIGN.md §4) end-to-end and times whole simulation runs per
+//! scheduler — the "one bench per paper table" target for the headline
+//! claim.
+//!
+//!     cargo bench --bench e1_makespan
+
+use bayes_sched::coordinator::builder::RunConfig;
+use bayes_sched::report::bench::bench;
+use bayes_sched::report::experiments::common::run_once;
+use bayes_sched::report::experiments::{self, ExpOpts};
+use bayes_sched::workload::generator::WorkloadConfig;
+
+fn main() {
+    println!("== simulation wall time per scheduler (E1 configuration) ==");
+    for sched in ["fifo", "fair", "capacity", "bayes"] {
+        bench(&format!("e1_run/{sched}/40n_200j"), 1, 5, |i| {
+            let cfg = RunConfig {
+                scheduler: sched.into(),
+                n_nodes: 40,
+                n_racks: 4,
+                workload: WorkloadConfig {
+                    n_jobs: 200,
+                    arrival_rate: 0.5,
+                    seed: 1 + i as u64,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            std::hint::black_box(run_once(&cfg));
+        });
+    }
+
+    println!("\n== E1 efficiency table ==");
+    let opts = ExpOpts { quick: false, out_dir: Some("results".into()) };
+    for t in experiments::run("e1", &opts).unwrap() {
+        println!("{}", t.render());
+    }
+    println!("== E2 stability table ==");
+    for t in experiments::run("e2", &opts).unwrap() {
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench e6_decision_latency: regenerates E6 (scalability) and measures
+//! the isolated scheduler decision cost vs queue length — the L3 hot-path
+//! number the coordinator's throughput hinges on.
+//!
+//!     cargo bench --bench e6_decision_latency
+
+use bayes_sched::cluster::node::{Node, NodeId, NodeSpec};
+use bayes_sched::hdfs::Namespace;
+use bayes_sched::job::queue::JobTable;
+use bayes_sched::job::task::TaskKind;
+use bayes_sched::report::bench::bench;
+use bayes_sched::report::experiments::{self, ExpOpts};
+use bayes_sched::scheduler::api::SchedView;
+use bayes_sched::scheduler::{self, Scheduler};
+use bayes_sched::workload::generator::{generate, WorkloadConfig};
+
+/// Isolated decision microbenchmark: a queue of `q` schedulable jobs, one
+/// idle node, measure a single select() call.
+fn decision_bench(sched_name: &str, q: usize) {
+    let mut hdfs = Namespace::new(40, 4, 1);
+    let mut jobs = JobTable::new();
+    let specs = generate(&WorkloadConfig {
+        n_jobs: q,
+        arrival_rate: 1e9, // all queued at ~t=0
+        seed: 1,
+        ..Default::default()
+    });
+    for s in specs {
+        jobs.submit(s, &mut hdfs);
+    }
+    let queue = jobs.schedulable();
+    assert_eq!(queue.len(), q);
+    let node = Node::new(NodeId(0), NodeSpec::default());
+    let mut sched = scheduler::by_name(sched_name, 1).unwrap();
+    sched.on_cluster_info(160);
+    bench(&format!("decision/{sched_name}/q{q}"), 100, 2000, |_| {
+        let view = SchedView { jobs: &jobs, hdfs: &hdfs, queue: &queue, now: 100.0 };
+        std::hint::black_box(sched.select(&view, &node, TaskKind::Map));
+    });
+}
+
+fn main() {
+    println!("== isolated decision latency vs queue length ==");
+    for q in [16, 64, 256] {
+        for sched in ["fifo", "fair", "capacity", "bayes"] {
+            decision_bench(sched, q);
+        }
+    }
+
+    println!("\n== E6 scalability table ==");
+    let opts = ExpOpts { quick: false, out_dir: Some("results".into()) };
+    for t in experiments::run("e6", &opts).unwrap() {
+        println!("{}", t.render());
+    }
+}

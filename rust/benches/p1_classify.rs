@@ -1,0 +1,89 @@
+//! Bench p1_classify: the classifier hot path — XLA/PJRT artifact
+//! execution vs the pure-rust NaiveBayes, across batch sizes, plus the
+//! update (feedback flush) path. This is the L1/L2 perf deliverable's
+//! measurement harness (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench p1_classify
+
+use bayes_sched::bayes::classifier::{Classifier, Label, NaiveBayes, MAX_BATCH};
+use bayes_sched::bayes::features::{FeatureVec, N_FEATURES};
+use bayes_sched::report::bench::bench;
+use bayes_sched::runtime::XlaClassifier;
+use bayes_sched::sim::rng::Pcg;
+
+fn random_fv(rng: &mut Pcg) -> FeatureVec {
+    let mut fv = [0u8; N_FEATURES];
+    for b in fv.iter_mut() {
+        *b = rng.below(10) as u8;
+    }
+    fv
+}
+
+fn train(c: &mut dyn Classifier, rng: &mut Pcg, n: usize) {
+    for _ in 0..n {
+        let fv = random_fv(rng);
+        let label = if fv[0] >= 5 { Label::Bad } else { Label::Good };
+        c.observe(fv, label);
+    }
+    c.flush();
+}
+
+fn main() {
+    let mut rng = Pcg::seeded(1);
+    let feats: Vec<FeatureVec> = (0..256).map(|_| random_fv(&mut rng)).collect();
+    let utility: Vec<f32> = (0..256).map(|_| rng.f64() as f32 * 5.0).collect();
+
+    println!("== classify: pure-rust NaiveBayes ==");
+    let mut nb = NaiveBayes::new(1.0);
+    train(&mut nb, &mut rng, 500);
+    for n in [64usize, 128, 256] {
+        bench(&format!("classify/rust/n{n}"), 100, 5000, |_| {
+            std::hint::black_box(nb.classify(&feats[..n], &utility[..n]));
+        });
+    }
+
+    println!("\n== update flush: pure-rust NaiveBayes (batch=128) ==");
+    bench("update/rust/batch128", 10, 500, |_| {
+        for i in 0..MAX_BATCH {
+            nb.observe(feats[i % feats.len()], Label::Good);
+        }
+        nb.flush();
+    });
+
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\nartifacts/ missing — skipping XLA benches (run `make artifacts`)");
+        return;
+    }
+    println!("\n== classify: XLA/PJRT artifact (padded to 256) ==");
+    let mut xla = XlaClassifier::load(&dir, 1.0).expect("load artifacts");
+    train(&mut xla, &mut rng, 500);
+    for n in [64usize, 128, 256] {
+        bench(&format!("classify/xla/n{n}"), 20, 200, |_| {
+            std::hint::black_box(xla.classify(&feats[..n], &utility[..n]));
+        });
+    }
+
+    println!("\n== breakdown: host->device upload cost of per-call inputs ==");
+    {
+        use bayes_sched::runtime::Runtime;
+        let rt = Runtime::load(&dir).expect("runtime");
+        let c = rt.consts;
+        let feats_i32 = vec![0i32; c.max_jobs * c.n_features];
+        let utility_f = vec![1.0f32; c.max_jobs];
+        let mask_f = vec![1.0f32; c.max_jobs];
+        bench("classify/xla/inputs_upload_only", 20, 500, |_| {
+            std::hint::black_box(
+                rt.upload_inputs_probe(&feats_i32, &utility_f, &mask_f).unwrap(),
+            );
+        });
+    }
+
+    println!("\n== update flush: XLA/PJRT artifact (batch=128) ==");
+    bench("update/xla/batch128", 3, 50, |_| {
+        for i in 0..MAX_BATCH {
+            xla.observe(feats[i % feats.len()], Label::Good);
+        }
+        xla.flush();
+    });
+}

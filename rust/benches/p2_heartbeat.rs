@@ -1,0 +1,52 @@
+//! Bench p2_heartbeat: coordinator throughput — events and heartbeats
+//! processed per second of wall time on a large cluster, per scheduler.
+//! The L3 target (DESIGN.md §7): the scheduler must never be the
+//! simulation bottleneck.
+//!
+//!     cargo bench --bench p2_heartbeat
+
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::report::bench::{bench, fmt_ns};
+use bayes_sched::scheduler;
+use bayes_sched::workload::generator::{generate, WorkloadConfig};
+
+fn main() {
+    println!("== coordinator event-loop throughput (160 nodes, 400 jobs) ==");
+    for sched in ["fifo", "bayes"] {
+        let mut total_events = 0u64;
+        let mut total_heartbeats = 0u64;
+        let m = bench(&format!("coordinator/{sched}/160n_400j"), 0, 3, |i| {
+            let cluster = Cluster::homogeneous(160, 8);
+            let specs = generate(&WorkloadConfig {
+                n_jobs: 400,
+                arrival_rate: 2.0,
+                seed: 1 + i as u64,
+                ..Default::default()
+            });
+            let mut jt = JobTracker::new(
+                cluster,
+                scheduler::by_name(sched, 1).unwrap(),
+                specs,
+                1,
+                TrackerConfig::default(),
+            );
+            jt.run();
+            total_events += jt.engine.processed();
+            total_heartbeats += jt.metrics.heartbeats;
+        });
+        let events_per_run = total_events as f64 / 3.0;
+        let hb_per_run = total_heartbeats as f64 / 3.0;
+        let ev_rate = events_per_run / (m.mean_ns / 1e9);
+        let hb_rate = hb_per_run / (m.mean_ns / 1e9);
+        println!(
+            "  -> {:.0} events/run, {:.0} heartbeats/run: {:.0} events/s, \
+             {:.0} heartbeats/s, {} per event",
+            events_per_run,
+            hb_per_run,
+            ev_rate,
+            hb_rate,
+            fmt_ns(m.mean_ns / events_per_run)
+        );
+    }
+}

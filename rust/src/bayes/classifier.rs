@@ -1,0 +1,359 @@
+//! The online Naive Bayes good/bad classifier (paper §4.2).
+//!
+//! [`NaiveBayes`] is the pure-rust implementation. The XLA-backed
+//! [`crate::runtime::XlaClassifier`] implements the same [`Classifier`]
+//! trait by executing the AOT artifacts; both use the identical update
+//! semantics (buffer feedback, flush in batches, Laplace smoothing) and f32
+//! arithmetic, so they agree to float tolerance — enforced by differential
+//! tests in `rust/tests/integration_runtime.rs`.
+
+use super::features::{FeatureVec, N_BINS, N_FEATURES};
+
+/// Feedback batch size: flushes happen at most every `MAX_BATCH` samples.
+/// Mirrors `python/compile/constants.py::MAX_BATCH`.
+pub const MAX_BATCH: usize = 128;
+/// Scoring window: a single classify call scores at most this many jobs.
+/// Mirrors `python/compile/constants.py::MAX_JOBS`.
+pub const MAX_JOBS: usize = 256;
+/// Flattened feature dimension (N_FEATURES * N_BINS).
+pub const FEATURE_DIM: usize = N_FEATURES * N_BINS;
+
+/// Feedback label from the overload rule (paper: good = did not overload
+/// the TaskTracker; bad = did).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Label {
+    Good = 0,
+    Bad = 1,
+}
+
+/// Result of scoring a job queue against one node.
+#[derive(Debug, Clone)]
+pub struct ClassifyResult {
+    /// Posterior P(good | J) per job.
+    pub p_good: Vec<f32>,
+    /// Expected utility P(good|J) * U(i) per job.
+    pub score: Vec<f32>,
+    /// Index of the maximum score.
+    pub best: usize,
+}
+
+impl ClassifyResult {
+    /// Jobs the classifier calls *good* (P(good) >= 0.5).
+    pub fn is_good(&self, i: usize) -> bool {
+        self.p_good[i] >= 0.5
+    }
+}
+
+/// The classifier interface the Bayes scheduler programs against.
+///
+/// Not `Send`: the PJRT client wraps a thread-local `Rc`, and the
+/// simulation loop is single-threaded by design (determinism contract).
+pub trait Classifier {
+    /// Score `feats[i]` (job+node features) with utility `utility[i]`.
+    /// `feats.len()` must be in `1..=MAX_JOBS`. Implementations flush any
+    /// buffered feedback first so the scores reflect all observations.
+    fn classify(&mut self, feats: &[FeatureVec], utility: &[f32]) -> ClassifyResult;
+
+    /// Record one overload-rule feedback sample. May buffer; buffered
+    /// samples are applied on [`Classifier::flush`] or automatically when
+    /// the buffer reaches `MAX_BATCH` or at the next classify.
+    fn observe(&mut self, feats: FeatureVec, label: Label);
+
+    /// Apply all buffered feedback to the model tables.
+    fn flush(&mut self);
+
+    /// (good, bad) sample counts absorbed so far (flushed only).
+    fn class_counts(&self) -> [f32; 2];
+
+    /// Implementation name for logs/reports.
+    fn name(&self) -> &'static str;
+
+    /// Raw model state (counts, class_counts) for persistence; both
+    /// implementations expose the identical layout.
+    fn export_state(&self) -> (Vec<f32>, [f32; 2], f32);
+}
+
+/// Pure-rust online Naive Bayes with Laplace smoothing.
+///
+/// State layout matches the artifacts: `counts[c * FEATURE_DIM + j * N_BINS
+/// + bin]`, class 0 = good. All arithmetic in f32 to track the XLA path.
+#[derive(Debug, Clone)]
+pub struct NaiveBayes {
+    counts: Vec<f32>,       // [2 * FEATURE_DIM]
+    class_counts: [f32; 2], // [good, bad]
+    log_prior: [f32; 2],
+    log_lik: Vec<f32>, // [2 * FEATURE_DIM]
+    alpha: f32,
+    pending: Vec<(FeatureVec, Label)>,
+}
+
+impl NaiveBayes {
+    /// Fresh classifier with Laplace smoothing strength `alpha` (paper
+    /// leaves initialization open; uniform priors = deviation D4).
+    pub fn new(alpha: f32) -> Self {
+        let mut nb = NaiveBayes {
+            counts: vec![0.0; 2 * FEATURE_DIM],
+            class_counts: [0.0; 2],
+            log_prior: [0.0; 2],
+            log_lik: vec![0.0; 2 * FEATURE_DIM],
+            alpha,
+            pending: Vec::with_capacity(MAX_BATCH),
+        };
+        nb.recompute_tables();
+        nb
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    /// Smoothed log tables (for export / inspection / seeding the XLA path).
+    pub fn tables(&self) -> (&[f32; 2], &[f32]) {
+        (&self.log_prior, &self.log_lik)
+    }
+
+    /// Raw counts (for state persistence and differential tests).
+    pub fn state(&self) -> (&[f32], [f32; 2]) {
+        (&self.counts, self.class_counts)
+    }
+
+    /// Restore from raw counts (e.g. replaying a persisted model).
+    pub fn from_state(counts: Vec<f32>, class_counts: [f32; 2], alpha: f32) -> Self {
+        assert_eq!(counts.len(), 2 * FEATURE_DIM);
+        let mut nb = NaiveBayes {
+            counts,
+            class_counts,
+            log_prior: [0.0; 2],
+            log_lik: vec![0.0; 2 * FEATURE_DIM],
+            alpha,
+            pending: Vec::with_capacity(MAX_BATCH),
+        };
+        nb.recompute_tables();
+        nb
+    }
+
+    /// Number of buffered (not yet applied) samples.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn recompute_tables(&mut self) {
+        // Same smoothing as python model.update_model:
+        //   log_lik = ln(count + a) - ln(class_count + a*B)
+        //   log_prior = ln(class_count + a) - ln(total + a*C)
+        let a = self.alpha;
+        let total = self.class_counts[0] + self.class_counts[1];
+        for c in 0..2 {
+            self.log_prior[c] =
+                (self.class_counts[c] + a).ln() - (total + a * 2.0).ln();
+            let denom = (self.class_counts[c] + a * N_BINS as f32).ln();
+            for k in 0..FEATURE_DIM {
+                self.log_lik[c * FEATURE_DIM + k] =
+                    (self.counts[c * FEATURE_DIM + k] + a).ln() - denom;
+            }
+        }
+    }
+
+    /// Joint log-probability [good, bad] of one feature row.
+    pub fn joint(&self, feats: &FeatureVec) -> [f32; 2] {
+        let mut out = self.log_prior;
+        for (j, &bin) in feats.iter().enumerate() {
+            debug_assert!((bin as usize) < N_BINS);
+            let k = j * N_BINS + bin as usize;
+            out[0] += self.log_lik[k];
+            out[1] += self.log_lik[FEATURE_DIM + k];
+        }
+        out
+    }
+
+    /// Posterior P(good | feats) of one row (stable two-class softmax).
+    pub fn posterior_good(&self, feats: &FeatureVec) -> f32 {
+        let [g, b] = self.joint(feats);
+        let m = g.max(b);
+        let eg = (g - m).exp();
+        eg / (eg + (b - m).exp())
+    }
+}
+
+impl Classifier for NaiveBayes {
+    fn classify(&mut self, feats: &[FeatureVec], utility: &[f32]) -> ClassifyResult {
+        assert!(!feats.is_empty() && feats.len() <= MAX_JOBS);
+        assert_eq!(feats.len(), utility.len());
+        self.flush();
+        let mut p_good = Vec::with_capacity(feats.len());
+        let mut score = Vec::with_capacity(feats.len());
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for (i, fv) in feats.iter().enumerate() {
+            let p = self.posterior_good(fv);
+            let s = p * utility[i];
+            if s > best_score {
+                best_score = s;
+                best = i;
+            }
+            p_good.push(p);
+            score.push(s);
+        }
+        ClassifyResult { p_good, score, best }
+    }
+
+    fn observe(&mut self, feats: FeatureVec, label: Label) {
+        self.pending.push((feats, label));
+        if self.pending.len() >= MAX_BATCH {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        for (fv, label) in std::mem::take(&mut self.pending) {
+            let c = label as usize;
+            self.class_counts[c] += 1.0;
+            for (j, &bin) in fv.iter().enumerate() {
+                self.counts[c * FEATURE_DIM + j * N_BINS + bin as usize] += 1.0;
+            }
+        }
+        self.recompute_tables();
+    }
+
+    fn class_counts(&self) -> [f32; 2] {
+        self.class_counts
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-bayes(rust)"
+    }
+
+    fn export_state(&self) -> (Vec<f32>, [f32; 2], f32) {
+        (self.counts.clone(), self.class_counts, self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fv(val: u8) -> FeatureVec {
+        [val; N_FEATURES]
+    }
+
+    #[test]
+    fn uninformed_posterior_is_half() {
+        let mut nb = NaiveBayes::new(1.0);
+        let r = nb.classify(&[fv(3), fv(9)], &[1.0, 1.0]);
+        for p in r.p_good {
+            assert!((p - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn learns_separable_labels() {
+        let mut nb = NaiveBayes::new(1.0);
+        for _ in 0..50 {
+            nb.observe(fv(9), Label::Bad);
+            nb.observe(fv(1), Label::Good);
+        }
+        nb.flush();
+        assert!(nb.posterior_good(&fv(1)) > 0.9);
+        assert!(nb.posterior_good(&fv(9)) < 0.1);
+    }
+
+    #[test]
+    fn observe_buffers_until_flush() {
+        let mut nb = NaiveBayes::new(1.0);
+        nb.observe(fv(9), Label::Bad);
+        assert_eq!(nb.class_counts(), [0.0, 0.0]); // buffered
+        assert_eq!(nb.pending_len(), 1);
+        nb.flush();
+        assert_eq!(nb.class_counts(), [0.0, 1.0]);
+    }
+
+    #[test]
+    fn auto_flush_at_max_batch() {
+        let mut nb = NaiveBayes::new(1.0);
+        for _ in 0..MAX_BATCH {
+            nb.observe(fv(2), Label::Good);
+        }
+        assert_eq!(nb.pending_len(), 0);
+        assert_eq!(nb.class_counts(), [MAX_BATCH as f32, 0.0]);
+    }
+
+    #[test]
+    fn classify_sees_pending_feedback() {
+        let mut nb = NaiveBayes::new(1.0);
+        for _ in 0..30 {
+            nb.observe(fv(9), Label::Bad);
+        }
+        // classify() must flush first
+        let r = nb.classify(&[fv(9)], &[1.0]);
+        assert!(r.p_good[0] < 0.3);
+    }
+
+    #[test]
+    fn utility_drives_selection() {
+        let mut nb = NaiveBayes::new(1.0);
+        let r = nb.classify(&[fv(5), fv(5), fv(5)], &[1.0, 7.0, 2.0]);
+        assert_eq!(r.best, 1);
+    }
+
+    #[test]
+    fn posterior_bounds_under_extreme_counts() {
+        let mut nb = NaiveBayes::new(1.0);
+        for _ in 0..10_000 {
+            nb.observe(fv(0), Label::Good);
+        }
+        nb.flush();
+        let p = nb.posterior_good(&fv(0));
+        assert!(p > 0.5 && p <= 1.0 && p.is_finite());
+        let q = nb.posterior_good(&fv(9));
+        assert!(q >= 0.0 && q.is_finite());
+    }
+
+    #[test]
+    fn counts_equal_sum_of_feedback() {
+        let mut nb = NaiveBayes::new(1.0);
+        for i in 0..300u32 {
+            let label = if i % 3 == 0 { Label::Bad } else { Label::Good };
+            nb.observe(fv((i % 10) as u8), label);
+        }
+        nb.flush();
+        let [g, b] = nb.class_counts();
+        assert_eq!(g + b, 300.0);
+        assert_eq!(b, 100.0);
+        // every sample contributes exactly N_FEATURES counts
+        let (counts, _) = nb.state();
+        let total: f32 = counts.iter().sum();
+        assert_eq!(total, 300.0 * N_FEATURES as f32);
+    }
+
+    #[test]
+    fn from_state_roundtrip() {
+        let mut nb = NaiveBayes::new(0.5);
+        for _ in 0..40 {
+            nb.observe(fv(7), Label::Bad);
+            nb.observe(fv(2), Label::Good);
+        }
+        nb.flush();
+        let (counts, cc) = nb.state();
+        let nb2 = NaiveBayes::from_state(counts.to_vec(), cc, 0.5);
+        for v in [fv(2), fv(5), fv(7)] {
+            assert_eq!(nb.posterior_good(&v), nb2.posterior_good(&v));
+        }
+    }
+
+    #[test]
+    fn smoothing_strength_matters() {
+        let mut weak = NaiveBayes::new(0.1);
+        let mut strong = NaiveBayes::new(10.0);
+        for nb in [&mut weak, &mut strong] {
+            for _ in 0..5 {
+                nb.observe(fv(9), Label::Bad);
+            }
+            nb.flush();
+        }
+        // weaker smoothing -> sharper posterior from the same 5 samples
+        assert!(weak.posterior_good(&fv(9)) < strong.posterior_good(&fv(9)));
+    }
+}

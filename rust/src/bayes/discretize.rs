@@ -1,0 +1,67 @@
+//! The paper's feature discretization: "The variable values are set from 10
+//! to 1, and 10 is the maximum value which represents the utmost using of
+//! resources" (§4.2). Internally we use bins 0..=9; bin b displays as the
+//! paper's value b+1.
+
+use super::features::N_BINS;
+
+/// Discretize a fraction in [0, 1] to a bin in [0, N_BINS).
+///
+/// Values outside [0, 1] are clamped — heartbeats can briefly report >100%
+/// utilization under contention.
+pub fn bin_fraction(frac: f64) -> u8 {
+    let f = frac.clamp(0.0, 1.0);
+    // 1.0 maps to the top bin, not past it.
+    ((f * N_BINS as f64) as usize).min(N_BINS - 1) as u8
+}
+
+/// Inverse: representative fraction (bin midpoint) for a bin.
+pub fn bin_midpoint(bin: u8) -> f64 {
+    (bin as f64 + 0.5) / N_BINS as f64
+}
+
+/// The paper's displayed value (1–10) for a bin.
+pub fn display_value(bin: u8) -> u8 {
+    bin + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        assert_eq!(bin_fraction(0.0), 0);
+        assert_eq!(bin_fraction(1.0), 9);
+        assert_eq!(bin_fraction(0.999), 9);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        assert_eq!(bin_fraction(-0.5), 0);
+        assert_eq!(bin_fraction(1.7), 9);
+        assert_eq!(bin_fraction(f64::NAN.clamp(0.0, 1.0)), 0);
+    }
+
+    #[test]
+    fn uniform_bucket_widths() {
+        for b in 0..10u8 {
+            let lo = b as f64 / 10.0;
+            assert_eq!(bin_fraction(lo + 1e-9), b);
+            assert_eq!(bin_fraction(lo + 0.0999), b);
+        }
+    }
+
+    #[test]
+    fn midpoint_roundtrips() {
+        for b in 0..10u8 {
+            assert_eq!(bin_fraction(bin_midpoint(b)), b);
+        }
+    }
+
+    #[test]
+    fn display_is_one_based() {
+        assert_eq!(display_value(0), 1);
+        assert_eq!(display_value(9), 10);
+    }
+}

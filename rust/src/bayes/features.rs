@@ -1,0 +1,103 @@
+//! Feature variables (paper §4.2): 4 **job features** describing a job's
+//! declared resource appetite, and 4 **node features** describing the
+//! TaskTracker's current capacity, each discretized to 1–10 (bins 0–9).
+//!
+//! Keep the layout in sync with `python/compile/constants.py`: feature j of
+//! a sample occupies one-hot slots `j*N_BINS .. (j+1)*N_BINS` of the
+//! flattened table.
+
+use super::discretize::bin_fraction;
+
+/// Total feature variables per (job, node) sample.
+pub const N_FEATURES: usize = 8;
+/// Discretization bins (paper's 1–10 scale).
+pub const N_BINS: usize = 10;
+
+/// A discretized (job, node) feature sample: the classifier's input row.
+pub type FeatureVec = [u8; N_FEATURES];
+
+/// Job features: "the average usage rate of CPU and average usage rate of
+/// memory ... average network usage rate, and average usage rate of IO"
+/// (§4.2). Fractions in [0, 1], set when the job is submitted (the paper's
+/// "set when the user commits job" option).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobFeatures {
+    pub cpu: f64,
+    pub mem: f64,
+    pub io: f64,
+    pub net: f64,
+}
+
+impl JobFeatures {
+    pub fn bins(&self) -> [u8; 4] {
+        [
+            bin_fraction(self.cpu),
+            bin_fraction(self.mem),
+            bin_fraction(self.io),
+            bin_fraction(self.net),
+        ]
+    }
+}
+
+/// Node features: "the usage rate of CPU and the size of idle physical
+/// memory" (§4.2) plus IO/network load. All *usage/load* fractions in
+/// [0, 1] — note `idle_mem` is stored as utilization (1 - idle fraction) so
+/// that, like every other feature, **higher bin = more loaded** and the
+/// classifier sees a consistent direction (paper: "for node feature, the
+/// lower the value, the lower usability").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeFeatures {
+    pub cpu_used: f64,
+    pub mem_used: f64,
+    pub io_load: f64,
+    pub net_load: f64,
+}
+
+impl NodeFeatures {
+    pub fn bins(&self) -> [u8; 4] {
+        [
+            bin_fraction(self.cpu_used),
+            bin_fraction(self.mem_used),
+            bin_fraction(self.io_load),
+            bin_fraction(self.net_load),
+        ]
+    }
+}
+
+/// Assemble the classifier input row for (job, node).
+pub fn feature_vec(job: &JobFeatures, node: &NodeFeatures) -> FeatureVec {
+    let j = job.bins();
+    let n = node.bins();
+    [j[0], j[1], j[2], j[3], n[0], n[1], n[2], n[3]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_job_then_node() {
+        let job = JobFeatures { cpu: 0.95, mem: 0.05, io: 0.55, net: 0.35 };
+        let node = NodeFeatures {
+            cpu_used: 0.15,
+            mem_used: 0.75,
+            io_load: 0.0,
+            net_load: 1.0,
+        };
+        assert_eq!(feature_vec(&job, &node), [9, 0, 5, 3, 1, 7, 0, 9]);
+    }
+
+    #[test]
+    fn all_bins_in_range() {
+        let job = JobFeatures { cpu: 2.0, mem: -1.0, io: 0.5, net: 0.5 };
+        let node = NodeFeatures {
+            cpu_used: 0.5,
+            mem_used: 0.5,
+            io_load: 9.0,
+            net_load: -9.0,
+        };
+        for b in feature_vec(&job, &node) {
+            assert!((b as usize) < N_BINS);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's contribution: an online Naive Bayes good/bad job classifier
+//! with overload-rule feedback (paper §4).
+//!
+//! * [`features`] — the 8 discretized feature variables (4 job + 4 node).
+//! * [`discretize`] — the paper's 1–10 value discretization.
+//! * [`classifier`] — [`Classifier`] trait + [`NaiveBayes`], the pure-rust
+//!   implementation (also the differential-testing oracle for the
+//!   XLA-backed [`crate::runtime::XlaClassifier`]).
+//! * [`overload`] — the overload rule that labels feedback samples.
+//! * [`utility`] — the utility function `U(i)` for expected-utility job
+//!   selection.
+
+pub mod classifier;
+pub mod discretize;
+pub mod features;
+pub mod overload;
+pub mod persist;
+pub mod utility;
+
+pub use classifier::{Classifier, ClassifyResult, Label, NaiveBayes};
+pub use discretize::bin_fraction;
+pub use features::{FeatureVec, JobFeatures, NodeFeatures, N_BINS, N_FEATURES};
+pub use overload::{OverloadObservation, OverloadRule};
+pub use utility::UtilityFn;

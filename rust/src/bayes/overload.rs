@@ -1,0 +1,141 @@
+//! The overload rule (paper §4.2): "the rule which determine whether the
+//! execution of task allocation leads to the TaskTracker which it execute
+//! on overload ... we are not limited to just one judgment standard but
+//! synthesis multiple conditions for judging."
+//!
+//! The rule is evaluated against the node's *next heartbeat after the
+//! placement* (deviation D5: the paper's "next hop" observation at
+//! heartbeat granularity) and its verdict labels the feedback sample.
+
+use super::classifier::Label;
+
+/// Resource snapshot of a TaskTracker at heartbeat time. All fractions of
+/// capacity in [0, ~1.2] (contention can push instantaneous demand past
+/// capacity before the contention model throttles it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadObservation {
+    pub cpu_used: f64,
+    pub mem_used: f64,
+    pub io_load: f64,
+    pub net_load: f64,
+    /// Mean slowdown factor of tasks currently on the node (1.0 = no
+    /// contention; 2.0 = tasks running at half speed).
+    pub slowdown: f64,
+}
+
+/// Configurable multi-condition overload rule. A node is overloaded when
+/// ANY enabled threshold is exceeded (the paper's "synthesis multiple
+/// conditions": CPU, memory, network and so on).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadRule {
+    pub cpu_threshold: f64,
+    pub mem_threshold: f64,
+    pub io_threshold: f64,
+    pub net_threshold: f64,
+    pub slowdown_threshold: f64,
+}
+
+impl Default for OverloadRule {
+    fn default() -> Self {
+        OverloadRule {
+            cpu_threshold: 0.90,
+            mem_threshold: 0.90,
+            io_threshold: 0.95,
+            net_threshold: 0.95,
+            slowdown_threshold: 1.5,
+        }
+    }
+}
+
+impl OverloadRule {
+    /// Judge one observation. `true` = overloaded.
+    pub fn is_overloaded(&self, obs: &OverloadObservation) -> bool {
+        obs.cpu_used > self.cpu_threshold
+            || obs.mem_used > self.mem_threshold
+            || obs.io_load > self.io_threshold
+            || obs.net_load > self.net_threshold
+            || obs.slowdown > self.slowdown_threshold
+    }
+
+    /// Feedback label for the allocation that preceded `obs`.
+    pub fn label(&self, obs: &OverloadObservation) -> Label {
+        if self.is_overloaded(obs) {
+            Label::Bad
+        } else {
+            Label::Good
+        }
+    }
+
+    /// A rule that only looks at CPU (the paper's example: "the most jobs
+    /// are CPU intensive ones, then the usage rate of CPU can used to be
+    /// the standard").
+    pub fn cpu_only(threshold: f64) -> Self {
+        OverloadRule {
+            cpu_threshold: threshold,
+            mem_threshold: f64::INFINITY,
+            io_threshold: f64::INFINITY,
+            net_threshold: f64::INFINITY,
+            slowdown_threshold: f64::INFINITY,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calm() -> OverloadObservation {
+        OverloadObservation {
+            cpu_used: 0.4,
+            mem_used: 0.3,
+            io_load: 0.2,
+            net_load: 0.1,
+            slowdown: 1.0,
+        }
+    }
+
+    #[test]
+    fn calm_node_is_good() {
+        let rule = OverloadRule::default();
+        assert!(!rule.is_overloaded(&calm()));
+        assert_eq!(rule.label(&calm()), Label::Good);
+    }
+
+    #[test]
+    fn any_condition_triggers() {
+        let rule = OverloadRule::default();
+        for f in [
+            |o: &mut OverloadObservation| o.cpu_used = 0.95,
+            |o: &mut OverloadObservation| o.mem_used = 0.99,
+            |o: &mut OverloadObservation| o.io_load = 0.97,
+            |o: &mut OverloadObservation| o.net_load = 1.0,
+            |o: &mut OverloadObservation| o.slowdown = 2.0,
+        ] {
+            let mut obs = calm();
+            f(&mut obs);
+            assert!(rule.is_overloaded(&obs), "{obs:?}");
+            assert_eq!(rule.label(&obs), Label::Bad);
+        }
+    }
+
+    #[test]
+    fn thresholds_are_exclusive_bounds() {
+        let rule = OverloadRule::default();
+        let mut obs = calm();
+        obs.cpu_used = 0.90; // exactly at threshold -> not overloaded
+        assert!(!rule.is_overloaded(&obs));
+        obs.cpu_used = 0.9000001;
+        assert!(rule.is_overloaded(&obs));
+    }
+
+    #[test]
+    fn cpu_only_ignores_everything_else() {
+        let rule = OverloadRule::cpu_only(0.8);
+        let mut obs = calm();
+        obs.mem_used = 1.0;
+        obs.slowdown = 10.0;
+        assert!(!rule.is_overloaded(&obs));
+        obs.cpu_used = 0.85;
+        assert!(rule.is_overloaded(&obs));
+    }
+}

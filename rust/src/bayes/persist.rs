@@ -1,0 +1,153 @@
+//! Classifier persistence: save/load the Naive Bayes count tables as JSON
+//! so a trained model can warm-start later runs (the paper's scheduler
+//! learns continuously; operationally you want that learning to survive a
+//! JobTracker restart).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::json::Json;
+
+use super::classifier::{NaiveBayes, FEATURE_DIM};
+
+/// Serialize a classifier's state (counts + alpha).
+pub fn to_json(nb: &NaiveBayes) -> Json {
+    let (counts, class_counts) = nb.state();
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("format".into(), Json::Str("bayes-sched-nb-v1".into()));
+    o.insert("alpha".into(), Json::Num(nb.alpha() as f64));
+    o.insert(
+        "class_counts".into(),
+        Json::Arr(class_counts.iter().map(|c| Json::Num(*c as f64)).collect()),
+    );
+    o.insert(
+        "counts".into(),
+        Json::Arr(counts.iter().map(|c| Json::Num(*c as f64)).collect()),
+    );
+    Json::Obj(o)
+}
+
+/// Restore a classifier from its JSON state.
+pub fn from_json(j: &Json) -> Result<NaiveBayes> {
+    let format = j
+        .get("format")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'format'"))?;
+    if format != "bayes-sched-nb-v1" {
+        return Err(anyhow!("unsupported model format '{format}'"));
+    }
+    let alpha = j
+        .get("alpha")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing 'alpha'"))? as f32;
+    if alpha <= 0.0 {
+        return Err(anyhow!("alpha must be > 0"));
+    }
+    let class_counts: Vec<f32> = j
+        .get("class_counts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'class_counts'"))?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .ok_or_else(|| anyhow!("non-numeric class_counts"))?;
+    if class_counts.len() != 2 {
+        return Err(anyhow!("class_counts must have 2 entries"));
+    }
+    let counts: Vec<f32> = j
+        .get("counts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'counts'"))?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .ok_or_else(|| anyhow!("non-numeric counts"))?;
+    if counts.len() != 2 * FEATURE_DIM {
+        return Err(anyhow!(
+            "counts must have {} entries, got {}",
+            2 * FEATURE_DIM,
+            counts.len()
+        ));
+    }
+    if counts.iter().chain(class_counts.iter()).any(|c| *c < 0.0 || !c.is_finite()) {
+        return Err(anyhow!("counts must be finite and non-negative"));
+    }
+    Ok(NaiveBayes::from_state(counts, [class_counts[0], class_counts[1]], alpha))
+}
+
+/// Save to a file.
+pub fn save(nb: &NaiveBayes, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(nb).to_string_pretty())
+        .with_context(|| format!("writing model {path:?}"))
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<NaiveBayes> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading model {path:?}"))?;
+    from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayes::classifier::{Classifier, Label};
+    use crate::bayes::features::N_FEATURES;
+
+    fn trained() -> NaiveBayes {
+        let mut nb = NaiveBayes::new(0.5);
+        for i in 0..150u8 {
+            let fv = [(i % 10); N_FEATURES];
+            let label = if i % 10 >= 5 { Label::Bad } else { Label::Good };
+            nb.observe(fv, label);
+        }
+        nb.flush();
+        nb
+    }
+
+    #[test]
+    fn roundtrip_preserves_posteriors() {
+        let nb = trained();
+        let restored = from_json(&to_json(&nb)).unwrap();
+        assert_eq!(restored.alpha(), nb.alpha());
+        assert_eq!(restored.class_counts(), nb.class_counts());
+        for bin in 0..10u8 {
+            let fv = [bin; N_FEATURES];
+            assert_eq!(nb.posterior_good(&fv), restored.posterior_good(&fv));
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let nb = trained();
+        let path = std::env::temp_dir().join("bayes_sched_model_test.json");
+        save(&nb, &path).unwrap();
+        let restored = load(&path).unwrap();
+        assert_eq!(restored.class_counts(), nb.class_counts());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let cases = [
+            r#"{}"#,
+            r#"{"format": "other", "alpha": 1}"#,
+            r#"{"format": "bayes-sched-nb-v1", "alpha": 0, "class_counts": [1,1], "counts": []}"#,
+            r#"{"format": "bayes-sched-nb-v1", "alpha": 1, "class_counts": [1], "counts": []}"#,
+            r#"{"format": "bayes-sched-nb-v1", "alpha": 1, "class_counts": [1,1], "counts": [1,2,3]}"#,
+        ];
+        for c in cases {
+            assert!(from_json(&Json::parse(c).unwrap()).is_err(), "{c}");
+        }
+    }
+
+    #[test]
+    fn rejects_negative_counts() {
+        let nb = trained();
+        let mut j = to_json(&nb);
+        if let Json::Obj(o) = &mut j {
+            o.insert("class_counts".into(), Json::Arr(vec![Json::Num(-1.0), Json::Num(2.0)]));
+        }
+        assert!(from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! The utility function U(i) (paper §4.2): "we import utility function to
+//! set the prior level of jobs and implements some scheduling strategies.
+//! Without utility function, the scheduler will always select the jobs
+//! which can provide maximum system availability."
+//!
+//! The paper does not specify a functional form (deviation D2). We use
+//! `U(i) = priority_weight^priority * (1 + age / age_scale)` — monotone in
+//! the job's priority level and its queue waiting time, so high-priority
+//! and long-waiting jobs win ties among good jobs and starvation is
+//! bounded. `UtilityFn::constant()` reproduces the paper's "without utility
+//! function" baseline for the E8 ablation.
+
+/// Job priority levels, mirroring Hadoop's five JobPriority values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    VeryLow = 0,
+    Low = 1,
+    Normal = 2,
+    High = 3,
+    VeryHigh = 4,
+}
+
+impl Priority {
+    pub fn from_index(i: usize) -> Priority {
+        match i {
+            0 => Priority::VeryLow,
+            1 => Priority::Low,
+            2 => Priority::Normal,
+            3 => Priority::High,
+            _ => Priority::VeryHigh,
+        }
+    }
+}
+
+/// Parametrized utility function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilityFn {
+    /// Multiplicative weight per priority level above VeryLow.
+    pub priority_weight: f64,
+    /// Seconds of queue age that double a job's utility.
+    pub age_scale: f64,
+}
+
+impl Default for UtilityFn {
+    fn default() -> Self {
+        UtilityFn { priority_weight: 1.6, age_scale: 120.0 }
+    }
+}
+
+impl UtilityFn {
+    /// The "no utility function" ablation: U(i) = 1 for every job.
+    pub fn constant() -> Self {
+        UtilityFn { priority_weight: 1.0, age_scale: f64::INFINITY }
+    }
+
+    /// U(i) for a job with `priority` that has waited `age_secs` in queue.
+    pub fn eval(&self, priority: Priority, age_secs: f64) -> f64 {
+        let p = self.priority_weight.powi(priority as i32);
+        let age_term = if self.age_scale.is_finite() {
+            1.0 + age_secs.max(0.0) / self.age_scale
+        } else {
+            1.0
+        };
+        p * age_term
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_priority() {
+        let u = UtilityFn::default();
+        let mut last = 0.0;
+        for p in 0..5 {
+            let v = u.eval(Priority::from_index(p), 10.0);
+            assert!(v > last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn monotone_in_age() {
+        let u = UtilityFn::default();
+        assert!(
+            u.eval(Priority::Normal, 100.0) > u.eval(Priority::Normal, 10.0)
+        );
+    }
+
+    #[test]
+    fn constant_ignores_everything() {
+        let u = UtilityFn::constant();
+        assert_eq!(u.eval(Priority::VeryLow, 0.0), 1.0);
+        assert_eq!(u.eval(Priority::VeryHigh, 1e6), 1.0);
+    }
+
+    #[test]
+    fn negative_age_clamped() {
+        let u = UtilityFn::default();
+        assert_eq!(
+            u.eval(Priority::Normal, -5.0),
+            u.eval(Priority::Normal, 0.0)
+        );
+    }
+
+    #[test]
+    fn age_scale_doubles() {
+        let u = UtilityFn { priority_weight: 1.0, age_scale: 60.0 };
+        let base = u.eval(Priority::Normal, 0.0);
+        assert!((u.eval(Priority::Normal, 60.0) - 2.0 * base).abs() < 1e-12);
+    }
+}

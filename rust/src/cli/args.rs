@@ -1,0 +1,124 @@
+//! Tiny argument parser (clap substitute): positionals + `--key value`
+//! options + `--flag` booleans, with typed accessors and unknown-flag
+//! rejection.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `flag_names` lists valueless
+    /// switches; everything else starting with `--` takes a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(anyhow!("bare '--' not supported"));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} needs a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["quick", "verbose"])
+            .unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("run --scheduler bayes --nodes 40 trace.json");
+        assert_eq!(a.positionals, vec!["run", "trace.json"]);
+        assert_eq!(a.opt("scheduler"), Some("bayes"));
+        assert_eq!(a.opt_u64("nodes", 0).unwrap(), 40);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("x --seed=7 --rate=0.5");
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.opt_f64("rate", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("exp e1 --quick");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(vec!["--nodes".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --seed abc");
+        assert!(a.opt_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or("scheduler", "bayes"), "bayes");
+        assert_eq!(a.opt_f64("rate", 0.5).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,360 @@
+//! Subcommand implementations for the `repro` binary.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::Cluster;
+use crate::config::types::load_run_config;
+use crate::coordinator::builder::{build_tracker_with, RunConfig};
+use crate::report::experiments::{self, ExpOpts};
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::{generate, Mix, WorkloadConfig};
+use crate::workload::trace;
+use crate::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+use super::args::Args;
+
+pub const USAGE: &str = "\
+repro — Naive-Bayes Hadoop job scheduling (CS.DC 2015 reproduction)
+
+USAGE:
+  repro run        [--config cfg.toml] [--scheduler S] [--nodes N] [--racks R]
+                   [--jobs J] [--rate R] [--seed S] [--mix M] [--csv DIR]
+                   [--mtbf SECS] [--mttr SECS] [--timeline FILE.csv]
+                   [--save-model FILE.json] [--load-model FILE.json]
+  repro compare    [--jobs J] [--nodes N] [--seeds K] [--quick]
+  repro experiment <e1..e10|all> [--quick] [--out DIR]
+  repro yarn       [--policy yarn-fifo|yarn-fair|yarn-bayes] [--jobs J]
+                   [--nodes N] [--seed S]
+  repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
+  repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
+  repro info
+
+Schedulers: fifo fair capacity bayes bayes-xla random threshold-fifo
+Mixes:      balanced | cpu_heavy|io_heavy|mem_heavy|net_heavy|small | cpu:<f>
+";
+
+/// Dispatch a full command line (without argv[0]). Returns process exit code.
+pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
+    let args = Args::parse(raw, &["quick", "verbose"])?;
+    let Some(cmd) = args.positionals.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    match cmd {
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "experiment" | "exp" => cmd_experiment(&args),
+        "yarn" => cmd_yarn(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "trace-run" => cmd_trace_run(&args),
+        "info" => cmd_info(),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn parse_mix(s: &str) -> Result<Mix> {
+    if s == "balanced" {
+        return Ok(Mix::balanced());
+    }
+    if let Some(f) = s.strip_prefix("cpu:") {
+        return Ok(Mix::cpu_fraction(f.parse()?));
+    }
+    crate::job::profile::JobClass::from_name(s)
+        .map(Mix::only)
+        .ok_or_else(|| anyhow!("unknown mix '{s}'"))
+}
+
+/// Assemble a RunConfig from an optional TOML file + CLI overrides.
+fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => load_run_config(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.opt("scheduler") {
+        cfg.scheduler = s.to_string();
+    }
+    cfg.n_nodes = args.opt_u64("nodes", cfg.n_nodes as u64)? as u32;
+    cfg.n_racks = args.opt_u64("racks", cfg.n_racks as u64)? as u32;
+    cfg.workload.n_jobs = args.opt_u64("jobs", cfg.workload.n_jobs as u64)? as usize;
+    cfg.workload.arrival_rate = args.opt_f64("rate", cfg.workload.arrival_rate)?;
+    cfg.workload.seed = args.opt_u64("seed", cfg.workload.seed)?;
+    if let Some(m) = args.opt("mix") {
+        cfg.workload.mix = parse_mix(m)?;
+    }
+    let mtbf = args.opt_f64("mtbf", 0.0)?;
+    if mtbf > 0.0 {
+        cfg.tracker.failures.mtbf = Some(mtbf);
+    }
+    cfg.tracker.failures.mttr = args.opt_f64("mttr", cfg.tracker.failures.mttr)?;
+    if args.opt("timeline").is_some() {
+        cfg.tracker.timeline_interval =
+            args.opt_f64("timeline-interval", 15.0)?;
+    }
+    if let Some(p) = args.opt("load-model") {
+        cfg.model_path = Some(PathBuf::from(p));
+    }
+    Ok(cfg)
+}
+
+fn summary_table(rows: &[crate::report::experiments::common::RunSummary]) -> Table {
+    let mut t = Table::new(
+        "run summary",
+        &[
+            "scheduler",
+            "seed",
+            "makespan_s",
+            "throughput",
+            "mean_latency_s",
+            "p95_latency_s",
+            "overload_rate",
+            "oom",
+            "node_local",
+            "decision_us",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.scheduler.clone(),
+            format!("{}", r.seed),
+            fnum(r.makespan),
+            fnum(r.throughput),
+            fnum(r.mean_latency),
+            fnum(r.p95_latency),
+            fnum(r.overload_rate),
+            format!("{}", r.oom_kills),
+            fnum(r.locality_node),
+            fnum(r.mean_decision_us),
+        ]);
+    }
+    t
+}
+
+fn cmd_run(args: &Args) -> Result<i32> {
+    let cfg = config_from_args(args)?;
+    let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+    let specs = generate(&cfg.workload);
+    println!(
+        "running {} jobs on {} nodes ({} racks) with scheduler '{}'",
+        specs.len(),
+        cfg.n_nodes,
+        cfg.n_racks,
+        cfg.scheduler
+    );
+    let mut jt = build_tracker_with(&cfg, cluster, specs)?;
+    let t0 = std::time::Instant::now();
+    jt.run();
+    let wall = t0.elapsed();
+    let summary = crate::report::experiments::common::summarize(&jt, &cfg);
+    let table = summary_table(std::slice::from_ref(&summary));
+    println!("{}", table.render());
+    println!(
+        "virtual makespan {:.1}s simulated in {:.2}s wall ({} events, {} heartbeats)",
+        jt.metrics.makespan,
+        wall.as_secs_f64(),
+        jt.engine.processed(),
+        jt.metrics.heartbeats
+    );
+    if let Some(dir) = args.opt("csv") {
+        table.save_csv(Path::new(dir), "run")?;
+        println!("wrote {dir}/run.csv");
+    }
+    if let Some(path) = args.opt("timeline") {
+        std::fs::write(path, crate::metrics::timeline::to_csv(&jt.metrics.timeline))?;
+        println!("wrote {} timeline samples to {path}", jt.metrics.timeline.len());
+    }
+    if let Some(path) = args.opt("save-model") {
+        match jt.scheduler.export_model() {
+            Some(model) => {
+                std::fs::write(path, model.to_string_pretty())?;
+                println!("saved model to {path}");
+            }
+            None => println!("scheduler '{}' has no model to save", cfg.scheduler),
+        }
+    }
+    if jt.metrics.node_failures > 0 {
+        println!(
+            "node failures: {} (jobs killed: {})",
+            jt.metrics.node_failures, jt.metrics.failed_jobs
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_compare(args: &Args) -> Result<i32> {
+    let seeds = args.opt_u64("seeds", 3)?;
+    let mut rows = Vec::new();
+    for sched in ["fifo", "fair", "capacity", "bayes"] {
+        for seed in 1..=seeds {
+            let mut cfg = config_from_args(args)?;
+            cfg.scheduler = sched.to_string();
+            cfg.workload.seed = seed;
+            rows.push(crate::report::experiments::common::run_once(&cfg));
+        }
+    }
+    println!("{}", summary_table(&rows).render());
+    Ok(0)
+}
+
+fn cmd_experiment(args: &Args) -> Result<i32> {
+    let id = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| anyhow!("experiment id required (e1..e10 or all)"))?;
+    let opts = ExpOpts {
+        quick: args.flag("quick"),
+        out_dir: args.opt("out").map(PathBuf::from),
+    };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let tables = experiments::run(id, &opts)
+            .ok_or_else(|| anyhow!("unknown experiment '{id}'"))?;
+        for t in &tables {
+            println!("{}", t.render());
+        }
+        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(0)
+}
+
+fn cmd_yarn(args: &Args) -> Result<i32> {
+    let policy = args.opt_or("policy", "yarn-bayes");
+    let nodes = args.opt_u64("nodes", 40)? as u32;
+    let seed = args.opt_u64("seed", 1)?;
+    let specs = generate(&WorkloadConfig {
+        n_jobs: args.opt_u64("jobs", 100)? as usize,
+        arrival_rate: args.opt_f64("rate", 0.5)?,
+        seed,
+        ..Default::default()
+    });
+    let cluster = Cluster::homogeneous(nodes, (nodes / 10).max(1));
+    let mut rm = ResourceManager::new(
+        cluster,
+        yarn_policy_by_name(policy, 1.0)?,
+        specs,
+        seed,
+        YarnConfig::default(),
+    );
+    rm.run();
+    let m = &rm.metrics;
+    let lat = m.latencies();
+    let mut t = Table::new(
+        "yarn run",
+        &["policy", "makespan_s", "mean_latency_s", "overload_rate", "oom"],
+    );
+    t.row(vec![
+        policy.into(),
+        fnum(m.makespan),
+        fnum(crate::metrics::stats::mean(&lat)),
+        fnum(m.overload_rate()),
+        format!("{}", m.oom_kills),
+    ]);
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<i32> {
+    let out = args.opt("out").ok_or_else(|| anyhow!("--out FILE required"))?;
+    let cfg = WorkloadConfig {
+        n_jobs: args.opt_u64("jobs", 200)? as usize,
+        arrival_rate: args.opt_f64("rate", 0.5)?,
+        mix: parse_mix(args.opt_or("mix", "balanced"))?,
+        n_users: args.opt_u64("users", 8)? as usize,
+        seed: args.opt_u64("seed", 1)?,
+    };
+    let specs = generate(&cfg);
+    trace::save(&specs, Path::new(out))?;
+    println!("wrote {} jobs to {out}", specs.len());
+    Ok(0)
+}
+
+fn cmd_trace_run(args: &Args) -> Result<i32> {
+    let path = args.opt("trace").ok_or_else(|| anyhow!("--trace FILE required"))?;
+    let specs = trace::load(Path::new(path))?;
+    let mut cfg = config_from_args(args)?;
+    cfg.workload.n_jobs = specs.len();
+    let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+    let mut jt = build_tracker_with(&cfg, cluster, specs)?;
+    jt.run();
+    let summary = crate::report::experiments::common::summarize(&jt, &cfg);
+    println!("{}", summary_table(&[summary]).render());
+    Ok(0)
+}
+
+fn cmd_info() -> Result<i32> {
+    println!("bayes-sched {}", env!("CARGO_PKG_VERSION"));
+    let dir = crate::runtime::artifacts::default_dir();
+    match crate::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: OK at {dir:?}");
+            println!("  classify: {:?} (sha256 {}…)", m.classify.path, &m.classify.sha256[..12]);
+            println!("  update:   {:?} (sha256 {}…)", m.update.path, &m.update.sha256[..12]);
+            match crate::runtime::Runtime::load(&dir) {
+                Ok(rt) => println!("  PJRT platform: {}", rt.platform()),
+                Err(e) => println!("  PJRT load FAILED: {e:#}"),
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — `make artifacts`"),
+    }
+    println!("schedulers: {}", crate::scheduler::ALL_NAMES.join(" "));
+    println!("experiments: {}", crate::report::experiments::ALL.join(" "));
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_on_no_args() {
+        assert_eq!(dispatch(Vec::<String>::new()).unwrap(), 2);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(vec!["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn tiny_run_via_cli() {
+        let code = dispatch(
+            "run --scheduler fifo --nodes 4 --jobs 5 --seed 3"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn trace_roundtrip_via_cli() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("bayes_sched_cli_trace.json");
+        let gen_cmd = format!("trace-gen --out {} --jobs 5 --seed 2", path.display());
+        assert_eq!(dispatch(gen_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+        let run_cmd = format!(
+            "trace-run --trace {} --scheduler bayes --nodes 4",
+            path.display()
+        );
+        assert_eq!(dispatch(run_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+    }
+
+    #[test]
+    fn quick_experiment_via_cli() {
+        let code = dispatch(
+            "experiment e5 --quick".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+}

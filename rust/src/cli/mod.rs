@@ -1,0 +1,7 @@
+//! CLI: the `repro` launcher's argument parsing and subcommand dispatch.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::dispatch;

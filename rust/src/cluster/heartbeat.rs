@@ -1,0 +1,65 @@
+//! Heartbeat scheduling: "TaskTracker needs sends the information through
+//! the heartbeat JobTracker" (paper §1). Nodes heartbeat at a fixed
+//! interval with a deterministic per-node phase offset so heartbeats spread
+//! over the interval instead of stampeding.
+
+use crate::sim::engine::Time;
+
+use super::node::NodeId;
+
+/// Heartbeat timing parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeartbeatConfig {
+    /// Seconds between heartbeats of one node (Hadoop default: 3s).
+    pub interval: f64,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> Self {
+        HeartbeatConfig { interval: 3.0 }
+    }
+}
+
+impl HeartbeatConfig {
+    /// First heartbeat of `node`: phase-offset within one interval,
+    /// deterministic in the node id (golden-ratio hashing for an even
+    /// spread that is independent of cluster size).
+    pub fn first_beat(&self, node: NodeId) -> Time {
+        let phi = 0.618_033_988_749_894_9_f64;
+        let frac = (node.0 as f64 * phi).fract();
+        frac * self.interval
+    }
+
+    pub fn next_beat(&self, now: Time) -> Time {
+        now + self.interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_beats_spread_within_interval() {
+        let hb = HeartbeatConfig { interval: 3.0 };
+        for i in 0..100 {
+            let t = hb.first_beat(NodeId(i));
+            assert!((0.0..3.0).contains(&t));
+        }
+    }
+
+    #[test]
+    fn first_beats_are_distinct() {
+        let hb = HeartbeatConfig::default();
+        let mut beats: Vec<f64> = (0..50).map(|i| hb.first_beat(NodeId(i))).collect();
+        beats.sort_by(f64::total_cmp);
+        beats.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        assert_eq!(beats.len(), 50);
+    }
+
+    #[test]
+    fn next_beat_advances_by_interval() {
+        let hb = HeartbeatConfig { interval: 2.5 };
+        assert_eq!(hb.next_beat(10.0), 12.5);
+    }
+}

@@ -1,0 +1,114 @@
+//! Cluster substrate: TaskTracker nodes with typed slots, multi-dimensional
+//! resources, a contention/OOM model, racks, and heartbeat bookkeeping.
+
+pub mod heartbeat;
+pub mod node;
+pub mod resources;
+pub mod topology;
+
+pub use heartbeat::HeartbeatConfig;
+pub use node::{Node, NodeId, NodeSpec};
+pub use resources::Resources;
+pub use topology::{RackId, Topology};
+
+use crate::sim::rng::Pcg;
+
+/// The set of nodes plus topology.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    pub topology: Topology,
+}
+
+impl Cluster {
+    /// Homogeneous cluster of `n` default nodes over `racks` racks.
+    pub fn homogeneous(n: u32, racks: u32) -> Cluster {
+        Self::with_specs((0..n).map(|_| NodeSpec::default()).collect(), racks)
+    }
+
+    /// Cluster from explicit per-node specs (heterogeneity experiments).
+    pub fn with_specs(specs: Vec<NodeSpec>, racks: u32) -> Cluster {
+        let n = specs.len() as u32;
+        assert!(n > 0);
+        let nodes = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| Node::new(NodeId(i as u32), s))
+            .collect();
+        Cluster { nodes, topology: Topology::new(n, racks) }
+    }
+
+    /// Mixed-class cluster: `fractions` of (spec, weight) sampled
+    /// deterministically by `seed` (E9).
+    pub fn heterogeneous(
+        n: u32,
+        racks: u32,
+        classes: &[(NodeSpec, f64)],
+        seed: u64,
+    ) -> Cluster {
+        let mut rng = Pcg::new(seed, 0xC1A55);
+        let weights: Vec<f64> = classes.iter().map(|(_, w)| *w).collect();
+        let specs = (0..n)
+            .map(|_| classes[rng.weighted(&weights)].0)
+            .collect();
+        Self::with_specs(specs, racks)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    /// Total map+reduce slot capacity.
+    pub fn total_slots(&self) -> u32 {
+        self.nodes
+            .iter()
+            .map(|n| n.spec.map_slots + n.spec.reduce_slots)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_construction() {
+        let c = Cluster::homogeneous(8, 2);
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.topology.n_racks, 2);
+        assert_eq!(c.total_slots(), 8 * 4);
+        assert_eq!(c.node(NodeId(3)).id, NodeId(3));
+    }
+
+    #[test]
+    fn heterogeneous_uses_all_classes() {
+        let fast = NodeSpec { speed: 2.0, ..NodeSpec::default() };
+        let slow = NodeSpec { speed: 0.5, ..NodeSpec::default() };
+        let c = Cluster::heterogeneous(40, 4, &[(fast, 0.5), (slow, 0.5)], 7);
+        let fast_n = c.nodes.iter().filter(|n| n.spec.speed == 2.0).count();
+        assert!(fast_n > 5 && fast_n < 35, "fast_n={fast_n}");
+    }
+
+    #[test]
+    fn heterogeneous_is_deterministic() {
+        let fast = NodeSpec { speed: 2.0, ..NodeSpec::default() };
+        let slow = NodeSpec { speed: 0.5, ..NodeSpec::default() };
+        let a = Cluster::heterogeneous(20, 2, &[(fast, 0.3), (slow, 0.7)], 11);
+        let b = Cluster::heterogeneous(20, 2, &[(fast, 0.3), (slow, 0.7)], 11);
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.spec.speed, y.spec.speed);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! TaskTracker node: typed slots, multi-dimensional resources, and the
+//! contention model that makes bad placements expensive.
+//!
+//! Contention model: every running task demands a resource vector. When the
+//! summed demand oversubscribes any dimension, **all** tasks on the node
+//! slow down by the bottleneck ratio (`slowdown = max(1, max_r demand_r /
+//! capacity_r)`). Memory additionally has an OOM cliff: a placement that
+//! pushes memory demand past `OOM_FACTOR`× capacity kills the placed task
+//! (paper §2.1: "If two large memory consumption of the task to be
+//! scheduled one, it is easy to appear OOM").
+//!
+//! Work accounting uses the standard DES trick for load-dependent service
+//! rates: each task tracks `remaining` work-seconds; whenever node load
+//! changes, `advance()` first drains elapsed×speed from every task, then
+//! completion times are re-derived from the new speed (stale completion
+//! events are invalidated by generation counters).
+
+use crate::bayes::features::NodeFeatures;
+use crate::bayes::overload::OverloadObservation;
+use crate::job::task::{TaskKind, TaskRef};
+use crate::sim::engine::Time;
+
+use super::resources::Resources;
+
+/// Node identifier, dense from 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node_{:03}", self.0)
+    }
+}
+
+/// Memory oversubscription factor that triggers an OOM kill of the
+/// just-placed task.
+pub const OOM_FACTOR: f64 = 1.2;
+
+/// Convexity of the overload penalty. Oversubscription is NOT
+/// work-conserving on real machines (thrashing, cache pollution, swap):
+/// at bottleneck utilization `u > 1` the slowdown is
+/// `u * (1 + OVERLOAD_PENALTY * (u - 1))`, so aggregate node throughput
+/// *drops* below capacity — e.g. u = 1.6 ⇒ slowdown 3.04, efficiency 53%.
+/// This is what makes overload avoidance worth learning (DESIGN.md D1).
+pub const OVERLOAD_PENALTY: f64 = 1.5;
+
+/// Hardware class of a node (E9 heterogeneity experiment).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    /// Resource capacities as fractions of the standard node.
+    pub capacity: Resources,
+    /// Base execution speed (1.0 = standard; 0.5 = half as fast).
+    pub speed: f64,
+    pub map_slots: u32,
+    pub reduce_slots: u32,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        NodeSpec {
+            capacity: Resources::splat(1.0),
+            speed: 1.0,
+            map_slots: 2,
+            reduce_slots: 2,
+        }
+    }
+}
+
+/// A task currently executing on the node.
+#[derive(Debug, Clone)]
+pub struct RunningTask {
+    pub task: TaskRef,
+    pub demand: Resources,
+    /// Work-seconds left at speed 1.0.
+    pub remaining: f64,
+    pub started: Time,
+}
+
+/// One simulated TaskTracker.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub spec: NodeSpec,
+    running: Vec<RunningTask>,
+    /// Time `running[*].remaining` was last drained.
+    last_advance: Time,
+    /// Cumulative overload-seconds (metrics).
+    pub overload_seconds: f64,
+    /// Count of OOM kills on this node (metrics).
+    pub oom_kills: u32,
+    /// False while the node is failed (no heartbeats, no placements).
+    pub alive: bool,
+}
+
+impl Node {
+    pub fn new(id: NodeId, spec: NodeSpec) -> Node {
+        Node {
+            id,
+            spec,
+            running: Vec::new(),
+            last_advance: 0.0,
+            overload_seconds: 0.0,
+            oom_kills: 0,
+            alive: true,
+        }
+    }
+
+    /// Kill the node: drop every running task (they are lost — the caller
+    /// re-queues them) and mark it dead.
+    pub fn fail(&mut self, now: Time) -> Vec<RunningTask> {
+        self.advance(now);
+        self.alive = false;
+        std::mem::take(&mut self.running)
+    }
+
+    /// Bring the node back (empty, fresh).
+    pub fn recover(&mut self, now: Time) {
+        debug_assert!(!self.alive);
+        self.last_advance = now;
+        self.alive = true;
+    }
+
+    // ------------------------------------------------------------ slots --
+
+    pub fn used_slots(&self, kind: TaskKind) -> u32 {
+        self.running.iter().filter(|r| r.task.kind == kind).count() as u32
+    }
+
+    pub fn free_slots(&self, kind: TaskKind) -> u32 {
+        let cap = match kind {
+            TaskKind::Map => self.spec.map_slots,
+            TaskKind::Reduce => self.spec.reduce_slots,
+        };
+        cap.saturating_sub(self.used_slots(kind))
+    }
+
+    pub fn running(&self) -> &[RunningTask] {
+        &self.running
+    }
+
+    // ------------------------------------------------------- contention --
+
+    /// Total demand of running tasks.
+    pub fn demand(&self) -> Resources {
+        let mut d = Resources::ZERO;
+        for r in &self.running {
+            d += r.demand;
+        }
+        d
+    }
+
+    /// Component-wise utilization (can exceed 1.0 under oversubscription).
+    pub fn utilization(&self) -> Resources {
+        self.demand().frac_of(&self.spec.capacity)
+    }
+
+    /// Current slowdown factor (>= 1.0), convex above full utilization.
+    pub fn slowdown(&self) -> f64 {
+        let u = self.utilization().max_component();
+        if u <= 1.0 {
+            1.0
+        } else {
+            u * (1.0 + OVERLOAD_PENALTY * (u - 1.0))
+        }
+    }
+
+    /// Effective execution speed for tasks on this node right now.
+    pub fn effective_speed(&self) -> f64 {
+        self.spec.speed / self.slowdown()
+    }
+
+    /// Would adding `demand` trip the OOM cliff?
+    pub fn would_oom(&self, demand: &Resources) -> bool {
+        let mem = self.demand().mem + demand.mem;
+        mem > OOM_FACTOR * self.spec.capacity.mem
+    }
+
+    // -------------------------------------------------- work accounting --
+
+    /// Drain elapsed work from all running tasks up to `now`. Must be
+    /// called before any mutation (add/remove) and before reading
+    /// completion times.
+    pub fn advance(&mut self, now: Time) {
+        debug_assert!(now >= self.last_advance);
+        let dt = now - self.last_advance;
+        if dt > 0.0 {
+            let speed = self.effective_speed();
+            for r in &mut self.running {
+                r.remaining = (r.remaining - dt * speed).max(0.0);
+            }
+            if self.slowdown() > 1.0 {
+                self.overload_seconds += dt;
+            }
+        }
+        self.last_advance = now;
+    }
+
+    /// Place a task. Caller has checked slots and advanced the clock.
+    /// Returns the new completion horizon for every running task:
+    /// `(task, absolute_completion_time)`.
+    pub fn add_task(
+        &mut self,
+        task: TaskRef,
+        demand: Resources,
+        work: f64,
+        now: Time,
+    ) -> Vec<(TaskRef, Time)> {
+        debug_assert_eq!(self.last_advance, now, "advance() before add_task");
+        debug_assert!(self.free_slots(task.kind) > 0, "no free {:?} slot", task.kind);
+        self.running.push(RunningTask {
+            task,
+            demand,
+            remaining: work,
+            started: now,
+        });
+        self.completion_times(now)
+    }
+
+    /// Remove a task (completion or kill). Returns its record and the new
+    /// completion horizon for the remaining tasks.
+    pub fn remove_task(
+        &mut self,
+        task: &TaskRef,
+        now: Time,
+    ) -> (RunningTask, Vec<(TaskRef, Time)>) {
+        debug_assert_eq!(self.last_advance, now, "advance() before remove_task");
+        let idx = self
+            .running
+            .iter()
+            .position(|r| &r.task == task)
+            .expect("removing task not on node");
+        let rec = self.running.swap_remove(idx);
+        (rec, self.completion_times(now))
+    }
+
+    /// Absolute completion time of every running task at current speed.
+    pub fn completion_times(&self, now: Time) -> Vec<(TaskRef, Time)> {
+        let speed = self.effective_speed();
+        self.running
+            .iter()
+            .map(|r| (r.task, now + r.remaining / speed.max(1e-9)))
+            .collect()
+    }
+
+    // ------------------------------------------------------- heartbeats --
+
+    /// Node features for the classifier (heartbeat payload). Utilization is
+    /// clamped into [0, 1] by the discretizer.
+    pub fn features(&self) -> NodeFeatures {
+        let u = self.utilization();
+        NodeFeatures {
+            cpu_used: u.cpu,
+            mem_used: u.mem,
+            io_load: u.io,
+            net_load: u.net,
+        }
+    }
+
+    /// Observation for the overload rule (feedback labeling).
+    pub fn observation(&self) -> OverloadObservation {
+        let u = self.utilization();
+        OverloadObservation {
+            cpu_used: u.cpu,
+            mem_used: u.mem,
+            io_load: u.io,
+            net_load: u.net,
+            slowdown: self.slowdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobId;
+
+    fn tref(i: u32) -> TaskRef {
+        TaskRef { job: JobId(0), kind: TaskKind::Map, index: i }
+    }
+
+    fn node() -> Node {
+        Node::new(NodeId(0), NodeSpec::default())
+    }
+
+    #[test]
+    fn slot_accounting() {
+        let mut n = node();
+        assert_eq!(n.free_slots(TaskKind::Map), 2);
+        n.advance(0.0);
+        n.add_task(tref(0), Resources::splat(0.1), 10.0, 0.0);
+        assert_eq!(n.free_slots(TaskKind::Map), 1);
+        assert_eq!(n.free_slots(TaskKind::Reduce), 2);
+    }
+
+    #[test]
+    fn uncontended_task_runs_at_full_speed() {
+        let mut n = node();
+        n.advance(0.0);
+        let times = n.add_task(tref(0), Resources::splat(0.3), 10.0, 0.0);
+        assert_eq!(times, vec![(tref(0), 10.0)]);
+    }
+
+    #[test]
+    fn oversubscription_slows_everyone_convexly() {
+        let mut n = node();
+        n.advance(0.0);
+        n.add_task(tref(0), Resources::new(0.8, 0.1, 0.1, 0.1), 10.0, 0.0);
+        let times = n.add_task(tref(1), Resources::new(0.8, 0.1, 0.1, 0.1), 10.0, 0.0);
+        // cpu demand 1.6 -> slowdown 1.6 * (1 + 1.5*0.6) = 3.04
+        let expect = 1.6 * (1.0 + OVERLOAD_PENALTY * 0.6);
+        assert!((n.slowdown() - expect).abs() < 1e-12);
+        for (_, t) in times {
+            assert!((t - 10.0 * expect).abs() < 1e-9);
+        }
+        // convexity: aggregate throughput drops under overload
+        assert!(2.0 / expect < 1.0 / 0.8 * 0.9);
+    }
+
+    #[test]
+    fn advance_drains_work_at_current_speed() {
+        let mut n = node();
+        n.advance(0.0);
+        n.add_task(tref(0), Resources::new(0.8, 0.1, 0.1, 0.1), 10.0, 0.0);
+        n.add_task(tref(1), Resources::new(0.8, 0.1, 0.1, 0.1), 10.0, 0.0);
+        let speed = 1.0 / n.slowdown();
+        // run 8s at the contended speed
+        n.advance(8.0);
+        let (rec, times) = n.remove_task(&tref(1), 8.0);
+        let drained = 8.0 * speed;
+        assert!((rec.remaining - (10.0 - drained)).abs() < 1e-9);
+        // remaining task now alone: rest of its work at speed 1.0
+        assert_eq!(times.len(), 1);
+        assert!((times[0].1 - (8.0 + (10.0 - drained))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slower_node_scales_durations() {
+        let spec = NodeSpec { speed: 0.5, ..NodeSpec::default() };
+        let mut n = Node::new(NodeId(1), spec);
+        n.advance(0.0);
+        let times = n.add_task(tref(0), Resources::splat(0.2), 10.0, 0.0);
+        assert!((times[0].1 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_detection() {
+        let mut n = node();
+        n.advance(0.0);
+        n.add_task(tref(0), Resources::new(0.1, 0.8, 0.1, 0.1), 10.0, 0.0);
+        assert!(!n.would_oom(&Resources::new(0.1, 0.3, 0.1, 0.1)));
+        assert!(n.would_oom(&Resources::new(0.1, 0.5, 0.1, 0.1)));
+    }
+
+    #[test]
+    fn overload_seconds_accumulate() {
+        let mut n = node();
+        n.advance(0.0);
+        n.add_task(tref(0), Resources::new(1.5, 0.1, 0.1, 0.1), 30.0, 0.0);
+        n.advance(10.0);
+        assert_eq!(n.overload_seconds, 10.0);
+        let (_, _) = n.remove_task(&tref(0), 10.0);
+        n.advance(20.0);
+        assert_eq!(n.overload_seconds, 10.0); // idle node, no overload
+    }
+
+    #[test]
+    fn features_match_utilization() {
+        let mut n = node();
+        n.advance(0.0);
+        n.add_task(tref(0), Resources::new(0.6, 0.4, 0.2, 0.1), 10.0, 0.0);
+        let f = n.features();
+        assert!((f.cpu_used - 0.6).abs() < 1e-12);
+        assert!((f.mem_used - 0.4).abs() < 1e-12);
+        let o = n.observation();
+        assert_eq!(o.slowdown, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn removing_absent_task_panics() {
+        let mut n = node();
+        n.advance(0.0);
+        let _ = n.remove_task(&tref(9), 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Multi-dimensional node resources (cpu / memory / io / network), the
+//! vocabulary shared by task demands, node capacities and utilization
+//! snapshots. This is the resource abstraction YARN calls a Container's
+//! dimensions (paper §2.2) applied to MRv1 TaskTrackers.
+
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A resource vector. Units are fractions of a *standard node* (1.0 cpu =
+/// all cores of the reference machine busy), so heterogeneous nodes are
+/// expressed with capacities != 1.0.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub cpu: f64,
+    pub mem: f64,
+    pub io: f64,
+    pub net: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu: 0.0, mem: 0.0, io: 0.0, net: 0.0 };
+
+    pub fn new(cpu: f64, mem: f64, io: f64, net: f64) -> Resources {
+        Resources { cpu, mem, io, net }
+    }
+
+    /// Uniform vector (capacity of a standard node = splat(1.0)).
+    pub fn splat(v: f64) -> Resources {
+        Resources { cpu: v, mem: v, io: v, net: v }
+    }
+
+    /// Component-wise utilization of `self` against `capacity`.
+    pub fn frac_of(&self, capacity: &Resources) -> Resources {
+        Resources {
+            cpu: safe_div(self.cpu, capacity.cpu),
+            mem: safe_div(self.mem, capacity.mem),
+            io: safe_div(self.io, capacity.io),
+            net: safe_div(self.net, capacity.net),
+        }
+    }
+
+    /// Largest component — the bottleneck dimension.
+    pub fn max_component(&self) -> f64 {
+        self.cpu.max(self.mem).max(self.io).max(self.net)
+    }
+
+    /// Component-wise scale.
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources {
+            cpu: self.cpu * k,
+            mem: self.mem * k,
+            io: self.io * k,
+            net: self.net * k,
+        }
+    }
+
+    /// True when every component of `self` fits under `other`.
+    pub fn fits_within(&self, other: &Resources) -> bool {
+        self.cpu <= other.cpu
+            && self.mem <= other.mem
+            && self.io <= other.io
+            && self.net <= other.net
+    }
+
+    /// Clamp all components to >= 0 (guards float drift in +=/-=).
+    pub fn clamp_non_negative(&mut self) {
+        self.cpu = self.cpu.max(0.0);
+        self.mem = self.mem.max(0.0);
+        self.io = self.io.max(0.0);
+        self.net = self.net.max(0.0);
+    }
+}
+
+fn safe_div(a: f64, b: f64) -> f64 {
+    if b <= 0.0 {
+        if a > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    } else {
+        a / b
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            cpu: self.cpu + o.cpu,
+            mem: self.mem + o.mem,
+            io: self.io + o.io,
+            net: self.net + o.net,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Resources {
+    type Output = Resources;
+    fn sub(self, o: Resources) -> Resources {
+        Resources {
+            cpu: self.cpu - o.cpu,
+            mem: self.mem - o.mem,
+            io: self.io - o.io,
+            net: self.net - o.net,
+        }
+    }
+}
+
+impl SubAssign for Resources {
+    fn sub_assign(&mut self, o: Resources) {
+        *self = *self - o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(1.0, 2.0, 3.0, 4.0);
+        let b = Resources::splat(1.0);
+        assert_eq!(a + b, Resources::new(2.0, 3.0, 4.0, 5.0));
+        assert_eq!(a - b, Resources::new(0.0, 1.0, 2.0, 3.0));
+        assert_eq!(a.scale(2.0), Resources::new(2.0, 4.0, 6.0, 8.0));
+    }
+
+    #[test]
+    fn frac_of_handles_zero_capacity() {
+        let load = Resources::new(0.5, 0.0, 0.0, 0.0);
+        let cap = Resources::new(0.0, 1.0, 1.0, 1.0);
+        let f = load.frac_of(&cap);
+        assert!(f.cpu.is_infinite());
+        assert_eq!(f.mem, 0.0);
+    }
+
+    #[test]
+    fn max_component_finds_bottleneck() {
+        assert_eq!(Resources::new(0.2, 0.9, 0.1, 0.3).max_component(), 0.9);
+    }
+
+    #[test]
+    fn fits_within() {
+        let small = Resources::splat(0.5);
+        let big = Resources::splat(1.0);
+        assert!(small.fits_within(&big));
+        assert!(!big.fits_within(&small));
+        let mixed = Resources::new(0.4, 1.1, 0.4, 0.4);
+        assert!(!mixed.fits_within(&big));
+    }
+
+    #[test]
+    fn clamp_non_negative() {
+        let mut r = Resources::new(-1e-9, 0.5, -0.2, 0.0);
+        r.clamp_non_negative();
+        assert_eq!(r, Resources::new(0.0, 0.5, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,82 @@
+//! Cluster topology: nodes arranged in racks. Rack membership drives both
+//! HDFS replica placement and task data-locality classification.
+
+use super::node::NodeId;
+
+/// Rack identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RackId(pub u32);
+
+/// Static topology: `n_nodes` spread round-robin over `n_racks`.
+#[derive(Debug, Clone, Copy)]
+pub struct Topology {
+    pub n_nodes: u32,
+    pub n_racks: u32,
+}
+
+impl Topology {
+    pub fn new(n_nodes: u32, n_racks: u32) -> Topology {
+        assert!(n_nodes > 0 && n_racks > 0);
+        Topology { n_nodes, n_racks: n_racks.min(n_nodes) }
+    }
+
+    pub fn rack_of(&self, node: NodeId) -> RackId {
+        RackId(node.0 % self.n_racks)
+    }
+
+    pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
+        self.rack_of(a) == self.rack_of(b)
+    }
+
+    /// Nodes in a rack, ascending id.
+    pub fn nodes_in_rack(&self, rack: RackId) -> Vec<NodeId> {
+        (0..self.n_nodes)
+            .filter(|i| i % self.n_racks == rack.0)
+            .map(NodeId)
+            .collect()
+    }
+
+    pub fn all_nodes(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.n_nodes).map(NodeId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_racks() {
+        let t = Topology::new(8, 3);
+        assert_eq!(t.rack_of(NodeId(0)), RackId(0));
+        assert_eq!(t.rack_of(NodeId(1)), RackId(1));
+        assert_eq!(t.rack_of(NodeId(2)), RackId(2));
+        assert_eq!(t.rack_of(NodeId(3)), RackId(0));
+    }
+
+    #[test]
+    fn racks_capped_by_nodes() {
+        let t = Topology::new(2, 8);
+        assert_eq!(t.n_racks, 2);
+    }
+
+    #[test]
+    fn nodes_in_rack_partition_everything() {
+        let t = Topology::new(10, 4);
+        let mut all: Vec<NodeId> = (0..4)
+            .flat_map(|r| t.nodes_in_rack(RackId(r)))
+            .collect();
+        all.sort_by_key(|n| n.0);
+        assert_eq!(all, t.all_nodes().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn same_rack_reflexive() {
+        let t = Topology::new(6, 2);
+        for n in t.all_nodes() {
+            assert!(t.same_rack(n, n));
+        }
+        assert!(t.same_rack(NodeId(0), NodeId(2)));
+        assert!(!t.same_rack(NodeId(0), NodeId(1)));
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration: hand-rolled JSON + TOML-subset parsers (the offline crate
+//! cache has no serde/toml) and the typed experiment/cluster config structs.
+
+pub mod json;
+pub mod toml;
+pub mod types;
+
+pub use json::Json;
+pub use toml::{TomlDoc, TomlValue};
+pub use types::{load_run_config, run_config_from_toml};

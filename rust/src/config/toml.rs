@@ -1,0 +1,288 @@
+//! Minimal TOML-subset parser (toml-crate substitute).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays; `#` comments. Unsupported
+//! (and rejected loudly): inline tables, array-of-tables, multi-line
+//! strings, datetimes. The experiment configs only need the subset.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric coercion (int or float).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key` -> value. Root-level keys use `key`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(TomlValue::as_i64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    /// Keys under a section prefix (e.g. `workload.`).
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(err("array-of-tables is not supported"));
+            }
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(path, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but correct for our subset: '#' inside quoted strings guarded
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("escaped quotes not supported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let parts = split_top_level(inner)?;
+        let vals: Result<Vec<_>, _> =
+            parts.iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(vals?));
+    }
+    if s.starts_with('{') {
+        return Err("inline tables not supported".into());
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split an array body on commas not nested in strings/brackets.
+fn split_top_level(s: &str) -> Result<Vec<String>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or("unbalanced brackets")?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_document() {
+        let doc = parse("a = 1\nb = \"two\"\nc = 3.5\nd = true\n").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("b").unwrap().as_str(), Some("two"));
+        assert_eq!(doc.get("c").unwrap().as_f64(), Some(3.5));
+        assert_eq!(doc.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let doc = parse("[workload]\nn_jobs = 200\n[cluster.hw]\nnodes = 40\n").unwrap();
+        assert_eq!(doc.i64_or("workload.n_jobs", 0), 200);
+        assert_eq!(doc.i64_or("cluster.hw.nodes", 0), 40);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = parse("# header\n\na = 1 # trailing\ns = \"with # inside\"\n").unwrap();
+        assert_eq!(doc.i64_or("a", 0), 1);
+        assert_eq!(doc.str_or("s", ""), "with # inside");
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("mix = [0.3, 0.25, 0.45]\nnames = [\"a\", \"b\"]\nempty = []\n")
+            .unwrap();
+        let mix = doc.get("mix").unwrap().as_arr().unwrap();
+        assert_eq!(mix.len(), 3);
+        assert_eq!(mix[2].as_f64(), Some(0.45));
+        let names = doc.get("names").unwrap().as_arr().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+        assert_eq!(doc.get("empty").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("big = 1_000_000\n").unwrap();
+        assert_eq!(doc.i64_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(parse("[[jobs]]\nx = 1\n").is_err());
+        assert!(parse("x = {a = 1}\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+        assert!(parse("x 1\n").is_err());
+        assert!(parse("[bad\n").is_err());
+    }
+
+    #[test]
+    fn defaults_api() {
+        let doc = parse("a = 1\n").unwrap();
+        assert_eq!(doc.f64_or("missing", 9.5), 9.5);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+        assert!(!doc.bool_or("missing", false));
+    }
+}

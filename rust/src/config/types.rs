@@ -1,0 +1,210 @@
+//! Typed experiment configuration: TOML document -> [`RunConfig`], with
+//! validation. This is the launcher's config schema:
+//!
+//! ```toml
+//! scheduler = "bayes"          # fifo|fair|capacity|bayes|bayes-xla|...
+//! seed = 1
+//!
+//! [cluster]
+//! nodes = 40
+//! racks = 4
+//!
+//! [workload]
+//! n_jobs = 200
+//! arrival_rate = 0.5
+//! n_users = 8
+//! mix = "balanced"             # balanced | cpu_heavy | ... | cpu:<frac>
+//!
+//! [bayes]
+//! alpha = 1.0
+//! starvation_wait = false
+//!
+//! [overload]
+//! cpu = 0.9
+//! mem = 0.9
+//! slowdown = 1.5
+//!
+//! [heartbeat]
+//! interval = 3.0
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use crate::bayes::overload::OverloadRule;
+use crate::cluster::heartbeat::HeartbeatConfig;
+use crate::coordinator::builder::RunConfig;
+use crate::coordinator::jobtracker::TrackerConfig;
+use crate::job::profile::JobClass;
+use crate::workload::generator::{Mix, WorkloadConfig};
+
+use super::toml::{parse, TomlDoc};
+
+/// Parse + validate a config file's text.
+pub fn run_config_from_toml(text: &str) -> Result<RunConfig> {
+    let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+    run_config_from_doc(&doc)
+}
+
+/// Load from a path.
+pub fn load_run_config(path: &std::path::Path) -> Result<RunConfig> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
+    run_config_from_toml(&text)
+}
+
+fn parse_mix(s: &str) -> Result<Mix> {
+    if s == "balanced" {
+        return Ok(Mix::balanced());
+    }
+    if let Some(frac) = s.strip_prefix("cpu:") {
+        let f: f64 = frac
+            .parse()
+            .map_err(|_| anyhow!("bad cpu fraction in mix '{s}'"))?;
+        if !(0.0..=1.0).contains(&f) {
+            return Err(anyhow!("cpu fraction must be in [0,1], got {f}"));
+        }
+        return Ok(Mix::cpu_fraction(f));
+    }
+    JobClass::from_name(s)
+        .map(Mix::only)
+        .ok_or_else(|| anyhow!("unknown mix '{s}'"))
+}
+
+fn run_config_from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+    let d = RunConfig::default();
+    let seed = doc.i64_or("seed", 1) as u64;
+    let scheduler = doc.str_or("scheduler", &d.scheduler).to_string();
+
+    let n_nodes = doc.i64_or("cluster.nodes", d.n_nodes as i64);
+    let n_racks = doc.i64_or("cluster.racks", d.n_racks as i64);
+    if n_nodes < 1 || n_racks < 1 {
+        return Err(anyhow!("cluster.nodes and cluster.racks must be >= 1"));
+    }
+
+    let n_jobs = doc.i64_or("workload.n_jobs", 200);
+    let arrival_rate = doc.f64_or("workload.arrival_rate", 0.5);
+    if n_jobs < 1 || arrival_rate <= 0.0 {
+        return Err(anyhow!("workload.n_jobs >= 1 and arrival_rate > 0 required"));
+    }
+    let workload = WorkloadConfig {
+        n_jobs: n_jobs as usize,
+        arrival_rate,
+        mix: parse_mix(doc.str_or("workload.mix", "balanced"))?,
+        n_users: doc.i64_or("workload.n_users", 8).max(1) as usize,
+        seed,
+    };
+
+    let overload_rule = OverloadRule {
+        cpu_threshold: doc.f64_or("overload.cpu", 0.90),
+        mem_threshold: doc.f64_or("overload.mem", 0.90),
+        io_threshold: doc.f64_or("overload.io", 0.95),
+        net_threshold: doc.f64_or("overload.net", 0.95),
+        slowdown_threshold: doc.f64_or("overload.slowdown", 1.5),
+    };
+    let heartbeat =
+        HeartbeatConfig { interval: doc.f64_or("heartbeat.interval", 3.0) };
+    if heartbeat.interval <= 0.0 {
+        return Err(anyhow!("heartbeat.interval must be > 0"));
+    }
+
+    let alpha = doc.f64_or("bayes.alpha", 1.0);
+    if alpha <= 0.0 {
+        return Err(anyhow!("bayes.alpha must be > 0"));
+    }
+
+    Ok(RunConfig {
+        scheduler,
+        n_nodes: n_nodes as u32,
+        n_racks: n_racks as u32,
+        workload,
+        tracker: TrackerConfig {
+            heartbeat,
+            overload_rule,
+            failures: crate::coordinator::jobtracker::FailureConfig {
+                mtbf: {
+                    let v = doc.f64_or("failures.mtbf", 0.0);
+                    (v > 0.0).then_some(v)
+                },
+                mttr: doc.f64_or("failures.mttr", 120.0),
+            },
+            timeline_interval: doc.f64_or("tracker.timeline_interval", 0.0),
+            oom_kill_delay: doc.f64_or("tracker.oom_kill_delay", 4.0),
+            max_task_attempts: doc.i64_or("tracker.max_task_attempts", 4) as u32,
+            max_sim_time: doc.f64_or("tracker.max_sim_time", 1e7),
+        },
+        alpha: alpha as f32,
+        starvation_wait: doc.bool_or("bayes.starvation_wait", false),
+        artifacts_dir: doc
+            .get("bayes.artifacts_dir")
+            .and_then(|v| v.as_str())
+            .map(std::path::PathBuf::from),
+        model_path: doc
+            .get("bayes.model_path")
+            .and_then(|v| v.as_str())
+            .map(std::path::PathBuf::from),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty_doc() {
+        let cfg = run_config_from_toml("").unwrap();
+        assert_eq!(cfg.scheduler, "bayes");
+        assert_eq!(cfg.n_nodes, 40);
+        assert_eq!(cfg.workload.n_jobs, 200);
+    }
+
+    #[test]
+    fn full_document() {
+        let cfg = run_config_from_toml(
+            r#"
+scheduler = "fifo"
+seed = 9
+[cluster]
+nodes = 10
+racks = 2
+[workload]
+n_jobs = 50
+arrival_rate = 1.5
+mix = "cpu_heavy"
+[overload]
+cpu = 0.8
+[heartbeat]
+interval = 2.0
+[bayes]
+alpha = 0.5
+starvation_wait = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduler, "fifo");
+        assert_eq!(cfg.workload.seed, 9);
+        assert_eq!(cfg.n_nodes, 10);
+        assert_eq!(cfg.workload.arrival_rate, 1.5);
+        assert_eq!(cfg.tracker.overload_rule.cpu_threshold, 0.8);
+        assert_eq!(cfg.tracker.heartbeat.interval, 2.0);
+        assert_eq!(cfg.alpha, 0.5);
+        assert!(cfg.starvation_wait);
+    }
+
+    #[test]
+    fn cpu_fraction_mix() {
+        let cfg =
+            run_config_from_toml("[workload]\nmix = \"cpu:0.75\"\n").unwrap();
+        let w: f64 = cfg.workload.mix.0.iter().map(|(_, w)| w).sum();
+        assert!((w - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(run_config_from_toml("[cluster]\nnodes = 0\n").is_err());
+        assert!(run_config_from_toml("[workload]\narrival_rate = -1\n").is_err());
+        assert!(run_config_from_toml("[workload]\nmix = \"bogus\"\n").is_err());
+        assert!(run_config_from_toml("[bayes]\nalpha = 0\n").is_err());
+        assert!(run_config_from_toml("[heartbeat]\ninterval = 0\n").is_err());
+        assert!(run_config_from_toml("[workload]\nmix = \"cpu:1.5\"\n").is_err());
+    }
+}

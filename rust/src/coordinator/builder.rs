@@ -1,0 +1,139 @@
+//! Convenience builder: assemble a [`JobTracker`] from an experiment
+//! config, including the XLA-backed Bayes scheduler variant.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::bayes::classifier::NaiveBayes;
+use crate::cluster::Cluster;
+use crate::job::job::JobSpec;
+use crate::runtime::XlaClassifier;
+use crate::scheduler::{self, BayesScheduler, Scheduler, StarvationPolicy};
+use crate::workload::generator::{generate, WorkloadConfig};
+
+use super::jobtracker::{JobTracker, TrackerConfig};
+
+/// Declarative run description (mirrors the TOML config schema).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheduler: String,
+    pub n_nodes: u32,
+    pub n_racks: u32,
+    pub workload: WorkloadConfig,
+    pub tracker: TrackerConfig,
+    /// Laplace alpha for bayes variants.
+    pub alpha: f32,
+    /// Starvation policy for bayes variants.
+    pub starvation_wait: bool,
+    /// Artifacts dir for `bayes-xla`.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Warm-start model for `bayes` (JSON from `--save-model`).
+    pub model_path: Option<std::path::PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            scheduler: "bayes".into(),
+            n_nodes: 40,
+            n_racks: 4,
+            workload: WorkloadConfig::default(),
+            tracker: TrackerConfig::default(),
+            alpha: 1.0,
+            starvation_wait: false,
+            artifacts_dir: None,
+            model_path: None,
+        }
+    }
+}
+
+/// Build the scheduler named in the config.
+pub fn build_scheduler(cfg: &RunConfig) -> Result<Box<dyn Scheduler>> {
+    let policy = if cfg.starvation_wait {
+        StarvationPolicy::Wait
+    } else {
+        StarvationPolicy::WaitUnlessIdle
+    };
+    match cfg.scheduler.as_str() {
+        "bayes" => {
+            let nb = match &cfg.model_path {
+                Some(p) => crate::bayes::persist::load(p)?,
+                None => NaiveBayes::new(cfg.alpha),
+            };
+            Ok(Box::new(BayesScheduler::new(nb).with_policy(policy)))
+        }
+        "bayes-xla" => {
+            if cfg.model_path.is_some() {
+                return Err(anyhow!(
+                    "--load-model is only supported with scheduler 'bayes'                      (the XLA path derives its state from feedback)"
+                ));
+            }
+            let dir = cfg
+                .artifacts_dir
+                .clone()
+                .unwrap_or_else(crate::runtime::artifacts::default_dir);
+            let classifier = XlaClassifier::load(Path::new(&dir), cfg.alpha)?;
+            Ok(Box::new(BayesScheduler::new(classifier).with_policy(policy)))
+        }
+        name => scheduler::by_name(name, cfg.workload.seed)
+            .ok_or_else(|| anyhow!("unknown scheduler '{name}'")),
+    }
+}
+
+/// Build a complete tracker (cluster + workload + scheduler).
+pub fn build_tracker(cfg: &RunConfig) -> Result<JobTracker> {
+    let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+    let specs = generate(&cfg.workload);
+    build_tracker_with(cfg, cluster, specs)
+}
+
+/// Build with an explicit cluster and job stream (heterogeneous / replay
+/// experiments).
+pub fn build_tracker_with(
+    cfg: &RunConfig,
+    cluster: Cluster,
+    specs: Vec<JobSpec>,
+) -> Result<JobTracker> {
+    let sched = build_scheduler(cfg)?;
+    Ok(JobTracker::new(
+        cluster,
+        sched,
+        specs,
+        cfg.workload.seed,
+        cfg.tracker.clone(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_named_scheduler() {
+        for name in crate::scheduler::ALL_NAMES {
+            let cfg = RunConfig { scheduler: name.into(), ..Default::default() };
+            assert!(build_scheduler(&cfg).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_scheduler_errors() {
+        let cfg = RunConfig { scheduler: "nope".into(), ..Default::default() };
+        assert!(build_scheduler(&cfg).is_err());
+    }
+
+    #[test]
+    fn end_to_end_tiny_run() {
+        let cfg = RunConfig {
+            scheduler: "bayes".into(),
+            n_nodes: 4,
+            n_racks: 2,
+            workload: WorkloadConfig { n_jobs: 6, ..Default::default() },
+            ..Default::default()
+        };
+        let mut jt = build_tracker(&cfg).unwrap();
+        jt.run();
+        assert!(jt.jobs.all_complete());
+    }
+}

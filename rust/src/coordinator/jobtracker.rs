@@ -1,0 +1,545 @@
+//! The JobTracker: "the center of the Map-reduce framework, which needs to
+//! communicate with the cluster machine timing (heartbeat), and need to
+//! manage what program should be run on which machines, to manage job
+//! failed, restart operation" (paper §1).
+//!
+//! Drives the discrete-event simulation: job arrivals enter the queue,
+//! TaskTracker heartbeats trigger scheduling decisions and overload-rule
+//! feedback, task completions update job progress, and OOM failures
+//! re-queue tasks.
+
+use std::time::Instant;
+
+use crate::bayes::overload::OverloadRule;
+use crate::cluster::heartbeat::HeartbeatConfig;
+use crate::cluster::node::NodeId;
+use crate::cluster::Cluster;
+use crate::hdfs::locality::{locality_multiplier, locality_net_demand};
+use crate::hdfs::Namespace;
+use crate::job::job::JobSpec;
+use crate::job::queue::JobTable;
+use crate::job::task::{TaskKind, TaskRef, TaskState};
+use crate::job::JobId;
+use crate::metrics::Metrics;
+use crate::scheduler::api::{SchedView, Scheduler};
+use crate::sim::engine::{Engine, Time};
+use crate::sim::event::Event;
+
+/// A placement awaiting overload-rule judgment at the node's next
+/// heartbeat (deviation D5: "next hop" = next heartbeat).
+#[derive(Debug, Clone, Copy)]
+struct PendingFeedback {
+    feats: crate::bayes::features::FeatureVec,
+}
+
+/// Node failure injection: exponential time-to-failure / time-to-repair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureConfig {
+    /// Mean time between failures per node, seconds. None = no failures.
+    pub mtbf: Option<f64>,
+    /// Mean time to repair, seconds.
+    pub mttr: f64,
+}
+
+impl Default for FailureConfig {
+    fn default() -> Self {
+        FailureConfig { mtbf: None, mttr: 120.0 }
+    }
+}
+
+/// JobTracker configuration knobs.
+#[derive(Debug, Clone)]
+pub struct TrackerConfig {
+    pub heartbeat: HeartbeatConfig,
+    pub overload_rule: OverloadRule,
+    pub failures: FailureConfig,
+    /// Seconds between cluster-utilization timeline samples (0 = off).
+    pub timeline_interval: f64,
+    /// Seconds an OOM-doomed task survives before being killed.
+    pub oom_kill_delay: f64,
+    /// A task failing this many times kills its job (Hadoop's
+    /// mapreduce.*.maxattempts semantics; breaks OOM-churn livelock).
+    pub max_task_attempts: u32,
+    /// Hard stop for the virtual clock (safety net against livelock).
+    pub max_sim_time: Time,
+}
+
+impl Default for TrackerConfig {
+    fn default() -> Self {
+        TrackerConfig {
+            heartbeat: HeartbeatConfig::default(),
+            overload_rule: OverloadRule::default(),
+            failures: FailureConfig::default(),
+            timeline_interval: 0.0,
+            oom_kill_delay: 4.0,
+            max_task_attempts: 4,
+            max_sim_time: 1e7,
+        }
+    }
+}
+
+/// The leader: owns every substrate plus the pluggable scheduler.
+pub struct JobTracker {
+    pub engine: Engine,
+    pub cluster: Cluster,
+    pub hdfs: Namespace,
+    pub jobs: JobTable,
+    pub scheduler: Box<dyn Scheduler>,
+    pub metrics: Metrics,
+    pub cfg: TrackerConfig,
+    /// Workload sorted by submit time, drained into arrival events.
+    pending_specs: std::vec::IntoIter<JobSpec>,
+    /// The spec whose arrival event is in flight (submitted when it fires,
+    /// so jobs are never schedulable before their submit time).
+    next_spec: Option<JobSpec>,
+    /// Per-node placements since that node's last heartbeat.
+    pending_feedback: Vec<Vec<PendingFeedback>>,
+    /// Tasks doomed to OOM: excluded from completion rescheduling so their
+    /// pending TaskFail event stays valid.
+    doomed: std::collections::HashSet<TaskRef>,
+    /// Failure-injection RNG (own stream: does not perturb workloads).
+    fail_rng: crate::sim::rng::Pcg,
+    arrivals_done: bool,
+}
+
+impl JobTracker {
+    /// Build a tracker. `specs` need not be sorted; they are submitted in
+    /// `submit_time` order.
+    pub fn new(
+        cluster: Cluster,
+        mut scheduler: Box<dyn Scheduler>,
+        mut specs: Vec<JobSpec>,
+        seed: u64,
+        cfg: TrackerConfig,
+    ) -> JobTracker {
+        scheduler.on_cluster_info(cluster.total_slots());
+        specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
+        let n_nodes = cluster.len();
+        let hdfs = Namespace::new(
+            cluster.topology.n_nodes,
+            cluster.topology.n_racks,
+            seed,
+        );
+        let mut jt = JobTracker {
+            engine: Engine::new(),
+            cluster,
+            hdfs,
+            jobs: JobTable::new(),
+            scheduler,
+            metrics: Metrics::new(),
+            cfg,
+            pending_specs: specs.into_iter(),
+            next_spec: None,
+            pending_feedback: vec![Vec::new(); n_nodes],
+            doomed: std::collections::HashSet::new(),
+            fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA11),
+            arrivals_done: false,
+        };
+        // prime: first arrival + first heartbeat per node (+ failures)
+        jt.schedule_next_arrival();
+        for node in jt.cluster.topology.all_nodes() {
+            let t = jt.cfg.heartbeat.first_beat(node);
+            jt.engine.schedule(t, Event::Heartbeat(node));
+            jt.schedule_next_failure(node);
+        }
+        if jt.cfg.timeline_interval > 0.0 {
+            jt.engine.schedule(jt.cfg.timeline_interval, Event::MetricsTick);
+        }
+        jt
+    }
+
+    fn schedule_next_failure(&mut self, node: NodeId) {
+        if let Some(mtbf) = self.cfg.failures.mtbf {
+            let dt = self.fail_rng.exp(1.0 / mtbf);
+            self.engine.schedule_in(dt, Event::NodeFail(node));
+        }
+    }
+
+    fn schedule_next_arrival(&mut self) {
+        match self.pending_specs.next() {
+            Some(spec) => {
+                let at = spec.submit_time;
+                self.next_spec = Some(spec);
+                // placeholder id; the spec is submitted when the event fires
+                self.engine.schedule(at, Event::JobArrival(JobId(u32::MAX)));
+            }
+            None => self.arrivals_done = true,
+        }
+    }
+
+    fn on_job_arrival(&mut self) {
+        if let Some(spec) = self.next_spec.take() {
+            self.jobs.submit(spec, &mut self.hdfs);
+        }
+        self.schedule_next_arrival();
+    }
+
+    /// Run until every job completes (or `max_sim_time`).
+    /// Returns the virtual makespan.
+    pub fn run(&mut self) -> Time {
+        while let Some((t, ev)) = self.engine.pop() {
+            if t > self.cfg.max_sim_time {
+                log::warn!("hit max_sim_time with {} active jobs", self.jobs.active_count());
+                break;
+            }
+            match ev {
+                Event::JobArrival(_) => self.on_job_arrival(),
+                Event::Heartbeat(node) => self.on_heartbeat(node),
+                Event::TaskComplete { node, task, generation } => {
+                    self.on_task_complete(node, task, generation)
+                }
+                Event::TaskFail { node, task, generation } => {
+                    self.on_task_fail(node, task, generation)
+                }
+                Event::NodeFail(node) => self.on_node_fail(node),
+                Event::NodeRecover(node) => self.on_node_recover(node),
+                Event::MetricsTick => self.on_metrics_tick(),
+                Event::ArrivalsDone => {}
+            }
+            if self.arrivals_done
+                && self.jobs.all_complete()
+                && !self.jobs.is_empty()
+                && self.cluster.nodes.iter().all(|n| n.running().is_empty())
+            {
+                break;
+            }
+        }
+        self.finalize_metrics();
+        self.metrics.makespan
+    }
+
+    fn finalize_metrics(&mut self) {
+        self.metrics.overload_seconds =
+            self.cluster.nodes.iter().map(|n| n.overload_seconds).sum();
+        self.metrics.oom_kills =
+            self.cluster.nodes.iter().map(|n| n.oom_kills as u64).sum();
+    }
+
+    // ---------------------------------------------------------- failure --
+
+    fn on_node_fail(&mut self, node_id: NodeId) {
+        if !self.cluster.node(node_id).alive {
+            return;
+        }
+        let now = self.engine.now();
+        self.metrics.node_failures += 1;
+        // lost tasks: requeue every task the node was running (their
+        // pending completion events go stale naturally — the state check
+        // in task_is_current rejects them once requeued)
+        let lost = self.cluster.node_mut(node_id).fail(now);
+        for rec in lost {
+            self.doomed.remove(&rec.task);
+            // a failed job's tasks are dropped silently
+            if self.jobs.get(rec.task.job).finish_time.is_none() {
+                self.jobs.requeue_task(&rec.task);
+            } else {
+                // keep the task state machine consistent for drained jobs
+                self.jobs.get_mut(rec.task.job).task_mut(&rec.task).requeue();
+            }
+            self.scheduler.on_task_finished(rec.task.job);
+        }
+        self.pending_feedback[node_id.0 as usize].clear();
+        let mttr = self.cfg.failures.mttr.max(1.0);
+        let dt = self.fail_rng.exp(1.0 / mttr);
+        self.engine.schedule_in(dt, Event::NodeRecover(node_id));
+    }
+
+    fn on_node_recover(&mut self, node_id: NodeId) {
+        let now = self.engine.now();
+        self.cluster.node_mut(node_id).recover(now);
+        // rejoin the heartbeat cycle and the failure process
+        self.engine
+            .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
+        self.schedule_next_failure(node_id);
+    }
+
+    fn on_metrics_tick(&mut self) {
+        let now = self.engine.now();
+        let mut util = 0.0;
+        let mut running = 0usize;
+        let mut alive = 0usize;
+        for n in &self.cluster.nodes {
+            if n.alive {
+                alive += 1;
+                util += n.utilization().max_component().min(2.0);
+                running += n.running().len();
+            }
+        }
+        self.metrics.timeline.push(crate::metrics::TimelineSample {
+            time: now,
+            mean_bottleneck_util: if alive > 0 { util / alive as f64 } else { 0.0 },
+            running_tasks: running as u32,
+            queued_jobs: self.jobs.schedulable().len() as u32,
+            alive_nodes: alive as u32,
+        });
+        if !self.arrivals_done || !self.jobs.all_complete() {
+            self.engine
+                .schedule_in(self.cfg.timeline_interval, Event::MetricsTick);
+        }
+    }
+
+    // -------------------------------------------------------- heartbeat --
+
+    fn on_heartbeat(&mut self, node_id: NodeId) {
+        if !self.cluster.node(node_id).alive {
+            return; // dead node: heartbeats resume on recovery
+        }
+        let now = self.engine.now();
+        self.metrics.heartbeats += 1;
+        self.cluster.node_mut(node_id).advance(now);
+
+        // 1. overload-rule feedback for placements since the last beat
+        let pending = std::mem::take(&mut self.pending_feedback[node_id.0 as usize]);
+        if !pending.is_empty() {
+            let obs = self.cluster.node(node_id).observation();
+            let label = self.cfg.overload_rule.label(&obs);
+            for p in pending {
+                self.scheduler.feedback(p.feats, label);
+                self.metrics.record_feedback(label);
+            }
+        }
+
+        // 2. offer free slots to the scheduler (maps first, Hadoop order).
+        // The queue view is computed once per heartbeat (perf §Perf):
+        // launches can only *remove* work from a job, and every scheduler
+        // re-filters with has_work(), so a stale entry is skipped, never
+        // mis-scheduled.
+        let queue = self.jobs.schedulable();
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            loop {
+                if self.cluster.node(node_id).free_slots(kind) == 0 {
+                    break;
+                }
+                if queue.is_empty() {
+                    break;
+                }
+                let chosen = {
+                    let view = SchedView {
+                        jobs: &self.jobs,
+                        hdfs: &self.hdfs,
+                        queue: &queue,
+                        now,
+                    };
+                    let node = self.cluster.node(node_id);
+                    let t0 = Instant::now();
+                    let sel = self.scheduler.select(&view, node, kind);
+                    self.metrics.record_decision(t0.elapsed().as_nanos());
+                    sel
+                };
+                match chosen {
+                    Some(task) => self.launch(task, node_id, now),
+                    None => break,
+                }
+            }
+        }
+
+        // 3. next beat — only while there is (or may be) work
+        if !self.arrivals_done || !self.jobs.all_complete() {
+            self.engine.schedule(
+                self.cfg.heartbeat.next_beat(now),
+                Event::Heartbeat(node_id),
+            );
+        }
+    }
+
+    // ----------------------------------------------------------- launch --
+
+    fn launch(&mut self, task_ref: TaskRef, node_id: NodeId, now: Time) {
+        // per-task demand and work, adjusted for locality
+        let job = self.jobs.get(task_ref.job);
+        let mut demand = job.demand;
+        let mut work = job.task(&task_ref).work;
+        if task_ref.kind == TaskKind::Map {
+            let block = job.task(&task_ref).block.expect("map without block");
+            let loc = self.hdfs.locality(block, node_id);
+            self.metrics.record_locality(loc);
+            work *= locality_multiplier(loc);
+            demand.net += locality_net_demand(loc);
+        } else {
+            // shuffle traffic: reduces pull map output across the network
+            demand.net += 0.05;
+        }
+        demand.clamp_non_negative();
+
+        // queue overload feedback sample for this node's next heartbeat
+        let node_feats = self.cluster.node(node_id).features();
+        let feats =
+            crate::bayes::features::feature_vec(&job.spec.profile, &node_feats);
+        self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
+
+        // OOM cliff check *before* mutating the node
+        let dooms = self.cluster.node(node_id).would_oom(&demand);
+
+        // job/task state (start_task maintains the pending counters and
+        // the table's ready set)
+        self.jobs.start_task(&task_ref, node_id, now);
+        let generation = self.jobs.get(task_ref.job).task(&task_ref).generation;
+        self.scheduler.on_task_started(task_ref.job);
+
+        // node state + completion rescheduling for all tasks on the node
+        let horizons = self
+            .cluster
+            .node_mut(node_id)
+            .add_task(task_ref, demand, work, now);
+        if dooms {
+            self.cluster.node_mut(node_id).oom_kills += 1;
+            self.doomed.insert(task_ref);
+            self.engine.schedule(
+                now + self.cfg.oom_kill_delay,
+                Event::TaskFail { node: node_id, task: task_ref, generation },
+            );
+        }
+        // other tasks still slow down; reschedule their completions
+        self.reschedule(node_id, horizons);
+    }
+
+    /// Re-issue completion events for every running task on a node.
+    /// Doomed tasks are skipped so their pending TaskFail stays valid.
+    fn reschedule(&mut self, node_id: NodeId, horizons: Vec<(TaskRef, Time)>) {
+        for (tref, at) in horizons {
+            if self.doomed.contains(&tref) {
+                continue;
+            }
+            let task = self.jobs.get_mut(tref.job).task_mut(&tref);
+            // invalidate the previous completion event
+            task.generation += 1;
+            let generation = task.generation;
+            self.engine.schedule(
+                at,
+                Event::TaskComplete { node: node_id, task: tref, generation },
+            );
+        }
+    }
+
+    // ------------------------------------------------------- completion --
+
+    fn task_is_current(&self, tref: &TaskRef, node: NodeId, generation: u32) -> bool {
+        let task = self.jobs.get(tref.job).task(tref);
+        task.generation == generation
+            && matches!(task.state, TaskState::Running { node: n, .. } if n == node)
+    }
+
+    fn on_task_complete(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
+        if !self.task_is_current(&tref, node_id, generation) {
+            return; // stale event
+        }
+        let now = self.engine.now();
+        self.cluster.node_mut(node_id).advance(now);
+        let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
+        self.jobs.complete_task(&tref, now);
+        let job = self.jobs.get(tref.job);
+        let finished = !job.failed && job.is_complete();
+        self.scheduler.on_task_finished(tref.job);
+        self.doomed.remove(&tref);
+        if finished {
+            self.jobs.mark_complete(tref.job, now);
+            let outcome = self.jobs.get(tref.job).outcome().unwrap();
+            self.metrics.record_outcome(tref.job, outcome);
+            self.scheduler.on_job_completed(tref.job);
+        }
+        self.reschedule(node_id, horizons);
+    }
+
+    fn on_task_fail(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
+        if !self.task_is_current(&tref, node_id, generation) {
+            return;
+        }
+        let now = self.engine.now();
+        self.cluster.node_mut(node_id).advance(now);
+        let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
+        self.jobs.requeue_task(&tref);
+        let job = self.jobs.get(tref.job);
+        let attempts = job.task(&tref).attempts;
+        let kill = attempts >= self.cfg.max_task_attempts && job.finish_time.is_none();
+        self.doomed.remove(&tref);
+        self.scheduler.on_task_finished(tref.job);
+        // Hadoop semantics: a task out of attempts kills the whole job.
+        if kill {
+            self.jobs.mark_failed(tref.job, now);
+            self.metrics.failed_jobs += 1;
+        }
+        self.reschedule(node_id, horizons);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::Fifo;
+    use crate::workload::generator::{generate, Mix, WorkloadConfig};
+
+    fn small_run(seed: u64) -> JobTracker {
+        let cluster = Cluster::homogeneous(4, 2);
+        let specs = generate(&WorkloadConfig {
+            n_jobs: 10,
+            arrival_rate: 1.0,
+            mix: Mix::balanced(),
+            n_users: 2,
+            seed,
+        });
+        let mut jt = JobTracker::new(
+            cluster,
+            Box::new(Fifo::new()),
+            specs,
+            seed,
+            TrackerConfig::default(),
+        );
+        jt.run();
+        jt
+    }
+
+    #[test]
+    fn all_jobs_complete() {
+        let jt = small_run(1);
+        assert!(jt.jobs.all_complete());
+        assert_eq!(jt.metrics.outcomes.len(), 10);
+        assert!(jt.metrics.makespan > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = small_run(7);
+        let b = small_run(7);
+        assert_eq!(a.metrics.makespan, b.metrics.makespan);
+        assert_eq!(a.engine.processed(), b.engine.processed());
+        assert_eq!(a.metrics.decisions, b.metrics.decisions);
+        let la = a.metrics.latencies();
+        let lb = b.metrics.latencies();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = small_run(1);
+        let b = small_run(2);
+        assert_ne!(a.metrics.makespan, b.metrics.makespan);
+    }
+
+    #[test]
+    fn nodes_end_empty() {
+        let jt = small_run(3);
+        for n in &jt.cluster.nodes {
+            assert!(n.running().is_empty(), "{} still busy", n.id);
+            assert_eq!(n.used_slots(TaskKind::Map), 0);
+        }
+    }
+
+    #[test]
+    fn feedback_flows() {
+        let jt = small_run(4);
+        let total = jt.metrics.feedback[0] + jt.metrics.feedback[1];
+        assert!(total > 0, "no overload feedback recorded");
+    }
+
+    #[test]
+    fn locality_recorded_for_all_map_launches() {
+        let jt = small_run(5);
+        let total_maps: u64 = jt
+            .jobs
+            .iter()
+            .map(|j| j.maps.iter().map(|t| t.attempts as u64).sum::<u64>())
+            .sum();
+        let recorded: u64 = jt.metrics.locality.values().sum();
+        assert_eq!(recorded, total_maps);
+    }
+}

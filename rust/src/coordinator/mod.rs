@@ -1,0 +1,8 @@
+//! L3 coordinator: the JobTracker event loop (MRv1 leader) and the run
+//! builder that assembles cluster + workload + scheduler from a config.
+
+pub mod builder;
+pub mod jobtracker;
+
+pub use builder::{build_scheduler, build_tracker, build_tracker_with, RunConfig};
+pub use jobtracker::{JobTracker, TrackerConfig};

@@ -1,0 +1,68 @@
+//! Data locality levels and their execution-time cost. "The bad assigning
+//! of tasks results in the increments of mount of network" (paper §3) — a
+//! non-local map must stream its input block over the network, inflating
+//! both its runtime and the node's network load.
+
+/// Where a map task's input block lives relative to the executing node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Locality {
+    /// A replica is on the executing node.
+    NodeLocal,
+    /// A replica is in the same rack (one switch hop).
+    RackLocal,
+    /// All replicas are off-rack (core-switch transfer).
+    Remote,
+}
+
+impl Locality {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Locality::NodeLocal => "node_local",
+            Locality::RackLocal => "rack_local",
+            Locality::Remote => "remote",
+        }
+    }
+}
+
+/// Work multiplier for a map task executed at the given locality.
+pub fn locality_multiplier(l: Locality) -> f64 {
+    match l {
+        Locality::NodeLocal => 1.0,
+        Locality::RackLocal => 1.15,
+        Locality::Remote => 1.40,
+    }
+}
+
+/// Extra network demand (fraction of a standard node's NIC) while a
+/// non-local map streams its input.
+pub fn locality_net_demand(l: Locality) -> f64 {
+    match l {
+        Locality::NodeLocal => 0.0,
+        Locality::RackLocal => 0.10,
+        Locality::Remote => 0.25,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multipliers_are_ordered() {
+        assert!(locality_multiplier(Locality::NodeLocal)
+            < locality_multiplier(Locality::RackLocal));
+        assert!(locality_multiplier(Locality::RackLocal)
+            < locality_multiplier(Locality::Remote));
+        assert_eq!(locality_multiplier(Locality::NodeLocal), 1.0);
+    }
+
+    #[test]
+    fn net_demand_only_for_non_local() {
+        assert_eq!(locality_net_demand(Locality::NodeLocal), 0.0);
+        assert!(locality_net_demand(Locality::RackLocal) > 0.0);
+        assert!(
+            locality_net_demand(Locality::Remote)
+                > locality_net_demand(Locality::RackLocal)
+        );
+    }
+}

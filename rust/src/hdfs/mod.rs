@@ -1,0 +1,14 @@
+//! HDFS substrate (paper §1): block namespace with rack-aware 3-replica
+//! placement and the data-locality classification the schedulers use
+//! ("select the required data in the job to schedule the tasks on the
+//! TaskTracker firstly", §4.2).
+
+pub mod locality;
+pub mod placement;
+
+pub use locality::{locality_multiplier, Locality};
+pub use placement::Namespace;
+
+/// HDFS block identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u64);

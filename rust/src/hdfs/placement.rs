@@ -1,0 +1,211 @@
+//! Rack-aware block placement: HDFS's default policy — first replica on a
+//! "local" (here: random) node, second on a different rack, third on the
+//! second replica's rack but a different node.
+
+use crate::cluster::node::NodeId;
+use crate::cluster::topology::Topology;
+use crate::sim::rng::Pcg;
+
+use super::locality::Locality;
+use super::BlockId;
+
+/// Replication factor (HDFS default).
+pub const REPLICATION: usize = 3;
+
+/// The block namespace: block → replica locations.
+#[derive(Debug)]
+pub struct Namespace {
+    topology: Topology,
+    replicas: Vec<Vec<NodeId>>,
+    rng: Pcg,
+}
+
+impl Namespace {
+    pub fn new(n_nodes: u32, n_racks: u32, seed: u64) -> Namespace {
+        Namespace {
+            topology: Topology::new(n_nodes, n_racks),
+            replicas: Vec::new(),
+            rng: Pcg::new(seed, 0xB10C),
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Allocate `n` new blocks with rack-aware replica placement.
+    pub fn allocate_blocks(&mut self, n: usize) -> Vec<BlockId> {
+        (0..n).map(|_| self.allocate_one()).collect()
+    }
+
+    fn allocate_one(&mut self) -> BlockId {
+        let id = BlockId(self.replicas.len() as u64);
+        let n_nodes = self.topology.n_nodes;
+        let mut locs = Vec::with_capacity(REPLICATION.min(n_nodes as usize));
+
+        // replica 1: uniform random node
+        let first = NodeId(self.rng.below(n_nodes as u64) as u32);
+        locs.push(first);
+
+        if n_nodes > 1 {
+            // replica 2: different rack if one exists, else any other node
+            let second = self.pick(|ns, cand| {
+                if ns.topology.n_racks > 1 {
+                    !ns.topology.same_rack(cand, first)
+                } else {
+                    cand != first
+                }
+            });
+            if let Some(second) = second {
+                locs.push(second);
+                // replica 3: same rack as replica 2, different node; fall
+                // back to any node not yet used
+                let third = self
+                    .pick(|ns, cand| {
+                        ns.topology.same_rack(cand, second)
+                            && cand != second
+                            && cand != first
+                    })
+                    .or_else(|| self.pick(|_, cand| cand != first && cand != second));
+                if let Some(third) = third {
+                    locs.push(third);
+                }
+            }
+        }
+        self.replicas.push(locs);
+        id
+    }
+
+    /// Rejection-sample a node satisfying `pred` (bounded attempts, then
+    /// linear scan for determinism).
+    fn pick<F>(&mut self, pred: F) -> Option<NodeId>
+    where
+        F: Fn(&Namespace, NodeId) -> bool,
+    {
+        let n = self.topology.n_nodes as u64;
+        for _ in 0..16 {
+            let cand = NodeId(self.rng.below(n) as u32);
+            if pred(self, cand) {
+                return Some(cand);
+            }
+        }
+        // deterministic fallback: first satisfying node after a random start
+        let start = self.rng.below(n) as u32;
+        (0..n as u32)
+            .map(|k| NodeId((start + k) % n as u32))
+            .find(|&c| pred(self, c))
+    }
+
+    pub fn replicas(&self, block: BlockId) -> &[NodeId] {
+        &self.replicas[block.0 as usize]
+    }
+
+    /// Locality of `block` w.r.t. `node`.
+    pub fn locality(&self, block: BlockId, node: NodeId) -> Locality {
+        let reps = self.replicas(block);
+        if reps.contains(&node) {
+            return Locality::NodeLocal;
+        }
+        if reps.iter().any(|r| self.topology.same_rack(*r, node)) {
+            return Locality::RackLocal;
+        }
+        Locality::Remote
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_three_distinct_replicas() {
+        let mut ns = Namespace::new(12, 3, 1);
+        for b in ns.allocate_blocks(200) {
+            let reps = ns.replicas(b);
+            assert_eq!(reps.len(), 3, "{reps:?}");
+            let mut d = reps.to_vec();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), 3, "duplicate replicas {reps:?}");
+        }
+    }
+
+    #[test]
+    fn replicas_span_two_racks() {
+        let mut ns = Namespace::new(12, 3, 2);
+        for b in ns.allocate_blocks(100) {
+            let reps = ns.replicas(b).to_vec();
+            let racks: std::collections::HashSet<u32> = reps
+                .iter()
+                .map(|r| ns.topology().rack_of(*r).0)
+                .collect();
+            assert_eq!(racks.len(), 2, "default policy spans exactly 2 racks");
+        }
+    }
+
+    #[test]
+    fn single_node_cluster_gets_one_replica() {
+        let mut ns = Namespace::new(1, 1, 3);
+        let b = ns.allocate_blocks(1)[0];
+        assert_eq!(ns.replicas(b), &[NodeId(0)]);
+    }
+
+    #[test]
+    fn two_node_cluster_gets_two_replicas() {
+        let mut ns = Namespace::new(2, 1, 4);
+        let b = ns.allocate_blocks(1)[0];
+        assert_eq!(ns.replicas(b).len(), 2);
+    }
+
+    #[test]
+    fn locality_classification() {
+        let mut ns = Namespace::new(12, 3, 5);
+        let b = ns.allocate_blocks(1)[0];
+        let reps = ns.replicas(b).to_vec();
+        assert_eq!(ns.locality(b, reps[0]), Locality::NodeLocal);
+        // a node sharing a rack with some replica but not holding one
+        let rack_mate = ns
+            .topology()
+            .all_nodes()
+            .find(|n| {
+                !reps.contains(n)
+                    && reps.iter().any(|r| ns.topology().same_rack(*r, *n))
+            })
+            .unwrap();
+        assert_eq!(ns.locality(b, rack_mate), Locality::RackLocal);
+    }
+
+    #[test]
+    fn deterministic_placement() {
+        let mut a = Namespace::new(10, 2, 99);
+        let mut b = Namespace::new(10, 2, 99);
+        let ba = a.allocate_blocks(50);
+        let bb = b.allocate_blocks(50);
+        for (x, y) in ba.iter().zip(&bb) {
+            assert_eq!(a.replicas(*x), b.replicas(*y));
+        }
+    }
+
+    #[test]
+    fn block_distribution_roughly_uniform() {
+        let mut ns = Namespace::new(10, 2, 6);
+        let blocks = ns.allocate_blocks(2000);
+        let mut per_node = vec![0usize; 10];
+        for b in blocks {
+            for r in ns.replicas(b) {
+                per_node[r.0 as usize] += 1;
+            }
+        }
+        // 2000 blocks * 3 replicas / 10 nodes = 600 each
+        for (i, c) in per_node.iter().enumerate() {
+            assert!(
+                (300..900).contains(c),
+                "node {i} has {c} replicas: {per_node:?}"
+            );
+        }
+    }
+}

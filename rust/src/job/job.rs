@@ -1,0 +1,281 @@
+//! A MapReduce job: metadata + its task vectors + progress accounting.
+
+use crate::bayes::features::JobFeatures;
+use crate::bayes::utility::Priority;
+use crate::cluster::resources::Resources;
+use crate::hdfs::BlockId;
+use crate::sim::engine::Time;
+
+use super::profile::{demand_from_profile, JobClass};
+use super::task::{Task, TaskKind, TaskRef};
+use super::JobId;
+
+/// Everything needed to create a job (produced by the workload generator or
+/// parsed from a trace file).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub user: String,
+    /// Fair-scheduler pool (defaults to the user).
+    pub pool: String,
+    /// Capacity-scheduler queue.
+    pub queue: String,
+    pub class: JobClass,
+    pub priority: Priority,
+    pub profile: JobFeatures,
+    /// Work seconds per map task (speed-1 node, local read).
+    pub map_works: Vec<f64>,
+    /// Work seconds per reduce task.
+    pub reduce_works: Vec<f64>,
+    /// Arrival time in the simulation.
+    pub submit_time: Time,
+}
+
+/// Completion summary (metrics input).
+#[derive(Debug, Clone, Copy)]
+pub struct JobOutcome {
+    pub submit_time: Time,
+    pub first_launch: Option<Time>,
+    pub finish_time: Time,
+    /// Total task attempts minus tasks = re-executions due to failures.
+    pub wasted_attempts: u32,
+}
+
+/// Live job state inside the JobTracker.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    /// Per-map-task resource demand on a node.
+    pub demand: Resources,
+    pub maps: Vec<Task>,
+    pub reduces: Vec<Task>,
+    pub maps_done: u32,
+    pub reduces_done: u32,
+    /// O(1) pending-task counters (maintained by the *_task wrappers; the
+    /// scheduler consults these on every decision — perf §Perf).
+    pending_map_count: u32,
+    pending_reduce_count: u32,
+    pub first_launch: Option<Time>,
+    pub finish_time: Option<Time>,
+    /// True when the job was killed after a task exceeded its attempt
+    /// budget (Hadoop's mapreduce.*.maxattempts semantics).
+    pub failed: bool,
+}
+
+impl Job {
+    /// Instantiate a job: map tasks get blocks assigned by the caller (HDFS
+    /// placement happens at submit in `JobTable::submit`).
+    pub fn new(id: JobId, spec: JobSpec, blocks: Vec<BlockId>) -> Job {
+        assert_eq!(spec.map_works.len(), blocks.len());
+        let maps = spec
+            .map_works
+            .iter()
+            .zip(&blocks)
+            .enumerate()
+            .map(|(i, (&w, &b))| Task::map(i as u32, w, b))
+            .collect();
+        let reduces = spec
+            .reduce_works
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| Task::reduce(i as u32, w))
+            .collect();
+        let demand = demand_from_profile(&spec.profile);
+        let pending_map_count = spec.map_works.len() as u32;
+        let pending_reduce_count = spec.reduce_works.len() as u32;
+        Job {
+            id,
+            spec,
+            demand,
+            maps,
+            reduces,
+            maps_done: 0,
+            reduces_done: 0,
+            pending_map_count,
+            pending_reduce_count,
+            first_launch: None,
+            finish_time: None,
+            failed: false,
+        }
+    }
+
+    pub fn task(&self, r: &TaskRef) -> &Task {
+        debug_assert_eq!(r.job, self.id);
+        match r.kind {
+            TaskKind::Map => &self.maps[r.index as usize],
+            TaskKind::Reduce => &self.reduces[r.index as usize],
+        }
+    }
+
+    pub fn task_mut(&mut self, r: &TaskRef) -> &mut Task {
+        debug_assert_eq!(r.job, self.id);
+        match r.kind {
+            TaskKind::Map => &mut self.maps[r.index as usize],
+            TaskKind::Reduce => &mut self.reduces[r.index as usize],
+        }
+    }
+
+    /// All maps finished (reduces become eligible — the simulator models
+    /// reduce slowstart at 100%, i.e. shuffle starts after the map phase).
+    pub fn maps_complete(&self) -> bool {
+        self.maps_done as usize == self.maps.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.maps_complete() && self.reduces_done as usize == self.reduces.len()
+    }
+
+    /// Any task currently schedulable (pending map; pending reduce once the
+    /// map phase is done)?
+    pub fn has_schedulable_task(&self) -> bool {
+        self.pending_maps() > 0 || (self.maps_complete() && self.pending_reduces() > 0)
+    }
+
+    pub fn pending_maps(&self) -> usize {
+        self.pending_map_count as usize
+    }
+
+    pub fn pending_reduces(&self) -> usize {
+        self.pending_reduce_count as usize
+    }
+
+    /// Transition a task Pending -> Running, maintaining the counters.
+    pub fn start_task(&mut self, r: &TaskRef, node: crate::cluster::node::NodeId, now: Time) {
+        self.task_mut(r).start(node, now);
+        match r.kind {
+            TaskKind::Map => self.pending_map_count -= 1,
+            TaskKind::Reduce => self.pending_reduce_count -= 1,
+        }
+        if self.first_launch.is_none() {
+            self.first_launch = Some(now);
+        }
+    }
+
+    /// Transition a task Running -> Done, maintaining done counters.
+    pub fn complete_task(&mut self, r: &TaskRef, now: Time) {
+        self.task_mut(r).complete(now);
+        match r.kind {
+            TaskKind::Map => self.maps_done += 1,
+            TaskKind::Reduce => self.reduces_done += 1,
+        }
+    }
+
+    /// Transition a task Running -> Pending (failure), maintaining counters.
+    pub fn requeue_task(&mut self, r: &TaskRef) {
+        self.task_mut(r).requeue();
+        match r.kind {
+            TaskKind::Map => self.pending_map_count += 1,
+            TaskKind::Reduce => self.pending_reduce_count += 1,
+        }
+    }
+
+    pub fn running_tasks(&self) -> usize {
+        self.maps.iter().chain(&self.reduces).filter(|t| t.is_running()).count()
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.maps.len() + self.reduces.len()
+    }
+
+    /// Sum of attempts over all tasks.
+    pub fn total_attempts(&self) -> u32 {
+        self.maps.iter().chain(&self.reduces).map(|t| t.attempts).sum()
+    }
+
+    pub fn outcome(&self) -> Option<JobOutcome> {
+        self.finish_time.map(|finish_time| JobOutcome {
+            submit_time: self.spec.submit_time,
+            first_launch: self.first_launch,
+            finish_time,
+            wasted_attempts: self.total_attempts() - self.total_tasks() as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+pub fn test_spec(name: &str, n_maps: usize, n_reduces: usize) -> JobSpec {
+    JobSpec {
+        name: name.to_string(),
+        user: "alice".into(),
+        pool: "alice".into(),
+        queue: "default".into(),
+        class: JobClass::Small,
+        priority: Priority::Normal,
+        profile: JobClass::Small.base_features(),
+        map_works: vec![10.0; n_maps],
+        reduce_works: vec![20.0; n_reduces],
+        submit_time: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::NodeId;
+
+    fn job(n_maps: usize, n_reduces: usize) -> Job {
+        let blocks = (0..n_maps as u64).map(BlockId).collect();
+        Job::new(JobId(0), test_spec("j", n_maps, n_reduces), blocks)
+    }
+
+    #[test]
+    fn new_job_counts() {
+        let j = job(4, 2);
+        assert_eq!(j.pending_maps(), 4);
+        assert_eq!(j.pending_reduces(), 2);
+        assert_eq!(j.total_tasks(), 6);
+        assert!(!j.is_complete());
+        assert!(j.has_schedulable_task());
+    }
+
+    #[test]
+    fn reduces_gated_on_map_phase() {
+        let mut j = job(2, 1);
+        assert!(j.pending_reduces() > 0 && !j.maps_complete());
+        // only maps schedulable now
+        j.maps[0].start(NodeId(0), 1.0);
+        j.maps[0].complete(5.0);
+        j.maps_done += 1;
+        assert!(!j.maps_complete());
+        j.maps[1].start(NodeId(0), 1.0);
+        j.maps[1].complete(6.0);
+        j.maps_done += 1;
+        assert!(j.maps_complete());
+        assert!(j.has_schedulable_task()); // reduce now eligible
+    }
+
+    #[test]
+    fn completion() {
+        let mut j = job(1, 1);
+        j.maps[0].start(NodeId(0), 0.0);
+        j.maps[0].complete(3.0);
+        j.maps_done = 1;
+        j.reduces[0].start(NodeId(0), 3.0);
+        j.reduces[0].complete(9.0);
+        j.reduces_done = 1;
+        assert!(j.is_complete());
+        j.finish_time = Some(9.0);
+        let o = j.outcome().unwrap();
+        assert_eq!(o.finish_time, 9.0);
+        assert_eq!(o.wasted_attempts, 0);
+    }
+
+    #[test]
+    fn wasted_attempts_counts_requeues() {
+        let mut j = job(1, 0);
+        j.maps[0].start(NodeId(0), 0.0);
+        j.maps[0].requeue();
+        j.maps[0].start(NodeId(1), 2.0);
+        j.maps[0].complete(5.0);
+        j.maps_done = 1;
+        j.finish_time = Some(5.0);
+        assert_eq!(j.outcome().unwrap().wasted_attempts, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_blocks_panic() {
+        let _ = Job::new(JobId(0), test_spec("j", 3, 0), vec![BlockId(0)]);
+    }
+}

@@ -1,0 +1,24 @@
+//! MapReduce job model: jobs, their map/reduce tasks, resource profiles and
+//! lifecycle (paper §1: "MapReduce has four parts: the framework of
+//! homework submission and initialization, task allocation, task execution
+//! and completion").
+
+pub mod job;
+pub mod profile;
+pub mod queue;
+pub mod task;
+
+pub use job::{Job, JobOutcome, JobSpec};
+pub use profile::{demand_from_profile, JobClass};
+pub use queue::JobTable;
+pub use task::{Task, TaskKind, TaskRef, TaskState};
+
+/// Job identifier, dense from 0 in submission order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job_{:04}", self.0)
+    }
+}

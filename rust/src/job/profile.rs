@@ -1,0 +1,154 @@
+//! Job resource profiles: the paper's job features ("the average usage rate
+//! of CPU and average usage rate of memory ... set when the user commits
+//! job", §4.2) plus the per-task resource demand they imply in the
+//! simulator.
+
+use crate::bayes::features::JobFeatures;
+use crate::cluster::resources::Resources;
+
+/// Workload classes used by the generator. Names follow the intro's
+/// motivation: clusters run a mix of CPU-, IO-, memory- and shuffle-bound
+/// jobs whose resource appetites the administrator cannot hand-tune for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobClass {
+    /// Compute-bound (e.g. ML training, compression).
+    CpuHeavy,
+    /// Disk-scan-bound (e.g. log grep, ETL).
+    IoHeavy,
+    /// Large in-memory state (e.g. joins, aggregations). OOM-prone.
+    MemHeavy,
+    /// Shuffle-bound (large intermediate data).
+    NetHeavy,
+    /// Short interactive jobs, low everything.
+    Small,
+}
+
+impl JobClass {
+    pub const ALL: [JobClass; 5] = [
+        JobClass::CpuHeavy,
+        JobClass::IoHeavy,
+        JobClass::MemHeavy,
+        JobClass::NetHeavy,
+        JobClass::Small,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobClass::CpuHeavy => "cpu_heavy",
+            JobClass::IoHeavy => "io_heavy",
+            JobClass::MemHeavy => "mem_heavy",
+            JobClass::NetHeavy => "net_heavy",
+            JobClass::Small => "small",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobClass> {
+        Self::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// Nominal job features (centres; the generator jitters around these).
+    pub fn base_features(&self) -> JobFeatures {
+        match self {
+            JobClass::CpuHeavy => JobFeatures { cpu: 0.85, mem: 0.35, io: 0.20, net: 0.15 },
+            JobClass::IoHeavy => JobFeatures { cpu: 0.25, mem: 0.30, io: 0.85, net: 0.25 },
+            JobClass::MemHeavy => JobFeatures { cpu: 0.35, mem: 0.85, io: 0.30, net: 0.20 },
+            JobClass::NetHeavy => JobFeatures { cpu: 0.30, mem: 0.35, io: 0.30, net: 0.85 },
+            JobClass::Small => JobFeatures { cpu: 0.15, mem: 0.10, io: 0.10, net: 0.10 },
+        }
+    }
+
+    /// (min, max) map task counts.
+    pub fn map_count_range(&self) -> (u32, u32) {
+        match self {
+            JobClass::Small => (2, 8),
+            JobClass::CpuHeavy => (10, 40),
+            _ => (10, 60),
+        }
+    }
+
+    /// (min, max) reduce task counts.
+    pub fn reduce_count_range(&self) -> (u32, u32) {
+        match self {
+            JobClass::Small => (1, 2),
+            JobClass::NetHeavy => (4, 16),
+            _ => (2, 8),
+        }
+    }
+
+    /// Log-normal (mu, sigma) of map-task work seconds at speed 1.
+    pub fn map_work_lognormal(&self) -> (f64, f64) {
+        match self {
+            JobClass::Small => (1.6, 0.3),    // ~5s
+            JobClass::CpuHeavy => (3.2, 0.4), // ~25s
+            JobClass::IoHeavy => (3.0, 0.4),  // ~20s
+            JobClass::MemHeavy => (3.1, 0.4),
+            JobClass::NetHeavy => (2.8, 0.4),
+        }
+    }
+
+    /// Log-normal (mu, sigma) of reduce-task work seconds.
+    pub fn reduce_work_lognormal(&self) -> (f64, f64) {
+        match self {
+            JobClass::Small => (1.8, 0.3),
+            JobClass::NetHeavy => (3.6, 0.4), // shuffle-heavy reduces
+            _ => (3.2, 0.4),
+        }
+    }
+}
+
+/// Per-task resource demand implied by a job's declared features.
+///
+/// A task of a job with feature fraction f demands f * TASK_DEMAND_SCALE of
+/// a standard node in that dimension — so two fully cpu-heavy tasks nearly
+/// saturate a standard node's CPU, matching the paper's §2.1 observation
+/// that "if two large memory consumption of the task to be scheduled one,
+/// it is easy to appear OOM".
+pub const TASK_DEMAND_SCALE: f64 = 0.45;
+
+pub fn demand_from_profile(p: &JobFeatures) -> Resources {
+    Resources {
+        cpu: p.cpu * TASK_DEMAND_SCALE,
+        mem: p.mem * TASK_DEMAND_SCALE,
+        io: p.io * TASK_DEMAND_SCALE,
+        net: p.net * TASK_DEMAND_SCALE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for c in JobClass::ALL {
+            assert_eq!(JobClass::from_name(c.name()), Some(c));
+        }
+        assert_eq!(JobClass::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn heavy_classes_dominate_their_dimension() {
+        let f = JobClass::CpuHeavy.base_features();
+        assert!(f.cpu > f.mem && f.cpu > f.io && f.cpu > f.net);
+        let f = JobClass::IoHeavy.base_features();
+        assert!(f.io > f.cpu && f.io > f.mem && f.io > f.net);
+        let f = JobClass::MemHeavy.base_features();
+        assert!(f.mem > f.cpu);
+        let f = JobClass::NetHeavy.base_features();
+        assert!(f.net > f.cpu);
+    }
+
+    #[test]
+    fn two_heavy_tasks_nearly_saturate() {
+        let d = demand_from_profile(&JobClass::CpuHeavy.base_features());
+        assert!(2.0 * d.cpu > 0.7 && 2.0 * d.cpu <= 1.0);
+    }
+
+    #[test]
+    fn small_jobs_are_small() {
+        let d = demand_from_profile(&JobClass::Small.base_features());
+        assert!(d.max_component() < 0.1);
+        let (lo, hi) = JobClass::Small.map_count_range();
+        assert!(hi <= 8 && lo >= 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! The JobTracker's job table: all jobs by id, plus the queue view
+//! schedulers iterate over (jobs with schedulable tasks, in submission
+//! order — the paper's single "job queue").
+
+use std::collections::BTreeSet;
+
+use crate::hdfs::Namespace;
+use crate::sim::engine::Time;
+
+use crate::cluster::node::NodeId;
+use crate::job::task::TaskRef;
+
+use super::job::{Job, JobSpec};
+use super::JobId;
+
+/// Owns every job in the simulation.
+///
+/// Jobs live in a dense `Vec` indexed by id (ids are sequential), and the
+/// schedulable-queue view is maintained **incrementally** by the task
+/// transition wrappers — both were coordinator hotspots when recomputed
+/// per heartbeat (perf §Perf).
+#[derive(Debug, Default)]
+pub struct JobTable {
+    jobs: Vec<Job>,
+    /// Incomplete jobs.
+    active: BTreeSet<JobId>,
+    /// Incomplete jobs with at least one schedulable task right now.
+    ready: BTreeSet<JobId>,
+    completed: Vec<JobId>,
+}
+
+impl JobTable {
+    pub fn new() -> JobTable {
+        JobTable::default()
+    }
+
+    /// Submit a job: allocates its input blocks in HDFS (3-replica,
+    /// rack-aware) and instantiates the task vectors.
+    pub fn submit(&mut self, spec: JobSpec, hdfs: &mut Namespace) -> JobId {
+        let id = JobId(self.jobs.len() as u32);
+        let blocks = hdfs.allocate_blocks(spec.map_works.len());
+        self.jobs.push(Job::new(id, spec, blocks));
+        self.active.insert(id);
+        self.sync_ready(id);
+        id
+    }
+
+    pub fn get(&self, id: JobId) -> &Job {
+        &self.jobs[id.0 as usize]
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> &mut Job {
+        &mut self.jobs[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// All jobs, submission order.
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.iter()
+    }
+
+    /// Re-derive one job's membership in the ready set.
+    fn sync_ready(&mut self, id: JobId) {
+        let job = &self.jobs[id.0 as usize];
+        if job.finish_time.is_none() && job.has_schedulable_task() {
+            self.ready.insert(id);
+        } else {
+            self.ready.remove(&id);
+        }
+    }
+
+    // ---- task transition wrappers (keep the ready set consistent) ----
+
+    /// Pending -> Running.
+    pub fn start_task(&mut self, r: &TaskRef, node: NodeId, now: Time) {
+        self.get_mut(r.job).start_task(r, node, now);
+        self.sync_ready(r.job);
+    }
+
+    /// Running -> Done. Completing the last map unlocks the reduces.
+    pub fn complete_task(&mut self, r: &TaskRef, now: Time) {
+        self.get_mut(r.job).complete_task(r, now);
+        self.sync_ready(r.job);
+    }
+
+    /// Running -> Pending (failure re-queue).
+    pub fn requeue_task(&mut self, r: &TaskRef) {
+        self.get_mut(r.job).requeue_task(r);
+        self.sync_ready(r.job);
+    }
+
+    /// The scheduler's queue view: incomplete jobs with schedulable tasks,
+    /// submission order (ties elsewhere are broken by scheduler policy).
+    pub fn schedulable(&self) -> Vec<JobId> {
+        self.ready.iter().copied().collect()
+    }
+
+    /// Incomplete job count (queued or running).
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Mark a job finished.
+    pub fn mark_complete(&mut self, id: JobId, now: Time) {
+        let job = self.get_mut(id);
+        debug_assert!(job.is_complete() && job.finish_time.is_none());
+        job.finish_time = Some(now);
+        self.completed.push(id);
+        self.active.remove(&id);
+        self.ready.remove(&id);
+    }
+
+    /// Kill a job (task attempt budget exhausted). It leaves the queue
+    /// view; tasks of it still on nodes are drained by the coordinator.
+    pub fn mark_failed(&mut self, id: JobId, now: Time) {
+        let job = self.get_mut(id);
+        debug_assert!(job.finish_time.is_none());
+        job.finish_time = Some(now);
+        job.failed = true;
+        self.active.remove(&id);
+        self.ready.remove(&id);
+    }
+
+    pub fn completed_ids(&self) -> &[JobId] {
+        &self.completed
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.jobs.iter().filter(|j| j.failed).count()
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::job::test_spec;
+
+    fn ns() -> Namespace {
+        Namespace::new(4, 2, 42) // 4 nodes, 2 racks
+    }
+
+    #[test]
+    fn submit_assigns_sequential_ids() {
+        let mut t = JobTable::new();
+        let mut h = ns();
+        let a = t.submit(test_spec("a", 2, 1), &mut h);
+        let b = t.submit(test_spec("b", 2, 1), &mut h);
+        assert_eq!(a, JobId(0));
+        assert_eq!(b, JobId(1));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn schedulable_in_submission_order() {
+        let mut t = JobTable::new();
+        let mut h = ns();
+        for i in 0..5 {
+            t.submit(test_spec(&format!("j{i}"), 1, 0), &mut h);
+        }
+        assert_eq!(
+            t.schedulable(),
+            (0..5).map(JobId).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn completed_jobs_leave_queue_view() {
+        let mut t = JobTable::new();
+        let mut h = ns();
+        let id = t.submit(test_spec("a", 1, 0), &mut h);
+        {
+            use crate::cluster::node::NodeId;
+            let j = t.get_mut(id);
+            j.maps[0].start(NodeId(0), 0.0);
+            j.maps[0].complete(1.0);
+            j.maps_done = 1;
+        }
+        t.mark_complete(id, 1.0);
+        assert!(t.schedulable().is_empty());
+        assert!(t.all_complete());
+        assert_eq!(t.completed_ids(), &[id]);
+        assert_eq!(t.active_count(), 0);
+    }
+
+    #[test]
+    fn blocks_allocated_per_map() {
+        let mut t = JobTable::new();
+        let mut h = ns();
+        let id = t.submit(test_spec("a", 7, 2), &mut h);
+        let j = t.get(id);
+        assert_eq!(j.maps.len(), 7);
+        assert!(j.maps.iter().all(|m| m.block.is_some()));
+    }
+}

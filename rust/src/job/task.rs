@@ -1,0 +1,163 @@
+//! Tasks: the schedulable unit. A job is "divided into multiple tasks and
+//! job scheduling implements the function that distribute the tasks of a
+//! job to a TaskTracker" (paper §4.1).
+
+use crate::cluster::node::NodeId;
+use crate::hdfs::BlockId;
+use crate::sim::engine::Time;
+
+use super::JobId;
+
+/// Map or reduce (MRv1 slots are typed, paper §2.1 notes the waste this
+/// causes — reproduced faithfully).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+/// Globally unique task handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskRef {
+    pub job: JobId,
+    pub kind: TaskKind,
+    pub index: u32,
+}
+
+impl std::fmt::Display for TaskRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let k = match self.kind {
+            TaskKind::Map => "m",
+            TaskKind::Reduce => "r",
+        };
+        write!(f, "{}_{}{:05}", self.job, k, self.index)
+    }
+}
+
+/// Task lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TaskState {
+    /// Waiting in the job for a slot.
+    Pending,
+    /// Executing on a node since `start`.
+    Running { node: NodeId, start: Time },
+    /// Finished at `finish` (wall time includes contention slowdowns).
+    Done { finish: Time },
+}
+
+/// One map or reduce task.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub index: u32,
+    /// Seconds of work on a speed-1.0 node with node-local input.
+    pub work: f64,
+    /// Input block (maps only) — drives the locality decision.
+    pub block: Option<BlockId>,
+    pub state: TaskState,
+    /// Execution attempts (> 1 after failures/OOM re-queues).
+    pub attempts: u32,
+    /// Bumped whenever the task's completion event is rescheduled; stale
+    /// events carry the old generation and are dropped.
+    pub generation: u32,
+}
+
+impl Task {
+    pub fn map(index: u32, work: f64, block: BlockId) -> Task {
+        Task {
+            kind: TaskKind::Map,
+            index,
+            work,
+            block: Some(block),
+            state: TaskState::Pending,
+            attempts: 0,
+            generation: 0,
+        }
+    }
+
+    pub fn reduce(index: u32, work: f64) -> Task {
+        Task {
+            kind: TaskKind::Reduce,
+            index,
+            work,
+            block: None,
+            state: TaskState::Pending,
+            attempts: 0,
+            generation: 0,
+        }
+    }
+
+    pub fn is_pending(&self) -> bool {
+        matches!(self.state, TaskState::Pending)
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self.state, TaskState::Running { .. })
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, TaskState::Done { .. })
+    }
+
+    /// Transition Pending -> Running.
+    pub fn start(&mut self, node: NodeId, now: Time) {
+        debug_assert!(self.is_pending(), "starting non-pending task");
+        self.state = TaskState::Running { node, start: now };
+        self.attempts += 1;
+        self.generation += 1;
+    }
+
+    /// Transition Running -> Done.
+    pub fn complete(&mut self, now: Time) {
+        debug_assert!(self.is_running(), "completing non-running task");
+        self.state = TaskState::Done { finish: now };
+    }
+
+    /// Transition Running -> Pending (failure re-queue).
+    pub fn requeue(&mut self) {
+        debug_assert!(self.is_running(), "requeueing non-running task");
+        self.state = TaskState::Pending;
+        self.generation += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut t = Task::map(0, 10.0, BlockId(3));
+        assert!(t.is_pending());
+        t.start(NodeId(1), 5.0);
+        assert!(t.is_running());
+        assert_eq!(t.attempts, 1);
+        t.complete(20.0);
+        assert_eq!(t.state, TaskState::Done { finish: 20.0 });
+    }
+
+    #[test]
+    fn requeue_increments_generation() {
+        let mut t = Task::map(0, 10.0, BlockId(0));
+        t.start(NodeId(0), 0.0);
+        let g = t.generation;
+        t.requeue();
+        assert!(t.is_pending());
+        assert_eq!(t.generation, g + 1);
+        t.start(NodeId(2), 1.0);
+        assert_eq!(t.attempts, 2);
+    }
+
+    #[test]
+    fn reduce_has_no_block() {
+        let t = Task::reduce(4, 30.0);
+        assert_eq!(t.block, None);
+        assert_eq!(t.kind, TaskKind::Reduce);
+    }
+
+    #[test]
+    fn display_formats() {
+        let r = TaskRef { job: JobId(7), kind: TaskKind::Map, index: 3 };
+        assert_eq!(r.to_string(), "job_0007_m00003");
+    }
+}

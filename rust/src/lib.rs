@@ -1,0 +1,31 @@
+//! # bayes-sched
+//!
+//! Reproduction of **"The Improved Job Scheduling Algorithm of Hadoop
+//! Platform"** (CS.DC 2015): a Naive-Bayes job scheduler for a
+//! Hadoop-MRv1-style cluster, built as a three-layer rust + JAX + Pallas
+//! stack (DESIGN.md). The classifier hot path is AOT-compiled from
+//! JAX/Pallas to HLO and executed via xla/PJRT; python never runs at
+//! simulation time.
+//!
+//! Layer map:
+//! * substrates — [`sim`], [`cluster`], [`hdfs`], [`job`], [`workload`]
+//! * the contribution — [`bayes`], [`scheduler`]
+//! * runtime — [`runtime`] (PJRT), [`coordinator`] (JobTracker loop)
+//! * extension — [`yarn`] (RM/NM/AM mode)
+//! * tooling — [`config`], [`cli`], [`metrics`], [`report`], [`testkit`]
+
+pub mod bayes;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod hdfs;
+pub mod job;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod testkit;
+pub mod workload;
+pub mod yarn;

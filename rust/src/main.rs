@@ -1,0 +1,12 @@
+//! `repro` — the launcher binary. See `repro help` or README.md.
+
+fn main() {
+    let code = match bayes_sched::cli::dispatch(std::env::args().skip(1)) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

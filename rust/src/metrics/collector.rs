@@ -1,0 +1,204 @@
+//! The per-run metrics collector: everything the experiment reports need,
+//! accumulated by the coordinator during simulation.
+
+use std::collections::BTreeMap;
+
+use crate::bayes::classifier::Label;
+use crate::hdfs::Locality;
+use crate::job::{JobId, JobOutcome};
+use crate::sim::engine::Time;
+
+/// A point on the overload learning curve (E3): allocations and overload
+/// feedback within one window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FeedbackWindow {
+    pub allocations: u32,
+    pub overloads: u32,
+}
+
+/// Collected over one simulation run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Completed-job outcomes keyed by job.
+    pub outcomes: BTreeMap<JobId, JobOutcome>,
+    /// Map-task locality decisions.
+    pub locality: BTreeMap<&'static str, u64>,
+    /// Total feedback labels seen (good, bad).
+    pub feedback: [u64; 2],
+    /// Learning curve: one window per `window_allocs` allocations.
+    pub windows: Vec<FeedbackWindow>,
+    pub window_allocs: u32,
+    /// OOM kills (re-queued tasks).
+    pub oom_kills: u64,
+    /// Jobs killed after exhausting task attempts.
+    pub failed_jobs: u64,
+    /// TaskTracker failures injected.
+    pub node_failures: u64,
+    /// Periodic cluster snapshots (empty unless timeline_interval > 0).
+    pub timeline: Vec<super::TimelineSample>,
+    /// Scheduling decisions taken (tasks assigned).
+    pub decisions: u64,
+    /// Wall-clock nanoseconds spent inside scheduler decision calls.
+    pub decision_nanos: u128,
+    /// Heartbeats processed.
+    pub heartbeats: u64,
+    /// Virtual time of the last job completion.
+    pub makespan: Time,
+    /// Sum over nodes of overload-seconds (cluster instability measure).
+    pub overload_seconds: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { window_allocs: 100, ..Default::default() }
+    }
+
+    pub fn record_outcome(&mut self, id: JobId, o: JobOutcome) {
+        self.makespan = self.makespan.max(o.finish_time);
+        self.outcomes.insert(id, o);
+    }
+
+    pub fn record_locality(&mut self, l: Locality) {
+        *self.locality.entry(l.name()).or_insert(0) += 1;
+    }
+
+    pub fn record_feedback(&mut self, label: Label) {
+        self.feedback[label as usize] += 1;
+        if self.windows.is_empty() {
+            self.windows.push(FeedbackWindow::default());
+        }
+        let w = self.windows.last_mut().unwrap();
+        w.allocations += 1;
+        if label == Label::Bad {
+            w.overloads += 1;
+        }
+        if w.allocations >= self.window_allocs {
+            self.windows.push(FeedbackWindow::default());
+        }
+    }
+
+    pub fn record_decision(&mut self, nanos: u128) {
+        self.decisions += 1;
+        self.decision_nanos += nanos;
+    }
+
+    /// Job latency (submit -> finish) samples.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.outcomes
+            .values()
+            .map(|o| o.finish_time - o.submit_time)
+            .collect()
+    }
+
+    /// Queue-wait (submit -> first task launch) samples.
+    pub fn waits(&self) -> Vec<f64> {
+        self.outcomes
+            .values()
+            .filter_map(|o| o.first_launch.map(|f| f - o.submit_time))
+            .collect()
+    }
+
+    /// Jobs per second of virtual time.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.outcomes.len() as f64 / self.makespan
+        }
+    }
+
+    /// Fraction of map tasks that ran node-local.
+    pub fn locality_fraction(&self, name: &str) -> f64 {
+        let total: u64 = self.locality.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        *self.locality.get(name).unwrap_or(&0) as f64 / total as f64
+    }
+
+    /// Overload rate among all feedback samples.
+    pub fn overload_rate(&self) -> f64 {
+        let total = self.feedback[0] + self.feedback[1];
+        if total == 0 {
+            0.0
+        } else {
+            self.feedback[1] as f64 / total as f64
+        }
+    }
+
+    /// Mean scheduler decision latency in microseconds.
+    pub fn mean_decision_micros(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.decision_nanos as f64 / self.decisions as f64 / 1000.0
+        }
+    }
+
+    /// Wasted task attempts across all jobs (failure re-runs).
+    pub fn wasted_attempts(&self) -> u64 {
+        self.outcomes.values().map(|o| o.wasted_attempts as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(submit: f64, finish: f64) -> JobOutcome {
+        JobOutcome {
+            submit_time: submit,
+            first_launch: Some(submit + 1.0),
+            finish_time: finish,
+            wasted_attempts: 2,
+        }
+    }
+
+    #[test]
+    fn makespan_tracks_max_finish() {
+        let mut m = Metrics::new();
+        m.record_outcome(JobId(0), outcome(0.0, 50.0));
+        m.record_outcome(JobId(1), outcome(10.0, 30.0));
+        assert_eq!(m.makespan, 50.0);
+        assert_eq!(m.latencies(), vec![50.0, 20.0]);
+        assert_eq!(m.waits(), vec![1.0, 1.0]);
+        assert_eq!(m.throughput(), 2.0 / 50.0);
+        assert_eq!(m.wasted_attempts(), 4);
+    }
+
+    #[test]
+    fn feedback_windows_roll() {
+        let mut m = Metrics::new();
+        m.window_allocs = 10;
+        for i in 0..25 {
+            let l = if i % 5 == 0 { Label::Bad } else { Label::Good };
+            m.record_feedback(l);
+        }
+        assert_eq!(m.feedback, [20, 5]);
+        assert_eq!(m.windows.len(), 3);
+        assert_eq!(m.windows[0].allocations, 10);
+        assert_eq!(m.windows[0].overloads, 2);
+        assert_eq!(m.windows[2].allocations, 5);
+        assert!((m.overload_rate() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn locality_fractions() {
+        let mut m = Metrics::new();
+        for _ in 0..3 {
+            m.record_locality(Locality::NodeLocal);
+        }
+        m.record_locality(Locality::Remote);
+        assert_eq!(m.locality_fraction("node_local"), 0.75);
+        assert_eq!(m.locality_fraction("remote"), 0.25);
+        assert_eq!(m.locality_fraction("rack_local"), 0.0);
+    }
+
+    #[test]
+    fn decision_latency() {
+        let mut m = Metrics::new();
+        m.record_decision(2000);
+        m.record_decision(4000);
+        assert_eq!(m.mean_decision_micros(), 3.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: per-run collector + summary statistics.
+
+pub mod collector;
+pub mod stats;
+pub mod timeline;
+
+pub use collector::{FeedbackWindow, Metrics};
+pub use timeline::TimelineSample;

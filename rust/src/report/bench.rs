@@ -1,0 +1,93 @@
+//! Minimal benchmark harness (criterion substitute — not in the offline
+//! crate cache). Plain `harness = false` benches call [`bench`] / [`Bench`]
+//! and print a stable, greppable format:
+//!
+//! `bench <name> ... mean 12.34 ms  (min 11.90, max 13.02, n=20)`
+
+use std::time::Instant;
+
+/// One measured result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "bench {:<48} mean {:>12}  (min {}, max {}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns),
+            self.iters
+        );
+    }
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Measure `f` `iters` times (after `warmup` unmeasured runs), print and
+/// return the result. `f` gets the iteration index; use `std::hint::black_box`
+/// on inputs/outputs inside.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut(usize)) -> Measurement {
+    assert!(iters > 0);
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        f(i);
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0, f64::max);
+    let m = Measurement {
+        name: name.to_string(),
+        mean_ns: mean,
+        min_ns: min,
+        max_ns: max,
+        iters,
+    };
+    m.print();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = bench("noop-ish", 1, 5, |_| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.min_ns <= m.mean_ns && m.mean_ns <= m.max_ns);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+}

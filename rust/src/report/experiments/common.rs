@@ -1,0 +1,93 @@
+//! Shared experiment plumbing: run one simulation, summarize it.
+
+use std::path::PathBuf;
+
+use crate::coordinator::builder::{build_tracker_with, RunConfig};
+use crate::coordinator::jobtracker::JobTracker;
+use crate::metrics::stats;
+use crate::workload::generator::generate;
+
+/// Options shared by all experiment drivers.
+#[derive(Debug, Clone, Default)]
+pub struct ExpOpts {
+    /// Shrink workloads/seeds for fast smoke runs.
+    pub quick: bool,
+    /// Where to write CSVs (skipped when None).
+    pub out_dir: Option<PathBuf>,
+}
+
+impl ExpOpts {
+    /// Scale a count down in quick mode.
+    pub fn scaled(&self, full: usize, quick: usize) -> usize {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+}
+
+/// One simulation run boiled down to report numbers.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub scheduler: String,
+    pub seed: u64,
+    pub makespan: f64,
+    pub throughput: f64,
+    pub mean_latency: f64,
+    pub p95_latency: f64,
+    pub mean_wait: f64,
+    pub overload_rate: f64,
+    pub overload_seconds: f64,
+    pub oom_kills: u64,
+    pub wasted_attempts: u64,
+    pub locality_node: f64,
+    pub locality_rack: f64,
+    pub locality_remote: f64,
+    pub mean_decision_us: f64,
+    pub heartbeats: u64,
+}
+
+/// Run a config to completion and summarize.
+pub fn run_once(cfg: &RunConfig) -> RunSummary {
+    let cluster =
+        crate::cluster::Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+    let specs = generate(&cfg.workload);
+    let mut jt = build_tracker_with(cfg, cluster, specs).expect("build tracker");
+    jt.run();
+    summarize(&jt, cfg)
+}
+
+/// Summarize a finished tracker.
+pub fn summarize(jt: &JobTracker, cfg: &RunConfig) -> RunSummary {
+    let m = &jt.metrics;
+    let lat = m.latencies();
+    RunSummary {
+        scheduler: cfg.scheduler.clone(),
+        seed: cfg.workload.seed,
+        makespan: m.makespan,
+        throughput: m.throughput(),
+        mean_latency: stats::mean(&lat),
+        p95_latency: stats::percentile(&lat, 95.0),
+        mean_wait: stats::mean(&m.waits()),
+        overload_rate: m.overload_rate(),
+        overload_seconds: m.overload_seconds,
+        oom_kills: m.oom_kills,
+        wasted_attempts: m.wasted_attempts(),
+        locality_node: m.locality_fraction("node_local"),
+        locality_rack: m.locality_fraction("rack_local"),
+        locality_remote: m.locality_fraction("remote"),
+        mean_decision_us: m.mean_decision_micros(),
+        heartbeats: m.heartbeats,
+    }
+}
+
+/// Mean of a field across summaries.
+pub fn mean_of(xs: &[RunSummary], f: impl Fn(&RunSummary) -> f64) -> f64 {
+    stats::mean(&xs.iter().map(f).collect::<Vec<_>>())
+}
+
+/// Std-dev of a field across summaries.
+pub fn std_of(xs: &[RunSummary], f: impl Fn(&RunSummary) -> f64) -> f64 {
+    stats::std_dev(&xs.iter().map(f).collect::<Vec<_>>())
+}

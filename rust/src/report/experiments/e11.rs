@@ -1,0 +1,69 @@
+//! E11: failure resilience — makespan inflation and lost work under
+//! TaskTracker failures (paper §1: the JobTracker must "manage job failed,
+//! restart operation"; §2.1 lists the MRv1 single-point-of-failure concern
+//! that motivated YARN). Sweeps MTBF for FIFO vs Bayes.
+
+use crate::cluster::Cluster;
+use crate::coordinator::builder::RunConfig;
+use crate::coordinator::jobtracker::{FailureConfig, JobTracker};
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::{generate, WorkloadConfig};
+
+use super::common::ExpOpts;
+
+pub fn e11(opts: &ExpOpts) -> Vec<Table> {
+    let mtbfs: Vec<Option<f64>> = if opts.quick {
+        vec![None, Some(300.0)]
+    } else {
+        vec![None, Some(1200.0), Some(600.0), Some(300.0)]
+    };
+    let mut table = Table::new(
+        "E11 failure resilience: makespan vs node MTBF (mttr = 90s)",
+        &[
+            "mtbf_s",
+            "scheduler",
+            "makespan_s",
+            "node_failures",
+            "wasted_attempts",
+            "failed_jobs",
+        ],
+    );
+    for mtbf in &mtbfs {
+        for sched in ["fifo", "bayes"] {
+            let cfg = RunConfig {
+                scheduler: sched.into(),
+                n_nodes: opts.scaled(40, 8) as u32,
+                n_racks: 4,
+                workload: WorkloadConfig {
+                    n_jobs: opts.scaled(200, 25),
+                    arrival_rate: 0.5,
+                    seed: 11,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let mut tracker_cfg = cfg.tracker.clone();
+            tracker_cfg.failures = FailureConfig { mtbf: *mtbf, mttr: 90.0 };
+            let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+            let sched_box =
+                crate::coordinator::builder::build_scheduler(&cfg).unwrap();
+            let mut jt = JobTracker::new(
+                cluster,
+                sched_box,
+                generate(&cfg.workload),
+                cfg.workload.seed,
+                tracker_cfg,
+            );
+            jt.run();
+            table.row(vec![
+                mtbf.map_or("none".to_string(), |m| format!("{m:.0}")),
+                sched.into(),
+                fnum(jt.metrics.makespan),
+                format!("{}", jt.metrics.node_failures),
+                format!("{}", jt.metrics.wasted_attempts()),
+                format!("{}", jt.metrics.failed_jobs),
+            ]);
+        }
+    }
+    vec![table]
+}

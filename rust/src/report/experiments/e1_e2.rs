@@ -1,0 +1,94 @@
+//! E1 (efficiency) and E2 (stability): the paper's headline claim —
+//! "significant improvement in execution efficiency and stability of job
+//! scheduling" — quantified against the §3 baselines.
+
+use crate::coordinator::builder::RunConfig;
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::WorkloadConfig;
+
+use super::common::{mean_of, run_once, std_of, ExpOpts, RunSummary};
+
+const SCHEDULERS: [&str; 4] = ["fifo", "fair", "capacity", "bayes"];
+
+fn base_cfg(scheduler: &str, seed: u64, opts: &ExpOpts) -> RunConfig {
+    RunConfig {
+        scheduler: scheduler.into(),
+        n_nodes: opts.scaled(40, 8) as u32,
+        n_racks: 4,
+        workload: WorkloadConfig {
+            n_jobs: opts.scaled(200, 30),
+            arrival_rate: 0.5,
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// E1: makespan / throughput / latency per scheduler, multi-seed means.
+pub fn e1(opts: &ExpOpts) -> Vec<Table> {
+    let seeds = opts.scaled(5, 2) as u64;
+    let mut table = Table::new(
+        "E1 efficiency: Bayes vs FIFO/Fair/Capacity (mean over seeds)",
+        &[
+            "scheduler",
+            "makespan_s",
+            "throughput_jobs_s",
+            "mean_latency_s",
+            "p95_latency_s",
+            "overload_rate",
+            "oom_kills",
+            "wasted_attempts",
+        ],
+    );
+    for sched in SCHEDULERS {
+        let runs: Vec<RunSummary> = (1..=seeds)
+            .map(|s| run_once(&base_cfg(sched, s, opts)))
+            .collect();
+        table.row(vec![
+            sched.into(),
+            fnum(mean_of(&runs, |r| r.makespan)),
+            fnum(mean_of(&runs, |r| r.throughput)),
+            fnum(mean_of(&runs, |r| r.mean_latency)),
+            fnum(mean_of(&runs, |r| r.p95_latency)),
+            fnum(mean_of(&runs, |r| r.overload_rate)),
+            fnum(mean_of(&runs, |r| r.oom_kills as f64)),
+            fnum(mean_of(&runs, |r| r.wasted_attempts as f64)),
+        ]);
+    }
+    vec![table]
+}
+
+/// E2: stability — dispersion of makespan and latency across seeds.
+pub fn e2(opts: &ExpOpts) -> Vec<Table> {
+    let seeds = opts.scaled(20, 4) as u64;
+    let mut table = Table::new(
+        "E2 stability: dispersion across seeds (lower = more stable)",
+        &[
+            "scheduler",
+            "makespan_mean",
+            "makespan_std",
+            "makespan_cv",
+            "latency_mean",
+            "latency_std",
+            "overload_sec_mean",
+        ],
+    );
+    for sched in SCHEDULERS {
+        let runs: Vec<RunSummary> = (1..=seeds)
+            .map(|s| run_once(&base_cfg(sched, 100 + s, opts)))
+            .collect();
+        let mk_mean = mean_of(&runs, |r| r.makespan);
+        let mk_std = std_of(&runs, |r| r.makespan);
+        table.row(vec![
+            sched.into(),
+            fnum(mk_mean),
+            fnum(mk_std),
+            fnum(if mk_mean > 0.0 { mk_std / mk_mean } else { 0.0 }),
+            fnum(mean_of(&runs, |r| r.mean_latency)),
+            fnum(std_of(&runs, |r| r.mean_latency)),
+            fnum(mean_of(&runs, |r| r.overload_seconds)),
+        ]);
+    }
+    vec![table]
+}

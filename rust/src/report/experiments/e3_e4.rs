@@ -1,0 +1,156 @@
+//! E3 (overload learning curve) and E4 (classifier quality vs feedback
+//! volume): the paper's §4.3 claim that the scheduler "adjusts task
+//! allocation policy through learning the feedback result ... constantly
+//! ... to improve the correct rate of task allocation".
+
+use crate::bayes::classifier::{Classifier, Label, NaiveBayes};
+use crate::bayes::features::{feature_vec, FeatureVec};
+use crate::bayes::overload::OverloadRule;
+use crate::cluster::Cluster;
+use crate::coordinator::builder::{build_tracker_with, RunConfig};
+use crate::report::table::{fnum, Table};
+use crate::sim::rng::Pcg;
+use crate::workload::generator::{generate, WorkloadConfig};
+
+use super::common::ExpOpts;
+
+/// E3: overload rate per 100-allocation window over one long bayes run,
+/// with fifo as the no-learning control.
+pub fn e3(opts: &ExpOpts) -> Vec<Table> {
+    let n_jobs = opts.scaled(500, 60);
+    let mut table = Table::new(
+        "E3 learning curve: overloads per 100 allocations over time",
+        &["window", "bayes_overload_rate", "fifo_overload_rate"],
+    );
+    let mut curves = Vec::new();
+    for sched in ["bayes", "fifo"] {
+        let cfg = RunConfig {
+            scheduler: sched.into(),
+            n_nodes: opts.scaled(40, 8) as u32,
+            n_racks: 4,
+            workload: WorkloadConfig {
+                n_jobs,
+                arrival_rate: 0.8,
+                seed: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+        let specs = generate(&cfg.workload);
+        let mut jt = build_tracker_with(&cfg, cluster, specs).unwrap();
+        jt.run();
+        let curve: Vec<f64> = jt
+            .metrics
+            .windows
+            .iter()
+            .filter(|w| w.allocations > 0)
+            .map(|w| w.overloads as f64 / w.allocations as f64)
+            .collect();
+        curves.push(curve);
+    }
+    let n = curves[0].len().min(curves[1].len()).min(opts.scaled(20, 6));
+    for i in 0..n {
+        table.row(vec![format!("{i}"), fnum(curves[0][i]), fnum(curves[1][i])]);
+    }
+    vec![table]
+}
+
+/// Ground-truth oracle used by E4: the same overload mechanism the
+/// simulator applies, evaluated analytically on (job, node) features.
+fn oracle_label(fv: &FeatureVec, rule: &OverloadRule) -> Label {
+    // feature bins back to approximate fractions (bin midpoints)
+    let frac = |b: u8| (b as f64 + 0.5) / 10.0;
+    // node utilization after adding this job's task demand
+    let demand_scale = crate::job::profile::TASK_DEMAND_SCALE;
+    let cpu = frac(fv[4]) + frac(fv[0]) * demand_scale;
+    let mem = frac(fv[5]) + frac(fv[1]) * demand_scale;
+    let io = frac(fv[6]) + frac(fv[2]) * demand_scale;
+    let net = frac(fv[7]) + frac(fv[3]) * demand_scale;
+    let slowdown = cpu.max(mem).max(io).max(net).max(1.0);
+    let obs = crate::bayes::overload::OverloadObservation {
+        cpu_used: cpu,
+        mem_used: mem,
+        io_load: io,
+        net_load: net,
+        slowdown,
+    };
+    rule.label(&obs)
+}
+
+/// E4: classifier accuracy / precision / recall vs number of feedback
+/// samples, against the analytic oracle (train on synthetic feedback drawn
+/// from the same distribution the simulator produces).
+pub fn e4(opts: &ExpOpts) -> Vec<Table> {
+    let rule = OverloadRule::default();
+    let mut rng = Pcg::seeded(4);
+    let sample = |rng: &mut Pcg| -> FeatureVec {
+        // draw a plausible (job, node) pair: job features from the class
+        // mix, node features from a load distribution
+        let classes = crate::job::profile::JobClass::ALL;
+        let class = classes[rng.index(classes.len())];
+        let f = class.base_features();
+        let jitter = |rng: &mut Pcg, v: f64| (v + rng.range_f64(-0.1, 0.1)).clamp(0.0, 1.0);
+        let job = crate::bayes::features::JobFeatures {
+            cpu: jitter(rng, f.cpu),
+            mem: jitter(rng, f.mem),
+            io: jitter(rng, f.io),
+            net: jitter(rng, f.net),
+        };
+        let node = crate::bayes::features::NodeFeatures {
+            cpu_used: rng.f64(),
+            mem_used: rng.f64(),
+            io_load: rng.f64() * 0.7,
+            net_load: rng.f64() * 0.7,
+        };
+        feature_vec(&job, &node)
+    };
+    // held-out test set
+    let test: Vec<(FeatureVec, Label)> = (0..opts.scaled(2000, 300))
+        .map(|_| {
+            let fv = sample(&mut rng);
+            (fv, oracle_label(&fv, &rule))
+        })
+        .collect();
+    let mut table = Table::new(
+        "E4 classifier quality vs feedback volume (analytic oracle)",
+        &["train_samples", "accuracy", "precision_bad", "recall_bad"],
+    );
+    let mut nb = NaiveBayes::new(1.0);
+    let mut trained = 0usize;
+    let checkpoints = if opts.quick {
+        vec![50usize, 200, 500]
+    } else {
+        vec![50usize, 100, 200, 500, 1000, 2000, 5000]
+    };
+    for target in checkpoints {
+        while trained < target {
+            let fv = sample(&mut rng);
+            nb.observe(fv, oracle_label(&fv, &rule));
+            trained += 1;
+        }
+        nb.flush();
+        let (mut tp, mut fp, mut fneg, mut correct) = (0u32, 0u32, 0u32, 0u32);
+        for (fv, truth) in &test {
+            let pred = if nb.posterior_good(fv) >= 0.5 { Label::Good } else { Label::Bad };
+            if pred == *truth {
+                correct += 1;
+            }
+            match (pred, truth) {
+                (Label::Bad, Label::Bad) => tp += 1,
+                (Label::Bad, Label::Good) => fp += 1,
+                (Label::Good, Label::Bad) => fneg += 1,
+                _ => {}
+            }
+        }
+        let prec = if tp + fp > 0 { tp as f64 / (tp + fp) as f64 } else { 0.0 };
+        let rec = if tp + fneg > 0 { tp as f64 / (tp + fneg) as f64 } else { 0.0 };
+        table.row(vec![
+            format!("{target}"),
+            fnum(correct as f64 / test.len() as f64),
+            fnum(prec),
+            fnum(rec),
+        ]);
+    }
+    vec![table]
+}

@@ -1,0 +1,133 @@
+//! E5 (data locality), E6 (scalability), E7 (workload-mix sensitivity).
+
+use crate::coordinator::builder::RunConfig;
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::{Mix, WorkloadConfig};
+
+use super::common::{run_once, ExpOpts};
+
+/// E5: locality split per scheduler (paper §4.2's locality-first task pick
+/// is shared; differences come from *which* jobs win slots when).
+pub fn e5(opts: &ExpOpts) -> Vec<Table> {
+    let mut table = Table::new(
+        "E5 map-task data locality by scheduler",
+        &["scheduler", "node_local", "rack_local", "remote"],
+    );
+    for sched in ["fifo", "fair", "capacity", "bayes", "random"] {
+        let cfg = RunConfig {
+            scheduler: sched.into(),
+            n_nodes: opts.scaled(40, 8) as u32,
+            n_racks: 4,
+            workload: WorkloadConfig {
+                n_jobs: opts.scaled(200, 30),
+                seed: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = run_once(&cfg);
+        table.row(vec![
+            sched.into(),
+            fnum(r.locality_node),
+            fnum(r.locality_rack),
+            fnum(r.locality_remote),
+        ]);
+    }
+    vec![table]
+}
+
+/// E6: makespan and scheduler decision latency vs cluster size.
+pub fn e6(opts: &ExpOpts) -> Vec<Table> {
+    let sizes: Vec<u32> = if opts.quick {
+        vec![10, 20]
+    } else {
+        vec![10, 20, 40, 80, 160]
+    };
+    let mut table = Table::new(
+        "E6 scalability: cluster size sweep (jobs = 5 x nodes)",
+        &[
+            "nodes",
+            "scheduler",
+            "makespan_s",
+            "mean_decision_us",
+            "heartbeats",
+        ],
+    );
+    for &n in &sizes {
+        for sched in ["fifo", "bayes"] {
+            let cfg = RunConfig {
+                scheduler: sched.into(),
+                n_nodes: n,
+                n_racks: (n / 10).max(1),
+                workload: WorkloadConfig {
+                    n_jobs: (5 * n) as usize,
+                    arrival_rate: 0.0125 * n as f64,
+                    seed: 6,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let r = run_once(&cfg);
+            table.row(vec![
+                format!("{n}"),
+                sched.into(),
+                fnum(r.makespan),
+                fnum(r.mean_decision_us),
+                format!("{}", r.heartbeats),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+/// E7: Bayes advantage vs fraction of cpu-heavy jobs — contention-prone
+/// mixes are where learned overload avoidance should matter most.
+pub fn e7(opts: &ExpOpts) -> Vec<Table> {
+    let fracs = if opts.quick {
+        vec![0.0, 1.0]
+    } else {
+        vec![0.0, 0.25, 0.5, 0.75, 1.0]
+    };
+    let mut table = Table::new(
+        "E7 workload-mix sensitivity: makespan vs cpu-heavy fraction",
+        &[
+            "cpu_fraction",
+            "fifo_makespan",
+            "bayes_makespan",
+            "bayes_speedup",
+            "fifo_overloads",
+            "bayes_overloads",
+        ],
+    );
+    for frac in fracs {
+        let mut mk = [0.0f64; 2];
+        let mut ov = [0.0f64; 2];
+        for (i, sched) in ["fifo", "bayes"].iter().enumerate() {
+            let cfg = RunConfig {
+                scheduler: (*sched).into(),
+                n_nodes: opts.scaled(40, 8) as u32,
+                n_racks: 4,
+                workload: WorkloadConfig {
+                    n_jobs: opts.scaled(200, 30),
+                    arrival_rate: 0.5,
+                    mix: Mix::cpu_fraction(frac),
+                    seed: 7,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let r = run_once(&cfg);
+            mk[i] = r.makespan;
+            ov[i] = r.overload_rate;
+        }
+        table.row(vec![
+            fnum(frac),
+            fnum(mk[0]),
+            fnum(mk[1]),
+            fnum(if mk[1] > 0.0 { mk[0] / mk[1] } else { 0.0 }),
+            fnum(ov[0]),
+            fnum(ov[1]),
+        ]);
+    }
+    vec![table]
+}

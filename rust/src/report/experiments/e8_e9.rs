@@ -1,0 +1,184 @@
+//! E8 (design ablations) and E9 (heterogeneous cluster / mis-tuned slots:
+//! the paper's §4.1 motivation that administrators cannot hand-tune task
+//! limits for every job/node combination).
+
+use crate::bayes::classifier::NaiveBayes;
+use crate::bayes::utility::UtilityFn;
+use crate::cluster::node::NodeSpec;
+use crate::cluster::resources::Resources;
+use crate::cluster::Cluster;
+use crate::coordinator::builder::{build_tracker_with, RunConfig};
+use crate::report::table::{fnum, Table};
+use crate::scheduler::{BayesScheduler, Scheduler, StarvationPolicy};
+use crate::workload::generator::{generate, Mix, WorkloadConfig};
+
+use super::common::{summarize, ExpOpts};
+
+fn run_with_sched(
+    cfg: &RunConfig,
+    sched: Box<dyn Scheduler>,
+) -> super::common::RunSummary {
+    let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
+    let specs = generate(&cfg.workload);
+    let mut jt = crate::coordinator::jobtracker::JobTracker::new(
+        cluster,
+        sched,
+        specs,
+        cfg.workload.seed,
+        cfg.tracker.clone(),
+    );
+    jt.run();
+    summarize(&jt, cfg)
+}
+
+/// E8: one row per ablated variant of the Bayes scheduler.
+pub fn e8(opts: &ExpOpts) -> Vec<Table> {
+    let cfg = RunConfig {
+        scheduler: "bayes".into(),
+        n_nodes: opts.scaled(40, 8) as u32,
+        n_racks: 4,
+        workload: WorkloadConfig {
+            n_jobs: opts.scaled(200, 30),
+            arrival_rate: 0.5,
+            seed: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let variants: Vec<(&str, Box<dyn Scheduler>)> = vec![
+        ("full", Box::new(BayesScheduler::new(NaiveBayes::new(1.0)))),
+        (
+            "no_utility",
+            Box::new(
+                BayesScheduler::new(NaiveBayes::new(1.0))
+                    .with_utility(UtilityFn::constant()),
+            ),
+        ),
+        (
+            "starvation_wait",
+            Box::new(
+                BayesScheduler::new(NaiveBayes::new(1.0))
+                    .with_policy(StarvationPolicy::Wait),
+            ),
+        ),
+        (
+            "starvation_least_bad",
+            Box::new(
+                BayesScheduler::new(NaiveBayes::new(1.0))
+                    .with_policy(StarvationPolicy::LeastBad),
+            ),
+        ),
+        (
+            "job_features_only",
+            Box::new(
+                BayesScheduler::new(NaiveBayes::new(1.0)).with_feature_mask([
+                    true, true, true, true, false, false, false, false,
+                ]),
+            ),
+        ),
+        (
+            "node_features_only",
+            Box::new(
+                BayesScheduler::new(NaiveBayes::new(1.0)).with_feature_mask([
+                    false, false, false, false, true, true, true, true,
+                ]),
+            ),
+        ),
+        ("alpha_0.1", Box::new(BayesScheduler::new(NaiveBayes::new(0.1)))),
+        ("alpha_10", Box::new(BayesScheduler::new(NaiveBayes::new(10.0)))),
+    ];
+    let mut table = Table::new(
+        "E8 ablations of the Bayes scheduler",
+        &[
+            "variant",
+            "makespan_s",
+            "mean_latency_s",
+            "overload_rate",
+            "oom_kills",
+        ],
+    );
+    for (name, sched) in variants {
+        let r = run_with_sched(&cfg, sched);
+        table.row(vec![
+            name.into(),
+            fnum(r.makespan),
+            fnum(r.mean_latency),
+            fnum(r.overload_rate),
+            fnum(r.oom_kills as f64),
+        ]);
+    }
+    vec![table]
+}
+
+/// E9: heterogeneous cluster where static slot configs are mis-tuned.
+/// `tuned` gives slow nodes fewer slots (admin did their homework);
+/// `mistuned` gives every node 4 map slots (the default config the paper
+/// says admins fall back to); Bayes runs on the mis-tuned cluster and must
+/// learn around it.
+pub fn e9(opts: &ExpOpts) -> Vec<Table> {
+    let n = opts.scaled(40, 9) as u32;
+    let fast = NodeSpec {
+        capacity: Resources::splat(2.0),
+        speed: 2.0,
+        map_slots: 4,
+        reduce_slots: 2,
+    };
+    let std_node = NodeSpec::default();
+    let slow = NodeSpec {
+        capacity: Resources::splat(0.5),
+        speed: 0.5,
+        map_slots: 1,
+        reduce_slots: 1,
+    };
+    let slow_mistuned = NodeSpec { map_slots: 4, reduce_slots: 2, ..slow };
+    let classes_tuned = [(fast, 0.25), (std_node, 0.5), (slow, 0.25)];
+    let classes_mistuned = [(fast, 0.25), (std_node, 0.5), (slow_mistuned, 0.25)];
+
+    let workload = WorkloadConfig {
+        n_jobs: opts.scaled(200, 30),
+        arrival_rate: 0.5,
+        mix: Mix::balanced(),
+        seed: 9,
+        ..Default::default()
+    };
+    let mut table = Table::new(
+        "E9 heterogeneous cluster: hand-tuned vs mis-tuned slot configs",
+        &[
+            "config",
+            "scheduler",
+            "makespan_s",
+            "p95_latency_s",
+            "overload_rate",
+            "oom_kills",
+        ],
+    );
+    let cases: Vec<(&str, &str, &[(NodeSpec, f64)])> = vec![
+        ("tuned", "fifo", &classes_tuned),
+        ("mistuned", "fifo", &classes_mistuned),
+        ("mistuned", "bayes", &classes_mistuned),
+        ("tuned", "bayes", &classes_tuned),
+    ];
+    for (cname, sched, classes) in cases {
+        let cfg = RunConfig {
+            scheduler: sched.into(),
+            n_nodes: n,
+            n_racks: 4,
+            workload: workload.clone(),
+            ..Default::default()
+        };
+        let cluster = Cluster::heterogeneous(n, 4, classes, 99);
+        let specs = generate(&cfg.workload);
+        let mut jt = build_tracker_with(&cfg, cluster, specs).unwrap();
+        jt.run();
+        let r = summarize(&jt, &cfg);
+        table.row(vec![
+            cname.into(),
+            sched.into(),
+            fnum(r.makespan),
+            fnum(r.p95_latency),
+            fnum(r.overload_rate),
+            fnum(r.oom_kills as f64),
+        ]);
+    }
+    vec![table]
+}

@@ -1,0 +1,48 @@
+//! Experiment drivers E1–E10 (DESIGN.md §4): each regenerates one derived
+//! table from the paper's claims and writes a CSV when an output directory
+//! is configured.
+
+pub mod common;
+pub mod e1_e2;
+pub mod e10;
+pub mod e11;
+pub mod e3_e4;
+pub mod e5_e7;
+pub mod e8_e9;
+
+pub use common::ExpOpts;
+
+use crate::report::table::Table;
+
+/// All experiment ids.
+pub const ALL: [&str; 11] =
+    ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOpts) -> Option<Vec<Table>> {
+    let tables = match id {
+        "e1" => e1_e2::e1(opts),
+        "e2" => e1_e2::e2(opts),
+        "e3" => e3_e4::e3(opts),
+        "e4" => e3_e4::e4(opts),
+        "e5" => e5_e7::e5(opts),
+        "e6" => e5_e7::e6(opts),
+        "e7" => e5_e7::e7(opts),
+        "e8" => e8_e9::e8(opts),
+        "e9" => e8_e9::e9(opts),
+        "e10" => e10::e10(opts),
+        "e11" => e11::e11(opts),
+        _ => return None,
+    };
+    if let Some(dir) = &opts.out_dir {
+        for (i, t) in tables.iter().enumerate() {
+            let slug = if tables.len() == 1 {
+                id.to_string()
+            } else {
+                format!("{id}_{i}")
+            };
+            let _ = t.save_csv(dir, &slug);
+        }
+    }
+    Some(tables)
+}

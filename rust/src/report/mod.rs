@@ -1,0 +1,8 @@
+//! Reporting: ASCII/CSV tables + the E1–E10 experiment drivers.
+
+pub mod bench;
+pub mod experiments;
+pub mod table;
+
+pub use experiments::ExpOpts;
+pub use table::{fnum, Table};

@@ -1,0 +1,180 @@
+//! Artifact manifest: shape constants + entry-point descriptors emitted by
+//! `python/compile/aot.py` alongside the HLO text files.
+//!
+//! The rust side validates the manifest's constants against what it was
+//! compiled to expect, so a stale `artifacts/` directory fails loudly at
+//! load time instead of producing shape errors (or silent garbage) at
+//! execute time.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+
+/// Shape constants the classifier artifacts were lowered with.
+/// Mirror of `python/compile/constants.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeConstants {
+    pub max_jobs: usize,
+    pub n_features: usize,
+    pub n_bins: usize,
+    pub n_classes: usize,
+    pub max_batch: usize,
+    pub feature_dim: usize,
+}
+
+/// The constants this build of the rust coordinator expects.
+pub const EXPECTED: ShapeConstants = ShapeConstants {
+    max_jobs: 256,
+    n_features: 8,
+    n_bins: 10,
+    n_classes: 2,
+    max_batch: 128,
+    feature_dim: 80,
+};
+
+/// One AOT entry point (an HLO text file).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub path: PathBuf,
+    pub sha256: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub constants: ShapeConstants,
+    pub classify: Entry,
+    pub update: Entry,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error(
+        "artifact shape mismatch: artifacts were lowered with {found:?} but this \
+         binary expects {expected:?}; re-run `make artifacts`"
+    )]
+    ShapeMismatch {
+        found: Box<ShapeConstants>,
+        expected: Box<ShapeConstants>,
+    },
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| ManifestError::Io { path: mpath.clone(), source: e })?;
+        let json = Json::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let consts = json
+            .get("constants")
+            .ok_or_else(|| ManifestError::Parse("missing 'constants'".into()))?;
+        let get = |k: &str| -> Result<usize, ManifestError> {
+            consts
+                .get(k)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| ManifestError::Parse(format!("missing constant '{k}'")))
+        };
+        let constants = ShapeConstants {
+            max_jobs: get("max_jobs")?,
+            n_features: get("n_features")?,
+            n_bins: get("n_bins")?,
+            n_classes: get("n_classes")?,
+            max_batch: get("max_batch")?,
+            feature_dim: get("feature_dim")?,
+        };
+        if constants != EXPECTED {
+            return Err(ManifestError::ShapeMismatch {
+                found: Box::new(constants),
+                expected: Box::new(EXPECTED),
+            });
+        }
+        let entry = |name: &str| -> Result<Entry, ManifestError> {
+            let e = json
+                .get("entries")
+                .and_then(|es| es.get(name))
+                .ok_or_else(|| ManifestError::Parse(format!("missing entry '{name}'")))?;
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Parse(format!("entry '{name}' missing file")))?;
+            Ok(Entry {
+                name: name.to_string(),
+                path: dir.join(file),
+                sha256: e
+                    .get("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            })
+        };
+        Ok(Manifest {
+            constants,
+            classify: entry("classify")?,
+            update: entry("update")?,
+        })
+    }
+}
+
+/// Default artifacts directory: `$BAYES_SCHED_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("BAYES_SCHED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, max_jobs: usize) {
+        let text = format!(
+            r#"{{"constants": {{"max_jobs": {max_jobs}, "n_features": 8, "n_bins": 10,
+                "n_classes": 2, "max_batch": 128, "feature_dim": 80}},
+                "entries": {{
+                  "classify": {{"file": "classify.hlo.txt", "sha256": "aa"}},
+                  "update": {{"file": "update.hlo.txt", "sha256": "bb"}}}}}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("bayes_sched_manifest_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, 256);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.constants, EXPECTED);
+        assert!(m.classify.path.ends_with("classify.hlo.txt"));
+        assert_eq!(m.update.sha256, "bb");
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("bayes_sched_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, 512);
+        match Manifest::load(&dir) {
+            Err(ManifestError::ShapeMismatch { .. }) => {}
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_io_error() {
+        match Manifest::load(Path::new("/nonexistent/nowhere")) {
+            Err(ManifestError::Io { .. }) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+}

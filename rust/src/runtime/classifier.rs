@@ -1,0 +1,190 @@
+//! XLA-backed [`Classifier`]: the coordinator hot path executing the
+//! AOT-compiled Pallas/JAX artifacts through PJRT.
+//!
+//! Semantics mirror [`crate::bayes::NaiveBayes`] exactly (same buffering,
+//! same Laplace smoothing — the smoothing lives *inside* the update
+//! artifact), so the two are interchangeable behind the trait and must
+//! agree to f32 tolerance.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bayes::classifier::{
+    Classifier, ClassifyResult, Label, FEATURE_DIM, MAX_BATCH, MAX_JOBS,
+};
+use crate::bayes::features::FeatureVec;
+
+use super::client::Runtime;
+
+/// Classifier state held rust-side between artifact executions.
+pub struct XlaClassifier {
+    rt: Runtime,
+    counts: Vec<f32>,       // [2 * FEATURE_DIM]
+    class_counts: Vec<f32>, // [2]
+    log_prior: Vec<f32>,    // [2]
+    log_lik: Vec<f32>,      // [2 * FEATURE_DIM]
+    /// Device-resident copies of (log_prior, log_lik); invalidated on
+    /// flush, lazily re-uploaded at the next classify (perf §Perf).
+    table_bufs: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    alpha: f32,
+    pending: Vec<(FeatureVec, Label)>,
+    // preallocated padded buffers (hot path: zero allocation per call)
+    feats_buf: Vec<i32>,
+    utility_buf: Vec<f32>,
+    mask_buf: Vec<f32>,
+    batch_feats: Vec<i32>,
+    batch_labels: Vec<i32>,
+    batch_mask: Vec<f32>,
+}
+
+impl XlaClassifier {
+    /// Load artifacts from `dir` and initialize an empty model.
+    pub fn load(dir: &Path, alpha: f32) -> Result<XlaClassifier> {
+        let rt = Runtime::load(dir)?;
+        let consts = rt.consts;
+        assert_eq!(consts.feature_dim, FEATURE_DIM);
+        assert_eq!(consts.max_jobs, MAX_JOBS);
+        assert_eq!(consts.max_batch, MAX_BATCH);
+        let mut xc = XlaClassifier {
+            rt,
+            counts: vec![0.0; 2 * FEATURE_DIM],
+            class_counts: vec![0.0; 2],
+            log_prior: vec![0.0; 2],
+            log_lik: vec![0.0; 2 * FEATURE_DIM],
+            table_bufs: None,
+            alpha,
+            pending: Vec::with_capacity(MAX_BATCH),
+            feats_buf: vec![0; MAX_JOBS * crate::bayes::N_FEATURES],
+            utility_buf: vec![0.0; MAX_JOBS],
+            mask_buf: vec![0.0; MAX_JOBS],
+            batch_feats: vec![0; MAX_BATCH * crate::bayes::N_FEATURES],
+            batch_labels: vec![0; MAX_BATCH],
+            batch_mask: vec![0.0; MAX_BATCH],
+        };
+        // Derive the initial (uniform-prior) tables by pushing an empty
+        // batch through the update artifact — keeps ALL smoothing math in
+        // one place (the artifact), so rust never re-implements it.
+        xc.run_update_batch(0)?;
+        Ok(xc)
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    /// Apply `n` samples currently staged in batch_* buffers.
+    fn run_update_batch(&mut self, n: usize) -> Result<()> {
+        debug_assert!(n <= MAX_BATCH);
+        for m in self.batch_mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+        for m in self.batch_mask.iter_mut().skip(n) {
+            *m = 0.0;
+        }
+        let out = self.rt.update_raw(
+            &self.counts,
+            &self.class_counts,
+            &self.batch_feats,
+            &self.batch_labels,
+            &self.batch_mask,
+            self.alpha,
+        )?;
+        self.counts = out.counts;
+        self.class_counts = out.class_counts;
+        self.log_prior = out.log_prior;
+        self.log_lik = out.log_lik;
+        self.table_bufs = None; // tables changed: device copy is stale
+        Ok(())
+    }
+
+    fn flush_inner(&mut self) -> Result<()> {
+        while !self.pending.is_empty() {
+            let take = self.pending.len().min(MAX_BATCH);
+            for (i, (fv, label)) in self.pending.drain(..take).enumerate() {
+                for (j, &b) in fv.iter().enumerate() {
+                    self.batch_feats[i * crate::bayes::N_FEATURES + j] = b as i32;
+                }
+                self.batch_labels[i] = label as i32;
+            }
+            self.run_update_batch(take)?;
+        }
+        Ok(())
+    }
+
+    /// Raw model state, same layout as [`crate::bayes::NaiveBayes::state`].
+    pub fn state(&self) -> (&[f32], [f32; 2]) {
+        (&self.counts, [self.class_counts[0], self.class_counts[1]])
+    }
+}
+
+impl Classifier for XlaClassifier {
+    fn classify(&mut self, feats: &[FeatureVec], utility: &[f32]) -> ClassifyResult {
+        assert!(!feats.is_empty() && feats.len() <= MAX_JOBS);
+        assert_eq!(feats.len(), utility.len());
+        self.flush();
+        let n = feats.len();
+        for (i, fv) in feats.iter().enumerate() {
+            for (j, &b) in fv.iter().enumerate() {
+                self.feats_buf[i * crate::bayes::N_FEATURES + j] = b as i32;
+            }
+        }
+        // zero the padding rows (stale bins would still be masked, but keep
+        // the buffers deterministic)
+        for v in self.feats_buf[n * crate::bayes::N_FEATURES..].iter_mut() {
+            *v = 0;
+        }
+        self.utility_buf[..n].copy_from_slice(utility);
+        self.utility_buf[n..].fill(0.0);
+        self.mask_buf[..n].fill(1.0);
+        self.mask_buf[n..].fill(0.0);
+        if self.table_bufs.is_none() {
+            self.table_bufs = Some(
+                self.rt
+                    .upload_tables(&self.log_prior, &self.log_lik)
+                    .expect("uploading classifier tables failed"),
+            );
+        }
+        let out = self
+            .rt
+            .classify_buffers(
+                self.table_bufs.as_ref().unwrap(),
+                &self.feats_buf,
+                &self.utility_buf,
+                &self.mask_buf,
+            )
+            .expect("classify artifact execution failed");
+        ClassifyResult {
+            p_good: out.p_good[..n].to_vec(),
+            score: out.score[..n].to_vec(),
+            best: out.best as usize,
+        }
+    }
+
+    fn observe(&mut self, feats: FeatureVec, label: Label) {
+        self.pending.push((feats, label));
+        if self.pending.len() >= MAX_BATCH {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        self.flush_inner().expect("update artifact execution failed");
+    }
+
+    fn class_counts(&self) -> [f32; 2] {
+        [self.class_counts[0], self.class_counts[1]]
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-bayes(xla)"
+    }
+
+    fn export_state(&self) -> (Vec<f32>, [f32; 2], f32) {
+        (
+            self.counts.clone(),
+            [self.class_counts[0], self.class_counts[1]],
+            self.alpha,
+        )
+    }
+}

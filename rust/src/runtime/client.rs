@@ -1,0 +1,226 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them.
+//!
+//! One `Runtime` owns the PJRT CPU client plus one compiled executable per
+//! entry point. Loading happens once at startup (`Runtime::load`); the
+//! coordinator hot path only calls `classify_raw` / `update_raw`, which
+//! never touch python.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Manifest, ShapeConstants};
+
+/// Compiled artifacts, ready to execute.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    classify_exe: xla::PjRtLoadedExecutable,
+    update_exe: xla::PjRtLoadedExecutable,
+    pub consts: ShapeConstants,
+}
+
+/// Outputs of one classify execution over the padded job queue.
+#[derive(Debug, Clone)]
+pub struct ClassifyOut {
+    /// P(good | features) per queue slot.
+    pub p_good: Vec<f32>,
+    /// Masked expected utility per slot (-1e30 on padding).
+    pub score: Vec<f32>,
+    /// Argmax slot index.
+    pub best: i32,
+}
+
+/// Outputs of one update execution (new classifier state).
+#[derive(Debug, Clone)]
+pub struct UpdateOut {
+    pub counts: Vec<f32>,
+    pub class_counts: Vec<f32>,
+    pub log_prior: Vec<f32>,
+    pub log_lik: Vec<f32>,
+}
+
+impl Runtime {
+    /// Load + compile both entry points from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let classify_exe = compile(&client, &manifest.classify.path)?;
+        let update_exe = compile(&client, &manifest.update.path)?;
+        Ok(Runtime { client, classify_exe, update_exe, consts: manifest.constants })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload the model tables once; reuse the returned device buffers for
+    /// many [`Runtime::classify_buffers`] calls (perf: the tables only
+    /// change on feedback flush, so re-transferring them per decision was
+    /// ~40% of the call cost — see EXPERIMENTS.md §Perf).
+    pub fn upload_tables(
+        &self,
+        log_prior: &[f32],
+        log_lik: &[f32],
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let c = self.consts;
+        check_len("log_prior", log_prior.len(), c.n_classes)?;
+        check_len("log_lik", log_lik.len(), c.n_classes * c.feature_dim)?;
+        let prior = self
+            .client
+            .buffer_from_host_buffer(log_prior, &[c.n_classes], None)?;
+        let lik = self.client.buffer_from_host_buffer(
+            log_lik,
+            &[c.n_classes, c.feature_dim],
+            None,
+        )?;
+        Ok((prior, lik))
+    }
+
+    /// Hot-path classify: pre-uploaded table buffers + direct host→device
+    /// transfer of the per-call inputs (no Literal intermediates), executed
+    /// via `execute_b`.
+    pub fn classify_buffers(
+        &self,
+        tables: &(xla::PjRtBuffer, xla::PjRtBuffer),
+        feats: &[i32],
+        utility: &[f32],
+        mask: &[f32],
+    ) -> Result<ClassifyOut> {
+        let c = self.consts;
+        check_len("feats", feats.len(), c.max_jobs * c.n_features)?;
+        check_len("utility", utility.len(), c.max_jobs)?;
+        check_len("mask", mask.len(), c.max_jobs)?;
+        let feats_b = self.client.buffer_from_host_buffer(
+            feats,
+            &[c.max_jobs, c.n_features],
+            None,
+        )?;
+        let utility_b = self.client.buffer_from_host_buffer(utility, &[c.max_jobs], None)?;
+        let mask_b = self.client.buffer_from_host_buffer(mask, &[c.max_jobs], None)?;
+        let args = [&tables.0, &tables.1, &feats_b, &utility_b, &mask_b];
+        let result = self.classify_exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (p_good, score, best) = result.to_tuple3()?;
+        Ok(ClassifyOut {
+            p_good: p_good.to_vec::<f32>()?,
+            score: score.to_vec::<f32>()?,
+            best: best.to_vec::<i32>()?[0],
+        })
+    }
+
+    /// Perf-diagnostic: just the three per-call host→device transfers of
+    /// `classify_buffers`, without execution (used by the p1 bench to
+    /// attribute hot-path cost).
+    pub fn upload_inputs_probe(
+        &self,
+        feats: &[i32],
+        utility: &[f32],
+        mask: &[f32],
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let c = self.consts;
+        Ok((
+            self.client
+                .buffer_from_host_buffer(feats, &[c.max_jobs, c.n_features], None)?,
+            self.client.buffer_from_host_buffer(utility, &[c.max_jobs], None)?,
+            self.client.buffer_from_host_buffer(mask, &[c.max_jobs], None)?,
+        ))
+    }
+
+    /// Execute the classify artifact on raw padded buffers.
+    ///
+    /// Buffer lengths must match the manifest shapes exactly
+    /// (`log_prior`: C, `log_lik`: C*FB, `feats`: N*F row-major,
+    /// `utility`/`mask`: N).
+    pub fn classify_raw(
+        &self,
+        log_prior: &[f32],
+        log_lik: &[f32],
+        feats: &[i32],
+        utility: &[f32],
+        mask: &[f32],
+    ) -> Result<ClassifyOut> {
+        let c = self.consts;
+        check_len("log_prior", log_prior.len(), c.n_classes)?;
+        check_len("log_lik", log_lik.len(), c.n_classes * c.feature_dim)?;
+        check_len("feats", feats.len(), c.max_jobs * c.n_features)?;
+        check_len("utility", utility.len(), c.max_jobs)?;
+        check_len("mask", mask.len(), c.max_jobs)?;
+
+        let args = [
+            xla::Literal::vec1(log_prior),
+            xla::Literal::vec1(log_lik)
+                .reshape(&[c.n_classes as i64, c.feature_dim as i64])?,
+            xla::Literal::vec1(feats)
+                .reshape(&[c.max_jobs as i64, c.n_features as i64])?,
+            xla::Literal::vec1(utility),
+            xla::Literal::vec1(mask),
+        ];
+        let result = self.classify_exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (p_good, score, best) = result.to_tuple3()?;
+        Ok(ClassifyOut {
+            p_good: p_good.to_vec::<f32>()?,
+            score: score.to_vec::<f32>()?,
+            best: best.to_vec::<i32>()?[0],
+        })
+    }
+
+    /// Execute the update artifact on raw padded buffers.
+    pub fn update_raw(
+        &self,
+        counts: &[f32],
+        class_counts: &[f32],
+        feats: &[i32],
+        labels: &[i32],
+        mask: &[f32],
+        alpha: f32,
+    ) -> Result<UpdateOut> {
+        let c = self.consts;
+        check_len("counts", counts.len(), c.n_classes * c.feature_dim)?;
+        check_len("class_counts", class_counts.len(), c.n_classes)?;
+        check_len("feats", feats.len(), c.max_batch * c.n_features)?;
+        check_len("labels", labels.len(), c.max_batch)?;
+        check_len("mask", mask.len(), c.max_batch)?;
+
+        let args = [
+            xla::Literal::vec1(counts)
+                .reshape(&[c.n_classes as i64, c.feature_dim as i64])?,
+            xla::Literal::vec1(class_counts),
+            xla::Literal::vec1(feats)
+                .reshape(&[c.max_batch as i64, c.n_features as i64])?,
+            xla::Literal::vec1(labels),
+            xla::Literal::vec1(mask),
+            xla::Literal::scalar(alpha),
+        ];
+        let result = self.update_exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (counts, class_counts, log_prior, log_lik) = result.to_tuple4()?;
+        Ok(UpdateOut {
+            counts: counts.to_vec::<f32>()?,
+            class_counts: class_counts.to_vec::<f32>()?,
+            log_prior: log_prior.to_vec::<f32>()?,
+            log_lik: log_lik.to_vec::<f32>()?,
+        })
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    // HLO *text* interchange: the text parser reassigns instruction ids, so
+    // jax>=0.5 modules load on xla_extension 0.5.1 (see DESIGN.md §2).
+    let path_str = path
+        .to_str()
+        .with_context(|| format!("non-utf8 artifact path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path:?} on PJRT"))
+}
+
+fn check_len(name: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        bail!("buffer '{name}' has length {got}, artifact expects {want}");
+    }
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts` and
+//! executes them from the coordinator hot path. Python is never involved at
+//! runtime — the HLO text files are self-contained.
+//!
+//! * [`artifacts`] — manifest parsing + shape validation.
+//! * [`client`] — PJRT CPU client wrapper, one executable per entry point.
+//! * [`classifier`] — [`classifier::XlaClassifier`], the drop-in XLA-backed
+//!   implementation of the Bayes classifier interface.
+
+pub mod artifacts;
+pub mod classifier;
+pub mod client;
+
+pub use artifacts::{Manifest, ShapeConstants};
+pub use classifier::XlaClassifier;
+pub use client::{ClassifyOut, Runtime, UpdateOut};

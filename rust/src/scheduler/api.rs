@@ -1,0 +1,107 @@
+//! The scheduler interface: "the schedule of homework is to assign the
+//! proper tasks to proper servers. There are two steps to go. Firstly, you
+//! should select the homework, then in the homework you should choose the
+//! right task." (paper §3)
+//!
+//! Schedulers are consulted on every TaskTracker heartbeat, once per free
+//! slot, exactly like Hadoop MRv1's `TaskScheduler.assignTasks`.
+
+use crate::bayes::classifier::Label;
+use crate::bayes::features::FeatureVec;
+use crate::cluster::node::Node;
+use crate::hdfs::locality::Locality;
+use crate::hdfs::Namespace;
+use crate::job::job::Job;
+use crate::job::queue::JobTable;
+use crate::job::task::{TaskKind, TaskRef};
+use crate::job::JobId;
+use crate::sim::engine::Time;
+
+/// Read-only view handed to the scheduler on each decision.
+pub struct SchedView<'a> {
+    pub jobs: &'a JobTable,
+    pub hdfs: &'a Namespace,
+    /// Schedulable jobs (have a pending task), submission order.
+    pub queue: &'a [JobId],
+    pub now: Time,
+}
+
+/// A job scheduler (FIFO / Fair / Capacity / Bayes / ...).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Called once at startup with cluster-level facts (the Capacity
+    /// scheduler sizes queue promises from the slot total).
+    fn on_cluster_info(&mut self, _total_slots: u32) {}
+
+    /// Pick the next task for one free `kind` slot on `node`, or None to
+    /// leave the slot idle this heartbeat.
+    fn select(&mut self, view: &SchedView, node: &Node, kind: TaskKind)
+        -> Option<TaskRef>;
+
+    /// Overload-rule feedback for an earlier placement (Bayes only; the
+    /// baselines ignore it — that is the paper's point).
+    fn feedback(&mut self, _feats: FeatureVec, _label: Label) {}
+
+    /// Export the learned model as JSON, if this scheduler has one
+    /// (`repro run --save-model`).
+    fn export_model(&self) -> Option<crate::config::json::Json> {
+        None
+    }
+
+    /// Bookkeeping notifications.
+    fn on_task_started(&mut self, _job: JobId) {}
+    fn on_task_finished(&mut self, _job: JobId) {}
+    fn on_job_completed(&mut self, _job: JobId) {}
+}
+
+/// Locality-aware task pick *within* a chosen job (paper §4.2: "select the
+/// required data in the job to schedule the tasks on the TaskTracker
+/// firstly. If there does not exist such kind of tasks, we will select the
+/// tasks whose data are not local"). Shared by every scheduler, so
+/// baselines differ only in *job* selection — exactly the paper's framing.
+pub fn pick_task(
+    job: &Job,
+    node: &Node,
+    hdfs: &Namespace,
+    kind: TaskKind,
+) -> Option<TaskRef> {
+    match kind {
+        TaskKind::Map => {
+            let mut best: Option<(Locality, u32)> = None;
+            for t in job.maps.iter().filter(|t| t.is_pending()) {
+                let loc = hdfs.locality(t.block.expect("map without block"), node.id);
+                let rank = |l: Locality| match l {
+                    Locality::NodeLocal => 0,
+                    Locality::RackLocal => 1,
+                    Locality::Remote => 2,
+                };
+                match best {
+                    Some((b, _)) if rank(b) <= rank(loc) => {}
+                    _ => best = Some((loc, t.index)),
+                }
+                if rank(loc) == 0 {
+                    break; // cannot do better than node-local
+                }
+            }
+            best.map(|(_, index)| TaskRef { job: job.id, kind: TaskKind::Map, index })
+        }
+        TaskKind::Reduce => {
+            if !job.maps_complete() {
+                return None; // reduces gated on the map phase
+            }
+            job.reduces
+                .iter()
+                .find(|t| t.is_pending())
+                .map(|t| TaskRef { job: job.id, kind: TaskKind::Reduce, index: t.index })
+        }
+    }
+}
+
+/// Does `job` have any task a `kind` slot could run right now?
+pub fn has_work(job: &Job, kind: TaskKind) -> bool {
+    match kind {
+        TaskKind::Map => job.pending_maps() > 0,
+        TaskKind::Reduce => job.maps_complete() && job.pending_reduces() > 0,
+    }
+}

@@ -1,0 +1,97 @@
+//! Extra sanity baselines beyond the paper's three: random job pick and
+//! least-loaded-aware FIFO. Used in ablations to separate "any load
+//! awareness helps" from "learned classification helps".
+
+use crate::cluster::node::Node;
+use crate::job::task::{TaskKind, TaskRef};
+use crate::sim::rng::Pcg;
+
+use super::api::{has_work, pick_task, SchedView, Scheduler};
+
+/// Uniform-random job selection (lower bound).
+pub struct RandomSched {
+    rng: Pcg,
+}
+
+impl RandomSched {
+    pub fn new(seed: u64) -> RandomSched {
+        RandomSched { rng: Pcg::new(seed, 0x5EED) }
+    }
+}
+
+impl Scheduler for RandomSched {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        kind: TaskKind,
+    ) -> Option<TaskRef> {
+        let cands: Vec<_> = view
+            .queue
+            .iter()
+            .map(|id| view.jobs.get(*id))
+            .filter(|j| has_work(j, kind))
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+        let start = self.rng.index(cands.len());
+        // random start, linear probe so a pick always lands if any job has
+        // an assignable task
+        for k in 0..cands.len() {
+            let job = cands[(start + k) % cands.len()];
+            if let Some(t) = pick_task(job, node, view.hdfs, kind) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+/// FIFO that refuses placements which would oversubscribe the node's
+/// bottleneck resource — a hand-written (non-learning) overload avoider.
+/// The gap between this and Bayes isolates the value of *learning* the
+/// rule vs hard-coding it.
+pub struct ThresholdFifo {
+    /// Refuse placement when predicted bottleneck utilization exceeds this.
+    pub max_util: f64,
+}
+
+impl ThresholdFifo {
+    pub fn new(max_util: f64) -> ThresholdFifo {
+        ThresholdFifo { max_util }
+    }
+}
+
+impl Scheduler for ThresholdFifo {
+    fn name(&self) -> &'static str {
+        "threshold-fifo"
+    }
+
+    fn select(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        kind: TaskKind,
+    ) -> Option<TaskRef> {
+        let demand_now = node.demand();
+        for id in view.queue {
+            let job = view.jobs.get(*id);
+            if !has_work(job, kind) {
+                continue;
+            }
+            let predicted = (demand_now + job.demand).frac_of(&node.spec.capacity);
+            if predicted.max_component() > self.max_util {
+                continue;
+            }
+            if let Some(t) = pick_task(job, node, view.hdfs, kind) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}

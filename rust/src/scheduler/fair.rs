@@ -1,0 +1,116 @@
+//! The Fair scheduler (paper §3.2): one pool per user, each pool
+//! guaranteed a minimum share of task slots; free slots go to the pool
+//! furthest below its fair share ("as long as the current release of an
+//! empty slot task will be assigned to the immediately job pool"); FIFO
+//! within a pool. No preemption, like the paper's description.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::node::Node;
+use crate::job::task::{TaskKind, TaskRef};
+use crate::job::JobId;
+
+use super::api::{has_work, pick_task, SchedView, Scheduler};
+
+#[derive(Debug, Default, Clone)]
+struct Pool {
+    running: u32,
+    min_share: u32,
+    weight: f64,
+}
+
+/// Fair scheduler over per-user pools.
+#[derive(Debug, Default)]
+pub struct Fair {
+    pools: BTreeMap<String, Pool>,
+    job_pool: BTreeMap<JobId, String>,
+    /// Default min share granted to a pool on first sight.
+    pub default_min_share: u32,
+}
+
+impl Fair {
+    pub fn new() -> Fair {
+        Fair { default_min_share: 2, ..Default::default() }
+    }
+
+    /// Configure a pool explicitly (min share + weight).
+    pub fn set_pool(&mut self, name: &str, min_share: u32, weight: f64) {
+        let p = self.pools.entry(name.to_string()).or_default();
+        p.min_share = min_share;
+        p.weight = weight.max(0.01);
+    }
+
+    fn pool_of(&mut self, job: JobId, pool_name: &str) -> String {
+        self.job_pool.insert(job, pool_name.to_string());
+        if !self.pools.contains_key(pool_name) {
+            self.pools.insert(
+                pool_name.to_string(),
+                Pool { running: 0, min_share: self.default_min_share, weight: 1.0 },
+            );
+        }
+        pool_name.to_string()
+    }
+
+    /// Pool ordering key: below-min-share pools first (most deficit), then
+    /// lowest running/weight (classic fair-share deficit).
+    fn hunger(&self, name: &str) -> (i64, f64) {
+        let p = &self.pools[name];
+        let deficit = p.min_share as i64 - p.running as i64;
+        let load = p.running as f64 / p.weight;
+        (-deficit, load)
+    }
+}
+
+impl Scheduler for Fair {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn select(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        kind: TaskKind,
+    ) -> Option<TaskRef> {
+        // group schedulable jobs by pool
+        let mut by_pool: BTreeMap<String, Vec<JobId>> = BTreeMap::new();
+        for id in view.queue {
+            let job = view.jobs.get(*id);
+            if !has_work(job, kind) {
+                continue;
+            }
+            let pool = self.pool_of(*id, &job.spec.pool);
+            by_pool.entry(pool).or_default().push(*id);
+        }
+        // hungriest pool first
+        let mut pools: Vec<String> = by_pool.keys().cloned().collect();
+        pools.sort_by(|a, b| {
+            let (da, la) = self.hunger(a);
+            let (db, lb) = self.hunger(b);
+            da.cmp(&db).then(la.total_cmp(&lb)).then(a.cmp(b))
+        });
+        for pool in pools {
+            // FIFO within the pool (second level, paper §3.2)
+            for id in &by_pool[&pool] {
+                let job = view.jobs.get(*id);
+                if let Some(t) = pick_task(job, node, view.hdfs, kind) {
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+
+    fn on_task_started(&mut self, job: JobId) {
+        if let Some(pool) = self.job_pool.get(&job) {
+            self.pools.get_mut(pool).unwrap().running += 1;
+        }
+    }
+
+    fn on_task_finished(&mut self, job: JobId) {
+        if let Some(pool) = self.job_pool.get(&job) {
+            let p = self.pools.get_mut(pool).unwrap();
+            p.running = p.running.saturating_sub(1);
+        }
+    }
+}

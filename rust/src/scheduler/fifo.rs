@@ -1,0 +1,47 @@
+//! Hadoop's default FIFO scheduler (paper §3.1): "It chooses the homework
+//! to execute by the priority of the homework and the turns of arriving.
+//! First come, and first go."
+
+use crate::cluster::node::Node;
+use crate::job::task::{TaskKind, TaskRef};
+
+use super::api::{has_work, pick_task, SchedView, Scheduler};
+
+/// Priority-then-submission-order FIFO.
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl Fifo {
+    pub fn new() -> Fifo {
+        Fifo
+    }
+}
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn select(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        kind: TaskKind,
+    ) -> Option<TaskRef> {
+        // queue is submission-ordered; a stable sort by descending priority
+        // gives Hadoop's priority-FIFO order.
+        let mut order: Vec<_> = view
+            .queue
+            .iter()
+            .map(|id| view.jobs.get(*id))
+            .filter(|j| has_work(j, kind))
+            .collect();
+        order.sort_by_key(|j| std::cmp::Reverse(j.spec.priority));
+        for job in order {
+            if let Some(t) = pick_task(job, node, view.hdfs, kind) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}

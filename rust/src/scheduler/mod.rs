@@ -1,0 +1,39 @@
+//! Job schedulers: the paper's three baselines (§3), the Bayes contribution
+//! (§4), and extra sanity baselines.
+
+pub mod api;
+pub mod baselines;
+#[cfg(test)]
+mod tests;
+pub mod bayes;
+pub mod capacity;
+pub mod fair;
+pub mod fifo;
+
+pub use api::{pick_task, SchedView, Scheduler};
+pub use baselines::{RandomSched, ThresholdFifo};
+pub use bayes::{BayesScheduler, StarvationPolicy};
+pub use capacity::Capacity;
+pub use fair::Fair;
+pub use fifo::Fifo;
+
+use crate::bayes::classifier::NaiveBayes;
+
+/// Construct a scheduler by name (CLI / config entry point).
+/// `bayes` uses the pure-rust classifier; `bayes-xla` is built separately
+/// by the coordinator builder because it needs the artifacts directory.
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "fifo" => Some(Box::new(Fifo::new())),
+        "fair" => Some(Box::new(Fair::new())),
+        "capacity" => Some(Box::new(Capacity::new())),
+        "bayes" => Some(Box::new(BayesScheduler::new(NaiveBayes::new(1.0)))),
+        "random" => Some(Box::new(RandomSched::new(seed))),
+        "threshold-fifo" => Some(Box::new(ThresholdFifo::new(0.9))),
+        _ => None,
+    }
+}
+
+/// All scheduler names selectable by `by_name` (for CLI help / sweeps).
+pub const ALL_NAMES: [&str; 6] =
+    ["fifo", "fair", "capacity", "bayes", "random", "threshold-fifo"];

@@ -1,0 +1,200 @@
+//! The discrete-event engine: a virtual clock plus a time-ordered event
+//! heap with deterministic FIFO tie-breaking.
+//!
+//! Determinism contract: given the same seed (all randomness flows through
+//! [`crate::sim::Pcg`] streams) and the same schedule() call sequence, the
+//! pop() sequence is identical — equal timestamps are served in insertion
+//! order via a monotone sequence number.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::event::Event;
+
+/// Virtual time in seconds since simulation start.
+pub type Time = f64;
+
+#[derive(Debug)]
+struct Entry {
+    at: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so earliest time (then lowest
+        // seq) pops first. total_cmp gives a total order on f64.
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue + clock.
+#[derive(Debug)]
+pub struct Engine {
+    heap: BinaryHeap<Entry>,
+    now: Time,
+    seq: u64,
+    processed: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at` (must be >= now).
+    pub fn schedule(&mut self, at: Time, event: Event) {
+        debug_assert!(at.is_finite(), "non-finite event time");
+        debug_assert!(
+            at >= self.now,
+            "scheduling into the past: at={at} now={}",
+            self.now
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at: at.max(self.now), seq, event });
+    }
+
+    /// Schedule `event` `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: Time, event: Event) {
+        self.schedule(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.at >= self.now);
+        self.now = e.at;
+        self.processed += 1;
+        Some((e.at, e.event))
+    }
+
+    /// Peek the next event time without advancing.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobId;
+
+    fn ev(i: u32) -> Event {
+        Event::JobArrival(JobId(i))
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut e = Engine::new();
+        e.schedule(3.0, ev(3));
+        e.schedule(1.0, ev(1));
+        e.schedule(2.0, ev(2));
+        let order: Vec<f64> = std::iter::from_fn(|| e.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut e = Engine::new();
+        for i in 0..100 {
+            e.schedule(5.0, ev(i));
+        }
+        for i in 0..100 {
+            match e.pop().unwrap().1 {
+                Event::JobArrival(JobId(j)) => assert_eq!(j, i),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut e = Engine::new();
+        e.schedule(2.0, ev(0));
+        e.schedule(2.0, ev(1));
+        e.schedule(7.5, ev(2));
+        let mut last = 0.0;
+        while let Some((t, _)) = e.pop() {
+            assert!(t >= last);
+            last = t;
+            assert_eq!(e.now(), t);
+        }
+        assert_eq!(last, 7.5);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut e = Engine::new();
+        e.schedule(10.0, ev(0));
+        e.pop();
+        e.schedule_in(5.0, ev(1));
+        assert_eq!(e.pop().unwrap().0, 15.0);
+    }
+
+    #[test]
+    fn processed_counts() {
+        let mut e = Engine::new();
+        e.schedule(1.0, ev(0));
+        e.schedule(2.0, ev(1));
+        assert_eq!(e.processed(), 0);
+        e.pop();
+        e.pop();
+        assert_eq!(e.processed(), 2);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        let mut e = Engine::new();
+        e.schedule(1.0, ev(0));
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, 1.0);
+        e.schedule_in(0.5, ev(1));
+        e.schedule_in(0.25, ev(2));
+        assert_eq!(e.pop().unwrap().0, 1.25);
+        assert_eq!(e.pop().unwrap().0, 1.5);
+        assert!(e.pop().is_none());
+    }
+}

@@ -1,0 +1,45 @@
+//! Simulation events. The coordinator owns the semantic handling; the
+//! engine only orders them in virtual time.
+
+use crate::cluster::node::NodeId;
+use crate::job::task::TaskRef;
+use crate::job::JobId;
+
+/// Everything that can happen in the simulated cluster.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// A job enters the JobTracker queue.
+    JobArrival(JobId),
+    /// A TaskTracker heartbeat: the node reports status and receives task
+    /// assignments (Hadoop assigns work on the heartbeat RPC).
+    Heartbeat(NodeId),
+    /// A task finishes on a node. `generation` guards against stale
+    /// completions: contention changes reschedule completions, bumping the
+    /// task's generation so superseded events are ignored.
+    TaskComplete { node: NodeId, task: TaskRef, generation: u32 },
+    /// A task fails (e.g. OOM from memory oversubscription) and will be
+    /// re-queued.
+    TaskFail { node: NodeId, task: TaskRef, generation: u32 },
+    /// A TaskTracker dies (crash / network partition): its tasks are lost
+    /// and re-queued, heartbeats stop until recovery.
+    NodeFail(NodeId),
+    /// A failed TaskTracker rejoins the cluster.
+    NodeRecover(NodeId),
+    /// Periodic metrics sampling tick.
+    MetricsTick,
+    /// End of workload injection (no more arrivals); used to detect drain.
+    ArrivalsDone,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_comparable() {
+        let a = Event::JobArrival(JobId(1));
+        let b = Event::JobArrival(JobId(1));
+        assert_eq!(a, b);
+        assert_ne!(a, Event::MetricsTick);
+    }
+}

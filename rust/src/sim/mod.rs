@@ -1,0 +1,11 @@
+//! Discrete-event simulation substrate: virtual clock, event heap, and the
+//! deterministic RNG that gives the reproducibility contract (same seed ⇒
+//! same event trace).
+
+pub mod engine;
+pub mod event;
+pub mod rng;
+
+pub use engine::{Engine, Time};
+pub use event::Event;
+pub use rng::Pcg;

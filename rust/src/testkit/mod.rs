@@ -1,0 +1,118 @@
+//! Tiny property-testing helper (proptest substitute — not in the offline
+//! crate cache). Runs a property over many seeded random cases and reports
+//! the first failing seed so failures are reproducible:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath in this image)
+//! use bayes_sched::testkit::forall;
+//! forall("sum is commutative", 200, |g| {
+//!     let a = g.rng.f64();
+//!     let b = g.rng.f64();
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::sim::rng::Pcg;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [0, n).
+    pub fn index(&mut self, n: usize) -> usize {
+        self.rng.index(n)
+    }
+
+    /// Uniform u64 in [lo, hi].
+    pub fn int(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Random vector of length in [1, max_len] from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.int(1, max_len as u64) as usize;
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+/// Run `prop` for `cases` seeded cases. Panics (with the failing case id)
+/// on the first failure; re-running reproduces it exactly.
+///
+/// Honors `TESTKIT_SEED` to re-run one specific case in isolation.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    if let Ok(s) = std::env::var("TESTKIT_SEED") {
+        let case: usize = s.parse().expect("TESTKIT_SEED must be an integer");
+        let mut g = Gen { rng: Pcg::new(case as u64, 0x7E57), case };
+        prop(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let mut g = Gen { rng: Pcg::new(case as u64, 0x7E57), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {case} \
+                 (re-run with TESTKIT_SEED={case})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        forall("counting", 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        forall("collect", 10, |g| first.push(g.rng.next_u64()));
+        let mut second = Vec::new();
+        forall("collect", 10, |g| second.push(g.rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn propagates_failures() {
+        forall("failing", 5, |g| {
+            if g.case == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        forall("ranges", 100, |g| {
+            let i = g.int(3, 9);
+            assert!((3..=9).contains(&i));
+            let f = g.float(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec(5, |g| g.index(10));
+            assert!(!v.is_empty() && v.len() <= 5);
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! Synthetic workload generator: Poisson job arrivals over a configurable
+//! class mix, with per-job feature jitter, heavy-tailed task durations and
+//! a small population of users (for the Fair/Capacity baselines' pools and
+//! queues).
+
+use crate::bayes::features::JobFeatures;
+use crate::bayes::utility::Priority;
+use crate::job::job::JobSpec;
+use crate::job::profile::JobClass;
+use crate::sim::rng::Pcg;
+
+/// Class mix: weights need not sum to 1.
+#[derive(Debug, Clone)]
+pub struct Mix(pub Vec<(JobClass, f64)>);
+
+impl Mix {
+    /// The default mixed workload (E1): every class represented, skewed
+    /// toward cpu/io-heavy jobs as the paper's overload discussion assumes.
+    pub fn balanced() -> Mix {
+        Mix(vec![
+            (JobClass::CpuHeavy, 0.30),
+            (JobClass::IoHeavy, 0.25),
+            (JobClass::MemHeavy, 0.15),
+            (JobClass::NetHeavy, 0.10),
+            (JobClass::Small, 0.20),
+        ])
+    }
+
+    /// Single-class workload.
+    pub fn only(class: JobClass) -> Mix {
+        Mix(vec![(class, 1.0)])
+    }
+
+    /// `frac` cpu-heavy, remainder spread over the other classes (E7).
+    pub fn cpu_fraction(frac: f64) -> Mix {
+        let rest = (1.0 - frac).max(0.0) / 4.0;
+        Mix(vec![
+            (JobClass::CpuHeavy, frac),
+            (JobClass::IoHeavy, rest),
+            (JobClass::MemHeavy, rest),
+            (JobClass::NetHeavy, rest),
+            (JobClass::Small, rest),
+        ])
+    }
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_jobs: usize,
+    /// Poisson arrival rate, jobs/second.
+    pub arrival_rate: f64,
+    pub mix: Mix,
+    pub n_users: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_jobs: 200,
+            arrival_rate: 0.5,
+            mix: Mix::balanced(),
+            n_users: 8,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate the job stream. Deterministic in `cfg.seed`.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
+    let mut arrivals = Pcg::new(cfg.seed, 1);
+    let mut classes = Pcg::new(cfg.seed, 2);
+    let mut shapes = Pcg::new(cfg.seed, 3);
+
+    let weights: Vec<f64> = cfg.mix.0.iter().map(|(_, w)| *w).collect();
+    let mut t = 0.0;
+    let mut specs = Vec::with_capacity(cfg.n_jobs);
+    for i in 0..cfg.n_jobs {
+        t += arrivals.exp(cfg.arrival_rate);
+        let class = cfg.mix.0[classes.weighted(&weights)].0;
+        let user_idx = classes.index(cfg.n_users.max(1));
+        specs.push(make_spec(i, class, user_idx, t, &mut shapes));
+    }
+    specs
+}
+
+fn jitter(rng: &mut Pcg, v: f64) -> f64 {
+    (v + rng.range_f64(-0.10, 0.10)).clamp(0.02, 1.0)
+}
+
+fn make_spec(
+    i: usize,
+    class: JobClass,
+    user_idx: usize,
+    submit_time: f64,
+    rng: &mut Pcg,
+) -> JobSpec {
+    let base = class.base_features();
+    let profile = JobFeatures {
+        cpu: jitter(rng, base.cpu),
+        mem: jitter(rng, base.mem),
+        io: jitter(rng, base.io),
+        net: jitter(rng, base.net),
+    };
+    let (mlo, mhi) = class.map_count_range();
+    let n_maps = rng.range_u64(mlo as u64, mhi as u64) as usize;
+    let (rlo, rhi) = class.reduce_count_range();
+    let n_reduces = rng.range_u64(rlo as u64, rhi as u64) as usize;
+    let (m_mu, m_sigma) = class.map_work_lognormal();
+    let (r_mu, r_sigma) = class.reduce_work_lognormal();
+    let map_works = (0..n_maps)
+        .map(|_| rng.lognormal(m_mu, m_sigma).clamp(0.5, 600.0))
+        .collect();
+    let reduce_works = (0..n_reduces)
+        .map(|_| rng.lognormal(r_mu, r_sigma).clamp(0.5, 900.0))
+        .collect();
+    // priorities: mostly Normal, occasionally High/Low (10% each tail)
+    let priority = match rng.f64() {
+        x if x < 0.05 => Priority::VeryHigh,
+        x if x < 0.15 => Priority::High,
+        x if x < 0.85 => Priority::Normal,
+        x if x < 0.95 => Priority::Low,
+        _ => Priority::VeryLow,
+    };
+    let user = format!("user{user_idx}");
+    JobSpec {
+        name: format!("{}_{i:04}", class.name()),
+        pool: user.clone(),
+        queue: format!("q{}", user_idx % 3),
+        user,
+        class,
+        priority,
+        profile,
+        map_works,
+        reduce_works,
+        submit_time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = WorkloadConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.submit_time, y.submit_time);
+            assert_eq!(x.map_works, y.map_works);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_poisson_ish() {
+        let cfg = WorkloadConfig { n_jobs: 2000, arrival_rate: 2.0, ..Default::default() };
+        let specs = generate(&cfg);
+        let mut last = 0.0;
+        for s in &specs {
+            assert!(s.submit_time > last);
+            last = s.submit_time;
+        }
+        // mean inter-arrival ~ 1/rate
+        let mean = last / 2000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn mix_respected() {
+        let cfg = WorkloadConfig {
+            n_jobs: 1000,
+            mix: Mix::only(JobClass::CpuHeavy),
+            ..Default::default()
+        };
+        assert!(generate(&cfg).iter().all(|s| s.class == JobClass::CpuHeavy));
+    }
+
+    #[test]
+    fn cpu_fraction_mix() {
+        let specs = generate(&WorkloadConfig {
+            n_jobs: 2000,
+            mix: Mix::cpu_fraction(0.75),
+            ..Default::default()
+        });
+        let cpu = specs.iter().filter(|s| s.class == JobClass::CpuHeavy).count();
+        assert!((0.70..0.80).contains(&(cpu as f64 / 2000.0)));
+    }
+
+    #[test]
+    fn features_in_range_and_tasks_bounded() {
+        for s in generate(&WorkloadConfig { n_jobs: 500, ..Default::default() }) {
+            for f in [s.profile.cpu, s.profile.mem, s.profile.io, s.profile.net] {
+                assert!((0.0..=1.0).contains(&f));
+            }
+            assert!(!s.map_works.is_empty());
+            for w in s.map_works.iter().chain(&s.reduce_works) {
+                assert!((0.5..=900.0).contains(w));
+            }
+        }
+    }
+
+    #[test]
+    fn users_spread() {
+        let specs = generate(&WorkloadConfig { n_jobs: 400, n_users: 4, ..Default::default() });
+        let users: std::collections::HashSet<&str> =
+            specs.iter().map(|s| s.user.as_str()).collect();
+        assert_eq!(users.len(), 4);
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload substrate: synthetic job generation (the paper has no public
+//! trace — substitution D1), trace serialization, and replay helpers.
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::{generate, Mix, WorkloadConfig};

@@ -1,0 +1,150 @@
+//! Trace serialization: persist generated workloads as JSON so experiments
+//! can replay the exact same job stream across schedulers and seeds.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::bayes::features::JobFeatures;
+use crate::bayes::utility::Priority;
+use crate::config::json::Json;
+use crate::job::job::JobSpec;
+use crate::job::profile::JobClass;
+
+/// Serialize one spec.
+fn spec_to_json(s: &JobSpec) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("name".into(), Json::Str(s.name.clone()));
+    o.insert("user".into(), Json::Str(s.user.clone()));
+    o.insert("pool".into(), Json::Str(s.pool.clone()));
+    o.insert("queue".into(), Json::Str(s.queue.clone()));
+    o.insert("class".into(), Json::Str(s.class.name().into()));
+    o.insert("priority".into(), Json::Num(s.priority as i32 as f64));
+    o.insert(
+        "profile".into(),
+        Json::Arr(vec![
+            Json::Num(s.profile.cpu),
+            Json::Num(s.profile.mem),
+            Json::Num(s.profile.io),
+            Json::Num(s.profile.net),
+        ]),
+    );
+    o.insert(
+        "map_works".into(),
+        Json::Arr(s.map_works.iter().map(|w| Json::Num(*w)).collect()),
+    );
+    o.insert(
+        "reduce_works".into(),
+        Json::Arr(s.reduce_works.iter().map(|w| Json::Num(*w)).collect()),
+    );
+    o.insert("submit_time".into(), Json::Num(s.submit_time));
+    Json::Obj(o)
+}
+
+fn spec_from_json(j: &Json) -> Result<JobSpec> {
+    let str_field = |k: &str| -> Result<String> {
+        Ok(j.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing string field '{k}'"))?
+            .to_string())
+    };
+    let f64s = |k: &str| -> Result<Vec<f64>> {
+        j.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing array field '{k}'"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-number in '{k}'")))
+            .collect()
+    };
+    let class_name = str_field("class")?;
+    let class = JobClass::from_name(&class_name)
+        .ok_or_else(|| anyhow!("unknown job class '{class_name}'"))?;
+    let prof = f64s("profile")?;
+    if prof.len() != 4 {
+        return Err(anyhow!("profile must have 4 entries"));
+    }
+    let priority = j
+        .get("priority")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing priority"))?;
+    Ok(JobSpec {
+        name: str_field("name")?,
+        user: str_field("user")?,
+        pool: str_field("pool")?,
+        queue: str_field("queue")?,
+        class,
+        priority: Priority::from_index(priority as usize),
+        profile: JobFeatures { cpu: prof[0], mem: prof[1], io: prof[2], net: prof[3] },
+        map_works: f64s("map_works")?,
+        reduce_works: f64s("reduce_works")?,
+        submit_time: j
+            .get("submit_time")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing submit_time"))?,
+    })
+}
+
+/// Serialize a whole trace.
+pub fn to_json(specs: &[JobSpec]) -> Json {
+    Json::Arr(specs.iter().map(spec_to_json).collect())
+}
+
+/// Parse a whole trace.
+pub fn from_json(j: &Json) -> Result<Vec<JobSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("trace must be a JSON array"))?
+        .iter()
+        .map(spec_from_json)
+        .collect()
+}
+
+pub fn save(specs: &[JobSpec], path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(specs).to_string_pretty())
+        .with_context(|| format!("writing trace {path:?}"))
+}
+
+pub fn load(path: &Path) -> Result<Vec<JobSpec>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path:?}"))?;
+    from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::{generate, WorkloadConfig};
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let specs = generate(&WorkloadConfig { n_jobs: 30, ..Default::default() });
+        let parsed = from_json(&Json::parse(&to_json(&specs).to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(specs.len(), parsed.len());
+        for (a, b) in specs.iter().zip(&parsed) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.user, b.user);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.map_works, b.map_works);
+            assert_eq!(a.reduce_works, b.reduce_works);
+            assert_eq!(a.submit_time, b.submit_time);
+            assert!((a.profile.cpu - b.profile.cpu).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let specs = generate(&WorkloadConfig { n_jobs: 5, ..Default::default() });
+        let path = std::env::temp_dir().join("bayes_sched_trace_test.json");
+        save(&specs, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 5);
+        assert_eq!(loaded[0].name, specs[0].name);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_json(&Json::parse(r#"{"not": "array"}"#).unwrap()).is_err());
+        assert!(from_json(&Json::parse(r#"[{"name": "x"}]"#).unwrap()).is_err());
+    }
+}

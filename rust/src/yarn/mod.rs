@@ -1,0 +1,22 @@
+//! YARN-mode extension (paper §2): ResourceManager / NodeManager /
+//! ApplicationMaster / Container simulation, with the Bayes policy plugged
+//! into the RM scheduler — showing the paper's algorithm generalizes from
+//! MRv1 slots to YARN's resource-vector containers.
+//!
+//! The key YARN-specific failure mode modeled here: containers are
+//! allocated against **declared** resource demands, but jobs' **actual**
+//! usage differs (users misdeclare). The RM's fit check can therefore be
+//! satisfied while the node still melts — exactly the gap an overload-
+//! feedback learner can close and a static fit check cannot.
+//!
+//! Simplifications vs real YARN (documented deviations):
+//! * The AM itself does not occupy a container (it is control-plane only
+//!   here); container allocation happens on NM heartbeats, as the real
+//!   CapacityScheduler does.
+//! * One container = one map/reduce task attempt.
+
+pub mod policy;
+pub mod rm;
+
+pub use policy::{YarnBayes, YarnFair, YarnFifo, YarnPolicy};
+pub use rm::{yarn_policy_by_name, ResourceManager, YarnConfig};

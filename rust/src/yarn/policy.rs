@@ -1,0 +1,153 @@
+//! RM scheduling policies: which application's pending container request
+//! wins a node's free resources.
+
+use crate::bayes::classifier::{Classifier, NaiveBayes};
+use crate::bayes::features::{feature_vec, FeatureVec, NodeFeatures};
+use crate::bayes::utility::UtilityFn;
+use crate::bayes::Label;
+use crate::cluster::resources::Resources;
+use crate::job::job::Job;
+use crate::job::JobId;
+use crate::sim::engine::Time;
+
+/// A pending container request summary handed to the policy.
+pub struct AppRequest<'a> {
+    pub app: JobId,
+    pub job: &'a Job,
+    /// Declared per-container demand (what the RM fit-checks).
+    pub declared: Resources,
+    /// Containers currently running for this app.
+    pub running: u32,
+}
+
+/// RM scheduling policy.
+pub trait YarnPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Choose which request (index into `reqs`) gets a container on a node
+    /// with `free` resources and `node_feats` load, or None to hold back.
+    /// Every entry in `reqs` already passed the declared-fit check.
+    fn choose(
+        &mut self,
+        reqs: &[AppRequest],
+        free: Resources,
+        node_feats: &NodeFeatures,
+        now: Time,
+    ) -> Option<usize>;
+
+    /// Overload feedback for an earlier allocation (bayes only).
+    fn feedback(&mut self, _feats: FeatureVec, _label: Label) {}
+}
+
+/// FIFO: oldest app first.
+#[derive(Debug, Default)]
+pub struct YarnFifo;
+
+impl YarnPolicy for YarnFifo {
+    fn name(&self) -> &'static str {
+        "yarn-fifo"
+    }
+
+    fn choose(
+        &mut self,
+        reqs: &[AppRequest],
+        _free: Resources,
+        _node_feats: &NodeFeatures,
+        _now: Time,
+    ) -> Option<usize> {
+        (!reqs.is_empty()).then_some(0)
+    }
+}
+
+/// Fair: the app with the fewest running containers wins (instantaneous
+/// max-min fairness in container count).
+#[derive(Debug, Default)]
+pub struct YarnFair;
+
+impl YarnPolicy for YarnFair {
+    fn name(&self) -> &'static str {
+        "yarn-fair"
+    }
+
+    fn choose(
+        &mut self,
+        reqs: &[AppRequest],
+        _free: Resources,
+        _node_feats: &NodeFeatures,
+        _now: Time,
+    ) -> Option<usize> {
+        reqs.iter()
+            .enumerate()
+            .min_by_key(|(i, r)| (r.running, *i))
+            .map(|(i, _)| i)
+    }
+}
+
+/// The paper's Bayes policy at the RM: classify (app declared profile ×
+/// node load), pick the best good app by expected utility.
+pub struct YarnBayes {
+    classifier: NaiveBayes,
+    utility: UtilityFn,
+}
+
+impl YarnBayes {
+    pub fn new(alpha: f32) -> YarnBayes {
+        YarnBayes { classifier: NaiveBayes::new(alpha), utility: UtilityFn::default() }
+    }
+}
+
+impl YarnPolicy for YarnBayes {
+    fn name(&self) -> &'static str {
+        "yarn-bayes"
+    }
+
+    fn choose(
+        &mut self,
+        reqs: &[AppRequest],
+        _free: Resources,
+        node_feats: &NodeFeatures,
+        now: Time,
+    ) -> Option<usize> {
+        if reqs.is_empty() {
+            return None;
+        }
+        let window = reqs.len().min(crate::bayes::classifier::MAX_JOBS);
+        let feats: Vec<FeatureVec> = reqs[..window]
+            .iter()
+            .map(|r| feature_vec(&r.job.spec.profile, node_feats))
+            .collect();
+        let utility: Vec<f32> = reqs[..window]
+            .iter()
+            .map(|r| {
+                self.utility
+                    .eval(r.job.spec.priority, now - r.job.spec.submit_time)
+                    as f32
+            })
+            .collect();
+        let res = self.classifier.classify(&feats, &utility);
+        let good = (0..window)
+            .filter(|&i| res.is_good(i))
+            .max_by(|&a, &b| res.score[a].total_cmp(&res.score[b]));
+        // Same wait-unless-idle gate as the MRv1 scheduler (deviation D3),
+        // softened for YARN's resource-vector allocation: when everything
+        // classifies bad, hold back only while the node's bottleneck
+        // dimension is already past 75% — otherwise accept the least-bad
+        // app so the cluster cannot sit idle under a pessimistic prior.
+        good.or_else(|| {
+            let bottleneck = node_feats
+                .cpu_used
+                .max(node_feats.mem_used)
+                .max(node_feats.io_load)
+                .max(node_feats.net_load);
+            if bottleneck < 0.75 {
+                (0..window).max_by(|&a, &b| res.p_good[a].total_cmp(&res.p_good[b]))
+            } else {
+                None
+            }
+        })
+    }
+
+    fn feedback(&mut self, feats: FeatureVec, label: Label) {
+        self.classifier.observe(feats, label);
+    }
+}

@@ -1,0 +1,425 @@
+//! The ResourceManager driver: NM heartbeats, declared-fit container
+//! allocation via the pluggable policy, actual-demand contention on nodes,
+//! overload feedback, AM lifecycle (register on job arrival, unregister on
+//! completion — paper §2.3's application flow).
+
+use anyhow::{anyhow, Result};
+
+use crate::bayes::features::feature_vec;
+use crate::bayes::overload::OverloadRule;
+use crate::cluster::heartbeat::HeartbeatConfig;
+use crate::cluster::node::NodeId;
+use crate::cluster::Cluster;
+use crate::hdfs::locality::{locality_multiplier, locality_net_demand};
+use crate::hdfs::Namespace;
+use crate::job::job::JobSpec;
+use crate::job::queue::JobTable;
+use crate::job::task::{TaskKind, TaskRef, TaskState};
+use crate::metrics::Metrics;
+use crate::sim::engine::{Engine, Time};
+use crate::sim::event::Event;
+
+use super::policy::{AppRequest, YarnPolicy};
+
+/// YARN-mode knobs.
+#[derive(Debug, Clone)]
+pub struct YarnConfig {
+    pub heartbeat: HeartbeatConfig,
+    pub overload_rule: OverloadRule,
+    /// Max concurrent containers per NM (control-plane cap).
+    pub max_containers_per_node: u32,
+    /// Headroom factor on the declared-fit check (1.0 = strict fit).
+    pub fit_headroom: f64,
+    /// A task failing this many times kills its application.
+    pub max_task_attempts: u32,
+    pub max_sim_time: Time,
+}
+
+impl Default for YarnConfig {
+    fn default() -> Self {
+        YarnConfig {
+            heartbeat: HeartbeatConfig::default(),
+            overload_rule: OverloadRule::default(),
+            max_containers_per_node: 6,
+            fit_headroom: 1.0,
+            max_task_attempts: 4,
+            max_sim_time: 1e7,
+        }
+    }
+}
+
+/// Deterministic per-job misdeclaration factor: actual = declared × factor.
+/// Heavy classes under-declare more (the YARN failure mode we model).
+pub fn actual_factor(job: &crate::job::job::Job) -> f64 {
+    let phi = 0.618_033_988_749_894_9_f64;
+    let noise = (job.id.0 as f64 * phi).fract(); // [0,1), deterministic
+    use crate::job::profile::JobClass::*;
+    match job.spec.class {
+        CpuHeavy | MemHeavy => 1.0 + 0.5 * noise, // up to 1.5x declared
+        IoHeavy | NetHeavy => 0.9 + 0.35 * noise,
+        Small => 0.8 + 0.3 * noise,
+    }
+}
+
+/// Build a policy by name.
+pub fn yarn_policy_by_name(name: &str, alpha: f32) -> Result<Box<dyn YarnPolicy>> {
+    match name {
+        "yarn-fifo" => Ok(Box::new(super::policy::YarnFifo)),
+        "yarn-fair" => Ok(Box::new(super::policy::YarnFair)),
+        "yarn-bayes" => Ok(Box::new(super::policy::YarnBayes::new(alpha))),
+        _ => Err(anyhow!("unknown yarn policy '{name}'")),
+    }
+}
+
+struct PendingFeedback {
+    feats: crate::bayes::features::FeatureVec,
+}
+
+/// The RM: owns the whole YARN-mode simulation.
+pub struct ResourceManager {
+    pub engine: Engine,
+    pub cluster: Cluster,
+    pub hdfs: Namespace,
+    pub jobs: JobTable,
+    pub policy: Box<dyn YarnPolicy>,
+    pub metrics: Metrics,
+    pub cfg: YarnConfig,
+    /// Declared resource usage per node (fit-check bookkeeping — actual
+    /// usage lives in the Node's contention state).
+    declared: Vec<crate::cluster::resources::Resources>,
+    pending_specs: std::vec::IntoIter<JobSpec>,
+    /// Spec whose arrival event is in flight (submitted when it fires).
+    next_spec: Option<JobSpec>,
+    pending_feedback: Vec<Vec<PendingFeedback>>,
+    /// OOM-doomed tasks: excluded from completion rescheduling so their
+    /// pending TaskFail stays valid (same mechanism as the MRv1 tracker).
+    doomed: std::collections::HashSet<TaskRef>,
+    arrivals_done: bool,
+}
+
+impl ResourceManager {
+    pub fn new(
+        cluster: Cluster,
+        policy: Box<dyn YarnPolicy>,
+        mut specs: Vec<JobSpec>,
+        seed: u64,
+        cfg: YarnConfig,
+    ) -> ResourceManager {
+        specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
+        let n = cluster.len();
+        let hdfs =
+            Namespace::new(cluster.topology.n_nodes, cluster.topology.n_racks, seed);
+        let mut rm = ResourceManager {
+            engine: Engine::new(),
+            cluster,
+            hdfs,
+            jobs: JobTable::new(),
+            policy,
+            metrics: Metrics::new(),
+            cfg,
+            declared: vec![crate::cluster::resources::Resources::ZERO; n],
+            pending_specs: specs.into_iter(),
+            next_spec: None,
+            pending_feedback: (0..n).map(|_| Vec::new()).collect(),
+            doomed: std::collections::HashSet::new(),
+            arrivals_done: false,
+        };
+        rm.schedule_next_arrival();
+        for node in rm.cluster.topology.all_nodes() {
+            let t = rm.cfg.heartbeat.first_beat(node);
+            rm.engine.schedule(t, Event::Heartbeat(node));
+        }
+        rm
+    }
+
+    fn schedule_next_arrival(&mut self) {
+        match self.pending_specs.next() {
+            Some(spec) => {
+                let at = spec.submit_time;
+                self.next_spec = Some(spec);
+                self.engine
+                    .schedule(at, Event::JobArrival(crate::job::JobId(u32::MAX)));
+            }
+            None => self.arrivals_done = true,
+        }
+    }
+
+    /// AM registration == job enters the table when its arrival fires
+    /// (paper §2.3 steps 1-3 collapsed to one control-plane event).
+    fn on_job_arrival(&mut self) {
+        if let Some(spec) = self.next_spec.take() {
+            self.jobs.submit(spec, &mut self.hdfs);
+        }
+        self.schedule_next_arrival();
+    }
+
+    /// Run to completion; returns makespan.
+    pub fn run(&mut self) -> Time {
+        while let Some((t, ev)) = self.engine.pop() {
+            if t > self.cfg.max_sim_time {
+                break;
+            }
+            match ev {
+                Event::JobArrival(_) => self.on_job_arrival(),
+                Event::Heartbeat(node) => self.on_heartbeat(node),
+                Event::TaskComplete { node, task, generation } => {
+                    self.on_complete(node, task, generation)
+                }
+                Event::TaskFail { node, task, generation } => {
+                    self.on_fail(node, task, generation)
+                }
+                _ => {}
+            }
+            if self.arrivals_done
+                && self.jobs.all_complete()
+                && !self.jobs.is_empty()
+                && self.cluster.nodes.iter().all(|n| n.running().is_empty())
+            {
+                break;
+            }
+        }
+        self.metrics.overload_seconds =
+            self.cluster.nodes.iter().map(|n| n.overload_seconds).sum();
+        self.metrics.oom_kills =
+            self.cluster.nodes.iter().map(|n| n.oom_kills as u64).sum();
+        self.metrics.makespan
+    }
+
+    fn on_heartbeat(&mut self, node_id: NodeId) {
+        let now = self.engine.now();
+        self.metrics.heartbeats += 1;
+        self.cluster.node_mut(node_id).advance(now);
+
+        // feedback from allocations since last beat
+        let pend = std::mem::take(&mut self.pending_feedback[node_id.0 as usize]);
+        if !pend.is_empty() {
+            let obs = self.cluster.node(node_id).observation();
+            let label = self.cfg.overload_rule.label(&obs);
+            for p in pend {
+                self.policy.feedback(p.feats, label);
+                self.metrics.record_feedback(label);
+            }
+        }
+
+        // allocate containers while requests fit (declared) and caps allow
+        loop {
+            let node = self.cluster.node(node_id);
+            if node.running().len() as u32 >= self.cfg.max_containers_per_node {
+                break;
+            }
+            let cap = node.spec.capacity;
+            let free = (cap.scale(self.cfg.fit_headroom)) - self.declared[node_id.0 as usize];
+            let queue = self.jobs.schedulable();
+            // requests that fit the free declared headroom
+            let reqs: Vec<AppRequest> = queue
+                .iter()
+                .map(|id| self.jobs.get(*id))
+                .filter(|j| {
+                    j.has_schedulable_task() && j.demand.fits_within(&free)
+                })
+                .map(|j| AppRequest {
+                    app: j.id,
+                    job: j,
+                    declared: j.demand,
+                    running: j.running_tasks() as u32,
+                })
+                .collect();
+            if reqs.is_empty() {
+                break;
+            }
+            let node_feats = self.cluster.node(node_id).features();
+            let t0 = std::time::Instant::now();
+            let choice = self.policy.choose(&reqs, free, &node_feats, now);
+            self.metrics.record_decision(t0.elapsed().as_nanos());
+            let Some(idx) = choice else { break };
+            let app = reqs[idx].app;
+            // container -> concrete task (locality-first, like MRv1 path)
+            let job = self.jobs.get(app);
+            let kind = if job.pending_maps() > 0 {
+                TaskKind::Map
+            } else {
+                TaskKind::Reduce
+            };
+            let Some(tref) =
+                crate::scheduler::api::pick_task(job, self.cluster.node(node_id), &self.hdfs, kind)
+            else {
+                break;
+            };
+            self.launch_container(tref, node_id, now);
+        }
+
+        if !self.arrivals_done || !self.jobs.all_complete() {
+            self.engine
+                .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
+        }
+    }
+
+    fn launch_container(&mut self, tref: TaskRef, node_id: NodeId, now: Time) {
+        let job = self.jobs.get(tref.job);
+        let declared = job.demand;
+        // actual usage diverges from declared (misdeclaration model)
+        let mut actual = declared.scale(actual_factor(job));
+        let mut work = job.task(&tref).work;
+        if tref.kind == TaskKind::Map {
+            let block = job.task(&tref).block.unwrap();
+            let loc = self.hdfs.locality(block, node_id);
+            self.metrics.record_locality(loc);
+            work *= locality_multiplier(loc);
+            actual.net += locality_net_demand(loc);
+        } else {
+            actual.net += 0.05;
+        }
+        actual.clamp_non_negative();
+
+        let node_feats = self.cluster.node(node_id).features();
+        let feats = feature_vec(&job.spec.profile, &node_feats);
+        self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
+
+        let dooms = self.cluster.node(node_id).would_oom(&actual);
+        self.jobs.start_task(&tref, node_id, now);
+        let generation = self.jobs.get(tref.job).task(&tref).generation;
+        self.declared[node_id.0 as usize] += declared;
+        let horizons =
+            self.cluster.node_mut(node_id).add_task(tref, actual, work, now);
+        if dooms {
+            self.cluster.node_mut(node_id).oom_kills += 1;
+            self.doomed.insert(tref);
+            self.engine.schedule(
+                now + 4.0,
+                Event::TaskFail { node: node_id, task: tref, generation },
+            );
+        }
+        self.reschedule(node_id, horizons);
+    }
+
+    fn reschedule(&mut self, node_id: NodeId, horizons: Vec<(TaskRef, Time)>) {
+        for (tref, at) in horizons {
+            if self.doomed.contains(&tref) {
+                continue;
+            }
+            let task = self.jobs.get_mut(tref.job).task_mut(&tref);
+            task.generation += 1;
+            let generation = task.generation;
+            self.engine
+                .schedule(at, Event::TaskComplete { node: node_id, task: tref, generation });
+        }
+    }
+
+    fn current(&self, tref: &TaskRef, node: NodeId, generation: u32) -> bool {
+        let task = self.jobs.get(tref.job).task(tref);
+        task.generation == generation
+            && matches!(task.state, TaskState::Running { node: n, .. } if n == node)
+    }
+
+    fn release(&mut self, tref: &TaskRef, node_id: NodeId, now: Time) -> Vec<(TaskRef, Time)> {
+        self.cluster.node_mut(node_id).advance(now);
+        let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(tref, now);
+        let declared = self.jobs.get(tref.job).demand;
+        let slot = &mut self.declared[node_id.0 as usize];
+        *slot -= declared;
+        slot.clamp_non_negative();
+        horizons
+    }
+
+    fn on_complete(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
+        if !self.current(&tref, node_id, generation) {
+            return;
+        }
+        let now = self.engine.now();
+        let horizons = self.release(&tref, node_id, now);
+        self.jobs.complete_task(&tref, now);
+        self.doomed.remove(&tref);
+        let job = self.jobs.get(tref.job);
+        let finished = !job.failed && job.is_complete();
+        if finished {
+            // AM unregisters (paper §2.3 final step)
+            self.jobs.mark_complete(tref.job, now);
+            let outcome = self.jobs.get(tref.job).outcome().unwrap();
+            self.metrics.record_outcome(tref.job, outcome);
+        }
+        self.reschedule(node_id, horizons);
+    }
+
+    fn on_fail(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
+        if !self.current(&tref, node_id, generation) {
+            return;
+        }
+        let now = self.engine.now();
+        let horizons = self.release(&tref, node_id, now);
+        self.doomed.remove(&tref);
+        self.jobs.requeue_task(&tref);
+        let job = self.jobs.get(tref.job);
+        let kill = job.task(&tref).attempts >= self.cfg.max_task_attempts
+            && job.finish_time.is_none();
+        if kill {
+            self.jobs.mark_failed(tref.job, now);
+            self.metrics.failed_jobs += 1;
+        }
+        self.reschedule(node_id, horizons);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::{generate, WorkloadConfig};
+
+    fn run(policy: &str, seed: u64) -> ResourceManager {
+        let cluster = Cluster::homogeneous(6, 2);
+        let specs = generate(&WorkloadConfig {
+            n_jobs: 12,
+            arrival_rate: 1.0,
+            seed,
+            ..Default::default()
+        });
+        let mut rm = ResourceManager::new(
+            cluster,
+            yarn_policy_by_name(policy, 1.0).unwrap(),
+            specs,
+            seed,
+            YarnConfig::default(),
+        );
+        rm.run();
+        rm
+    }
+
+    #[test]
+    fn all_policies_complete_workload() {
+        for p in ["yarn-fifo", "yarn-fair", "yarn-bayes"] {
+            let rm = run(p, 1);
+            assert!(rm.jobs.all_complete(), "{p} left jobs unfinished");
+            // jobs either succeed or are killed after max attempts
+            assert_eq!(
+                rm.metrics.outcomes.len() + rm.jobs.failed_count(),
+                12,
+                "{p}"
+            );
+            // the bulk of the workload must still succeed
+            assert!(rm.metrics.outcomes.len() >= 8, "{p}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run("yarn-bayes", 5);
+        let b = run("yarn-bayes", 5);
+        assert_eq!(a.metrics.makespan, b.metrics.makespan);
+        assert_eq!(a.engine.processed(), b.engine.processed());
+    }
+
+    #[test]
+    fn declared_bookkeeping_returns_to_zero() {
+        let rm = run("yarn-fifo", 2);
+        for d in &rm.declared {
+            assert!(d.max_component() < 1e-9, "leaked declared resources {d:?}");
+        }
+        for n in &rm.cluster.nodes {
+            assert!(n.running().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        assert!(yarn_policy_by_name("nope", 1.0).is_err());
+    }
+}

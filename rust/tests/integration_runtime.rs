@@ -1,0 +1,170 @@
+//! Runtime integration: load the AOT artifacts through PJRT and check (a)
+//! raw execution works, (b) the XLA classifier and the pure-rust
+//! NaiveBayes agree to f32 tolerance on identical feedback streams —
+//! the differential test that pins the artifact semantics.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::path::PathBuf;
+
+use bayes_sched::bayes::classifier::{Classifier, Label, NaiveBayes, MAX_BATCH};
+use bayes_sched::bayes::features::{FeatureVec, N_FEATURES};
+use bayes_sched::runtime::{Runtime, XlaClassifier};
+use bayes_sched::sim::rng::Pcg;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn random_fv(rng: &mut Pcg) -> FeatureVec {
+    let mut fv = [0u8; N_FEATURES];
+    for b in fv.iter_mut() {
+        *b = rng.below(10) as u8;
+    }
+    fv
+}
+
+#[test]
+fn classify_artifact_executes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let c = rt.consts;
+    let log_prior = vec![(0.5f32).ln(); 2];
+    let log_lik = vec![(0.1f32).ln(); c.n_classes * c.feature_dim];
+    let feats = vec![0i32; c.max_jobs * c.n_features];
+    let utility = vec![1.0f32; c.max_jobs];
+    let mut mask = vec![0.0f32; c.max_jobs];
+    mask[0] = 1.0;
+    mask[3] = 1.0;
+    let out = rt
+        .classify_raw(&log_prior, &log_lik, &feats, &utility, &mask)
+        .expect("classify");
+    assert_eq!(out.p_good.len(), c.max_jobs);
+    // uniform tables -> posterior exactly 0.5
+    assert!((out.p_good[0] - 0.5).abs() < 1e-6);
+    // masked-out slots can never win
+    assert!(out.best == 0 || out.best == 3, "best={}", out.best);
+    assert!(out.score[1] < -1e29);
+}
+
+#[test]
+fn update_artifact_accumulates_counts() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let c = rt.consts;
+    let counts = vec![0.0f32; c.n_classes * c.feature_dim];
+    let class_counts = vec![0.0f32; c.n_classes];
+    let mut feats = vec![0i32; c.max_batch * c.n_features];
+    let mut labels = vec![0i32; c.max_batch];
+    let mut mask = vec![0.0f32; c.max_batch];
+    // 3 real samples: two bad with bin 9, one good with bin 2
+    for (i, (bin, lab)) in [(9, 1), (9, 1), (2, 0)].iter().enumerate() {
+        for j in 0..c.n_features {
+            feats[i * c.n_features + j] = *bin;
+        }
+        labels[i] = *lab;
+        mask[i] = 1.0;
+    }
+    let out = rt
+        .update_raw(&counts, &class_counts, &feats, &labels, &mask, 1.0)
+        .expect("update");
+    assert_eq!(out.class_counts, vec![1.0, 2.0]);
+    let total: f32 = out.counts.iter().sum();
+    assert_eq!(total, 3.0 * c.n_features as f32);
+    // log tables finite
+    assert!(out.log_prior.iter().all(|x| x.is_finite()));
+    assert!(out.log_lik.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn xla_classifier_matches_rust_naive_bayes() {
+    let dir = require_artifacts!();
+    let mut xla = XlaClassifier::load(&dir, 1.0).expect("classifier load");
+    let mut nb = NaiveBayes::new(1.0);
+    let mut rng = Pcg::seeded(42);
+
+    // identical feedback streams, flushed at identical points
+    for round in 0..4 {
+        for _ in 0..100 {
+            let fv = random_fv(&mut rng);
+            // correlate label with feature 0 plus noise
+            let label = if fv[0] >= 5 && rng.chance(0.8) {
+                Label::Bad
+            } else {
+                Label::Good
+            };
+            xla.observe(fv, label);
+            nb.observe(fv, label);
+        }
+        xla.flush();
+        nb.flush();
+
+        // state identical (integer counts in f32)
+        let (xc, xcc) = xla.state();
+        let (rc, rcc) = nb.state();
+        assert_eq!(xcc, rcc, "class counts diverged in round {round}");
+        assert_eq!(xc, rc, "counts diverged in round {round}");
+
+        // classification agrees to tolerance
+        let feats: Vec<FeatureVec> = (0..64).map(|_| random_fv(&mut rng)).collect();
+        let utility: Vec<f32> = (0..64).map(|_| rng.f64() as f32 * 5.0).collect();
+        let a = xla.classify(&feats, &utility);
+        let b = nb.classify(&feats, &utility);
+        for i in 0..feats.len() {
+            assert!(
+                (a.p_good[i] - b.p_good[i]).abs() < 1e-4,
+                "round {round} p_good[{i}]: xla={} rust={}",
+                a.p_good[i],
+                b.p_good[i]
+            );
+        }
+        assert_eq!(a.best, b.best, "round {round} best index diverged");
+    }
+}
+
+#[test]
+fn xla_classifier_handles_oversized_feedback_burst() {
+    let dir = require_artifacts!();
+    let mut xla = XlaClassifier::load(&dir, 1.0).expect("classifier load");
+    let mut rng = Pcg::seeded(7);
+    // 2.5x MAX_BATCH pending at once -> multiple update executions
+    for _ in 0..(MAX_BATCH * 5 / 2) {
+        xla.observe(random_fv(&mut rng), Label::Good);
+    }
+    xla.flush();
+    let [good, bad] = xla.class_counts();
+    assert_eq!(good as usize, MAX_BATCH * 5 / 2);
+    assert_eq!(bad, 0.0);
+}
+
+#[test]
+fn bayes_xla_scheduler_runs_end_to_end() {
+    let dir = require_artifacts!();
+    use bayes_sched::coordinator::{build_tracker, RunConfig};
+    use bayes_sched::workload::generator::WorkloadConfig;
+    let cfg = RunConfig {
+        scheduler: "bayes-xla".into(),
+        n_nodes: 4,
+        n_racks: 2,
+        workload: WorkloadConfig { n_jobs: 8, ..Default::default() },
+        artifacts_dir: Some(dir),
+        ..Default::default()
+    };
+    let mut jt = build_tracker(&cfg).unwrap();
+    jt.run();
+    assert!(jt.jobs.all_complete());
+    assert!(jt.metrics.makespan > 0.0);
+}

@@ -1,0 +1,251 @@
+//! Scheduler-behaviour integration: the policy-level properties that
+//! distinguish FIFO / Fair / Capacity / Bayes (paper §3-§4) on controlled
+//! workloads.
+
+use bayes_sched::bayes::classifier::NaiveBayes;
+use bayes_sched::bayes::utility::Priority;
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::job::profile::JobClass;
+use bayes_sched::metrics::stats;
+use bayes_sched::scheduler::{self, BayesScheduler, Scheduler};
+use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
+
+fn run_with(
+    sched: Box<dyn Scheduler>,
+    wl: &WorkloadConfig,
+    nodes: u32,
+) -> JobTracker {
+    let mut jt = JobTracker::new(
+        Cluster::homogeneous(nodes, 2),
+        sched,
+        generate(wl),
+        wl.seed,
+        TrackerConfig::default(),
+    );
+    jt.run();
+    jt
+}
+
+#[test]
+fn fifo_priority_beats_submission_order() {
+    // one VeryHigh job submitted late must start before Normal jobs that
+    // arrived earlier but have not launched yet
+    let wl = WorkloadConfig { n_jobs: 12, arrival_rate: 5.0, seed: 21, ..Default::default() };
+    let mut specs = generate(&wl);
+    for s in specs.iter_mut() {
+        s.priority = Priority::Normal;
+    }
+    specs[11].priority = Priority::VeryHigh;
+    let mut jt = JobTracker::new(
+        Cluster::homogeneous(2, 1),
+        scheduler::by_name("fifo", 21).unwrap(),
+        specs,
+        21,
+        TrackerConfig::default(),
+    );
+    jt.run();
+    let high_launch = jt.jobs.get(bayes_sched::job::JobId(11)).first_launch.unwrap();
+    // at least one earlier-submitted Normal job should launch after it
+    let later = jt
+        .jobs
+        .iter()
+        .filter(|j| j.id.0 != 11)
+        .filter(|j| j.first_launch.unwrap() > high_launch)
+        .count();
+    assert!(later > 0, "priority job gained nothing");
+}
+
+#[test]
+fn fair_spreads_across_users_better_than_fifo() {
+    // 2 users: user0 submits a burst of big jobs first, user1's small jobs
+    // arrive just after; fair should serve user1 sooner on average
+    let wl = WorkloadConfig {
+        n_jobs: 16,
+        arrival_rate: 4.0,
+        n_users: 2,
+        seed: 22,
+        ..Default::default()
+    };
+    let wait_by_user = |jt: &JobTracker, user: &str| {
+        let ws: Vec<f64> = jt
+            .jobs
+            .iter()
+            .filter(|j| j.spec.user == user)
+            .map(|j| j.first_launch.unwrap() - j.spec.submit_time)
+            .collect();
+        stats::mean(&ws)
+    };
+    let fifo = run_with(scheduler::by_name("fifo", 22).unwrap(), &wl, 3);
+    let fair = run_with(scheduler::by_name("fair", 22).unwrap(), &wl, 3);
+    // fairness index over mean waits should not degrade under fair
+    let f_fifo = stats::jain_fairness(&[
+        wait_by_user(&fifo, "user0") + 1.0,
+        wait_by_user(&fifo, "user1") + 1.0,
+    ]);
+    let f_fair = stats::jain_fairness(&[
+        wait_by_user(&fair, "user0") + 1.0,
+        wait_by_user(&fair, "user1") + 1.0,
+    ]);
+    assert!(
+        f_fair >= f_fifo - 0.05,
+        "fair scheduler less fair than fifo: {f_fair} vs {f_fifo}"
+    );
+}
+
+#[test]
+fn capacity_respects_queue_shares() {
+    // all jobs in one queue vs spread over three: the scheduler must not
+    // stall either way (regression guard for the total_slots wiring)
+    for seed in [23u64, 24] {
+        let wl = WorkloadConfig { n_jobs: 20, arrival_rate: 2.0, seed, ..Default::default() };
+        let jt = run_with(scheduler::by_name("capacity", seed).unwrap(), &wl, 4);
+        assert!(jt.jobs.all_complete());
+        // capacity should not be catastrophically slower than fifo
+        let fifo = run_with(scheduler::by_name("fifo", seed).unwrap(), &wl, 4);
+        assert!(
+            jt.metrics.makespan < fifo.metrics.makespan * 2.0,
+            "capacity pathologically slow: {} vs {}",
+            jt.metrics.makespan,
+            fifo.metrics.makespan
+        );
+    }
+}
+
+#[test]
+fn bayes_reduces_overload_rate_vs_fifo() {
+    let wl = WorkloadConfig {
+        n_jobs: 120,
+        arrival_rate: 1.0,
+        mix: Mix::cpu_fraction(0.6),
+        seed: 25,
+        ..Default::default()
+    };
+    let fifo = run_with(scheduler::by_name("fifo", 25).unwrap(), &wl, 10);
+    let bayes = run_with(scheduler::by_name("bayes", 25).unwrap(), &wl, 10);
+    assert!(bayes.jobs.all_complete());
+    assert!(
+        bayes.metrics.overload_rate() < fifo.metrics.overload_rate() * 0.8,
+        "bayes {} vs fifo {}",
+        bayes.metrics.overload_rate(),
+        fifo.metrics.overload_rate()
+    );
+}
+
+#[test]
+fn bayes_warm_start_beats_cold_start() {
+    // The clean test of "learning helps": run the same workload with a
+    // fresh classifier vs one warmed on a previous identical run. The warm
+    // classifier must overload less from the start. (The within-run window
+    // curve confounds learning with queue-load ramp; E3 reports it against
+    // a fifo control instead.)
+    let wl = WorkloadConfig {
+        n_jobs: 150,
+        arrival_rate: 1.0,
+        mix: Mix::cpu_fraction(0.5),
+        seed: 26,
+        ..Default::default()
+    };
+    use bayes_sched::bayes::classifier::{Classifier, Label};
+    let cold = run_with(
+        Box::new(BayesScheduler::new(NaiveBayes::new(1.0))),
+        &wl,
+        10,
+    );
+    // Tap the cold run's feedback stream (rerun is deterministic) and
+    // train a warm classifier from it offline.
+    struct Tap {
+        inner: BayesScheduler<NaiveBayes>,
+        samples: std::rc::Rc<std::cell::RefCell<Vec<([u8; 8], Label)>>>,
+    }
+    impl Scheduler for Tap {
+        fn name(&self) -> &'static str {
+            "tap"
+        }
+        fn select(
+            &mut self,
+            v: &bayes_sched::scheduler::SchedView,
+            n: &bayes_sched::cluster::node::Node,
+            k: bayes_sched::job::task::TaskKind,
+        ) -> Option<bayes_sched::job::task::TaskRef> {
+            self.inner.select(v, n, k)
+        }
+        fn feedback(&mut self, f: [u8; 8], l: Label) {
+            self.samples.borrow_mut().push((f, l));
+            self.inner.feedback(f, l);
+        }
+    }
+    let samples = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+    let tap = Tap {
+        inner: BayesScheduler::new(NaiveBayes::new(1.0)),
+        samples: samples.clone(),
+    };
+    run_with(Box::new(tap), &wl, 10);
+    let mut warm_nb = NaiveBayes::new(1.0);
+    for (f, l) in samples.borrow().iter() {
+        warm_nb.observe(*f, *l);
+    }
+    warm_nb.flush();
+    let warm = run_with(Box::new(BayesScheduler::new(warm_nb)), &wl, 10);
+    assert!(warm.jobs.all_complete());
+    assert!(
+        warm.metrics.overload_rate() <= cold.metrics.overload_rate() + 0.02,
+        "warm {} vs cold {}",
+        warm.metrics.overload_rate(),
+        cold.metrics.overload_rate()
+    );
+}
+
+#[test]
+fn bayes_no_utility_changes_selection() {
+    use bayes_sched::bayes::utility::UtilityFn;
+    let wl = WorkloadConfig { n_jobs: 40, arrival_rate: 1.5, seed: 27, ..Default::default() };
+    let full = run_with(
+        Box::new(BayesScheduler::new(NaiveBayes::new(1.0))),
+        &wl,
+        4,
+    );
+    let no_util = run_with(
+        Box::new(
+            BayesScheduler::new(NaiveBayes::new(1.0))
+                .with_utility(UtilityFn::constant()),
+        ),
+        &wl,
+        4,
+    );
+    assert!(full.jobs.all_complete() && no_util.jobs.all_complete());
+    // the runs must actually differ (utility is load-bearing)
+    assert_ne!(
+        full.metrics.latencies(),
+        no_util.metrics.latencies(),
+        "utility function had no effect"
+    );
+}
+
+#[test]
+fn threshold_fifo_also_avoids_overload_but_needs_the_right_threshold() {
+    // the hand-tuned avoider with a good threshold reduces overloads vs
+    // fifo — sanity for the E8/E9 comparison axis
+    let wl = WorkloadConfig {
+        n_jobs: 80,
+        arrival_rate: 1.0,
+        mix: Mix::cpu_fraction(0.7),
+        seed: 28,
+        ..Default::default()
+    };
+    let fifo = run_with(scheduler::by_name("fifo", 28).unwrap(), &wl, 8);
+    let thresh = run_with(
+        Box::new(scheduler::ThresholdFifo::new(0.9)),
+        &wl,
+        8,
+    );
+    assert!(thresh.jobs.all_complete());
+    assert!(thresh.metrics.overload_rate() < fifo.metrics.overload_rate());
+}
+
+#[test]
+fn random_scheduler_is_a_valid_lower_bound() {
+    let wl = WorkloadConfig { n_jobs: 30, seed: 29, ..Default::default() };
+    let rand_run = run_with(scheduler::by_name("random", 29).unwrap(), &wl, 4);
+    assert!(rand_run.jobs.all_complete());
+}

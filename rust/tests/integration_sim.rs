@@ -1,0 +1,304 @@
+//! Integration over the simulation substrate: arrival timing, contention
+//! economics, OOM recovery, heterogeneity and trace replay — behaviours
+//! that only emerge with all substrates composed.
+
+use bayes_sched::cluster::node::NodeSpec;
+use bayes_sched::cluster::resources::Resources;
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::job::profile::JobClass;
+use bayes_sched::scheduler;
+use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
+use bayes_sched::workload::trace;
+
+fn tracker(
+    cluster: Cluster,
+    sched: &str,
+    wl: &WorkloadConfig,
+) -> JobTracker {
+    JobTracker::new(
+        cluster,
+        scheduler::by_name(sched, wl.seed).unwrap(),
+        generate(wl),
+        wl.seed,
+        TrackerConfig::default(),
+    )
+}
+
+#[test]
+fn jobs_never_launch_before_submit() {
+    let wl = WorkloadConfig { n_jobs: 40, arrival_rate: 0.3, seed: 11, ..Default::default() };
+    let mut jt = tracker(Cluster::homogeneous(6, 2), "fifo", &wl);
+    jt.run();
+    for job in jt.jobs.iter() {
+        let fl = job.first_launch.expect("job never launched");
+        assert!(
+            fl >= job.spec.submit_time,
+            "{} launched at {fl} before submit {}",
+            job.id,
+            job.spec.submit_time
+        );
+    }
+}
+
+#[test]
+fn makespan_bounded_below_by_critical_path() {
+    // a single job cannot finish faster than its longest map + longest
+    // reduce at full speed
+    let wl = WorkloadConfig { n_jobs: 1, seed: 12, ..Default::default() };
+    let specs = generate(&wl);
+    let longest_map = specs[0].map_works.iter().cloned().fold(0.0, f64::max);
+    let longest_red = specs[0].reduce_works.iter().cloned().fold(0.0, f64::max);
+    let mut jt = JobTracker::new(
+        Cluster::homogeneous(8, 2),
+        scheduler::by_name("fifo", 12).unwrap(),
+        specs,
+        12,
+        TrackerConfig::default(),
+    );
+    jt.run();
+    let lat = jt.metrics.latencies()[0];
+    assert!(
+        lat >= longest_map + longest_red - 1e-9,
+        "latency {lat} beats critical path {}",
+        longest_map + longest_red
+    );
+}
+
+#[test]
+fn more_nodes_never_hurt_much() {
+    // same workload on 4 vs 16 nodes: bigger cluster should be distinctly
+    // faster under load
+    let wl = WorkloadConfig { n_jobs: 60, arrival_rate: 2.0, seed: 13, ..Default::default() };
+    let mut small = tracker(Cluster::homogeneous(4, 2), "fifo", &wl);
+    small.run();
+    let mut big = tracker(Cluster::homogeneous(16, 4), "fifo", &wl);
+    big.run();
+    assert!(
+        big.metrics.makespan < small.metrics.makespan,
+        "big {} vs small {}",
+        big.metrics.makespan,
+        small.metrics.makespan
+    );
+}
+
+#[test]
+fn mem_heavy_overload_causes_ooms_and_they_recover() {
+    // mem-heavy-only workload on few nodes with generous slots -> OOMs,
+    // but every task must still finish eventually
+    let cluster = Cluster::with_specs(
+        (0..3)
+            .map(|_| NodeSpec { map_slots: 4, reduce_slots: 2, ..Default::default() })
+            .collect(),
+        1,
+    );
+    let wl = WorkloadConfig {
+        n_jobs: 20,
+        arrival_rate: 2.0,
+        mix: Mix::only(JobClass::MemHeavy),
+        seed: 14,
+        ..Default::default()
+    };
+    let mut jt = tracker(cluster, "fifo", &wl);
+    jt.run();
+    // every job terminates: completed or killed after max attempts
+    assert!(jt.jobs.all_complete());
+    assert!(jt.metrics.oom_kills > 0, "expected OOM kills in this workload");
+    assert_eq!(jt.jobs.failed_count() as u64, jt.metrics.failed_jobs);
+    assert_eq!(
+        jt.metrics.outcomes.len() + jt.jobs.failed_count(),
+        jt.jobs.len()
+    );
+    // nodes fully drained
+    for n in &jt.cluster.nodes {
+        assert!(n.running().is_empty());
+    }
+}
+
+#[test]
+fn faster_nodes_finish_work_sooner() {
+    let wl = WorkloadConfig { n_jobs: 30, arrival_rate: 1.0, seed: 15, ..Default::default() };
+    let slow_cluster = Cluster::with_specs(
+        (0..6).map(|_| NodeSpec { speed: 0.5, ..Default::default() }).collect(),
+        2,
+    );
+    let fast_cluster = Cluster::with_specs(
+        (0..6).map(|_| NodeSpec { speed: 2.0, ..Default::default() }).collect(),
+        2,
+    );
+    let mut slow = tracker(slow_cluster, "fifo", &wl);
+    slow.run();
+    let mut fast = tracker(fast_cluster, "fifo", &wl);
+    fast.run();
+    assert!(fast.metrics.makespan < slow.metrics.makespan);
+}
+
+#[test]
+fn capacity_scaling_with_larger_capacity_nodes() {
+    // nodes with double capacity absorb the same demand with less overload
+    let wl = WorkloadConfig {
+        n_jobs: 30,
+        arrival_rate: 1.0,
+        mix: Mix::only(JobClass::CpuHeavy),
+        seed: 16,
+        ..Default::default()
+    };
+    let std_cluster = Cluster::homogeneous(6, 2);
+    let big_cluster = Cluster::with_specs(
+        (0..6)
+            .map(|_| NodeSpec { capacity: Resources::splat(2.0), ..Default::default() })
+            .collect(),
+        2,
+    );
+    let mut std_run = tracker(std_cluster, "fifo", &wl);
+    std_run.run();
+    let mut big_run = tracker(big_cluster, "fifo", &wl);
+    big_run.run();
+    assert!(big_run.metrics.overload_seconds < std_run.metrics.overload_seconds);
+}
+
+#[test]
+fn trace_replay_reproduces_run_exactly() {
+    let wl = WorkloadConfig { n_jobs: 25, seed: 17, ..Default::default() };
+    let specs = generate(&wl);
+    let path = std::env::temp_dir().join("bayes_sched_integration_trace.json");
+    trace::save(&specs, &path).unwrap();
+    let loaded = trace::load(&path).unwrap();
+
+    let run = |specs: Vec<bayes_sched::job::job::JobSpec>| {
+        let mut jt = JobTracker::new(
+            Cluster::homogeneous(5, 2),
+            scheduler::by_name("bayes", 17).unwrap(),
+            specs,
+            17,
+            TrackerConfig::default(),
+        );
+        jt.run();
+        (jt.metrics.makespan, jt.metrics.latencies())
+    };
+    assert_eq!(run(specs), run(loaded));
+}
+
+#[test]
+fn heartbeat_interval_affects_allocation_granularity() {
+    let wl = WorkloadConfig { n_jobs: 20, arrival_rate: 1.0, seed: 18, ..Default::default() };
+    let run = |interval: f64| {
+        let mut cfg = TrackerConfig::default();
+        cfg.heartbeat.interval = interval;
+        let mut jt = JobTracker::new(
+            Cluster::homogeneous(4, 2),
+            scheduler::by_name("fifo", 18).unwrap(),
+            generate(&wl),
+            18,
+            cfg,
+        );
+        jt.run();
+        (jt.metrics.heartbeats, jt.metrics.makespan)
+    };
+    let (hb_fast, mk_fast) = run(1.0);
+    let (hb_slow, mk_slow) = run(10.0);
+    assert!(hb_fast > hb_slow * 2);
+    // coarser heartbeats waste slot time -> should not be faster
+    assert!(mk_slow >= mk_fast * 0.95, "slow {mk_slow} fast {mk_fast}");
+}
+
+#[test]
+fn node_failures_lose_work_but_jobs_still_finish() {
+    use bayes_sched::coordinator::jobtracker::FailureConfig;
+    let wl = WorkloadConfig { n_jobs: 25, arrival_rate: 0.5, seed: 41, ..Default::default() };
+    let mut cfg = TrackerConfig::default();
+    cfg.failures = FailureConfig { mtbf: Some(300.0), mttr: 60.0 };
+    let mut jt = JobTracker::new(
+        Cluster::homogeneous(8, 2),
+        scheduler::by_name("fifo", 41).unwrap(),
+        generate(&wl),
+        41,
+        cfg,
+    );
+    jt.run();
+    assert!(jt.metrics.node_failures > 0, "no failures injected");
+    assert!(jt.jobs.all_complete(), "failures stalled the cluster");
+    // failures force re-runs: some wasted attempts expected
+    assert!(jt.metrics.wasted_attempts() > 0);
+    for n in &jt.cluster.nodes {
+        assert!(n.running().is_empty());
+    }
+}
+
+#[test]
+fn failures_are_deterministic_per_seed() {
+    use bayes_sched::coordinator::jobtracker::FailureConfig;
+    let wl = WorkloadConfig { n_jobs: 15, seed: 42, ..Default::default() };
+    let run = || {
+        let mut cfg = TrackerConfig::default();
+        cfg.failures = FailureConfig { mtbf: Some(200.0), mttr: 30.0 };
+        let mut jt = JobTracker::new(
+            Cluster::homogeneous(6, 2),
+            scheduler::by_name("bayes", 42).unwrap(),
+            generate(&wl),
+            42,
+            cfg,
+        );
+        jt.run();
+        (jt.metrics.node_failures, jt.metrics.makespan, jt.engine.processed())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn timeline_sampling_covers_the_run() {
+    let wl = WorkloadConfig { n_jobs: 15, seed: 43, ..Default::default() };
+    let mut cfg = TrackerConfig::default();
+    cfg.timeline_interval = 20.0;
+    let mut jt = JobTracker::new(
+        Cluster::homogeneous(6, 2),
+        scheduler::by_name("fifo", 43).unwrap(),
+        generate(&wl),
+        43,
+        cfg,
+    );
+    jt.run();
+    let tl = &jt.metrics.timeline;
+    assert!(tl.len() >= 3, "too few samples: {}", tl.len());
+    // monotone time, ~20s apart
+    for w in tl.windows(2) {
+        assert!(w[1].time > w[0].time);
+        assert!((w[1].time - w[0].time - 20.0).abs() < 1e-6);
+    }
+    // utilization was non-zero at some point
+    assert!(tl.iter().any(|s| s.mean_bottleneck_util > 0.1));
+    assert!(tl.iter().all(|s| s.alive_nodes == 6));
+}
+
+#[test]
+fn warm_start_model_roundtrip_through_persistence() {
+    use bayes_sched::bayes::classifier::{Classifier, NaiveBayes};
+    use bayes_sched::bayes::persist;
+    use bayes_sched::scheduler::BayesScheduler;
+    let wl = WorkloadConfig { n_jobs: 40, arrival_rate: 1.0, seed: 44, ..Default::default() };
+    // run once, export the model via the Scheduler hook
+    let mut jt = JobTracker::new(
+        Cluster::homogeneous(6, 2),
+        Box::new(BayesScheduler::new(NaiveBayes::new(1.0))),
+        generate(&wl),
+        44,
+        TrackerConfig::default(),
+    );
+    jt.run();
+    let model_json = jt.scheduler.export_model().expect("bayes exports a model");
+    let nb = persist::from_json(&model_json).unwrap();
+    let [good, bad] = nb.class_counts();
+    assert!(good + bad > 0.0, "model absorbed no feedback");
+    // warm-started run completes and re-exports a strictly bigger model
+    let mut jt2 = JobTracker::new(
+        Cluster::homogeneous(6, 2),
+        Box::new(BayesScheduler::new(nb)),
+        generate(&wl),
+        44,
+        TrackerConfig::default(),
+    );
+    jt2.run();
+    let nb2 = persist::from_json(&jt2.scheduler.export_model().unwrap()).unwrap();
+    let [g2, b2] = nb2.class_counts();
+    assert!(g2 + b2 > good + bad);
+}

@@ -1,0 +1,98 @@
+//! YARN-mode integration (paper §2 + E10): policies complete workloads,
+//! misdeclaration hurts the fit-only policies more than the learner, and
+//! the declared-resource bookkeeping stays consistent.
+
+use bayes_sched::cluster::Cluster;
+use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
+use bayes_sched::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+fn run(policy: &str, wl: &WorkloadConfig, nodes: u32) -> ResourceManager {
+    let mut rm = ResourceManager::new(
+        Cluster::homogeneous(nodes, 2),
+        yarn_policy_by_name(policy, 1.0).unwrap(),
+        generate(wl),
+        wl.seed,
+        YarnConfig::default(),
+    );
+    rm.run();
+    rm
+}
+
+#[test]
+fn workload_completes_under_all_policies() {
+    let wl = WorkloadConfig { n_jobs: 30, arrival_rate: 1.0, seed: 31, ..Default::default() };
+    for p in ["yarn-fifo", "yarn-fair", "yarn-bayes"] {
+        let rm = run(p, &wl, 8);
+        assert!(rm.jobs.all_complete(), "{p}");
+        // success + max-attempts kills account for every job
+        assert_eq!(
+            rm.metrics.outcomes.len() + rm.jobs.failed_count(),
+            30,
+            "{p}"
+        );
+        assert!(rm.metrics.outcomes.len() >= 24, "{p} failed too many jobs");
+    }
+}
+
+#[test]
+fn misdeclaration_produces_overloads_under_fit_only_policy() {
+    // strict declared-fit can still overload because actual > declared
+    let wl = WorkloadConfig {
+        n_jobs: 60,
+        arrival_rate: 1.5,
+        mix: Mix::cpu_fraction(0.6),
+        seed: 32,
+        ..Default::default()
+    };
+    let rm = run("yarn-fifo", &wl, 6);
+    assert!(
+        rm.metrics.feedback[1] > 0,
+        "expected overload feedback despite fit checks"
+    );
+}
+
+#[test]
+fn bayes_policy_learns_to_cut_overloads() {
+    let wl = WorkloadConfig {
+        n_jobs: 120,
+        arrival_rate: 1.2,
+        mix: Mix::cpu_fraction(0.6),
+        seed: 33,
+        ..Default::default()
+    };
+    let fifo = run("yarn-fifo", &wl, 8);
+    let bayes = run("yarn-bayes", &wl, 8);
+    assert!(
+        bayes.metrics.overload_rate() <= fifo.metrics.overload_rate(),
+        "yarn-bayes {} vs yarn-fifo {}",
+        bayes.metrics.overload_rate(),
+        fifo.metrics.overload_rate()
+    );
+}
+
+#[test]
+fn yarn_mode_deterministic() {
+    let wl = WorkloadConfig { n_jobs: 25, seed: 34, ..Default::default() };
+    let a = run("yarn-bayes", &wl, 5);
+    let b = run("yarn-bayes", &wl, 5);
+    assert_eq!(a.metrics.makespan, b.metrics.makespan);
+    assert_eq!(a.metrics.latencies(), b.metrics.latencies());
+}
+
+#[test]
+fn fair_policy_balances_concurrent_apps() {
+    // two simultaneous long jobs: yarn-fair should interleave containers
+    let wl = WorkloadConfig { n_jobs: 2, arrival_rate: 100.0, seed: 35, ..Default::default() };
+    let rm = run("yarn-fair", &wl, 4);
+    assert!(rm.jobs.all_complete());
+    let lats = rm.metrics.latencies();
+    assert_eq!(lats.len() + rm.jobs.failed_count(), 2);
+    if lats.len() == 2 {
+        // both jobs overlap in execution: neither waits entirely
+        let spread = (lats[0] - lats[1]).abs();
+        assert!(
+            spread < lats[0].max(lats[1]),
+            "fair policy serialized the apps: {lats:?}"
+        );
+    }
+}

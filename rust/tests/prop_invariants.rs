@@ -1,0 +1,280 @@
+//! Property-based invariants over the whole simulation stack (proptest
+//! substitute: `bayes_sched::testkit::forall` with reproducible seeds).
+
+use bayes_sched::bayes::classifier::{Classifier, Label, NaiveBayes};
+use bayes_sched::bayes::features::{FeatureVec, N_FEATURES};
+use bayes_sched::cluster::node::{Node, NodeId, NodeSpec};
+use bayes_sched::cluster::resources::Resources;
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::hdfs::Namespace;
+use bayes_sched::job::task::{TaskKind, TaskRef};
+use bayes_sched::job::JobId;
+use bayes_sched::scheduler;
+use bayes_sched::testkit::{forall, Gen};
+use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
+
+fn random_workload(g: &mut Gen) -> WorkloadConfig {
+    let mixes = [
+        Mix::balanced(),
+        Mix::cpu_fraction(g.float(0.0, 1.0)),
+        Mix::only(*g.choose(&bayes_sched::job::profile::JobClass::ALL)),
+    ];
+    WorkloadConfig {
+        n_jobs: g.int(3, 18) as usize,
+        arrival_rate: g.float(0.2, 2.0),
+        mix: mixes[g.index(3)].clone(),
+        n_users: g.int(1, 6) as usize,
+        seed: g.int(0, 1 << 30),
+    }
+}
+
+/// Every scheduler finishes every workload; when it finishes, nodes are
+/// empty and every task is Done with exactly `attempts >= 1`.
+#[test]
+fn prop_all_jobs_complete_under_every_scheduler() {
+    forall("completion", 40, |g| {
+        let sched_name = *g.choose(&scheduler::ALL_NAMES);
+        let wl = random_workload(g);
+        let n_nodes = g.int(2, 10) as u32;
+        let cluster = Cluster::homogeneous(n_nodes, g.int(1, 3) as u32);
+        let sched = scheduler::by_name(sched_name, wl.seed).unwrap();
+        let specs = generate(&wl);
+        let n_specs = specs.len();
+        let mut jt =
+            JobTracker::new(cluster, sched, specs, wl.seed, TrackerConfig::default());
+        jt.run();
+        assert!(jt.jobs.all_complete(), "{sched_name} stalled");
+        // every job terminates: success (outcome) or max-attempts kill
+        assert_eq!(
+            jt.metrics.outcomes.len() + jt.jobs.failed_count(),
+            n_specs,
+            "{sched_name}"
+        );
+        for node in &jt.cluster.nodes {
+            assert!(node.running().is_empty());
+        }
+        for job in jt.jobs.iter().filter(|j| !j.failed) {
+            for t in job.maps.iter().chain(&job.reduces) {
+                assert!(t.is_done());
+                assert!(t.attempts >= 1);
+            }
+            // outcome sanity
+            let o = job.outcome().unwrap();
+            assert!(o.finish_time >= o.submit_time);
+            if let Some(fl) = o.first_launch {
+                assert!(fl >= o.submit_time && fl <= o.finish_time);
+            }
+        }
+    });
+}
+
+/// Same seed ⇒ byte-identical metrics; different seed ⇒ different trace.
+#[test]
+fn prop_simulation_is_deterministic() {
+    forall("determinism", 15, |g| {
+        let wl = random_workload(g);
+        let run = |seed: u64| {
+            let cluster = Cluster::homogeneous(4, 2);
+            let sched = scheduler::by_name("bayes", seed).unwrap();
+            let mut w = wl.clone();
+            w.seed = seed;
+            let mut jt =
+                JobTracker::new(cluster, sched, generate(&w), seed, TrackerConfig::default());
+            jt.run();
+            (
+                jt.metrics.makespan,
+                jt.engine.processed(),
+                jt.metrics.latencies(),
+                jt.metrics.feedback,
+            )
+        };
+        let s = g.int(0, 1 << 20);
+        assert_eq!(run(s), run(s));
+    });
+}
+
+/// Slots are never oversubscribed during a run. Checked via a scheduler
+/// wrapper that inspects the node at every decision.
+#[test]
+fn prop_slots_never_oversubscribed() {
+    struct Watch(Box<dyn scheduler::Scheduler>);
+    impl scheduler::Scheduler for Watch {
+        fn name(&self) -> &'static str {
+            "watch"
+        }
+        fn on_cluster_info(&mut self, t: u32) {
+            self.0.on_cluster_info(t);
+        }
+        fn select(
+            &mut self,
+            view: &scheduler::SchedView,
+            node: &Node,
+            kind: TaskKind,
+        ) -> Option<TaskRef> {
+            assert!(node.used_slots(TaskKind::Map) <= node.spec.map_slots);
+            assert!(node.used_slots(TaskKind::Reduce) <= node.spec.reduce_slots);
+            self.0.select(view, node, kind)
+        }
+        fn feedback(&mut self, f: FeatureVec, l: Label) {
+            self.0.feedback(f, l);
+        }
+        fn on_task_started(&mut self, j: JobId) {
+            self.0.on_task_started(j);
+        }
+        fn on_task_finished(&mut self, j: JobId) {
+            self.0.on_task_finished(j);
+        }
+    }
+    forall("slots", 20, |g| {
+        let wl = random_workload(g);
+        let inner = scheduler::by_name(*g.choose(&scheduler::ALL_NAMES), wl.seed).unwrap();
+        let cluster = Cluster::homogeneous(g.int(2, 6) as u32, 2);
+        let mut jt = JobTracker::new(
+            cluster,
+            Box::new(Watch(inner)),
+            generate(&wl),
+            wl.seed,
+            TrackerConfig::default(),
+        );
+        jt.run();
+        for node in &jt.cluster.nodes {
+            assert!(node.used_slots(TaskKind::Map) == 0);
+        }
+    });
+}
+
+/// Classifier counts always equal the feedback fed in; posteriors stay in
+/// [0, 1]; flush is idempotent.
+#[test]
+fn prop_classifier_count_conservation() {
+    forall("classifier-counts", 100, |g| {
+        let mut nb = NaiveBayes::new(g.float(0.05, 5.0) as f32);
+        let n = g.int(1, 400);
+        let mut good = 0f32;
+        let mut bad = 0f32;
+        for _ in 0..n {
+            let mut fv: FeatureVec = [0; N_FEATURES];
+            for b in fv.iter_mut() {
+                *b = g.int(0, 9) as u8;
+            }
+            let label = if g.rng.chance(0.5) {
+                good += 1.0;
+                Label::Good
+            } else {
+                bad += 1.0;
+                Label::Bad
+            };
+            nb.observe(fv, label);
+            let p = nb.posterior_good(&fv);
+            assert!((0.0..=1.0).contains(&p) && p.is_finite());
+        }
+        nb.flush();
+        nb.flush(); // idempotent
+        assert_eq!(nb.class_counts(), [good, bad]);
+        let (counts, _) = nb.state();
+        let total: f32 = counts.iter().sum();
+        assert_eq!(total, (good + bad) * N_FEATURES as f32);
+    });
+}
+
+/// Node work accounting conserves work: total work drained equals the sum
+/// of (elapsed × effective speed) across intervals, regardless of the
+/// add/remove pattern.
+#[test]
+fn prop_node_work_conservation() {
+    forall("node-work", 100, |g| {
+        let mut node = Node::new(NodeId(0), NodeSpec::default());
+        let mut now = 0.0;
+        let mut active: Vec<TaskRef> = Vec::new();
+        let mut next_idx = 0u32;
+        for _ in 0..g.int(1, 30) {
+            now += g.float(0.1, 5.0);
+            node.advance(now);
+            let add = active.is_empty()
+                || (g.rng.chance(0.6) && node.free_slots(TaskKind::Map) > 0);
+            if add {
+                let tref =
+                    TaskRef { job: JobId(0), kind: TaskKind::Map, index: next_idx };
+                next_idx += 1;
+                let demand = Resources::new(
+                    g.float(0.05, 0.9),
+                    g.float(0.05, 0.6),
+                    g.float(0.0, 0.5),
+                    g.float(0.0, 0.5),
+                );
+                node.add_task(tref, demand, g.float(1.0, 50.0), now);
+                active.push(tref);
+            } else {
+                let idx = g.index(active.len());
+                let tref = active.swap_remove(idx);
+                let (rec, _) = node.remove_task(&tref, now);
+                assert!(rec.remaining >= 0.0);
+            }
+            // effective speed bounded by base speed
+            assert!(node.effective_speed() <= node.spec.speed + 1e-12);
+            assert!(node.slowdown() >= 1.0);
+        }
+    });
+}
+
+/// HDFS: every block's replicas are distinct nodes, and locality
+/// classification is consistent with the replica list.
+#[test]
+fn prop_hdfs_replicas_distinct_and_locality_consistent() {
+    forall("hdfs", 60, |g| {
+        let n_nodes = g.int(1, 30) as u32;
+        let n_racks = g.int(1, 6) as u32;
+        let mut ns = Namespace::new(n_nodes, n_racks, g.int(0, 1 << 30));
+        for b in ns.allocate_blocks(g.int(1, 50) as usize) {
+            let reps = ns.replicas(b).to_vec();
+            assert!(!reps.is_empty());
+            assert!(reps.len() <= 3.min(n_nodes as usize));
+            let mut d = reps.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), reps.len(), "duplicate replicas");
+            for node in reps.iter() {
+                assert_eq!(
+                    ns.locality(b, *node),
+                    bayes_sched::hdfs::Locality::NodeLocal
+                );
+            }
+        }
+    });
+}
+
+/// FIFO ordering: with equal priorities and a single-slot cluster, FIFO
+/// launches jobs' first tasks in submission order.
+#[test]
+fn prop_fifo_respects_submission_order() {
+    forall("fifo-order", 20, |g| {
+        let mut wl = random_workload(g);
+        wl.n_jobs = g.int(3, 8) as usize;
+        let mut specs = generate(&wl);
+        for s in &mut specs {
+            s.priority = bayes_sched::bayes::utility::Priority::Normal;
+        }
+        let cluster = Cluster::with_specs(
+            vec![NodeSpec { map_slots: 1, reduce_slots: 1, ..Default::default() }],
+            1,
+        );
+        let mut jt = JobTracker::new(
+            cluster,
+            scheduler::by_name("fifo", 0).unwrap(),
+            specs,
+            wl.seed,
+            TrackerConfig::default(),
+        );
+        jt.run();
+        let mut launches: Vec<(f64, u32)> = jt
+            .jobs
+            .iter()
+            .map(|j| (j.first_launch.unwrap(), j.id.0))
+            .collect();
+        launches.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let order: Vec<u32> = launches.iter().map(|(_, id)| *id).collect();
+        let sorted: Vec<u32> = (0..order.len() as u32).collect();
+        assert_eq!(order, sorted, "FIFO launched out of submission order");
+    });
+}
