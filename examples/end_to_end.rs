@@ -16,12 +16,16 @@ use bayes_sched::runtime::artifacts;
 use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
 
 fn main() {
-    let artifacts_ok = artifacts::Manifest::load(&artifacts::default_dir()).is_ok();
+    let artifacts_ok = cfg!(feature = "xla-runtime")
+        && artifacts::Manifest::load(&artifacts::default_dir()).is_ok();
     let bayes_variant = if artifacts_ok {
         println!("artifacts found: running the XLA/PJRT classifier on the hot path\n");
         "bayes-xla"
     } else {
-        eprintln!("WARNING: artifacts/ missing — run `make artifacts`.");
+        eprintln!(
+            "WARNING: XLA path unavailable (artifacts/ missing or built \
+             without `xla-runtime`)."
+        );
         eprintln!("falling back to the pure-rust classifier\n");
         "bayes"
     };

@@ -12,7 +12,7 @@ use bayes_sched::report::table::{fnum, Table};
 use bayes_sched::workload::generator::{generate, WorkloadConfig};
 use bayes_sched::workload::trace;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bayes_sched::errors::Result<()> {
     // 1. generate + save
     let workload = WorkloadConfig { n_jobs: 80, arrival_rate: 0.8, seed: 5, ..Default::default() };
     let specs = generate(&workload);

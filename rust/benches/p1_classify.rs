@@ -8,7 +8,6 @@
 use bayes_sched::bayes::classifier::{Classifier, Label, NaiveBayes, MAX_BATCH};
 use bayes_sched::bayes::features::{FeatureVec, N_FEATURES};
 use bayes_sched::report::bench::bench;
-use bayes_sched::runtime::XlaClassifier;
 use bayes_sched::sim::rng::Pcg;
 
 fn random_fv(rng: &mut Pcg) -> FeatureVec {
@@ -50,6 +49,12 @@ fn main() {
         nb.flush();
     });
 
+    xla_benches(&feats, &utility, &mut rng);
+}
+
+#[cfg(feature = "xla-runtime")]
+fn xla_benches(feats: &[FeatureVec], utility: &[f32], rng: &mut Pcg) {
+    use bayes_sched::runtime::XlaClassifier;
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("\nartifacts/ missing — skipping XLA benches (run `make artifacts`)");
@@ -57,7 +62,7 @@ fn main() {
     }
     println!("\n== classify: XLA/PJRT artifact (padded to 256) ==");
     let mut xla = XlaClassifier::load(&dir, 1.0).expect("load artifacts");
-    train(&mut xla, &mut rng, 500);
+    train(&mut xla, rng, 500);
     for n in [64usize, 128, 256] {
         bench(&format!("classify/xla/n{n}"), 20, 200, |_| {
             std::hint::black_box(xla.classify(&feats[..n], &utility[..n]));
@@ -86,4 +91,9 @@ fn main() {
         }
         xla.flush();
     });
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn xla_benches(_feats: &[FeatureVec], _utility: &[f32], _rng: &mut Pcg) {
+    println!("\nbuilt without the `xla-runtime` feature — skipping XLA benches");
 }

@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::errors::{anyhow, Context, Result};
 
 use crate::config::json::Json;
 

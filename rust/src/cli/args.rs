@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use crate::errors::{anyhow, Result};
 
 /// Parsed command-line arguments.
 #[derive(Debug, Default)]

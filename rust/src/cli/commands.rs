@@ -2,7 +2,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use crate::errors::{anyhow, Result};
 
 use crate::cluster::Cluster;
 use crate::config::types::load_run_config;

@@ -28,7 +28,7 @@
 //! interval = 3.0
 //! ```
 
-use anyhow::{anyhow, Result};
+use crate::errors::{anyhow, Result};
 
 use crate::bayes::overload::OverloadRule;
 use crate::cluster::heartbeat::HeartbeatConfig;

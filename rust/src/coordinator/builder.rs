@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::errors::{anyhow, Result};
 
 use crate::bayes::classifier::NaiveBayes;
 use crate::cluster::Cluster;

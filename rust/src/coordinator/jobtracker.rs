@@ -179,7 +179,10 @@ impl JobTracker {
     pub fn run(&mut self) -> Time {
         while let Some((t, ev)) = self.engine.pop() {
             if t > self.cfg.max_sim_time {
-                log::warn!("hit max_sim_time with {} active jobs", self.jobs.active_count());
+                eprintln!(
+                    "warning: hit max_sim_time with {} active jobs",
+                    self.jobs.active_count()
+                );
                 break;
             }
             match ev {

@@ -1,0 +1,144 @@
+//! Minimal error plumbing (anyhow substitute — the offline crate cache has
+//! no anyhow). [`Error`] is a contextual message string; the [`anyhow!`] /
+//! [`bail!`] macros build one, and [`Context`] layers context onto any
+//! `Result` or `Option`, exactly like the anyhow idioms the crate uses.
+
+use std::fmt;
+
+/// A contextual error message.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias (anyhow-style defaulted error type).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Wrap with an outer context layer ("context: cause").
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: deliberately no `impl std::error::Error for Error` — its absence is
+// what makes the blanket conversion below coherent (anyhow's trick).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Format an [`Error`] in place (anyhow! substitute).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::errors::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (bail! substitute).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+/// Context layering for `Result` and `Option` (anyhow::Context substitute).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_layers() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: gone");
+        let e = io_fail()
+            .with_context(|| format!("pass {}", 2))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "pass 2: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<i32> = None;
+        assert_eq!(x.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(5).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn wrap_chains() {
+        let e = Error::msg("inner").wrap("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -19,6 +19,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod errors;
 pub mod hdfs;
 pub mod job;
 pub mod metrics;

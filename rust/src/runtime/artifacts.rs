@@ -48,24 +48,42 @@ pub struct Manifest {
     pub update: Entry,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {path}: {source}")]
     Io {
         path: PathBuf,
-        #[source]
         source: std::io::Error,
     },
-    #[error("manifest parse error: {0}")]
     Parse(String),
-    #[error(
-        "artifact shape mismatch: artifacts were lowered with {found:?} but this \
-         binary expects {expected:?}; re-run `make artifacts`"
-    )]
     ShapeMismatch {
         found: Box<ShapeConstants>,
         expected: Box<ShapeConstants>,
     },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, source } => {
+                write!(f, "cannot read {}: {source}", path.display())
+            }
+            ManifestError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+            ManifestError::ShapeMismatch { found, expected } => write!(
+                f,
+                "artifact shape mismatch: artifacts were lowered with {found:?} \
+                 but this binary expects {expected:?}; re-run `make artifacts`"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Manifest {

@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use crate::errors::Result;
 
 use crate::bayes::classifier::{
     Classifier, ClassifyResult, Label, FEATURE_DIM, MAX_BATCH, MAX_JOBS,

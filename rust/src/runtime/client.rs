@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::errors::{bail, Context, Result};
 
 use super::artifacts::{Manifest, ShapeConstants};
 

@@ -2,15 +2,30 @@
 //! executes them from the coordinator hot path. Python is never involved at
 //! runtime — the HLO text files are self-contained.
 //!
-//! * [`artifacts`] — manifest parsing + shape validation.
-//! * [`client`] — PJRT CPU client wrapper, one executable per entry point.
-//! * [`classifier`] — [`classifier::XlaClassifier`], the drop-in XLA-backed
-//!   implementation of the Bayes classifier interface.
+//! * [`artifacts`] — manifest parsing + shape validation (always built).
+//! * `client` — PJRT CPU client wrapper, one executable per entry point.
+//! * `classifier` — `XlaClassifier`, the drop-in XLA-backed implementation
+//!   of the Bayes classifier interface.
+//!
+//! The PJRT pieces need the external `xla` crate, which the offline build
+//! image does not ship, so they are gated behind the `xla-runtime` cargo
+//! feature (see `rust/Cargo.toml`). Without the feature, [`stub`] provides
+//! API-compatible `Runtime` / `XlaClassifier` types whose `load` fails with
+//! an actionable message — `repro info` and the `bayes-xla` scheduler
+//! degrade gracefully instead of breaking the build.
 
 pub mod artifacts;
+#[cfg(feature = "xla-runtime")]
 pub mod classifier;
+#[cfg(feature = "xla-runtime")]
 pub mod client;
+#[cfg(not(feature = "xla-runtime"))]
+pub mod stub;
 
 pub use artifacts::{Manifest, ShapeConstants};
+#[cfg(feature = "xla-runtime")]
 pub use classifier::XlaClassifier;
+#[cfg(feature = "xla-runtime")]
 pub use client::{ClassifyOut, Runtime, UpdateOut};
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::{Runtime, XlaClassifier};

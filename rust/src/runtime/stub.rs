@@ -1,0 +1,84 @@
+//! API-compatible stand-ins for the PJRT runtime when the crate is built
+//! without the `xla-runtime` feature (the default in the offline image).
+//! Loading fails with an actionable message; the methods that can only be
+//! reached through a successfully loaded instance are unreachable.
+
+use std::path::Path;
+
+use crate::bayes::classifier::{Classifier, ClassifyResult, Label};
+use crate::bayes::features::FeatureVec;
+use crate::errors::{anyhow, Result};
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the \
+    `xla-runtime` feature (add the `xla` dependency in rust/Cargo.toml and \
+    build with `--features xla-runtime`)";
+
+/// Stub for `runtime::client::Runtime`.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn load(_dir: &Path) -> Result<Runtime> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+/// Stub for `runtime::classifier::XlaClassifier`.
+pub struct XlaClassifier {
+    _private: (),
+}
+
+impl XlaClassifier {
+    pub fn load(_dir: &Path, _alpha: f32) -> Result<XlaClassifier> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    pub fn state(&self) -> (&[f32], [f32; 2]) {
+        unreachable!("{UNAVAILABLE}")
+    }
+}
+
+impl Classifier for XlaClassifier {
+    fn classify(&mut self, _feats: &[FeatureVec], _utility: &[f32]) -> ClassifyResult {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn observe(&mut self, _feats: FeatureVec, _label: Label) {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn flush(&mut self) {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn class_counts(&self) -> [f32; 2] {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-bayes(xla-stub)"
+    }
+
+    fn export_state(&self) -> (Vec<f32>, [f32; 2], f32) {
+        unreachable!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_fail_with_actionable_message() {
+        let dir = Path::new("/nonexistent");
+        let e = Runtime::load(dir).unwrap_err().to_string();
+        assert!(e.contains("xla-runtime"), "{e}");
+        let e = XlaClassifier::load(dir, 1.0).unwrap_err().to_string();
+        assert!(e.contains("xla-runtime"), "{e}");
+    }
+}

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::errors::{anyhow, Context, Result};
 
 use crate::bayes::features::JobFeatures;
 use crate::bayes::utility::Priority;

@@ -3,7 +3,7 @@
 //! overload feedback, AM lifecycle (register on job arrival, unregister on
 //! completion — paper §2.3's application flow).
 
-use anyhow::{anyhow, Result};
+use crate::errors::{anyhow, Result};
 
 use crate::bayes::features::feature_vec;
 use crate::bayes::overload::OverloadRule;
@@ -240,6 +240,12 @@ impl ResourceManager {
             } else {
                 TaskKind::Reduce
             };
+            // the container cap is not the only limit: the node's typed
+            // executor slots must also be free (Node::add_task enforces
+            // this with a debug assertion)
+            if self.cluster.node(node_id).free_slots(kind) == 0 {
+                break;
+            }
             let Some(tref) =
                 crate::scheduler::api::pick_task(job, self.cluster.node(node_id), &self.hdfs, kind)
             else {

@@ -3,7 +3,9 @@
 //! NaiveBayes agree to f32 tolerance on identical feedback streams —
 //! the differential test that pins the artifact semantics.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires `make artifacts` (skipped with a message otherwise) and a build
+//! with `--features xla-runtime` (the whole file is compiled out without it).
+#![cfg(feature = "xla-runtime")]
 
 use std::path::PathBuf;
 
