@@ -1,22 +1,27 @@
-//! Bench e6_decision_latency: regenerates E6 (scalability) and measures
-//! the isolated scheduler decision cost vs queue length — the L3 hot-path
-//! number the coordinator's throughput hinges on.
+//! Bench e6_decision_latency: per-heartbeat scheduling cost under the
+//! batched API — one `assign()` call filling a whole heartbeat's slots vs
+//! the legacy per-slot pattern (emulated as budget-1 calls, one per slot) —
+//! plus the E6 scalability table. Writes `BENCH_e6.json` so the perf
+//! trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench e6_decision_latency
 
+use std::collections::BTreeMap;
+
 use bayes_sched::cluster::node::{Node, NodeId, NodeSpec};
+use bayes_sched::config::json::Json;
 use bayes_sched::hdfs::Namespace;
 use bayes_sched::job::queue::JobTable;
-use bayes_sched::job::task::TaskKind;
-use bayes_sched::report::bench::bench;
+use bayes_sched::report::bench::{bench, fmt_ns, Measurement};
 use bayes_sched::report::experiments::{self, ExpOpts};
-use bayes_sched::scheduler::api::SchedView;
-use bayes_sched::scheduler::{self, Scheduler};
+use bayes_sched::scheduler;
+use bayes_sched::scheduler::api::{SchedEvent, SchedView, SlotBudget};
 use bayes_sched::workload::generator::{generate, WorkloadConfig};
 
-/// Isolated decision microbenchmark: a queue of `q` schedulable jobs, one
-/// idle node, measure a single select() call.
-fn decision_bench(sched_name: &str, q: usize) {
+/// Map slots a heartbeat typically has to fill in this comparison.
+const SLOTS: u32 = 4;
+
+fn queue_fixture(q: usize) -> (JobTable, Namespace) {
     let mut hdfs = Namespace::new(40, 4, 1);
     let mut jobs = JobTable::new();
     let specs = generate(&WorkloadConfig {
@@ -28,23 +33,75 @@ fn decision_bench(sched_name: &str, q: usize) {
     for s in specs {
         jobs.submit(s, &mut hdfs);
     }
+    (jobs, hdfs)
+}
+
+/// Measure one heartbeat's scheduling cost for a queue of `q` jobs, both
+/// ways. Returns (batched, per_slot) measurements.
+fn heartbeat_bench(sched_name: &str, q: usize) -> (Measurement, Measurement) {
+    let (jobs, hdfs) = queue_fixture(q);
     let queue = jobs.schedulable();
     assert_eq!(queue.len(), q);
-    let node = Node::new(NodeId(0), NodeSpec::default());
+    let node = Node::new(
+        NodeId(0),
+        NodeSpec { map_slots: SLOTS, reduce_slots: 2, ..Default::default() },
+    );
     let mut sched = scheduler::by_name(sched_name, 1).unwrap();
-    sched.on_cluster_info(160);
-    bench(&format!("decision/{sched_name}/q{q}"), 100, 2000, |_| {
+    sched.observe(&SchedEvent::ClusterInfo { total_slots: 160 });
+
+    // batched: the queue is scored once, all SLOTS slots filled in one call
+    let batched = bench(&format!("assign/batched/{sched_name}/q{q}"), 50, 1000, |_| {
         let view = SchedView { jobs: &jobs, hdfs: &hdfs, queue: &queue, now: 100.0 };
-        std::hint::black_box(sched.select(&view, &node, TaskKind::Map));
+        std::hint::black_box(sched.assign(
+            &view,
+            &node,
+            SlotBudget { maps: SLOTS, reduces: 0 },
+        ));
     });
+    // per-slot baseline: the legacy pattern — one decision per free slot,
+    // re-scoring the queue every time
+    let per_slot =
+        bench(&format!("assign/per_slot/{sched_name}/q{q}"), 50, 1000, |_| {
+            for _ in 0..SLOTS {
+                let view =
+                    SchedView { jobs: &jobs, hdfs: &hdfs, queue: &queue, now: 100.0 };
+                std::hint::black_box(sched.assign(
+                    &view,
+                    &node,
+                    SlotBudget { maps: 1, reduces: 0 },
+                ));
+            }
+        });
+    (batched, per_slot)
 }
 
 fn main() {
-    println!("== isolated decision latency vs queue length ==");
-    for q in [16, 64, 256] {
-        for sched in ["fifo", "fair", "capacity", "bayes"] {
-            decision_bench(sched, q);
+    println!("== per-heartbeat cost: batched assign vs per-slot baseline ({SLOTS} map slots) ==");
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    for q in [16usize, 64, 256] {
+        for sched_name in ["fifo", "fair", "capacity", "bayes"] {
+            let (batched, per_slot) = heartbeat_bench(sched_name, q);
+            let speedup = per_slot.mean_ns / batched.mean_ns.max(1.0);
+            println!(
+                "  -> {sched_name}/q{q}: batched {} vs per-slot {} ({speedup:.2}x)",
+                fmt_ns(batched.mean_ns),
+                fmt_ns(per_slot.mean_ns),
+            );
+            let mut entry = BTreeMap::new();
+            entry.insert("batched_ns".to_string(), Json::Num(batched.mean_ns));
+            entry.insert("per_slot_ns".to_string(), Json::Num(per_slot.mean_ns));
+            entry.insert("speedup".to_string(), Json::Num(speedup));
+            results.insert(format!("{sched_name}_q{q}"), Json::Obj(entry));
         }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("e6_decision_latency".into()));
+    doc.insert("slots_per_heartbeat".to_string(), Json::Num(SLOTS as f64));
+    doc.insert("results".to_string(), Json::Obj(results));
+    let json = Json::Obj(doc);
+    match std::fs::write("BENCH_e6.json", json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_e6.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_e6.json: {e}"),
     }
 
     println!("\n== E6 scalability table ==");

@@ -23,21 +23,23 @@ USAGE:
                    [--jobs J] [--rate R] [--seed S] [--mix M] [--csv DIR]
                    [--mtbf SECS] [--mttr SECS] [--timeline FILE.csv]
                    [--save-model FILE.json] [--load-model FILE.json]
+                   [--explain]
   repro compare    [--jobs J] [--nodes N] [--seeds K] [--quick]
   repro experiment <e1..e10|all> [--quick] [--out DIR]
-  repro yarn       [--policy yarn-fifo|yarn-fair|yarn-bayes] [--jobs J]
-                   [--nodes N] [--seed S]
+  repro yarn       [--policy P] [--jobs J] [--nodes N] [--seed S] [--explain]
   repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
   repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
   repro info
 
 Schedulers: fifo fair capacity bayes bayes-xla random threshold-fifo
+Policies:   any scheduler name (unified trait), plus the yarn-fifo,
+            yarn-fair, yarn-capacity, yarn-bayes aliases
 Mixes:      balanced | cpu_heavy|io_heavy|mem_heavy|net_heavy|small | cpu:<f>
 ";
 
 /// Dispatch a full command line (without argv[0]). Returns process exit code.
 pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
-    let args = Args::parse(raw, &["quick", "verbose"])?;
+    let args = Args::parse(raw, &["quick", "verbose", "explain"])?;
     let Some(cmd) = args.positionals.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(2);
@@ -147,6 +149,7 @@ fn cmd_run(args: &Args) -> Result<i32> {
         cfg.scheduler
     );
     let mut jt = build_tracker_with(&cfg, cluster, specs)?;
+    jt.metrics.explain = args.flag("explain");
     let t0 = std::time::Instant::now();
     jt.run();
     let wall = t0.elapsed();
@@ -183,7 +186,23 @@ fn cmd_run(args: &Args) -> Result<i32> {
             jt.metrics.node_failures, jt.metrics.failed_jobs
         );
     }
+    print_explain(&jt.metrics, args);
     Ok(0)
+}
+
+/// `--explain`: dump the per-assignment decision trace.
+fn print_explain(m: &crate::metrics::Metrics, args: &Args) {
+    if !args.flag("explain") {
+        return;
+    }
+    println!(
+        "decision trace: {} assignments over {} heartbeat batches",
+        m.decision_log.len(),
+        m.assign_calls
+    );
+    for rec in &m.decision_log {
+        println!("  {rec}");
+    }
 }
 
 fn cmd_compare(args: &Args) -> Result<i32> {
@@ -245,6 +264,7 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
         seed,
         YarnConfig::default(),
     );
+    rm.metrics.explain = args.flag("explain");
     rm.run();
     let m = &rm.metrics;
     let lat = m.latencies();
@@ -260,6 +280,7 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
         format!("{}", m.oom_kills),
     ]);
     println!("{}", t.render());
+    print_explain(&rm.metrics, args);
     Ok(0)
 }
 
@@ -347,6 +368,17 @@ mod tests {
             path.display()
         );
         assert_eq!(dispatch(run_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+    }
+
+    #[test]
+    fn explain_flag_produces_a_trace() {
+        let code = dispatch(
+            "run --scheduler bayes --nodes 3 --jobs 4 --seed 6 --explain"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
     }
 
     #[test]

@@ -21,7 +21,9 @@ use crate::job::queue::JobTable;
 use crate::job::task::{TaskKind, TaskRef, TaskState};
 use crate::job::JobId;
 use crate::metrics::Metrics;
-use crate::scheduler::api::{SchedView, Scheduler};
+use crate::scheduler::api::{
+    Assignment, SchedEvent, SchedView, Scheduler, SlotBudget,
+};
 use crate::sim::engine::{Engine, Time};
 use crate::sim::event::Event;
 
@@ -112,7 +114,9 @@ impl JobTracker {
         seed: u64,
         cfg: TrackerConfig,
     ) -> JobTracker {
-        scheduler.on_cluster_info(cluster.total_slots());
+        scheduler.observe(&SchedEvent::ClusterInfo {
+            total_slots: cluster.total_slots(),
+        });
         specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
         let n_nodes = cluster.len();
         let hdfs = Namespace::new(
@@ -239,7 +243,8 @@ impl JobTracker {
                 // keep the task state machine consistent for drained jobs
                 self.jobs.get_mut(rec.task.job).task_mut(&rec.task).requeue();
             }
-            self.scheduler.on_task_finished(rec.task.job);
+            self.scheduler
+                .observe(&SchedEvent::TaskFinished { job: rec.task.job });
         }
         self.pending_feedback[node_id.0 as usize].clear();
         let mttr = self.cfg.failures.mttr.max(1.0);
@@ -297,43 +302,54 @@ impl JobTracker {
             let obs = self.cluster.node(node_id).observation();
             let label = self.cfg.overload_rule.label(&obs);
             for p in pending {
-                self.scheduler.feedback(p.feats, label);
+                self.scheduler
+                    .observe(&SchedEvent::Feedback { feats: p.feats, label });
                 self.metrics.record_feedback(label);
             }
         }
 
-        // 2. offer free slots to the scheduler (maps first, Hadoop order).
-        // The queue view is computed once per heartbeat (perf §Perf):
-        // launches can only *remove* work from a job, and every scheduler
-        // re-filters with has_work(), so a stale entry is skipped, never
-        // mis-scheduled.
-        let queue = self.jobs.schedulable();
-        for kind in [TaskKind::Map, TaskKind::Reduce] {
-            loop {
-                if self.cluster.node(node_id).free_slots(kind) == 0 {
-                    break;
-                }
-                if queue.is_empty() {
-                    break;
-                }
-                let chosen = {
-                    let view = SchedView {
-                        jobs: &self.jobs,
-                        hdfs: &self.hdfs,
-                        queue: &queue,
-                        now,
-                    };
-                    let node = self.cluster.node(node_id);
-                    let t0 = Instant::now();
-                    let sel = self.scheduler.select(&view, node, kind);
-                    self.metrics.record_decision(t0.elapsed().as_nanos());
-                    sel
-                };
-                match chosen {
-                    Some(task) => self.launch(task, node_id, now),
-                    None => break,
-                }
+        // 2. one batched assign() call fills every free slot of this
+        // heartbeat (perf §Perf: the queue is scored once per heartbeat,
+        // not once per slot — Hadoop's assignTasks batch semantics).
+        let budget = {
+            let node = self.cluster.node(node_id);
+            SlotBudget {
+                maps: node.free_slots(TaskKind::Map),
+                reduces: node.free_slots(TaskKind::Reduce),
             }
+        };
+        let queue = self.jobs.schedulable();
+        if budget.total() > 0 && !queue.is_empty() {
+            // snapshot the features the whole batch was scored against, so
+            // each placement's feedback sample matches its decision input
+            let node_feats = self.cluster.node(node_id).features();
+            let (assignments, assign_nanos) = {
+                let view = SchedView {
+                    jobs: &self.jobs,
+                    hdfs: &self.hdfs,
+                    queue: &queue,
+                    now,
+                };
+                let node = self.cluster.node(node_id);
+                let t0 = Instant::now();
+                let out = self.scheduler.assign(&view, node, budget);
+                (out, t0.elapsed().as_nanos())
+            };
+            let mut launched = 0usize;
+            for a in assignments {
+                // driver-side validation: the batch contract forbids these,
+                // but a buggy scheduler must not corrupt the simulation
+                let valid = self.cluster.node(node_id).free_slots(a.task.kind) > 0
+                    && self.jobs.get(a.task.job).task(&a.task).is_pending();
+                debug_assert!(valid, "scheduler broke the batch contract: {}", a.task);
+                if !valid {
+                    continue;
+                }
+                self.launch(a, node_id, now, &node_feats);
+                launched += 1;
+            }
+            // metrics count what actually launched, not what was proposed
+            self.metrics.record_assign(assign_nanos, launched);
         }
 
         // 3. next beat — only while there is (or may be) work
@@ -347,7 +363,14 @@ impl JobTracker {
 
     // ----------------------------------------------------------- launch --
 
-    fn launch(&mut self, task_ref: TaskRef, node_id: NodeId, now: Time) {
+    fn launch(
+        &mut self,
+        assignment: Assignment,
+        node_id: NodeId,
+        now: Time,
+        node_feats: &crate::bayes::features::NodeFeatures,
+    ) {
+        let task_ref = assignment.task;
         // per-task demand and work, adjusted for locality
         let job = self.jobs.get(task_ref.job);
         let mut demand = job.demand;
@@ -364,10 +387,10 @@ impl JobTracker {
         }
         demand.clamp_non_negative();
 
-        // queue overload feedback sample for this node's next heartbeat
-        let node_feats = self.cluster.node(node_id).features();
+        // queue overload feedback sample for this node's next heartbeat,
+        // built from the heartbeat-start features the batch was scored on
         let feats =
-            crate::bayes::features::feature_vec(&job.spec.profile, &node_feats);
+            crate::bayes::features::feature_vec(&job.spec.profile, node_feats);
         self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
 
         // OOM cliff check *before* mutating the node
@@ -377,7 +400,10 @@ impl JobTracker {
         // the table's ready set)
         self.jobs.start_task(&task_ref, node_id, now);
         let generation = self.jobs.get(task_ref.job).task(&task_ref).generation;
-        self.scheduler.on_task_started(task_ref.job);
+        self.scheduler
+            .observe(&SchedEvent::TaskStarted { job: task_ref.job });
+        self.metrics
+            .record_trace(now, node_id, task_ref, assignment.decision);
 
         // node state + completion rescheduling for all tasks on the node
         let horizons = self
@@ -432,13 +458,15 @@ impl JobTracker {
         self.jobs.complete_task(&tref, now);
         let job = self.jobs.get(tref.job);
         let finished = !job.failed && job.is_complete();
-        self.scheduler.on_task_finished(tref.job);
+        self.scheduler
+            .observe(&SchedEvent::TaskFinished { job: tref.job });
         self.doomed.remove(&tref);
         if finished {
             self.jobs.mark_complete(tref.job, now);
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
             self.metrics.record_outcome(tref.job, outcome);
-            self.scheduler.on_job_completed(tref.job);
+            self.scheduler
+                .observe(&SchedEvent::JobCompleted { job: tref.job });
         }
         self.reschedule(node_id, horizons);
     }
@@ -455,7 +483,8 @@ impl JobTracker {
         let attempts = job.task(&tref).attempts;
         let kill = attempts >= self.cfg.max_task_attempts && job.finish_time.is_none();
         self.doomed.remove(&tref);
-        self.scheduler.on_task_finished(tref.job);
+        self.scheduler
+            .observe(&SchedEvent::TaskFinished { job: tref.job });
         // Hadoop semantics: a task out of attempts kills the whole job.
         if kill {
             self.jobs.mark_failed(tref.job, now);

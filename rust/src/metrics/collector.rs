@@ -4,9 +4,31 @@
 use std::collections::BTreeMap;
 
 use crate::bayes::classifier::Label;
+use crate::cluster::node::NodeId;
 use crate::hdfs::Locality;
+use crate::job::task::TaskRef;
 use crate::job::{JobId, JobOutcome};
+use crate::scheduler::api::Decision;
 use crate::sim::engine::Time;
+
+/// One `--explain` trace entry: what was launched, where, and why.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionRecord {
+    pub time: Time,
+    pub node: NodeId,
+    pub task: TaskRef,
+    pub decision: Decision,
+}
+
+impl std::fmt::Display for DecisionRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "t={:>9.2}s {} -> {} {}",
+            self.time, self.node, self.task, self.decision
+        )
+    }
+}
 
 /// A point on the overload learning curve (E3): allocations and overload
 /// feedback within one window.
@@ -38,8 +60,15 @@ pub struct Metrics {
     pub timeline: Vec<super::TimelineSample>,
     /// Scheduling decisions taken (tasks assigned).
     pub decisions: u64,
-    /// Wall-clock nanoseconds spent inside scheduler decision calls.
+    /// Wall-clock nanoseconds spent inside scheduler assign() calls.
     pub decision_nanos: u128,
+    /// Batched assign() invocations (at most one per heartbeat).
+    pub assign_calls: u64,
+    /// When true, every assignment's [`Decision`] lands in `decision_log`
+    /// (the `--explain` trace).
+    pub explain: bool,
+    /// Per-assignment explanations (empty unless `explain`).
+    pub decision_log: Vec<DecisionRecord>,
     /// Heartbeats processed.
     pub heartbeats: u64,
     /// Virtual time of the last job completion.
@@ -77,9 +106,24 @@ impl Metrics {
         }
     }
 
-    pub fn record_decision(&mut self, nanos: u128) {
-        self.decisions += 1;
+    /// Account one batched assign() call that produced `assigned` tasks.
+    pub fn record_assign(&mut self, nanos: u128, assigned: usize) {
+        self.assign_calls += 1;
+        self.decisions += assigned as u64;
         self.decision_nanos += nanos;
+    }
+
+    /// Keep one assignment's decision for the `--explain` trace.
+    pub fn record_trace(
+        &mut self,
+        time: Time,
+        node: NodeId,
+        task: TaskRef,
+        decision: Decision,
+    ) {
+        if self.explain {
+            self.decision_log.push(DecisionRecord { time, node, task, decision });
+        }
     }
 
     /// Job latency (submit -> finish) samples.
@@ -126,12 +170,23 @@ impl Metrics {
         }
     }
 
-    /// Mean scheduler decision latency in microseconds.
+    /// Mean scheduler cost per assigned task, microseconds (assign() time
+    /// amortized over the tasks it placed).
     pub fn mean_decision_micros(&self) -> f64 {
         if self.decisions == 0 {
             0.0
         } else {
             self.decision_nanos as f64 / self.decisions as f64 / 1000.0
+        }
+    }
+
+    /// Mean per-heartbeat batch latency in microseconds (one assign() call
+    /// scores the queue once and fills every free slot).
+    pub fn mean_assign_micros(&self) -> f64 {
+        if self.assign_calls == 0 {
+            0.0
+        } else {
+            self.decision_nanos as f64 / self.assign_calls as f64 / 1000.0
         }
     }
 
@@ -195,10 +250,34 @@ mod tests {
     }
 
     #[test]
-    fn decision_latency() {
+    fn assign_and_decision_latency() {
         let mut m = Metrics::new();
-        m.record_decision(2000);
-        m.record_decision(4000);
-        assert_eq!(m.mean_decision_micros(), 3.0);
+        m.record_assign(2000, 1);
+        m.record_assign(4000, 2);
+        assert_eq!(m.assign_calls, 2);
+        assert_eq!(m.decisions, 3);
+        assert_eq!(m.mean_assign_micros(), 3.0);
+        assert_eq!(m.mean_decision_micros(), 2.0);
+    }
+
+    #[test]
+    fn trace_only_recorded_when_explain() {
+        use crate::job::task::TaskKind;
+        use crate::scheduler::api::Decision;
+        let rec = |m: &mut Metrics| {
+            m.record_trace(
+                1.0,
+                NodeId(0),
+                TaskRef { job: JobId(0), kind: TaskKind::Map, index: 0 },
+                Decision::unscored(JobId(0), TaskKind::Map, None, 1),
+            )
+        };
+        let mut m = Metrics::new();
+        rec(&mut m);
+        assert!(m.decision_log.is_empty());
+        m.explain = true;
+        rec(&mut m);
+        assert_eq!(m.decision_log.len(), 1);
+        assert!(m.decision_log[0].to_string().contains("job_0000"));
     }
 }

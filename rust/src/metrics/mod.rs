@@ -4,5 +4,5 @@ pub mod collector;
 pub mod stats;
 pub mod timeline;
 
-pub use collector::{FeedbackWindow, Metrics};
+pub use collector::{DecisionRecord, FeedbackWindow, Metrics};
 pub use timeline::TimelineSample;

@@ -45,6 +45,8 @@ pub struct RunSummary {
     pub locality_rack: f64,
     pub locality_remote: f64,
     pub mean_decision_us: f64,
+    /// Per-heartbeat batch latency (one assign() call fills all free slots).
+    pub mean_assign_us: f64,
     pub heartbeats: u64,
 }
 
@@ -78,6 +80,7 @@ pub fn summarize(jt: &JobTracker, cfg: &RunConfig) -> RunSummary {
         locality_rack: m.locality_fraction("rack_local"),
         locality_remote: m.locality_fraction("remote"),
         mean_decision_us: m.mean_decision_micros(),
+        mean_assign_us: m.mean_assign_micros(),
         heartbeats: m.heartbeats,
     }
 }

@@ -50,6 +50,7 @@ pub fn e6(opts: &ExpOpts) -> Vec<Table> {
             "scheduler",
             "makespan_s",
             "mean_decision_us",
+            "mean_assign_us",
             "heartbeats",
         ],
     );
@@ -73,6 +74,7 @@ pub fn e6(opts: &ExpOpts) -> Vec<Table> {
                 sched.into(),
                 fnum(r.makespan),
                 fnum(r.mean_decision_us),
+                fnum(r.mean_assign_us),
                 format!("{}", r.heartbeats),
             ]);
         }

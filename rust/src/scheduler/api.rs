@@ -1,10 +1,51 @@
-//! The scheduler interface: "the schedule of homework is to assign the
-//! proper tasks to proper servers. There are two steps to go. Firstly, you
-//! should select the homework, then in the homework you should choose the
-//! right task." (paper §3)
+//! The unified, event-driven scheduler interface: "when JobTracker gets
+//! task request, it will select a good job from job queue … then the
+//! execution result will feedback to the JobTracker" (paper §3).
 //!
-//! Schedulers are consulted on every TaskTracker heartbeat, once per free
-//! slot, exactly like Hadoop MRv1's `TaskScheduler.assignTasks`.
+//! A [`Scheduler`] interacts with a driver (the MRv1 JobTracker *or* the
+//! YARN ResourceManager — both run the same trait) through exactly two
+//! methods:
+//!
+//! * [`Scheduler::assign`] — called once per TaskTracker/NodeManager
+//!   heartbeat with a [`SlotBudget`] covering **all** free slots. The
+//!   scheduler scores the job queue once and returns an ordered batch of
+//!   [`Assignment`]s, mirroring Hadoop's real `TaskScheduler.assignTasks`
+//!   batch semantics. Learned schedulers compute posteriors and utilities
+//!   per heartbeat, not per slot.
+//! * [`Scheduler::observe`] — the single feedback channel: every driver
+//!   notification (cluster info, overload-rule feedback, task lifecycle)
+//!   arrives as one [`SchedEvent`]. Schedulers must tolerate events in any
+//!   driver interleaving, including events for jobs they have never seen.
+//!
+//! ## Migration from the legacy per-slot API
+//!
+//! | old (per-slot)                         | new (batched / event-driven)              |
+//! |----------------------------------------|-------------------------------------------|
+//! | `select(view, node, kind) -> TaskRef`  | `assign(view, node, budget) -> Vec<Assignment>` |
+//! | `on_cluster_info(total_slots)`         | `observe(SchedEvent::ClusterInfo { .. })` |
+//! | `feedback(feats, label)`               | `observe(SchedEvent::Feedback { .. })`    |
+//! | `on_task_started(job)`                 | `observe(SchedEvent::TaskStarted { .. })` |
+//! | `on_task_finished(job)`                | `observe(SchedEvent::TaskFinished { .. })`|
+//! | `on_job_completed(job)`                | `observe(SchedEvent::JobCompleted { .. })`|
+//!
+//! Each [`Assignment`] carries a [`Decision`] record (chosen job,
+//! posterior, utility, locality, candidates considered) that drivers thread
+//! into metrics and the `repro run --explain` trace.
+//!
+//! ## Batch contract
+//!
+//! Within one `assign` call the returned batch must (a) never assign the
+//! same task twice, (b) never exceed the per-kind budget, and (c) never
+//! propose a reduce for a job whose map phase is incomplete. [`BatchState`]
+//! implements the shared bookkeeping: it tracks what the batch has already
+//! claimed so later picks see an up-to-date view without mutating the job
+//! table. Drivers validate each assignment before launching (YARN re-checks
+//! the declared-resource fit, both drivers re-check slot/pending state) and
+//! may drop proposals that fail — scheduler-internal state stays consistent
+//! because it is only updated through `observe` events for tasks that
+//! actually launched.
+
+use std::collections::BTreeMap;
 
 use crate::bayes::classifier::Label;
 use crate::bayes::features::FeatureVec;
@@ -17,7 +58,7 @@ use crate::job::task::{TaskKind, TaskRef};
 use crate::job::JobId;
 use crate::sim::engine::Time;
 
-/// Read-only view handed to the scheduler on each decision.
+/// Read-only view handed to the scheduler on each heartbeat.
 pub struct SchedView<'a> {
     pub jobs: &'a JobTable,
     pub hdfs: &'a Namespace,
@@ -26,82 +67,239 @@ pub struct SchedView<'a> {
     pub now: Time,
 }
 
-/// A job scheduler (FIFO / Fair / Capacity / Bayes / ...).
+/// Free capacity offered to one `assign` call: every free slot of the
+/// heartbeating node, by kind. Drivers with an orthogonal cap (YARN's
+/// per-node container limit) may truncate the returned batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotBudget {
+    pub maps: u32,
+    pub reduces: u32,
+}
+
+impl SlotBudget {
+    pub fn of(&self, kind: TaskKind) -> u32 {
+        match kind {
+            TaskKind::Map => self.maps,
+            TaskKind::Reduce => self.reduces,
+        }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.maps + self.reduces
+    }
+}
+
+/// Why a task was chosen: the per-assignment explanation record threaded
+/// into metrics and the `--explain` trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// The job the winning task belongs to.
+    pub job: JobId,
+    pub kind: TaskKind,
+    /// P(good | job, node) — learned schedulers only.
+    pub posterior: Option<f32>,
+    /// U(i), the utility that weighted the posterior — learned schedulers
+    /// only.
+    pub utility: Option<f32>,
+    /// Input locality of the picked task (maps only).
+    pub locality: Option<Locality>,
+    /// Queue candidates considered for this slot.
+    pub candidates: u32,
+}
+
+impl Decision {
+    /// A decision record with no learned scores (heuristic schedulers).
+    pub fn unscored(job: JobId, kind: TaskKind, locality: Option<Locality>, candidates: u32) -> Decision {
+        Decision { job, kind, posterior: None, utility: None, locality, candidates }
+    }
+}
+
+impl std::fmt::Display for Decision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            TaskKind::Map => "map",
+            TaskKind::Reduce => "reduce",
+        };
+        write!(f, "{} [{kind}]", self.job)?;
+        if let Some(p) = self.posterior {
+            write!(f, " posterior={p:.3}")?;
+        }
+        if let Some(u) = self.utility {
+            write!(f, " utility={u:.3}")?;
+        }
+        if let Some(l) = self.locality {
+            write!(f, " locality={}", l.name())?;
+        }
+        write!(f, " candidates={}", self.candidates)
+    }
+}
+
+/// One proposed task launch in a heartbeat batch.
+#[derive(Debug, Clone, Copy)]
+pub struct Assignment {
+    pub task: TaskRef,
+    pub decision: Decision,
+}
+
+/// The single event stream drivers feed back into a scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchedEvent {
+    /// Cluster-level facts, sent once at startup (the Capacity scheduler
+    /// sizes queue promises from the slot total).
+    ClusterInfo { total_slots: u32 },
+    /// Overload-rule verdict for an earlier placement (the Bayes learner's
+    /// training signal; the baselines ignore it — that is the paper's
+    /// point).
+    Feedback { feats: FeatureVec, label: Label },
+    /// A task of `job` started on some node.
+    TaskStarted { job: JobId },
+    /// A task of `job` left a node (completed, failed, or lost).
+    TaskFinished { job: JobId },
+    /// `job` finished entirely.
+    JobCompleted { job: JobId },
+}
+
+/// A job scheduler (FIFO / Fair / Capacity / Bayes / ...), batched and
+/// event-driven. Runs unchanged under both the MRv1 JobTracker and the
+/// YARN ResourceManager drivers.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Called once at startup with cluster-level facts (the Capacity
-    /// scheduler sizes queue promises from the slot total).
-    fn on_cluster_info(&mut self, _total_slots: u32) {}
+    /// Fill the heartbeat's free slots in one call. See the module docs for
+    /// the batch contract.
+    fn assign(&mut self, view: &SchedView, node: &Node, budget: SlotBudget) -> Vec<Assignment>;
 
-    /// Pick the next task for one free `kind` slot on `node`, or None to
-    /// leave the slot idle this heartbeat.
-    fn select(&mut self, view: &SchedView, node: &Node, kind: TaskKind)
-        -> Option<TaskRef>;
-
-    /// Overload-rule feedback for an earlier placement (Bayes only; the
-    /// baselines ignore it — that is the paper's point).
-    fn feedback(&mut self, _feats: FeatureVec, _label: Label) {}
+    /// Absorb one driver notification. Default: ignore everything.
+    fn observe(&mut self, _ev: &SchedEvent) {}
 
     /// Export the learned model as JSON, if this scheduler has one
     /// (`repro run --save-model`).
     fn export_model(&self) -> Option<crate::config::json::Json> {
         None
     }
-
-    /// Bookkeeping notifications.
-    fn on_task_started(&mut self, _job: JobId) {}
-    fn on_task_finished(&mut self, _job: JobId) {}
-    fn on_job_completed(&mut self, _job: JobId) {}
 }
 
-/// Locality-aware task pick *within* a chosen job (paper §4.2: "select the
-/// required data in the job to schedule the tasks on the TaskTracker
-/// firstly. If there does not exist such kind of tasks, we will select the
-/// tasks whose data are not local"). Shared by every scheduler, so
-/// baselines differ only in *job* selection — exactly the paper's framing.
-pub fn pick_task(
-    job: &Job,
-    node: &Node,
-    hdfs: &Namespace,
-    kind: TaskKind,
-) -> Option<TaskRef> {
-    match kind {
-        TaskKind::Map => {
-            let mut best: Option<(Locality, u32)> = None;
-            for t in job.maps.iter().filter(|t| t.is_pending()) {
-                let loc = hdfs.locality(t.block.expect("map without block"), node.id);
-                let rank = |l: Locality| match l {
-                    Locality::NodeLocal => 0,
-                    Locality::RackLocal => 1,
-                    Locality::Remote => 2,
-                };
-                match best {
-                    Some((b, _)) if rank(b) <= rank(loc) => {}
-                    _ => best = Some((loc, t.index)),
-                }
-                if rank(loc) == 0 {
-                    break; // cannot do better than node-local
-                }
+/// Within-batch bookkeeping shared by every scheduler: which tasks this
+/// heartbeat's batch has already claimed, so later picks in the same batch
+/// never double-assign (the job table is not mutated until the driver
+/// launches the batch).
+#[derive(Debug, Default)]
+pub struct BatchState {
+    taken: Vec<TaskRef>,
+    maps_taken: BTreeMap<JobId, u32>,
+    reduces_taken: BTreeMap<JobId, u32>,
+}
+
+impl BatchState {
+    pub fn new() -> BatchState {
+        BatchState::default()
+    }
+
+    /// Record that the batch assigned `task`.
+    pub fn claim(&mut self, task: TaskRef) {
+        debug_assert!(!self.taken.contains(&task), "double-claimed {task}");
+        self.taken.push(task);
+        let tally = match task.kind {
+            TaskKind::Map => &mut self.maps_taken,
+            TaskKind::Reduce => &mut self.reduces_taken,
+        };
+        *tally.entry(task.job).or_insert(0) += 1;
+    }
+
+    /// Tasks of `kind` the batch already claimed from `job`.
+    pub fn claimed(&self, job: JobId, kind: TaskKind) -> u32 {
+        let tally = match kind {
+            TaskKind::Map => &self.maps_taken,
+            TaskKind::Reduce => &self.reduces_taken,
+        };
+        *tally.get(&job).unwrap_or(&0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.taken.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.taken.is_empty()
+    }
+
+    /// Does `job` still have a task a `kind` slot could run, net of what
+    /// this batch already claimed? Reduces stay gated on the map phase
+    /// (maps claimed in this batch are not complete, so they cannot unlock
+    /// reduces within the batch).
+    pub fn has_work(&self, job: &Job, kind: TaskKind) -> bool {
+        match kind {
+            TaskKind::Map => {
+                job.pending_maps() > self.claimed(job.id, TaskKind::Map) as usize
             }
-            best.map(|(_, index)| TaskRef { job: job.id, kind: TaskKind::Map, index })
-        }
-        TaskKind::Reduce => {
-            if !job.maps_complete() {
-                return None; // reduces gated on the map phase
+            TaskKind::Reduce => {
+                job.maps_complete()
+                    && job.pending_reduces()
+                        > self.claimed(job.id, TaskKind::Reduce) as usize
             }
-            job.reduces
-                .iter()
-                .find(|t| t.is_pending())
-                .map(|t| TaskRef { job: job.id, kind: TaskKind::Reduce, index: t.index })
         }
     }
-}
 
-/// Does `job` have any task a `kind` slot could run right now?
-pub fn has_work(job: &Job, kind: TaskKind) -> bool {
-    match kind {
-        TaskKind::Map => job.pending_maps() > 0,
-        TaskKind::Reduce => job.maps_complete() && job.pending_reduces() > 0,
+    /// Locality-aware task pick *within* a chosen job (paper §4.2: "select
+    /// the required data in the job to schedule the tasks on the
+    /// TaskTracker firstly. If there does not exist such kind of tasks, we
+    /// will select the tasks whose data are not local"). Shared by every
+    /// scheduler, so baselines differ only in *job* selection — exactly the
+    /// paper's framing. Skips tasks this batch already claimed; returns the
+    /// pick plus its locality (maps only) for the [`Decision`] record.
+    pub fn pick_task(
+        &self,
+        job: &Job,
+        node: &Node,
+        hdfs: &Namespace,
+        kind: TaskKind,
+    ) -> Option<(TaskRef, Option<Locality>)> {
+        match kind {
+            TaskKind::Map => {
+                let mut best: Option<(Locality, u32)> = None;
+                for t in job.maps.iter().filter(|t| t.is_pending()) {
+                    let tref =
+                        TaskRef { job: job.id, kind: TaskKind::Map, index: t.index };
+                    if self.taken.contains(&tref) {
+                        continue;
+                    }
+                    let loc =
+                        hdfs.locality(t.block.expect("map without block"), node.id);
+                    let rank = |l: Locality| match l {
+                        Locality::NodeLocal => 0,
+                        Locality::RackLocal => 1,
+                        Locality::Remote => 2,
+                    };
+                    match best {
+                        Some((b, _)) if rank(b) <= rank(loc) => {}
+                        _ => best = Some((loc, t.index)),
+                    }
+                    if rank(loc) == 0 {
+                        break; // cannot do better than node-local
+                    }
+                }
+                best.map(|(loc, index)| {
+                    (
+                        TaskRef { job: job.id, kind: TaskKind::Map, index },
+                        Some(loc),
+                    )
+                })
+            }
+            TaskKind::Reduce => {
+                if !job.maps_complete() {
+                    return None; // reduces gated on the map phase
+                }
+                job.reduces
+                    .iter()
+                    .filter(|t| t.is_pending())
+                    .map(|t| TaskRef {
+                        job: job.id,
+                        kind: TaskKind::Reduce,
+                        index: t.index,
+                    })
+                    .find(|tref| !self.taken.contains(tref))
+                    .map(|tref| (tref, None))
+            }
+        }
     }
 }

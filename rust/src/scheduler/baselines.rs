@@ -3,10 +3,11 @@
 //! awareness helps" from "learned classification helps".
 
 use crate::cluster::node::Node;
-use crate::job::task::{TaskKind, TaskRef};
+use crate::cluster::resources::Resources;
+use crate::job::task::TaskKind;
 use crate::sim::rng::Pcg;
 
-use super::api::{has_work, pick_task, SchedView, Scheduler};
+use super::api::{Assignment, BatchState, Decision, SchedView, Scheduler, SlotBudget};
 
 /// Uniform-random job selection (lower bound).
 pub struct RandomSched {
@@ -24,31 +25,54 @@ impl Scheduler for RandomSched {
         "random"
     }
 
-    fn select(
+    fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
-        kind: TaskKind,
-    ) -> Option<TaskRef> {
-        let cands: Vec<_> = view
-            .queue
-            .iter()
-            .map(|id| view.jobs.get(*id))
-            .filter(|j| has_work(j, kind))
-            .collect();
-        if cands.is_empty() {
-            return None;
-        }
-        let start = self.rng.index(cands.len());
-        // random start, linear probe so a pick always lands if any job has
-        // an assignable task
-        for k in 0..cands.len() {
-            let job = cands[(start + k) % cands.len()];
-            if let Some(t) = pick_task(job, node, view.hdfs, kind) {
-                return Some(t);
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        let mut batch = BatchState::new();
+        let mut out = Vec::new();
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            for _ in 0..budget.of(kind) {
+                let cands: Vec<_> = view
+                    .queue
+                    .iter()
+                    .map(|id| view.jobs.get(*id))
+                    .filter(|j| batch.has_work(j, kind))
+                    .collect();
+                if cands.is_empty() {
+                    break;
+                }
+                let start = self.rng.index(cands.len());
+                // random start, linear probe so a pick always lands if any
+                // job has an assignable task
+                let mut placed = false;
+                for k in 0..cands.len() {
+                    let job = cands[(start + k) % cands.len()];
+                    if let Some((task, loc)) =
+                        batch.pick_task(job, node, view.hdfs, kind)
+                    {
+                        batch.claim(task);
+                        out.push(Assignment {
+                            task,
+                            decision: Decision::unscored(
+                                job.id,
+                                kind,
+                                loc,
+                                cands.len() as u32,
+                            ),
+                        });
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    break;
+                }
             }
         }
-        None
+        out
     }
 }
 
@@ -72,26 +96,56 @@ impl Scheduler for ThresholdFifo {
         "threshold-fifo"
     }
 
-    fn select(
+    fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
-        kind: TaskKind,
-    ) -> Option<TaskRef> {
-        let demand_now = node.demand();
-        for id in view.queue {
-            let job = view.jobs.get(*id);
-            if !has_work(job, kind) {
-                continue;
-            }
-            let predicted = (demand_now + job.demand).frac_of(&node.spec.capacity);
-            if predicted.max_component() > self.max_util {
-                continue;
-            }
-            if let Some(t) = pick_task(job, node, view.hdfs, kind) {
-                return Some(t);
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        let mut batch = BatchState::new();
+        let mut out = Vec::new();
+        // demand the batch has already committed to this node, so the
+        // threshold check stays honest across the whole heartbeat
+        let mut committed = Resources::ZERO;
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            // candidates = jobs with assignable work of this kind, like
+            // every other scheduler's Decision record
+            let candidates = view
+                .queue
+                .iter()
+                .filter(|id| batch.has_work(view.jobs.get(**id), kind))
+                .count() as u32;
+            for _ in 0..budget.of(kind) {
+                let demand_now = node.demand() + committed;
+                let mut placed = false;
+                for id in view.queue {
+                    let job = view.jobs.get(*id);
+                    if !batch.has_work(job, kind) {
+                        continue;
+                    }
+                    let predicted =
+                        (demand_now + job.demand).frac_of(&node.spec.capacity);
+                    if predicted.max_component() > self.max_util {
+                        continue;
+                    }
+                    if let Some((task, loc)) =
+                        batch.pick_task(job, node, view.hdfs, kind)
+                    {
+                        batch.claim(task);
+                        committed += job.demand;
+                        out.push(Assignment {
+                            task,
+                            decision: Decision::unscored(*id, kind, loc, candidates),
+                        });
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    break;
+                }
             }
         }
-        None
+        out
     }
 }

@@ -1,17 +1,22 @@
 //! **The paper's contribution** (§4): job selection by online Naive Bayes
-//! classification. Queued jobs are scored against the heartbeating node's
-//! current features; jobs classified *good* (won't overload this node)
-//! compete by expected utility `E.U.(i) = P(good|J) · U(i)`; the winner
-//! contributes a task picked locality-first. Overload-rule feedback flows
-//! back through [`Scheduler::feedback`] into the classifier.
+//! classification. On each heartbeat the queued jobs are scored **once**
+//! against the heartbeating node's features — posteriors and utilities are
+//! per-heartbeat quantities, amortized over every slot the batch fills.
+//! Jobs classified *good* (won't overload this node) compete by expected
+//! utility `E.U.(i) = P(good|J) · U(i)`; winners contribute tasks picked
+//! locality-first until the [`SlotBudget`] or the queue runs dry. Overload
+//! feedback flows back through `observe(SchedEvent::Feedback)` into the
+//! classifier.
 
-use crate::bayes::classifier::{Classifier, Label, MAX_JOBS};
+use crate::bayes::classifier::{Classifier, MAX_JOBS};
 use crate::bayes::features::{feature_vec, FeatureVec};
 use crate::bayes::utility::UtilityFn;
 use crate::cluster::node::Node;
-use crate::job::task::{TaskKind, TaskRef};
+use crate::job::task::TaskKind;
 
-use super::api::{has_work, pick_task, SchedView, Scheduler};
+use super::api::{
+    Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
+};
 
 fn apply_mask(
     mask: &[bool; crate::bayes::features::N_FEATURES],
@@ -32,7 +37,9 @@ pub enum StarvationPolicy {
     /// Refuse the slot while the node is busy (let it drain — this is the
     /// throttling the good/bad gate exists for) but accept the
     /// max-posterior job on a completely idle node so the cluster can
-    /// never deadlock. Default.
+    /// never deadlock. In a batch, "idle" means the node was empty at the
+    /// heartbeat AND the batch has not placed anything yet — the same
+    /// state the legacy per-slot loop saw on its second call. Default.
     WaitUnlessIdle,
     /// Always schedule the max-posterior job (keeps slots busy; reduces
     /// the algorithm to soft job ranking).
@@ -52,7 +59,7 @@ pub struct BayesScheduler<C: Classifier> {
     /// E8 ablation: features with `false` are collapsed to bin 0 both at
     /// classify and feedback time, removing their signal.
     feature_mask: [bool; crate::bayes::features::N_FEATURES],
-    /// Reused per-select scratch (perf §Perf: zero allocation per decision
+    /// Reused per-heartbeat scratch (perf §Perf: zero allocation per batch
     /// apart from the candidate list).
     scratch_feats: Vec<FeatureVec>,
     scratch_utility: Vec<f32>,
@@ -111,84 +118,165 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
         "bayes"
     }
 
-    fn select(
+    fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
-        kind: TaskKind,
-    ) -> Option<TaskRef> {
-        // 1. candidate jobs with work for this slot kind
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        if budget.total() == 0 || view.queue.is_empty() {
+            return out;
+        }
+        // 1. score the whole queue ONCE for this heartbeat. Scoring window:
+        // the artifact scores at most MAX_JOBS rows; if the queue is
+        // longer, keep the oldest jobs (submission order = utility-age
+        // order) — but reserve budget-proportional room for each requested
+        // task kind, so e.g. 256 reduce-only jobs at the queue head cannot
+        // evict every map-capable job from the window and idle map slots.
         let node_feats = node.features();
-        let mut cands: Vec<&crate::job::job::Job> = view
-            .queue
-            .iter()
-            .map(|id| view.jobs.get(*id))
-            .filter(|j| has_work(j, kind))
-            .collect();
-        if cands.is_empty() {
-            return None;
-        }
-        // scoring window: the artifact scores at most MAX_JOBS rows; if the
-        // queue is longer, score the oldest MAX_JOBS (submission order =
-        // utility-age order, so the truncation drops the youngest jobs).
-        if cands.len() > MAX_JOBS {
+        let all: Vec<&crate::job::job::Job> =
+            view.queue.iter().map(|id| view.jobs.get(*id)).collect();
+        let cands: Vec<&crate::job::job::Job> = if all.len() <= MAX_JOBS {
+            all
+        } else {
             self.truncated_windows += 1;
-            cands.truncate(MAX_JOBS);
-        }
-        // 2. feature rows + utilities (scratch buffers, reused per call)
+            let empty = BatchState::new();
+            let offers = |j: &crate::job::job::Job, kind: TaskKind| {
+                empty.has_work(j, kind)
+            };
+            let quota_r = if budget.maps == 0 {
+                MAX_JOBS
+            } else if budget.reduces == 0 {
+                0
+            } else {
+                (MAX_JOBS * budget.reduces as usize / budget.total() as usize)
+                    .max(1)
+            };
+            let quota_m = MAX_JOBS - quota_r;
+            let mut keep = std::collections::BTreeSet::new();
+            let mut taken_m = 0usize;
+            let mut taken_r = 0usize;
+            for j in &all {
+                if keep.len() == MAX_JOBS {
+                    break;
+                }
+                let m = taken_m < quota_m && offers(j, TaskKind::Map);
+                let r = taken_r < quota_r && offers(j, TaskKind::Reduce);
+                if m || r {
+                    keep.insert(j.id);
+                    if m {
+                        taken_m += 1;
+                    }
+                    if r {
+                        taken_r += 1;
+                    }
+                }
+            }
+            // fill leftover quota with the oldest not-yet-kept jobs
+            for j in &all {
+                if keep.len() == MAX_JOBS {
+                    break;
+                }
+                keep.insert(j.id);
+            }
+            all.into_iter().filter(|j| keep.contains(&j.id)).collect()
+        };
         self.scratch_feats.clear();
         self.scratch_utility.clear();
         for j in &cands {
-            self.scratch_feats
-                .push(apply_mask(&self.feature_mask, feature_vec(&j.spec.profile, &node_feats)));
+            self.scratch_feats.push(apply_mask(
+                &self.feature_mask,
+                feature_vec(&j.spec.profile, &node_feats),
+            ));
             self.scratch_utility.push(
                 self.utility
-                    .eval(j.spec.priority, view.now - j.spec.submit_time) as f32,
+                    .eval(j.spec.priority, view.now - j.spec.submit_time)
+                    as f32,
             );
         }
-        // 3. classify + select (paper: among good jobs, max E.U.)
         let result = self
             .classifier
             .classify(&self.scratch_feats, &self.scratch_utility);
-        let good_best = (0..cands.len())
-            .filter(|&i| result.is_good(i))
-            .max_by(|&a, &b| result.score[a].total_cmp(&result.score[b]));
-        let least_bad = || {
-            (0..cands.len())
-                .max_by(|&a, &b| result.p_good[a].total_cmp(&result.p_good[b]))
+        // expected-utility order for the good jobs, computed once per
+        // heartbeat; the posterior order for the starvation fallback is
+        // built lazily, only if a slot actually falls through
+        let mut by_score: Vec<usize> = (0..cands.len()).collect();
+        by_score.sort_by(|&a, &b| result.score[b].total_cmp(&result.score[a]));
+        let mut by_pgood: Option<Vec<usize>> = None;
+
+        // 2. fill the budget from the per-heartbeat scores
+        let mut batch = BatchState::new();
+        let utilities = &self.scratch_utility;
+        let place = |i: usize,
+                     kind: TaskKind,
+                     batch: &mut BatchState,
+                     out: &mut Vec<Assignment>|
+         -> bool {
+            if !batch.has_work(cands[i], kind) {
+                return false;
+            }
+            match batch.pick_task(cands[i], node, view.hdfs, kind) {
+                Some((task, loc)) => {
+                    batch.claim(task);
+                    out.push(Assignment {
+                        task,
+                        decision: Decision {
+                            job: cands[i].id,
+                            kind,
+                            posterior: Some(result.p_good[i]),
+                            utility: Some(utilities[i]),
+                            locality: loc,
+                            candidates: cands.len() as u32,
+                        },
+                    });
+                    true
+                }
+                None => false,
+            }
         };
-        let chosen = match good_best {
-            Some(i) => i,
-            None => match self.policy {
-                StarvationPolicy::LeastBad => least_bad()?,
-                StarvationPolicy::WaitUnlessIdle => {
-                    if node.running().is_empty() {
-                        least_bad()?
-                    } else {
-                        return None;
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            for _ in 0..budget.of(kind) {
+                // paper: among good jobs, max E.U.
+                let mut placed = by_score
+                    .iter()
+                    .filter(|&&i| result.is_good(i))
+                    .any(|&i| place(i, kind, &mut batch, &mut out));
+                // nothing classified good: starvation policy (D3)
+                if !placed {
+                    let fallback = match self.policy {
+                        StarvationPolicy::LeastBad => true,
+                        StarvationPolicy::WaitUnlessIdle => {
+                            node.running().is_empty() && batch.is_empty()
+                        }
+                        StarvationPolicy::Wait => false,
+                    };
+                    if fallback {
+                        let order = by_pgood.get_or_insert_with(|| {
+                            let mut v: Vec<usize> = (0..cands.len()).collect();
+                            v.sort_by(|&a, &b| {
+                                result.p_good[b].total_cmp(&result.p_good[a])
+                            });
+                            v
+                        });
+                        placed = order
+                            .iter()
+                            .any(|&i| place(i, kind, &mut batch, &mut out));
                     }
                 }
-                StarvationPolicy::Wait => return None,
-            },
-        };
-        // 4. locality-first task pick within the chosen job; if the chosen
-        // job yields no task (racy reduce gating), fall through remaining
-        // good jobs by score.
-        if let Some(t) = pick_task(cands[chosen], node, view.hdfs, kind) {
-            return Some(t);
-        }
-        let mut order: Vec<usize> = (0..cands.len()).filter(|&i| i != chosen).collect();
-        order.sort_by(|&a, &b| result.score[b].total_cmp(&result.score[a]));
-        for i in order {
-            if let Some(t) = pick_task(cands[i], node, view.hdfs, kind) {
-                return Some(t);
+                if !placed {
+                    break;
+                }
             }
         }
-        None
+        out
     }
 
-    fn feedback(&mut self, feats: FeatureVec, label: Label) {
-        self.classifier.observe(self.apply_mask(feats), label);
+    fn observe(&mut self, ev: &SchedEvent) {
+        if let SchedEvent::Feedback { feats, label } = ev {
+            let masked = self.apply_mask(*feats);
+            self.classifier.observe(masked, *label);
+        }
     }
 
     fn export_model(&self) -> Option<crate::config::json::Json> {

@@ -9,10 +9,12 @@
 use std::collections::BTreeMap;
 
 use crate::cluster::node::Node;
-use crate::job::task::{TaskKind, TaskRef};
+use crate::job::task::TaskKind;
 use crate::job::JobId;
 
-use super::api::{has_work, pick_task, SchedView, Scheduler};
+use super::api::{
+    Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
+};
 
 #[derive(Debug, Clone)]
 struct CapQueue {
@@ -34,7 +36,7 @@ pub struct Capacity {
     /// (Hadoop's user-limit-factor semantics; 1.0 = a user may fill the
     /// queue's whole promise but not poach other queues' shares).
     pub user_limit: f64,
-    /// Total slots in the cluster (set by the coordinator at startup).
+    /// Total slots in the cluster (from `SchedEvent::ClusterInfo`).
     pub total_slots: u32,
 }
 
@@ -81,19 +83,22 @@ impl Capacity {
     }
 
     /// Hunger = running / promised slots; lower is hungrier (paper §3.3).
-    fn hunger(&self, name: &str) -> f64 {
+    /// `extra` counts tasks this heartbeat's batch already granted.
+    fn hunger(&self, name: &str, extra: u32) -> f64 {
         let q = &self.queues[name];
         let promised = (q.capacity * self.total_slots as f64).max(1e-9);
-        q.running as f64 / promised
+        (q.running + extra) as f64 / promised
     }
 
-    /// Would scheduling a task of `user` exceed the user limit in `queue`?
-    fn user_over_limit(&self, queue: &str, user: &str) -> bool {
+    /// Would scheduling a task of `user` exceed the user limit in `queue`,
+    /// counting `extra_user` tasks this batch already granted the user?
+    fn user_over_limit(&self, queue: &str, user: &str, extra_user: u32) -> bool {
         if self.total_slots == 0 {
             return false; // cluster info not wired (unit tests) — no limit
         }
         let q = &self.queues[queue];
-        let user_running = *q.per_user_running.get(user).unwrap_or(&0);
+        let user_running =
+            *q.per_user_running.get(user).unwrap_or(&0) + extra_user;
         // allow every user at least one running task
         if user_running == 0 {
             return false;
@@ -114,63 +119,106 @@ impl Scheduler for Capacity {
         "capacity"
     }
 
-    fn on_cluster_info(&mut self, total_slots: u32) {
-        self.total_slots = total_slots;
-    }
-
-    fn select(
+    fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
-        kind: TaskKind,
-    ) -> Option<TaskRef> {
-        let mut by_queue: BTreeMap<String, Vec<JobId>> = BTreeMap::new();
-        for id in view.queue {
-            let job = view.jobs.get(*id);
-            if !has_work(job, kind) {
-                continue;
-            }
-            self.ensure_queue(&job.spec.queue);
-            self.job_queue
-                .insert(*id, (job.spec.queue.clone(), job.spec.user.clone()));
-            by_queue.entry(job.spec.queue.clone()).or_default().push(*id);
-        }
-        let mut queues: Vec<String> = by_queue.keys().cloned().collect();
-        queues.sort_by(|a, b| {
-            self.hunger(a).total_cmp(&self.hunger(b)).then(a.cmp(b))
-        });
-        for qname in queues {
-            // priority-FIFO within the queue
-            let mut jobs: Vec<_> =
-                by_queue[&qname].iter().map(|id| view.jobs.get(*id)).collect();
-            jobs.sort_by_key(|j| std::cmp::Reverse(j.spec.priority));
-            for job in jobs {
-                if self.user_over_limit(&qname, &job.spec.user) {
-                    continue; // paper: "the job will not be selected"
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        let mut batch = BatchState::new();
+        let mut out = Vec::new();
+        // batch grants per queue and per (queue, user)
+        let mut granted_q: BTreeMap<String, u32> = BTreeMap::new();
+        let mut granted_u: BTreeMap<(String, String), u32> = BTreeMap::new();
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            let mut by_queue: BTreeMap<String, Vec<JobId>> = BTreeMap::new();
+            for id in view.queue {
+                let job = view.jobs.get(*id);
+                if !batch.has_work(job, kind) {
+                    continue;
                 }
-                if let Some(t) = pick_task(job, node, view.hdfs, kind) {
-                    return Some(t);
+                self.ensure_queue(&job.spec.queue);
+                self.job_queue
+                    .insert(*id, (job.spec.queue.clone(), job.spec.user.clone()));
+                by_queue.entry(job.spec.queue.clone()).or_default().push(*id);
+            }
+            // priority-FIFO order within each queue is fixed for the whole
+            // batch: sort once per kind, not once per slot
+            for jobs in by_queue.values_mut() {
+                jobs.sort_by_key(|id| {
+                    std::cmp::Reverse(view.jobs.get(*id).spec.priority)
+                });
+            }
+            let candidates: u32 = by_queue.values().map(|v| v.len() as u32).sum();
+            for _ in 0..budget.of(kind) {
+                let mut queues: Vec<&String> = by_queue.keys().collect();
+                queues.sort_by(|a, b| {
+                    let extra = |q: &str| *granted_q.get(q).unwrap_or(&0);
+                    self.hunger(a, extra(a))
+                        .total_cmp(&self.hunger(b, extra(b)))
+                        .then(a.cmp(b))
+                });
+                let mut placed = false;
+                'queues: for qname in queues {
+                    for job in by_queue[qname].iter().map(|id| view.jobs.get(*id)) {
+                        let extra_u = *granted_u
+                            .get(&(qname.clone(), job.spec.user.clone()))
+                            .unwrap_or(&0);
+                        if self.user_over_limit(qname, &job.spec.user, extra_u) {
+                            continue; // paper: "the job will not be selected"
+                        }
+                        if !batch.has_work(job, kind) {
+                            continue;
+                        }
+                        if let Some((task, loc)) =
+                            batch.pick_task(job, node, view.hdfs, kind)
+                        {
+                            batch.claim(task);
+                            *granted_q.entry(qname.clone()).or_insert(0) += 1;
+                            *granted_u
+                                .entry((qname.clone(), job.spec.user.clone()))
+                                .or_insert(0) += 1;
+                            out.push(Assignment {
+                                task,
+                                decision: Decision::unscored(
+                                    job.id, kind, loc, candidates,
+                                ),
+                            });
+                            placed = true;
+                            break 'queues;
+                        }
+                    }
+                }
+                if !placed {
+                    break;
                 }
             }
         }
-        None
+        out
     }
 
-    fn on_task_started(&mut self, job: JobId) {
-        if let Some((q, u)) = self.job_queue.get(&job).cloned() {
-            let queue = self.queues.get_mut(&q).unwrap();
-            queue.running += 1;
-            *queue.per_user_running.entry(u).or_insert(0) += 1;
-        }
-    }
-
-    fn on_task_finished(&mut self, job: JobId) {
-        if let Some((q, u)) = self.job_queue.get(&job).cloned() {
-            let queue = self.queues.get_mut(&q).unwrap();
-            queue.running = queue.running.saturating_sub(1);
-            if let Some(c) = queue.per_user_running.get_mut(&u) {
-                *c = c.saturating_sub(1);
+    fn observe(&mut self, ev: &SchedEvent) {
+        match ev {
+            SchedEvent::ClusterInfo { total_slots } => {
+                self.total_slots = *total_slots;
             }
+            SchedEvent::TaskStarted { job } => {
+                if let Some((q, u)) = self.job_queue.get(job).cloned() {
+                    let queue = self.queues.get_mut(&q).unwrap();
+                    queue.running += 1;
+                    *queue.per_user_running.entry(u).or_insert(0) += 1;
+                }
+            }
+            SchedEvent::TaskFinished { job } => {
+                if let Some((q, u)) = self.job_queue.get(job).cloned() {
+                    let queue = self.queues.get_mut(&q).unwrap();
+                    queue.running = queue.running.saturating_sub(1);
+                    if let Some(c) = queue.per_user_running.get_mut(&u) {
+                        *c = c.saturating_sub(1);
+                    }
+                }
+            }
+            _ => {}
         }
     }
 }

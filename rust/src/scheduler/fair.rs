@@ -7,10 +7,12 @@
 use std::collections::BTreeMap;
 
 use crate::cluster::node::Node;
-use crate::job::task::{TaskKind, TaskRef};
+use crate::job::task::TaskKind;
 use crate::job::JobId;
 
-use super::api::{has_work, pick_task, SchedView, Scheduler};
+use super::api::{
+    Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
+};
 
 #[derive(Debug, Default, Clone)]
 struct Pool {
@@ -52,11 +54,14 @@ impl Fair {
     }
 
     /// Pool ordering key: below-min-share pools first (most deficit), then
-    /// lowest running/weight (classic fair-share deficit).
-    fn hunger(&self, name: &str) -> (i64, f64) {
+    /// lowest running/weight (classic fair-share deficit). `extra` counts
+    /// tasks this heartbeat's batch already gave the pool, so one batch
+    /// spreads slots fairly instead of dumping them on one pool.
+    fn hunger(&self, name: &str, extra: u32) -> (i64, f64) {
         let p = &self.pools[name];
-        let deficit = p.min_share as i64 - p.running as i64;
-        let load = p.running as f64 / p.weight;
+        let running = p.running + extra;
+        let deficit = p.min_share as i64 - running as i64;
+        let load = running as f64 / p.weight;
         (-deficit, load)
     }
 }
@@ -66,51 +71,82 @@ impl Scheduler for Fair {
         "fair"
     }
 
-    fn select(
+    fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
-        kind: TaskKind,
-    ) -> Option<TaskRef> {
-        // group schedulable jobs by pool
-        let mut by_pool: BTreeMap<String, Vec<JobId>> = BTreeMap::new();
-        for id in view.queue {
-            let job = view.jobs.get(*id);
-            if !has_work(job, kind) {
-                continue;
-            }
-            let pool = self.pool_of(*id, &job.spec.pool);
-            by_pool.entry(pool).or_default().push(*id);
-        }
-        // hungriest pool first
-        let mut pools: Vec<String> = by_pool.keys().cloned().collect();
-        pools.sort_by(|a, b| {
-            let (da, la) = self.hunger(a);
-            let (db, lb) = self.hunger(b);
-            da.cmp(&db).then(la.total_cmp(&lb)).then(a.cmp(b))
-        });
-        for pool in pools {
-            // FIFO within the pool (second level, paper §3.2)
-            for id in &by_pool[&pool] {
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        let mut batch = BatchState::new();
+        let mut out = Vec::new();
+        // tasks the batch granted per pool (both kinds count toward a
+        // pool's running share, exactly like the observe() bookkeeping)
+        let mut granted: BTreeMap<String, u32> = BTreeMap::new();
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            // group schedulable jobs by pool (registers pools on first sight)
+            let mut by_pool: BTreeMap<String, Vec<JobId>> = BTreeMap::new();
+            for id in view.queue {
                 let job = view.jobs.get(*id);
-                if let Some(t) = pick_task(job, node, view.hdfs, kind) {
-                    return Some(t);
+                if !batch.has_work(job, kind) {
+                    continue;
+                }
+                let pool = self.pool_of(*id, &job.spec.pool);
+                by_pool.entry(pool).or_default().push(*id);
+            }
+            let candidates: u32 = by_pool.values().map(|v| v.len() as u32).sum();
+            for _ in 0..budget.of(kind) {
+                // hungriest pool first, re-ranked after every grant
+                let mut pools: Vec<&String> = by_pool.keys().collect();
+                pools.sort_by(|a, b| {
+                    let extra = |p: &str| *granted.get(p).unwrap_or(&0);
+                    let (da, la) = self.hunger(a, extra(a));
+                    let (db, lb) = self.hunger(b, extra(b));
+                    da.cmp(&db).then(la.total_cmp(&lb)).then(a.cmp(b))
+                });
+                let mut placed = false;
+                'pools: for pool in pools {
+                    // FIFO within the pool (second level, paper §3.2)
+                    for id in &by_pool[pool] {
+                        let job = view.jobs.get(*id);
+                        if !batch.has_work(job, kind) {
+                            continue;
+                        }
+                        if let Some((task, loc)) =
+                            batch.pick_task(job, node, view.hdfs, kind)
+                        {
+                            batch.claim(task);
+                            *granted.entry(pool.clone()).or_insert(0) += 1;
+                            out.push(Assignment {
+                                task,
+                                decision: Decision::unscored(*id, kind, loc, candidates),
+                            });
+                            placed = true;
+                            break 'pools;
+                        }
+                    }
+                }
+                if !placed {
+                    break;
                 }
             }
         }
-        None
+        out
     }
 
-    fn on_task_started(&mut self, job: JobId) {
-        if let Some(pool) = self.job_pool.get(&job) {
-            self.pools.get_mut(pool).unwrap().running += 1;
-        }
-    }
-
-    fn on_task_finished(&mut self, job: JobId) {
-        if let Some(pool) = self.job_pool.get(&job) {
-            let p = self.pools.get_mut(pool).unwrap();
-            p.running = p.running.saturating_sub(1);
+    fn observe(&mut self, ev: &SchedEvent) {
+        match ev {
+            SchedEvent::TaskStarted { job } => {
+                if let Some(pool) = self.job_pool.get(job) {
+                    self.pools.get_mut(pool).unwrap().running += 1;
+                }
+            }
+            SchedEvent::TaskFinished { job } => {
+                if let Some(pool) = self.job_pool.get(job) {
+                    let p = self.pools.get_mut(pool).unwrap();
+                    p.running = p.running.saturating_sub(1);
+                }
+            }
+            _ => {}
         }
     }
 }

@@ -3,9 +3,9 @@
 //! First come, and first go."
 
 use crate::cluster::node::Node;
-use crate::job::task::{TaskKind, TaskRef};
+use crate::job::task::TaskKind;
 
-use super::api::{has_work, pick_task, SchedView, Scheduler};
+use super::api::{Assignment, BatchState, Decision, SchedView, Scheduler, SlotBudget};
 
 /// Priority-then-submission-order FIFO.
 #[derive(Debug, Default)]
@@ -22,26 +22,49 @@ impl Scheduler for Fifo {
         "fifo"
     }
 
-    fn select(
+    fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
-        kind: TaskKind,
-    ) -> Option<TaskRef> {
-        // queue is submission-ordered; a stable sort by descending priority
-        // gives Hadoop's priority-FIFO order.
-        let mut order: Vec<_> = view
-            .queue
-            .iter()
-            .map(|id| view.jobs.get(*id))
-            .filter(|j| has_work(j, kind))
-            .collect();
-        order.sort_by_key(|j| std::cmp::Reverse(j.spec.priority));
-        for job in order {
-            if let Some(t) = pick_task(job, node, view.hdfs, kind) {
-                return Some(t);
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        let mut batch = BatchState::new();
+        let mut out = Vec::new();
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            // queue is submission-ordered; a stable sort by descending
+            // priority gives Hadoop's priority-FIFO order, computed once
+            // per heartbeat.
+            let mut order: Vec<_> = view
+                .queue
+                .iter()
+                .map(|id| view.jobs.get(*id))
+                .filter(|j| batch.has_work(j, kind))
+                .collect();
+            order.sort_by_key(|j| std::cmp::Reverse(j.spec.priority));
+            let candidates = order.len() as u32;
+            for _ in 0..budget.of(kind) {
+                let mut placed = false;
+                for job in &order {
+                    if !batch.has_work(job, kind) {
+                        continue;
+                    }
+                    if let Some((task, loc)) =
+                        batch.pick_task(job, node, view.hdfs, kind)
+                    {
+                        batch.claim(task);
+                        out.push(Assignment {
+                            task,
+                            decision: Decision::unscored(job.id, kind, loc, candidates),
+                        });
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    break;
+                }
             }
         }
-        None
+        out
     }
 }

@@ -1,5 +1,7 @@
 //! Job schedulers: the paper's three baselines (§3), the Bayes contribution
-//! (§4), and extra sanity baselines.
+//! (§4), and extra sanity baselines — all behind the unified, event-driven
+//! [`Scheduler`] trait ([`api`]), which runs the same scheduler under both
+//! the MRv1 JobTracker and the YARN ResourceManager drivers.
 
 pub mod api;
 pub mod baselines;
@@ -10,7 +12,9 @@ pub mod capacity;
 pub mod fair;
 pub mod fifo;
 
-pub use api::{pick_task, SchedView, Scheduler};
+pub use api::{
+    Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
+};
 pub use baselines::{RandomSched, ThresholdFifo};
 pub use bayes::{BayesScheduler, StarvationPolicy};
 pub use capacity::Capacity;
@@ -22,6 +26,9 @@ use crate::bayes::classifier::NaiveBayes;
 /// Construct a scheduler by name (CLI / config entry point).
 /// `bayes` uses the pure-rust classifier; `bayes-xla` is built separately
 /// by the coordinator builder because it needs the artifacts directory.
+///
+/// Invariant (guarded by a unit test): every [`ALL_NAMES`] entry constructs
+/// here and reports a matching [`Scheduler::name`].
 pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
     match name {
         "fifo" => Some(Box::new(Fifo::new())),

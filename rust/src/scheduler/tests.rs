@@ -13,7 +13,7 @@ use crate::job::queue::JobTable;
 use crate::job::task::{TaskKind, TaskRef};
 use crate::job::JobId;
 
-use super::api::{pick_task, SchedView, Scheduler};
+use super::api::{BatchState, SchedEvent, SchedView, Scheduler, SlotBudget};
 use super::bayes::{BayesScheduler, StarvationPolicy};
 use super::capacity::Capacity;
 use super::fair::Fair;
@@ -53,10 +53,19 @@ fn idle_node() -> Node {
     Node::new(NodeId(0), NodeSpec::default())
 }
 
+/// One-map-slot assignment (the old per-slot `select` shape, expressed as
+/// a batch of budget 1).
 fn select(f: &Fixture, sched: &mut dyn Scheduler, node: &Node) -> Option<TaskRef> {
     let queue = f.jobs.schedulable();
     let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
-    sched.select(&view, node, TaskKind::Map)
+    sched
+        .assign(&view, node, SlotBudget { maps: 1, reduces: 0 })
+        .first()
+        .map(|a| a.task)
+}
+
+fn started(sched: &mut dyn Scheduler, job: JobId) {
+    sched.observe(&SchedEvent::TaskStarted { job });
 }
 
 // ------------------------------------------------------------- pick_task --
@@ -69,19 +78,57 @@ fn pick_task_prefers_node_local() {
     let block = job.maps[1].block.unwrap();
     let local = f.hdfs.replicas(block)[0];
     let node = Node::new(local, NodeSpec::default());
-    let picked = pick_task(job, &node, &f.hdfs, TaskKind::Map).unwrap();
+    let batch = BatchState::new();
+    let (picked, loc) = batch.pick_task(job, &node, &f.hdfs, TaskKind::Map).unwrap();
     let picked_block = job.task(&picked).block.unwrap();
     assert_eq!(
         f.hdfs.locality(picked_block, local),
         crate::hdfs::Locality::NodeLocal
     );
+    assert_eq!(loc, Some(crate::hdfs::Locality::NodeLocal));
 }
 
 #[test]
 fn pick_task_gates_reduces_on_map_phase() {
     let f = fixture(vec![spec("a", "u0", JobClass::Small, Priority::Normal)]);
     let job = f.jobs.get(JobId(0));
-    assert_eq!(pick_task(job, &idle_node(), &f.hdfs, TaskKind::Reduce), None);
+    let batch = BatchState::new();
+    assert_eq!(batch.pick_task(job, &idle_node(), &f.hdfs, TaskKind::Reduce), None);
+}
+
+#[test]
+fn pick_task_skips_claimed_tasks() {
+    let f = fixture(vec![spec("a", "u0", JobClass::Small, Priority::Normal)]);
+    let job = f.jobs.get(JobId(0));
+    let node = idle_node();
+    let mut batch = BatchState::new();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..3 {
+        let (t, _) = batch.pick_task(job, &node, &f.hdfs, TaskKind::Map).unwrap();
+        assert!(seen.insert(t), "task {t} picked twice");
+        batch.claim(t);
+    }
+    // all three maps claimed: nothing left
+    assert!(batch.pick_task(job, &node, &f.hdfs, TaskKind::Map).is_none());
+    assert!(!batch.has_work(job, TaskKind::Map));
+}
+
+// ------------------------------------------------------------ drift guard --
+
+#[test]
+fn all_names_construct_via_by_name_with_matching_name() {
+    for name in super::ALL_NAMES {
+        let s = super::by_name(name, 1).unwrap_or_else(|| {
+            panic!("ALL_NAMES entry '{name}' is not constructible via by_name")
+        });
+        assert_eq!(s.name(), name, "scheduler name drift for '{name}'");
+    }
+}
+
+#[test]
+fn by_name_rejects_unknown_names() {
+    assert!(super::by_name("nope", 1).is_none());
+    assert!(super::by_name("", 1).is_none());
 }
 
 // ------------------------------------------------------------------ fifo --
@@ -113,6 +160,28 @@ fn fifo_returns_none_on_empty_queue() {
     assert_eq!(select(&f, &mut Fifo::new(), &idle_node()), None);
 }
 
+#[test]
+fn fifo_batch_fills_whole_budget_without_duplicates() {
+    let f = fixture(vec![
+        spec("a", "u0", JobClass::Small, Priority::Normal),
+        spec("b", "u1", JobClass::Small, Priority::Normal),
+    ]);
+    let queue = f.jobs.schedulable();
+    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let out = Fifo::new().assign(
+        &view,
+        &idle_node(),
+        SlotBudget { maps: 6, reduces: 6 },
+    );
+    // 2 jobs x 3 pending maps = 6 maps; reduces all gated on map phase
+    assert_eq!(out.len(), 6);
+    let mut tasks: Vec<_> = out.iter().map(|a| a.task).collect();
+    tasks.sort_by_key(|t| (t.job.0, t.index));
+    tasks.dedup();
+    assert_eq!(tasks.len(), 6, "duplicate task in batch");
+    assert!(out.iter().all(|a| a.task.kind == TaskKind::Map));
+}
+
 // ------------------------------------------------------------------ fair --
 
 #[test]
@@ -126,7 +195,7 @@ fn fair_prefers_pool_with_fewest_running() {
     // alice's pool already has 3 running tasks; bob has none
     let first = select(&f, &mut fair, &idle_node()).unwrap();
     for _ in 0..3 {
-        fair.on_task_started(JobId(0));
+        started(&mut fair, JobId(0));
     }
     let t = select(&f, &mut fair, &idle_node()).unwrap();
     assert_eq!(t.job, JobId(2), "bob's pool should win after alice loads up");
@@ -142,9 +211,28 @@ fn fair_min_share_prioritizes_starved_pool() {
     let mut fair = Fair::new();
     fair.set_pool("bob", 4, 1.0); // bob promised 4 slots
     fair.set_pool("alice", 0, 1.0);
-    fair.on_task_started(JobId(0)); // prime pool registration indirectly
+    started(&mut fair, JobId(0)); // prime pool registration indirectly
     let t = select(&f, &mut fair, &idle_node()).unwrap();
     assert_eq!(t.job, JobId(1), "below-min-share pool must win");
+}
+
+#[test]
+fn fair_spreads_one_batch_across_pools() {
+    let f = fixture(vec![
+        spec("a", "alice", JobClass::Small, Priority::Normal),
+        spec("b", "bob", JobClass::Small, Priority::Normal),
+    ]);
+    let queue = f.jobs.schedulable();
+    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let out = Fair::new().assign(
+        &view,
+        &idle_node(),
+        SlotBudget { maps: 4, reduces: 0 },
+    );
+    assert_eq!(out.len(), 4);
+    let alice = out.iter().filter(|a| a.task.job == JobId(0)).count();
+    let bob = out.iter().filter(|a| a.task.job == JobId(1)).count();
+    assert_eq!((alice, bob), (2, 2), "batch must alternate between pools");
 }
 
 // -------------------------------------------------------------- capacity --
@@ -156,12 +244,12 @@ fn capacity_picks_hungriest_queue() {
         spec("b", "u1", JobClass::Small, Priority::Normal),
     ]);
     let mut cap = Capacity::new();
-    cap.on_cluster_info(16);
+    cap.observe(&SchedEvent::ClusterInfo { total_slots: 16 });
     // make u0's queue busy
     let first = select(&f, &mut cap, &idle_node()).unwrap();
     assert_eq!(first.job, JobId(0)); // BTreeMap order tie-break
     for _ in 0..4 {
-        cap.on_task_started(JobId(0));
+        started(&mut cap, JobId(0));
     }
     let t = select(&f, &mut cap, &idle_node()).unwrap();
     assert_eq!(t.job, JobId(1), "hungrier queue must win");
@@ -174,12 +262,12 @@ fn capacity_user_limit_blocks_hog() {
         spec("b", "u1", JobClass::Small, Priority::Normal),
     ]);
     let mut cap = Capacity::new();
-    cap.on_cluster_info(4); // tiny cluster: promises are small
+    cap.observe(&SchedEvent::ClusterInfo { total_slots: 4 }); // tiny cluster
     cap.user_limit = 0.5;
     // u0 user already runs 2 tasks in its queue (promise = 4*0.5 = 2)
-    select(&f, &mut cap, &idle_node());
-    cap.on_task_started(JobId(0));
-    cap.on_task_started(JobId(0));
+    let _ = select(&f, &mut cap, &idle_node());
+    started(&mut cap, JobId(0));
+    started(&mut cap, JobId(0));
     let t = select(&f, &mut cap, &idle_node()).unwrap();
     assert_eq!(t.job, JobId(1), "user over limit must be skipped");
 }
@@ -236,6 +324,41 @@ fn bayes_wait_unless_idle_accepts_on_idle_node() {
 }
 
 #[test]
+fn bayes_wait_unless_idle_places_at_most_one_bad_task_per_batch() {
+    // everything classifies bad: the idle-node fallback must fire for the
+    // first slot only — the rest of the batch leaves the node draining,
+    // matching the legacy per-slot loop (its second call saw a busy node)
+    let f = fixture(vec![spec("heavy", "u0", JobClass::CpuHeavy, Priority::Normal)]);
+    let mut sched = trained_bayes(StarvationPolicy::WaitUnlessIdle);
+    let queue = f.jobs.schedulable();
+    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let out = sched.assign(&view, &idle_node(), SlotBudget { maps: 3, reduces: 0 });
+    assert_eq!(out.len(), 1, "fallback must not flood the node");
+    let d = out[0].decision;
+    assert!(d.posterior.unwrap() < 0.5);
+    assert_eq!(d.job, JobId(0));
+}
+
+#[test]
+fn bayes_decision_records_carry_scores() {
+    let f = fixture(vec![
+        spec("heavy", "u0", JobClass::CpuHeavy, Priority::Normal),
+        spec("light", "u1", JobClass::Small, Priority::Normal),
+    ]);
+    let mut sched = trained_bayes(StarvationPolicy::LeastBad);
+    let queue = f.jobs.schedulable();
+    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let out = sched.assign(&view, &idle_node(), SlotBudget { maps: 1, reduces: 0 });
+    let d = out[0].decision;
+    assert_eq!(d.job, JobId(1));
+    assert_eq!(d.kind, TaskKind::Map);
+    assert_eq!(d.candidates, 2);
+    assert!(d.posterior.unwrap() > 0.5);
+    assert!(d.utility.unwrap() > 0.0);
+    assert!(d.locality.is_some());
+}
+
+#[test]
 fn bayes_feature_mask_removes_signal() {
     let f = fixture(vec![
         spec("heavy", "u0", JobClass::CpuHeavy, Priority::Normal),
@@ -254,16 +377,19 @@ fn bayes_feature_mask_removes_signal() {
         .with_feature_mask([false; N_FEATURES]);
     let t = select(&f, &mut sched, &idle_node()).unwrap();
     // with everything masked to bin 0 and balanced labels, posterior = 0.5
-    // for both: the heavy job is no longer avoided (max_by keeps the last
-    // of equal scores, so the tie goes to job 1 deterministically)
-    assert_eq!(t.job, JobId(1));
+    // for both; equal scores keep the sort stable, so the first candidate
+    // (submission order) wins deterministically
+    assert_eq!(t.job, JobId(0));
 }
 
 #[test]
 fn bayes_feedback_reaches_classifier() {
     let mut sched = BayesScheduler::new(NaiveBayes::new(1.0));
     for _ in 0..50 {
-        sched.feedback([9; N_FEATURES], Label::Bad);
+        sched.observe(&SchedEvent::Feedback {
+            feats: [9; N_FEATURES],
+            label: Label::Bad,
+        });
     }
     sched.classifier_mut().flush();
     assert_eq!(sched.classifier().class_counts(), [0.0, 50.0]);

@@ -1,7 +1,21 @@
 //! YARN-mode extension (paper §2): ResourceManager / NodeManager /
-//! ApplicationMaster / Container simulation, with the Bayes policy plugged
-//! into the RM scheduler — showing the paper's algorithm generalizes from
-//! MRv1 slots to YARN's resource-vector containers.
+//! ApplicationMaster / Container simulation driven by the **same unified
+//! [`crate::scheduler::Scheduler`] trait as the MRv1 JobTracker** — the
+//! paper's Bayes contribution and every baseline run under both execution
+//! modes without a parallel policy hierarchy, so results compare
+//! apples-to-apples across modes.
+//!
+//! ## Migration note (old → new)
+//!
+//! The former `YarnPolicy` trait and its `YarnFifo` / `YarnFair` /
+//! `YarnBayes` implementations are gone. [`SchedulerPolicy`] is the thin
+//! adapter that runs any scheduler under the RM driver:
+//!
+//! | old                                   | new                                        |
+//! |---------------------------------------|--------------------------------------------|
+//! | `YarnPolicy::choose(reqs, free, ...)` | `Scheduler::assign(view, node, budget)`    |
+//! | `YarnPolicy::feedback(feats, label)`  | `Scheduler::observe(SchedEvent::Feedback)` |
+//! | `YarnFifo` / `YarnFair` / `YarnBayes` | `Fifo` / `Fair` / `BayesScheduler` via `yarn_policy_by_name` aliases |
 //!
 //! The key YARN-specific failure mode modeled here: containers are
 //! allocated against **declared** resource demands, but jobs' **actual**
@@ -18,5 +32,5 @@
 pub mod policy;
 pub mod rm;
 
-pub use policy::{YarnBayes, YarnFair, YarnFifo, YarnPolicy};
+pub use policy::SchedulerPolicy;
 pub use rm::{yarn_policy_by_name, ResourceManager, YarnConfig};

@@ -1,153 +1,98 @@
-//! RM scheduling policies: which application's pending container request
-//! wins a node's free resources.
+//! The RM-side scheduler adapter. The old `YarnPolicy` trait hierarchy
+//! (YarnFifo / YarnFair / YarnBayes) duplicated the MRv1 scheduler
+//! abstraction behind a second interface; it is gone. [`SchedulerPolicy`]
+//! adapts any [`Scheduler`] to the ResourceManager driver instead, so the
+//! exact same policy code — including the paper's Bayes contribution — runs
+//! under both execution modes and can be compared apples-to-apples.
+//!
+//! The adapter is thin by design: the RM owns the YARN-specific mechanics
+//! (declared-resource fit filtering, the per-node container cap, the
+//! misdeclaration model) and presents the scheduler with the same
+//! `SchedView`/`SlotBudget`/`SchedEvent` contract the JobTracker uses.
 
-use crate::bayes::classifier::{Classifier, NaiveBayes};
-use crate::bayes::features::{feature_vec, FeatureVec, NodeFeatures};
-use crate::bayes::utility::UtilityFn;
-use crate::bayes::Label;
-use crate::cluster::resources::Resources;
-use crate::job::job::Job;
-use crate::job::JobId;
-use crate::sim::engine::Time;
+use crate::bayes::classifier::NaiveBayes;
+use crate::cluster::node::Node;
+use crate::errors::{anyhow, Result};
+use crate::scheduler::api::{Assignment, SchedEvent, SchedView, Scheduler, SlotBudget};
+use crate::scheduler::{self, BayesScheduler, Capacity, Fair, Fifo};
 
-/// A pending container request summary handed to the policy.
-pub struct AppRequest<'a> {
-    pub app: JobId,
-    pub job: &'a Job,
-    /// Declared per-container demand (what the RM fit-checks).
-    pub declared: Resources,
-    /// Containers currently running for this app.
-    pub running: u32,
+/// Any [`Scheduler`] running under the ResourceManager driver.
+pub struct SchedulerPolicy {
+    inner: Box<dyn Scheduler>,
 }
 
-/// RM scheduling policy.
-pub trait YarnPolicy {
-    fn name(&self) -> &'static str;
-
-    /// Choose which request (index into `reqs`) gets a container on a node
-    /// with `free` resources and `node_feats` load, or None to hold back.
-    /// Every entry in `reqs` already passed the declared-fit check.
-    fn choose(
-        &mut self,
-        reqs: &[AppRequest],
-        free: Resources,
-        node_feats: &NodeFeatures,
-        now: Time,
-    ) -> Option<usize>;
-
-    /// Overload feedback for an earlier allocation (bayes only).
-    fn feedback(&mut self, _feats: FeatureVec, _label: Label) {}
-}
-
-/// FIFO: oldest app first.
-#[derive(Debug, Default)]
-pub struct YarnFifo;
-
-impl YarnPolicy for YarnFifo {
-    fn name(&self) -> &'static str {
-        "yarn-fifo"
+impl SchedulerPolicy {
+    pub fn new(inner: Box<dyn Scheduler>) -> SchedulerPolicy {
+        SchedulerPolicy { inner }
     }
 
-    fn choose(
-        &mut self,
-        reqs: &[AppRequest],
-        _free: Resources,
-        _node_feats: &NodeFeatures,
-        _now: Time,
-    ) -> Option<usize> {
-        (!reqs.is_empty()).then_some(0)
-    }
-}
-
-/// Fair: the app with the fewest running containers wins (instantaneous
-/// max-min fairness in container count).
-#[derive(Debug, Default)]
-pub struct YarnFair;
-
-impl YarnPolicy for YarnFair {
-    fn name(&self) -> &'static str {
-        "yarn-fair"
-    }
-
-    fn choose(
-        &mut self,
-        reqs: &[AppRequest],
-        _free: Resources,
-        _node_feats: &NodeFeatures,
-        _now: Time,
-    ) -> Option<usize> {
-        reqs.iter()
-            .enumerate()
-            .min_by_key(|(i, r)| (r.running, *i))
-            .map(|(i, _)| i)
-    }
-}
-
-/// The paper's Bayes policy at the RM: classify (app declared profile ×
-/// node load), pick the best good app by expected utility.
-pub struct YarnBayes {
-    classifier: NaiveBayes,
-    utility: UtilityFn,
-}
-
-impl YarnBayes {
-    pub fn new(alpha: f32) -> YarnBayes {
-        YarnBayes { classifier: NaiveBayes::new(alpha), utility: UtilityFn::default() }
-    }
-}
-
-impl YarnPolicy for YarnBayes {
-    fn name(&self) -> &'static str {
-        "yarn-bayes"
-    }
-
-    fn choose(
-        &mut self,
-        reqs: &[AppRequest],
-        _free: Resources,
-        node_feats: &NodeFeatures,
-        now: Time,
-    ) -> Option<usize> {
-        if reqs.is_empty() {
-            return None;
-        }
-        let window = reqs.len().min(crate::bayes::classifier::MAX_JOBS);
-        let feats: Vec<FeatureVec> = reqs[..window]
-            .iter()
-            .map(|r| feature_vec(&r.job.spec.profile, node_feats))
-            .collect();
-        let utility: Vec<f32> = reqs[..window]
-            .iter()
-            .map(|r| {
-                self.utility
-                    .eval(r.job.spec.priority, now - r.job.spec.submit_time)
-                    as f32
-            })
-            .collect();
-        let res = self.classifier.classify(&feats, &utility);
-        let good = (0..window)
-            .filter(|&i| res.is_good(i))
-            .max_by(|&a, &b| res.score[a].total_cmp(&res.score[b]));
-        // Same wait-unless-idle gate as the MRv1 scheduler (deviation D3),
-        // softened for YARN's resource-vector allocation: when everything
-        // classifies bad, hold back only while the node's bottleneck
-        // dimension is already past 75% — otherwise accept the least-bad
-        // app so the cluster cannot sit idle under a pessimistic prior.
-        good.or_else(|| {
-            let bottleneck = node_feats
-                .cpu_used
-                .max(node_feats.mem_used)
-                .max(node_feats.io_load)
-                .max(node_feats.net_load);
-            if bottleneck < 0.75 {
-                (0..window).max_by(|&a, &b| res.p_good[a].total_cmp(&res.p_good[b]))
-            } else {
-                None
+    /// Build a policy by name. The legacy `yarn-*` aliases map onto the
+    /// unified schedulers; every `scheduler::by_name` name works too.
+    /// Note: seed-dependent baselines (`random`) get a fixed RNG stream
+    /// here — use the MRv1 driver when a seeded baseline comparison
+    /// matters.
+    pub fn by_name(name: &str, alpha: f32) -> Result<SchedulerPolicy> {
+        let inner: Box<dyn Scheduler> = match name {
+            "yarn-fifo" => Box::new(Fifo::new()),
+            "yarn-fair" => Box::new(Fair::new()),
+            "yarn-capacity" => Box::new(Capacity::new()),
+            "yarn-bayes" | "bayes" => {
+                Box::new(BayesScheduler::new(NaiveBayes::new(alpha)))
             }
-        })
+            other => scheduler::by_name(other, 0)
+                .ok_or_else(|| anyhow!("unknown yarn policy '{other}'"))?,
+        };
+        Ok(SchedulerPolicy::new(inner))
     }
 
-    fn feedback(&mut self, feats: FeatureVec, label: Label) {
-        self.classifier.observe(feats, label);
+    pub fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    pub fn assign(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        budget: SlotBudget,
+    ) -> Vec<Assignment> {
+        self.inner.assign(view, node, budget)
+    }
+
+    pub fn observe(&mut self, ev: &SchedEvent) {
+        self.inner.observe(ev);
+    }
+
+    pub fn export_model(&self) -> Option<crate::config::json::Json> {
+        self.inner.export_model()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yarn_aliases_resolve() {
+        for (alias, inner) in [
+            ("yarn-fifo", "fifo"),
+            ("yarn-fair", "fair"),
+            ("yarn-capacity", "capacity"),
+            ("yarn-bayes", "bayes"),
+        ] {
+            let p = SchedulerPolicy::by_name(alias, 1.0).unwrap();
+            assert_eq!(p.name(), inner, "{alias}");
+        }
+    }
+
+    #[test]
+    fn plain_scheduler_names_work_too() {
+        for name in scheduler::ALL_NAMES {
+            assert!(SchedulerPolicy::by_name(name, 1.0).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_rejected() {
+        assert!(SchedulerPolicy::by_name("nope", 1.0).is_err());
     }
 }

@@ -1,32 +1,46 @@
 //! The ResourceManager driver: NM heartbeats, declared-fit container
-//! allocation via the pluggable policy, actual-demand contention on nodes,
+//! allocation via the unified [`crate::scheduler::Scheduler`] trait
+//! (through [`SchedulerPolicy`]), actual-demand contention on nodes,
 //! overload feedback, AM lifecycle (register on job arrival, unregister on
 //! completion — paper §2.3's application flow).
-
-use crate::errors::{anyhow, Result};
+//!
+//! Like the MRv1 JobTracker, the RM calls `assign` once per heartbeat with
+//! the node's full free-container budget and feeds everything back through
+//! `observe`. The YARN-specific mechanics stay in the driver: requests are
+//! pre-filtered by the **declared** fit, each proposed assignment is
+//! re-validated against the running declared tally before launch, and the
+//! per-node container cap truncates oversized batches.
 
 use crate::bayes::features::feature_vec;
 use crate::bayes::overload::OverloadRule;
 use crate::cluster::heartbeat::HeartbeatConfig;
 use crate::cluster::node::NodeId;
 use crate::cluster::Cluster;
+use crate::errors::Result;
 use crate::hdfs::locality::{locality_multiplier, locality_net_demand};
 use crate::hdfs::Namespace;
 use crate::job::job::JobSpec;
 use crate::job::queue::JobTable;
 use crate::job::task::{TaskKind, TaskRef, TaskState};
+use crate::job::JobId;
 use crate::metrics::Metrics;
+use crate::scheduler::api::{Assignment, SchedEvent, SchedView, SlotBudget};
 use crate::sim::engine::{Engine, Time};
 use crate::sim::event::Event;
 
-use super::policy::{AppRequest, YarnPolicy};
+use super::policy::SchedulerPolicy;
 
 /// YARN-mode knobs.
 #[derive(Debug, Clone)]
 pub struct YarnConfig {
     pub heartbeat: HeartbeatConfig,
     pub overload_rule: OverloadRule,
-    /// Max concurrent containers per NM (control-plane cap).
+    /// Max concurrent containers per NM (control-plane cap). Effective
+    /// concurrency is additionally bounded by the node's typed executor
+    /// slots (`NodeSpec::map_slots`/`reduce_slots`) — the node substrate
+    /// enforces them, so a cap above `map_slots + reduce_slots` has no
+    /// extra effect. (The pre-redesign RM ignored typed slots, which
+    /// violated `Node::add_task`'s slot invariant in debug builds.)
     pub max_containers_per_node: u32,
     /// Headroom factor on the declared-fit check (1.0 = strict fit).
     pub fit_headroom: f64,
@@ -61,14 +75,9 @@ pub fn actual_factor(job: &crate::job::job::Job) -> f64 {
     }
 }
 
-/// Build a policy by name.
-pub fn yarn_policy_by_name(name: &str, alpha: f32) -> Result<Box<dyn YarnPolicy>> {
-    match name {
-        "yarn-fifo" => Ok(Box::new(super::policy::YarnFifo)),
-        "yarn-fair" => Ok(Box::new(super::policy::YarnFair)),
-        "yarn-bayes" => Ok(Box::new(super::policy::YarnBayes::new(alpha))),
-        _ => Err(anyhow!("unknown yarn policy '{name}'")),
-    }
+/// Build a policy by name (see [`SchedulerPolicy::by_name`]).
+pub fn yarn_policy_by_name(name: &str, alpha: f32) -> Result<SchedulerPolicy> {
+    SchedulerPolicy::by_name(name, alpha)
 }
 
 struct PendingFeedback {
@@ -81,7 +90,7 @@ pub struct ResourceManager {
     pub cluster: Cluster,
     pub hdfs: Namespace,
     pub jobs: JobTable,
-    pub policy: Box<dyn YarnPolicy>,
+    pub policy: SchedulerPolicy,
     pub metrics: Metrics,
     pub cfg: YarnConfig,
     /// Declared resource usage per node (fit-check bookkeeping — actual
@@ -100,11 +109,14 @@ pub struct ResourceManager {
 impl ResourceManager {
     pub fn new(
         cluster: Cluster,
-        policy: Box<dyn YarnPolicy>,
+        mut policy: SchedulerPolicy,
         mut specs: Vec<JobSpec>,
         seed: u64,
         cfg: YarnConfig,
     ) -> ResourceManager {
+        policy.observe(&SchedEvent::ClusterInfo {
+            total_slots: cluster.total_slots(),
+        });
         specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
         let n = cluster.len();
         let hdfs =
@@ -185,6 +197,15 @@ impl ResourceManager {
         self.metrics.makespan
     }
 
+    /// Declared headroom left on a node under the fit-check policy.
+    fn headroom(&self, node_id: NodeId) -> crate::cluster::resources::Resources {
+        let cap = self.cluster.node(node_id).spec.capacity;
+        let mut h =
+            cap.scale(self.cfg.fit_headroom) - self.declared[node_id.0 as usize];
+        h.clamp_non_negative();
+        h
+    }
+
     fn on_heartbeat(&mut self, node_id: NodeId) {
         let now = self.engine.now();
         self.metrics.heartbeats += 1;
@@ -196,62 +217,77 @@ impl ResourceManager {
             let obs = self.cluster.node(node_id).observation();
             let label = self.cfg.overload_rule.label(&obs);
             for p in pend {
-                self.policy.feedback(p.feats, label);
+                self.policy
+                    .observe(&SchedEvent::Feedback { feats: p.feats, label });
                 self.metrics.record_feedback(label);
             }
         }
 
-        // allocate containers while requests fit (declared) and caps allow
-        loop {
-            let node = self.cluster.node(node_id);
-            if node.running().len() as u32 >= self.cfg.max_containers_per_node {
-                break;
-            }
-            let cap = node.spec.capacity;
-            let free = (cap.scale(self.cfg.fit_headroom)) - self.declared[node_id.0 as usize];
-            let queue = self.jobs.schedulable();
-            // requests that fit the free declared headroom
-            let reqs: Vec<AppRequest> = queue
-                .iter()
-                .map(|id| self.jobs.get(*id))
-                .filter(|j| {
-                    j.has_schedulable_task() && j.demand.fits_within(&free)
-                })
-                .map(|j| AppRequest {
-                    app: j.id,
-                    job: j,
-                    declared: j.demand,
-                    running: j.running_tasks() as u32,
-                })
+        // one batched assignment per heartbeat, like the MRv1 tracker.
+        // The per-kind budget respects the node's typed executor slots;
+        // the free-container count additionally caps the whole batch
+        // (containers themselves are not slot-typed).
+        let free_containers = self
+            .cfg
+            .max_containers_per_node
+            .saturating_sub(self.cluster.node(node_id).running().len() as u32);
+        if free_containers > 0 {
+            // requests that fit the free *declared* headroom right now
+            let headroom = self.headroom(node_id);
+            let queue: Vec<JobId> = self
+                .jobs
+                .schedulable()
+                .into_iter()
+                .filter(|id| self.jobs.get(*id).demand.fits_within(&headroom))
                 .collect();
-            if reqs.is_empty() {
-                break;
+            if !queue.is_empty() {
+                let node_feats = self.cluster.node(node_id).features();
+                let budget = {
+                    let node = self.cluster.node(node_id);
+                    SlotBudget {
+                        maps: free_containers.min(node.free_slots(TaskKind::Map)),
+                        reduces: free_containers
+                            .min(node.free_slots(TaskKind::Reduce)),
+                    }
+                };
+                let (assignments, assign_nanos) = {
+                    let view = SchedView {
+                        jobs: &self.jobs,
+                        hdfs: &self.hdfs,
+                        queue: &queue,
+                        now,
+                    };
+                    let node = self.cluster.node(node_id);
+                    let t0 = std::time::Instant::now();
+                    let out = self.policy.assign(&view, node, budget);
+                    (out, t0.elapsed().as_nanos())
+                };
+                let mut remaining = free_containers;
+                let mut launched = 0usize;
+                for a in assignments {
+                    if remaining == 0 {
+                        break; // container cap truncates the batch
+                    }
+                    // re-validate: earlier launches in this batch consumed
+                    // declared headroom and typed slots
+                    let declared = self.jobs.get(a.task.job).demand;
+                    if !declared.fits_within(&self.headroom(node_id)) {
+                        continue;
+                    }
+                    if self.cluster.node(node_id).free_slots(a.task.kind) == 0
+                        || !self.jobs.get(a.task.job).task(&a.task).is_pending()
+                    {
+                        debug_assert!(false, "batch contract broken: {}", a.task);
+                        continue;
+                    }
+                    self.launch_container(a, node_id, now, &node_feats);
+                    remaining -= 1;
+                    launched += 1;
+                }
+                // metrics count launched containers, not proposals — the
+                // container cap and the fit re-check may drop proposals
+                self.metrics.record_assign(assign_nanos, launched);
             }
-            let node_feats = self.cluster.node(node_id).features();
-            let t0 = std::time::Instant::now();
-            let choice = self.policy.choose(&reqs, free, &node_feats, now);
-            self.metrics.record_decision(t0.elapsed().as_nanos());
-            let Some(idx) = choice else { break };
-            let app = reqs[idx].app;
-            // container -> concrete task (locality-first, like MRv1 path)
-            let job = self.jobs.get(app);
-            let kind = if job.pending_maps() > 0 {
-                TaskKind::Map
-            } else {
-                TaskKind::Reduce
-            };
-            // the container cap is not the only limit: the node's typed
-            // executor slots must also be free (Node::add_task enforces
-            // this with a debug assertion)
-            if self.cluster.node(node_id).free_slots(kind) == 0 {
-                break;
-            }
-            let Some(tref) =
-                crate::scheduler::api::pick_task(job, self.cluster.node(node_id), &self.hdfs, kind)
-            else {
-                break;
-            };
-            self.launch_container(tref, node_id, now);
         }
 
         if !self.arrivals_done || !self.jobs.all_complete() {
@@ -260,7 +296,14 @@ impl ResourceManager {
         }
     }
 
-    fn launch_container(&mut self, tref: TaskRef, node_id: NodeId, now: Time) {
+    fn launch_container(
+        &mut self,
+        assignment: Assignment,
+        node_id: NodeId,
+        now: Time,
+        node_feats: &crate::bayes::features::NodeFeatures,
+    ) {
+        let tref = assignment.task;
         let job = self.jobs.get(tref.job);
         let declared = job.demand;
         // actual usage diverges from declared (misdeclaration model)
@@ -277,13 +320,15 @@ impl ResourceManager {
         }
         actual.clamp_non_negative();
 
-        let node_feats = self.cluster.node(node_id).features();
-        let feats = feature_vec(&job.spec.profile, &node_feats);
+        let feats = feature_vec(&job.spec.profile, node_feats);
         self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
 
         let dooms = self.cluster.node(node_id).would_oom(&actual);
         self.jobs.start_task(&tref, node_id, now);
         let generation = self.jobs.get(tref.job).task(&tref).generation;
+        self.policy.observe(&SchedEvent::TaskStarted { job: tref.job });
+        self.metrics
+            .record_trace(now, node_id, tref, assignment.decision);
         self.declared[node_id.0 as usize] += declared;
         let horizons =
             self.cluster.node_mut(node_id).add_task(tref, actual, work, now);
@@ -335,6 +380,7 @@ impl ResourceManager {
         let horizons = self.release(&tref, node_id, now);
         self.jobs.complete_task(&tref, now);
         self.doomed.remove(&tref);
+        self.policy.observe(&SchedEvent::TaskFinished { job: tref.job });
         let job = self.jobs.get(tref.job);
         let finished = !job.failed && job.is_complete();
         if finished {
@@ -342,6 +388,7 @@ impl ResourceManager {
             self.jobs.mark_complete(tref.job, now);
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
             self.metrics.record_outcome(tref.job, outcome);
+            self.policy.observe(&SchedEvent::JobCompleted { job: tref.job });
         }
         self.reschedule(node_id, horizons);
     }
@@ -354,6 +401,7 @@ impl ResourceManager {
         let horizons = self.release(&tref, node_id, now);
         self.doomed.remove(&tref);
         self.jobs.requeue_task(&tref);
+        self.policy.observe(&SchedEvent::TaskFinished { job: tref.job });
         let job = self.jobs.get(tref.job);
         let kill = job.task(&tref).attempts >= self.cfg.max_task_attempts
             && job.finish_time.is_none();
@@ -406,6 +454,15 @@ mod tests {
     }
 
     #[test]
+    fn any_mrv1_scheduler_runs_under_the_rm() {
+        // the unified-trait payoff: every by_name scheduler drives YARN mode
+        for p in crate::scheduler::ALL_NAMES {
+            let rm = run(p, 3);
+            assert!(rm.jobs.all_complete(), "{p} stalled under the RM");
+        }
+    }
+
+    #[test]
     fn deterministic() {
         let a = run("yarn-bayes", 5);
         let b = run("yarn-bayes", 5);
@@ -420,6 +477,29 @@ mod tests {
             assert!(d.max_component() < 1e-9, "leaked declared resources {d:?}");
         }
         for n in &rm.cluster.nodes {
+            assert!(n.running().is_empty());
+        }
+    }
+
+    #[test]
+    fn tiny_container_cap_still_drains() {
+        let cluster = Cluster::homogeneous(3, 1);
+        let specs = generate(&WorkloadConfig {
+            n_jobs: 8,
+            arrival_rate: 2.0,
+            seed: 9,
+            ..Default::default()
+        });
+        let mut tight = ResourceManager::new(
+            cluster,
+            yarn_policy_by_name("yarn-fifo", 1.0).unwrap(),
+            specs,
+            9,
+            YarnConfig { max_containers_per_node: 1, ..Default::default() },
+        );
+        tight.run();
+        assert!(tight.jobs.all_complete());
+        for n in &tight.cluster.nodes {
             assert!(n.running().is_empty());
         }
     }

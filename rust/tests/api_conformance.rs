@@ -1,0 +1,221 @@
+//! Trait-conformance suite for the batched scheduler API: every `by_name`
+//! scheduler must uphold the batch invariants under arbitrary budgets and
+//! tolerate `observe` events in any driver interleaving — the contract both
+//! the MRv1 JobTracker and the YARN ResourceManager drivers rely on.
+
+use bayes_sched::bayes::classifier::Label;
+use bayes_sched::bayes::features::N_FEATURES;
+use bayes_sched::bayes::utility::Priority;
+use bayes_sched::cluster::node::{Node, NodeId, NodeSpec};
+use bayes_sched::hdfs::Namespace;
+use bayes_sched::job::job::JobSpec;
+use bayes_sched::job::profile::JobClass;
+use bayes_sched::job::queue::JobTable;
+use bayes_sched::job::task::{TaskKind, TaskRef};
+use bayes_sched::job::JobId;
+use bayes_sched::scheduler::{self, Assignment, SchedEvent, SchedView, SlotBudget};
+
+fn spec(name: &str, user: &str, class: JobClass, maps: usize, reduces: usize) -> JobSpec {
+    JobSpec {
+        name: name.into(),
+        user: user.into(),
+        pool: user.into(),
+        queue: format!("q_{user}"),
+        class,
+        priority: Priority::Normal,
+        profile: class.base_features(),
+        map_works: vec![10.0; maps],
+        reduce_works: vec![15.0; reduces],
+        submit_time: 0.0,
+    }
+}
+
+struct Fixture {
+    jobs: JobTable,
+    hdfs: Namespace,
+}
+
+/// Four jobs over two users; job 3's map phase is already complete, so its
+/// reduces are the only legally assignable reduces in the fixture.
+fn fixture() -> Fixture {
+    let mut hdfs = Namespace::new(4, 2, 17);
+    let mut jobs = JobTable::new();
+    jobs.submit(spec("a", "u0", JobClass::Small, 3, 1), &mut hdfs);
+    jobs.submit(spec("b", "u1", JobClass::CpuHeavy, 4, 2), &mut hdfs);
+    jobs.submit(spec("c", "u0", JobClass::IoHeavy, 2, 1), &mut hdfs);
+    jobs.submit(spec("d", "u1", JobClass::Small, 2, 2), &mut hdfs);
+    // drive job 3 (id 3) through its map phase
+    for index in 0..2 {
+        let t = TaskRef { job: JobId(3), kind: TaskKind::Map, index };
+        jobs.start_task(&t, NodeId(0), 1.0);
+        jobs.complete_task(&t, 5.0);
+    }
+    assert!(jobs.get(JobId(3)).maps_complete());
+    Fixture { jobs, hdfs }
+}
+
+fn big_node() -> Node {
+    Node::new(
+        NodeId(1),
+        NodeSpec { map_slots: 8, reduce_slots: 8, ..Default::default() },
+    )
+}
+
+fn assign(
+    f: &Fixture,
+    sched: &mut dyn scheduler::Scheduler,
+    node: &Node,
+    budget: SlotBudget,
+) -> Vec<Assignment> {
+    let queue = f.jobs.schedulable();
+    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 50.0 };
+    sched.assign(&view, node, budget)
+}
+
+/// The batch contract (see scheduler/api.rs module docs).
+fn check_batch(name: &str, f: &Fixture, out: &[Assignment], budget: SlotBudget) {
+    let maps = out.iter().filter(|a| a.task.kind == TaskKind::Map).count() as u32;
+    let reduces = out.len() as u32 - maps;
+    assert!(maps <= budget.maps, "{name}: map budget exceeded ({maps} > {})", budget.maps);
+    assert!(
+        reduces <= budget.reduces,
+        "{name}: reduce budget exceeded ({reduces} > {})",
+        budget.reduces
+    );
+    for (i, a) in out.iter().enumerate() {
+        assert!(
+            !out[..i].iter().any(|b| b.task == a.task),
+            "{name}: task {} assigned twice in one batch",
+            a.task
+        );
+        let job = f.jobs.get(a.task.job);
+        assert!(
+            job.task(&a.task).is_pending(),
+            "{name}: assigned non-pending task {}",
+            a.task
+        );
+        if a.task.kind == TaskKind::Reduce {
+            assert!(
+                job.maps_complete(),
+                "{name}: reduce {} assigned before maps_complete()",
+                a.task
+            );
+        }
+        // the decision record must describe the assignment
+        assert_eq!(a.decision.job, a.task.job, "{name}: decision/job mismatch");
+        assert_eq!(a.decision.kind, a.task.kind, "{name}: decision/kind mismatch");
+        assert!(a.decision.candidates > 0, "{name}: zero candidates recorded");
+    }
+}
+
+#[test]
+fn batch_invariants_hold_for_every_scheduler_and_budget() {
+    let budgets = [
+        SlotBudget { maps: 0, reduces: 0 },
+        SlotBudget { maps: 1, reduces: 0 },
+        SlotBudget { maps: 0, reduces: 1 },
+        SlotBudget { maps: 4, reduces: 2 },
+        SlotBudget { maps: 16, reduces: 16 },
+    ];
+    for name in scheduler::ALL_NAMES {
+        for budget in budgets {
+            let f = fixture();
+            let mut s = scheduler::by_name(name, 7).unwrap();
+            s.observe(&SchedEvent::ClusterInfo { total_slots: 32 });
+            let out = assign(&f, s.as_mut(), &big_node(), budget);
+            check_batch(name, &f, &out, budget);
+            if budget.total() == 0 {
+                assert!(out.is_empty(), "{name}: assigned with zero budget");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_exhausts_work_not_budget() {
+    // one small job with 2 maps: a huge budget must yield exactly those 2
+    // maps (reduces stay gated), for every scheduler
+    for name in scheduler::ALL_NAMES {
+        let mut hdfs = Namespace::new(4, 2, 3);
+        let mut jobs = JobTable::new();
+        jobs.submit(spec("only", "u0", JobClass::Small, 2, 3), &mut hdfs);
+        let f = Fixture { jobs, hdfs };
+        let mut s = scheduler::by_name(name, 5).unwrap();
+        s.observe(&SchedEvent::ClusterInfo { total_slots: 32 });
+        let out = assign(&f, s.as_mut(), &big_node(), SlotBudget { maps: 8, reduces: 8 });
+        assert_eq!(out.len(), 2, "{name}: expected both maps, got {}", out.len());
+        assert!(out.iter().all(|a| a.task.kind == TaskKind::Map), "{name}");
+        check_batch(name, &f, &out, SlotBudget { maps: 8, reduces: 8 });
+    }
+}
+
+#[test]
+fn reduces_never_assigned_before_map_phase() {
+    // nothing in this fixture has a complete map phase
+    for name in scheduler::ALL_NAMES {
+        let mut hdfs = Namespace::new(4, 2, 11);
+        let mut jobs = JobTable::new();
+        jobs.submit(spec("x", "u0", JobClass::Small, 2, 2), &mut hdfs);
+        jobs.submit(spec("y", "u1", JobClass::NetHeavy, 3, 4), &mut hdfs);
+        let f = Fixture { jobs, hdfs };
+        let mut s = scheduler::by_name(name, 2).unwrap();
+        let out = assign(&f, s.as_mut(), &big_node(), SlotBudget { maps: 0, reduces: 8 });
+        assert!(
+            out.is_empty(),
+            "{name}: assigned a reduce before any map phase finished"
+        );
+    }
+}
+
+#[test]
+fn observe_tolerates_any_event_interleaving() {
+    let events = [
+        SchedEvent::TaskFinished { job: JobId(9) }, // never started
+        SchedEvent::Feedback { feats: [9; N_FEATURES], label: Label::Bad },
+        SchedEvent::JobCompleted { job: JobId(5) }, // never seen
+        SchedEvent::TaskStarted { job: JobId(0) },
+        SchedEvent::ClusterInfo { total_slots: 64 },
+        SchedEvent::TaskFinished { job: JobId(0) },
+        SchedEvent::TaskFinished { job: JobId(0) }, // more finishes than starts
+        SchedEvent::Feedback { feats: [0; N_FEATURES], label: Label::Good },
+    ];
+    for name in scheduler::ALL_NAMES {
+        let mut s = scheduler::by_name(name, 3).unwrap();
+        // forward, reversed, and doubled orders must all be absorbed
+        for ev in &events {
+            s.observe(ev);
+        }
+        for ev in events.iter().rev() {
+            s.observe(ev);
+        }
+        // assignment still works and still honors the contract afterwards
+        let f = fixture();
+        let budget = SlotBudget { maps: 4, reduces: 4 };
+        let out = assign(&f, s.as_mut(), &big_node(), budget);
+        check_batch(name, &f, &out, budget);
+    }
+}
+
+#[test]
+fn observe_between_batches_keeps_batches_valid() {
+    // interleave realistic started/finished events with repeated batches;
+    // each batch must independently satisfy the contract
+    for name in scheduler::ALL_NAMES {
+        let f = fixture();
+        let mut s = scheduler::by_name(name, 13).unwrap();
+        s.observe(&SchedEvent::ClusterInfo { total_slots: 16 });
+        let budget = SlotBudget { maps: 2, reduces: 1 };
+        for round in 0..4 {
+            let out = assign(&f, s.as_mut(), &big_node(), budget);
+            check_batch(name, &f, &out, budget);
+            for a in &out {
+                s.observe(&SchedEvent::TaskStarted { job: a.task.job });
+            }
+            if round % 2 == 1 {
+                for a in &out {
+                    s.observe(&SchedEvent::TaskFinished { job: a.task.job });
+                }
+            }
+        }
+    }
+}

@@ -147,6 +147,7 @@ fn bayes_warm_start_beats_cold_start() {
         ..Default::default()
     };
     use bayes_sched::bayes::classifier::{Classifier, Label};
+    use bayes_sched::scheduler::SchedEvent;
     let cold = run_with(
         Box::new(BayesScheduler::new(NaiveBayes::new(1.0))),
         &wl,
@@ -162,17 +163,19 @@ fn bayes_warm_start_beats_cold_start() {
         fn name(&self) -> &'static str {
             "tap"
         }
-        fn select(
+        fn assign(
             &mut self,
             v: &bayes_sched::scheduler::SchedView,
             n: &bayes_sched::cluster::node::Node,
-            k: bayes_sched::job::task::TaskKind,
-        ) -> Option<bayes_sched::job::task::TaskRef> {
-            self.inner.select(v, n, k)
+            b: bayes_sched::scheduler::SlotBudget,
+        ) -> Vec<bayes_sched::scheduler::Assignment> {
+            self.inner.assign(v, n, b)
         }
-        fn feedback(&mut self, f: [u8; 8], l: Label) {
-            self.samples.borrow_mut().push((f, l));
-            self.inner.feedback(f, l);
+        fn observe(&mut self, ev: &SchedEvent) {
+            if let SchedEvent::Feedback { feats, label } = ev {
+                self.samples.borrow_mut().push((*feats, *label));
+            }
+            self.inner.observe(ev);
         }
     }
     let samples = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));

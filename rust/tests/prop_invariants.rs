@@ -94,8 +94,9 @@ fn prop_simulation_is_deterministic() {
     });
 }
 
-/// Slots are never oversubscribed during a run. Checked via a scheduler
-/// wrapper that inspects the node at every decision.
+/// Slots are never oversubscribed during a run, and every batch honors the
+/// batch contract. Checked via a scheduler wrapper that inspects the node
+/// and the returned batch at every heartbeat.
 #[test]
 fn prop_slots_never_oversubscribed() {
     struct Watch(Box<dyn scheduler::Scheduler>);
@@ -103,27 +104,32 @@ fn prop_slots_never_oversubscribed() {
         fn name(&self) -> &'static str {
             "watch"
         }
-        fn on_cluster_info(&mut self, t: u32) {
-            self.0.on_cluster_info(t);
-        }
-        fn select(
+        fn assign(
             &mut self,
             view: &scheduler::SchedView,
             node: &Node,
-            kind: TaskKind,
-        ) -> Option<TaskRef> {
+            budget: scheduler::SlotBudget,
+        ) -> Vec<scheduler::Assignment> {
             assert!(node.used_slots(TaskKind::Map) <= node.spec.map_slots);
             assert!(node.used_slots(TaskKind::Reduce) <= node.spec.reduce_slots);
-            self.0.select(view, node, kind)
+            let out = self.0.assign(view, node, budget);
+            // batch contract: per-kind budget respected, no task twice
+            let maps =
+                out.iter().filter(|a| a.task.kind == TaskKind::Map).count() as u32;
+            let reduces = out.len() as u32 - maps;
+            assert!(maps <= budget.maps, "map budget exceeded");
+            assert!(reduces <= budget.reduces, "reduce budget exceeded");
+            for (i, a) in out.iter().enumerate() {
+                assert!(
+                    !out[..i].iter().any(|b| b.task == a.task),
+                    "task {} assigned twice in one batch",
+                    a.task
+                );
+            }
+            out
         }
-        fn feedback(&mut self, f: FeatureVec, l: Label) {
-            self.0.feedback(f, l);
-        }
-        fn on_task_started(&mut self, j: JobId) {
-            self.0.on_task_started(j);
-        }
-        fn on_task_finished(&mut self, j: JobId) {
-            self.0.on_task_finished(j);
+        fn observe(&mut self, ev: &scheduler::SchedEvent) {
+            self.0.observe(ev);
         }
     }
     forall("slots", 20, |g| {
