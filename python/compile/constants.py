@@ -9,8 +9,10 @@ queue and feedback batches to these sizes. Keep in sync with
 MAX_JOBS = 256
 # Feature variables per (job, node) pair: 4 job features (avg cpu, mem, io,
 # net usage declared at submit, 1-10) + 4 node features (cpu usage, idle mem,
-# io load, net load from the last heartbeat, 1-10).
-N_FEATURES = 8
+# io load, net load from the last heartbeat, 1-10) + 2 failure-history
+# features (per-job failed attempts, per-node decayed kill score, 1-10;
+# ATLAS-style failure awareness).
+N_FEATURES = 10
 # The paper's 1-10 discretization -> bins 0..9.
 N_BINS = 10
 # good / bad (class 0 = good, class 1 = bad).
@@ -21,4 +23,4 @@ MAX_BATCH = 128
 # MXU-friendly row tile for the scoring matmul.
 TILE_N = 128
 
-FEATURE_DIM = N_FEATURES * N_BINS  # flattened one-hot width (80)
+FEATURE_DIM = N_FEATURES * N_BINS  # flattened one-hot width (100)

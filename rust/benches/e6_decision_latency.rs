@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 
+use bayes_sched::bayes::features::FailureHistory;
 use bayes_sched::cluster::node::{Node, NodeId, NodeSpec};
 use bayes_sched::config::json::Json;
 use bayes_sched::hdfs::Namespace;
@@ -20,6 +21,12 @@ use bayes_sched::workload::generator::{generate, WorkloadConfig};
 
 /// Map slots a heartbeat typically has to fill in this comparison.
 const SLOTS: u32 = 4;
+
+/// `BENCH_SMOKE=1` shrinks iteration counts and the E6 table so CI can
+/// track the perf trajectory on every push without minutes of wall time.
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
 
 fn queue_fixture(q: usize) -> (JobTable, Namespace) {
     let mut hdfs = Namespace::new(40, 4, 1);
@@ -48,23 +55,37 @@ fn heartbeat_bench(sched_name: &str, q: usize) -> (Measurement, Measurement) {
     );
     let mut sched = scheduler::by_name(sched_name, 1).unwrap();
     sched.observe(&SchedEvent::ClusterInfo { total_slots: 160 });
+    let fails = FailureHistory::new();
+    let (warmup, iters) = if smoke() { (5, 50) } else { (50, 1000) };
 
     // batched: the queue is scored once, all SLOTS slots filled in one call
-    let batched = bench(&format!("assign/batched/{sched_name}/q{q}"), 50, 1000, |_| {
-        let view = SchedView { jobs: &jobs, hdfs: &hdfs, queue: &queue, now: 100.0 };
-        std::hint::black_box(sched.assign(
-            &view,
-            &node,
-            SlotBudget { maps: SLOTS, reduces: 0 },
-        ));
-    });
+    let batched =
+        bench(&format!("assign/batched/{sched_name}/q{q}"), warmup, iters, |_| {
+            let view = SchedView {
+                jobs: &jobs,
+                hdfs: &hdfs,
+                queue: &queue,
+                failures: &fails,
+                now: 100.0,
+            };
+            std::hint::black_box(sched.assign(
+                &view,
+                &node,
+                SlotBudget { maps: SLOTS, reduces: 0 },
+            ));
+        });
     // per-slot baseline: the legacy pattern — one decision per free slot,
     // re-scoring the queue every time
     let per_slot =
-        bench(&format!("assign/per_slot/{sched_name}/q{q}"), 50, 1000, |_| {
+        bench(&format!("assign/per_slot/{sched_name}/q{q}"), warmup, iters, |_| {
             for _ in 0..SLOTS {
-                let view =
-                    SchedView { jobs: &jobs, hdfs: &hdfs, queue: &queue, now: 100.0 };
+                let view = SchedView {
+                    jobs: &jobs,
+                    hdfs: &hdfs,
+                    queue: &queue,
+                    failures: &fails,
+                    now: 100.0,
+                };
                 std::hint::black_box(sched.assign(
                     &view,
                     &node,
@@ -97,6 +118,10 @@ fn main() {
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("e6_decision_latency".into()));
     doc.insert("slots_per_heartbeat".to_string(), Json::Num(SLOTS as f64));
+    doc.insert(
+        "smoke".to_string(),
+        Json::Num(if smoke() { 1.0 } else { 0.0 }),
+    );
     doc.insert("results".to_string(), Json::Obj(results));
     let json = Json::Obj(doc);
     match std::fs::write("BENCH_e6.json", json.to_string_pretty()) {
@@ -105,7 +130,7 @@ fn main() {
     }
 
     println!("\n== E6 scalability table ==");
-    let opts = ExpOpts { quick: false, out_dir: Some("results".into()) };
+    let opts = ExpOpts { quick: smoke(), out_dir: Some("results".into()) };
     for t in experiments::run("e6", &opts).unwrap() {
         println!("{}", t.render());
     }

@@ -1,15 +1,26 @@
-//! Feature variables (paper §4.2): 4 **job features** describing a job's
-//! declared resource appetite, and 4 **node features** describing the
-//! TaskTracker's current capacity, each discretized to 1–10 (bins 0–9).
+//! Feature variables (paper §4.2 + ATLAS-style failure awareness): 4 **job
+//! features** describing a job's declared resource appetite, 4 **node
+//! features** describing the TaskTracker's current capacity, and 2
+//! **failure-history features** (per-job failed attempts, per-node recent
+//! kill rate — Soualhia et al. 1511.01446 / 1507.03562 show failure
+//! history is the strongest scheduling signal under churn). Each feature is
+//! discretized to 1–10 (bins 0–9).
 //!
 //! Keep the layout in sync with `python/compile/constants.py`: feature j of
 //! a sample occupies one-hot slots `j*N_BINS .. (j+1)*N_BINS` of the
 //! flattened table.
 
+use std::collections::BTreeMap;
+
+use crate::cluster::node::NodeId;
+use crate::job::JobId;
+use crate::sim::engine::Time;
+
 use super::discretize::bin_fraction;
 
-/// Total feature variables per (job, node) sample.
-pub const N_FEATURES: usize = 8;
+/// Total feature variables per (job, node) sample:
+/// 4 job + 4 node + 2 failure-history.
+pub const N_FEATURES: usize = 10;
 /// Discretization bins (paper's 1–10 scale).
 pub const N_BINS: usize = 10;
 
@@ -64,11 +75,119 @@ impl NodeFeatures {
     }
 }
 
-/// Assemble the classifier input row for (job, node).
-pub fn feature_vec(job: &JobFeatures, node: &NodeFeatures) -> FeatureVec {
+/// Discretized failure-history bins for one (job, node) pair, read out of a
+/// [`FailureHistory`]. Higher bin = more failure-prone, matching the
+/// direction of every other feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FailureFeats {
+    /// Failed attempts of the job so far, saturating at bin 9.
+    pub job_bin: u8,
+    /// Decayed kill score of the node, saturating at bin 9.
+    pub node_bin: u8,
+}
+
+/// Rolling failure statistics. The **driver** maintains one instance (it is
+/// the component that observes every attempt ending) and exposes it to
+/// schedulers through `SchedView::failures`, so decision-time rows and
+/// feedback-time rows are built from the identical state.
+#[derive(Debug, Clone)]
+pub struct FailureHistory {
+    /// Failed attempts per job; entries are dropped when the job leaves
+    /// the system (bounded memory on long runs).
+    job_failures: BTreeMap<JobId, u32>,
+    /// Exponentially decayed kill score per node: `(score, last_update)`.
+    node_kills: BTreeMap<NodeId, (f64, Time)>,
+    /// Half-life of the per-node kill score, seconds.
+    half_life: f64,
+}
+
+impl Default for FailureHistory {
+    fn default() -> Self {
+        FailureHistory::new()
+    }
+}
+
+impl FailureHistory {
+    /// Default half-life: 10 virtual minutes — long enough that an OOM
+    /// storm marks a node for many heartbeats, short enough that a
+    /// recovered node is forgiven.
+    pub const DEFAULT_HALF_LIFE: f64 = 600.0;
+
+    pub fn new() -> FailureHistory {
+        FailureHistory {
+            job_failures: BTreeMap::new(),
+            node_kills: BTreeMap::new(),
+            half_life: Self::DEFAULT_HALF_LIFE,
+        }
+    }
+
+    pub fn with_half_life(half_life: f64) -> FailureHistory {
+        FailureHistory { half_life: half_life.max(1.0), ..FailureHistory::new() }
+    }
+
+    /// One task attempt of `job` ended in failure on `node`.
+    pub fn record_failure(&mut self, job: JobId, node: NodeId, now: Time) {
+        *self.job_failures.entry(job).or_insert(0) += 1;
+        let score = self.node_score(node, now) + 1.0;
+        self.node_kills.insert(node, (score, now));
+    }
+
+    /// Drop a job's entry once it leaves the system (completed or killed).
+    pub fn forget_job(&mut self, job: JobId) {
+        self.job_failures.remove(&job);
+    }
+
+    /// Failed attempts recorded for `job` (0 if never seen).
+    pub fn job_failures(&self, job: JobId) -> u32 {
+        *self.job_failures.get(&job).unwrap_or(&0)
+    }
+
+    /// Decayed kill score of `node` at virtual time `now`.
+    pub fn node_score(&self, node: NodeId, now: Time) -> f64 {
+        match self.node_kills.get(&node) {
+            Some(&(score, last)) => {
+                let dt = (now - last).max(0.0);
+                score * 0.5f64.powf(dt / self.half_life)
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Jobs currently tracked (leak regression guard).
+    pub fn tracked_jobs(&self) -> usize {
+        self.job_failures.len()
+    }
+
+    /// The two discretized failure features for a (job, node) pair.
+    pub fn feats_for(&self, job: JobId, node: NodeId, now: Time) -> FailureFeats {
+        FailureFeats {
+            job_bin: self.job_failures(job).min(9) as u8,
+            node_bin: (self.node_score(node, now).floor() as u64).min(9) as u8,
+        }
+    }
+}
+
+/// Assemble the classifier input row for (job, node): job bins, node bins,
+/// then the failure-history bins.
+pub fn feature_vec(
+    job: &JobFeatures,
+    node: &NodeFeatures,
+    fail: FailureFeats,
+) -> FeatureVec {
     let j = job.bins();
     let n = node.bins();
-    [j[0], j[1], j[2], j[3], n[0], n[1], n[2], n[3]]
+    [
+        j[0],
+        j[1],
+        j[2],
+        j[3],
+        n[0],
+        n[1],
+        n[2],
+        n[3],
+        fail.job_bin,
+        fail.node_bin,
+    ]
 }
 
 #[cfg(test)]
@@ -76,7 +195,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn layout_job_then_node() {
+    fn layout_job_then_node_then_failures() {
         let job = JobFeatures { cpu: 0.95, mem: 0.05, io: 0.55, net: 0.35 };
         let node = NodeFeatures {
             cpu_used: 0.15,
@@ -84,7 +203,11 @@ mod tests {
             io_load: 0.0,
             net_load: 1.0,
         };
-        assert_eq!(feature_vec(&job, &node), [9, 0, 5, 3, 1, 7, 0, 9]);
+        let fail = FailureFeats { job_bin: 2, node_bin: 7 };
+        assert_eq!(
+            feature_vec(&job, &node, fail),
+            [9, 0, 5, 3, 1, 7, 0, 9, 2, 7]
+        );
     }
 
     #[test]
@@ -96,8 +219,48 @@ mod tests {
             io_load: 9.0,
             net_load: -9.0,
         };
-        for b in feature_vec(&job, &node) {
+        let mut hist = FailureHistory::new();
+        for _ in 0..50 {
+            hist.record_failure(JobId(1), NodeId(0), 10.0);
+        }
+        let fail = hist.feats_for(JobId(1), NodeId(0), 10.0);
+        for b in feature_vec(&job, &node, fail) {
             assert!((b as usize) < N_BINS);
         }
+        assert_eq!(fail.job_bin, 9, "job failure bin must saturate");
+        assert_eq!(fail.node_bin, 9, "node kill bin must saturate");
+    }
+
+    #[test]
+    fn node_score_decays_with_half_life() {
+        let mut hist = FailureHistory::with_half_life(100.0);
+        hist.record_failure(JobId(0), NodeId(3), 0.0);
+        hist.record_failure(JobId(0), NodeId(3), 0.0);
+        assert!((hist.node_score(NodeId(3), 0.0) - 2.0).abs() < 1e-12);
+        assert!((hist.node_score(NodeId(3), 100.0) - 1.0).abs() < 1e-12);
+        assert!((hist.node_score(NodeId(3), 200.0) - 0.5).abs() < 1e-12);
+        // a different node is untouched
+        assert_eq!(hist.node_score(NodeId(4), 50.0), 0.0);
+    }
+
+    #[test]
+    fn forget_job_bounds_memory() {
+        let mut hist = FailureHistory::new();
+        for i in 0..100 {
+            hist.record_failure(JobId(i), NodeId(0), 1.0);
+        }
+        assert_eq!(hist.tracked_jobs(), 100);
+        for i in 0..100 {
+            hist.forget_job(JobId(i));
+        }
+        assert_eq!(hist.tracked_jobs(), 0);
+        assert_eq!(hist.job_failures(JobId(5)), 0);
+    }
+
+    #[test]
+    fn empty_history_yields_zero_bins() {
+        let hist = FailureHistory::new();
+        let f = hist.feats_for(JobId(9), NodeId(9), 123.0);
+        assert_eq!(f, FailureFeats::default());
     }
 }

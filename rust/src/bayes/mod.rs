@@ -1,7 +1,8 @@
 //! The paper's contribution: an online Naive Bayes good/bad job classifier
 //! with overload-rule feedback (paper §4).
 //!
-//! * [`features`] — the 8 discretized feature variables (4 job + 4 node).
+//! * [`features`] — the 10 discretized feature variables (4 job + 4 node +
+//!   2 failure-history, ATLAS-style).
 //! * [`discretize`] — the paper's 1–10 value discretization.
 //! * [`classifier`] — [`Classifier`] trait + [`NaiveBayes`], the pure-rust
 //!   implementation (also the differential-testing oracle for the
@@ -19,6 +20,9 @@ pub mod utility;
 
 pub use classifier::{Classifier, ClassifyResult, Label, NaiveBayes};
 pub use discretize::bin_fraction;
-pub use features::{FeatureVec, JobFeatures, NodeFeatures, N_BINS, N_FEATURES};
+pub use features::{
+    FailureFeats, FailureHistory, FeatureVec, JobFeatures, NodeFeatures, N_BINS,
+    N_FEATURES,
+};
 pub use overload::{OverloadObservation, OverloadRule};
 pub use utility::UtilityFn;

@@ -25,13 +25,15 @@ USAGE:
                    [--save-model FILE.json] [--load-model FILE.json]
                    [--explain]
   repro compare    [--jobs J] [--nodes N] [--seeds K] [--quick]
-  repro experiment <e1..e10|all> [--quick] [--out DIR]
+  repro experiment <e1..e12|all> [--quick] [--out DIR]
   repro yarn       [--policy P] [--jobs J] [--nodes N] [--seed S] [--explain]
+                   [--mtbf SECS] [--mttr SECS]
   repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
   repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
   repro info
 
-Schedulers: fifo fair capacity bayes bayes-xla random threshold-fifo
+Schedulers: fifo fair capacity bayes bayes-blind bayes-xla random
+            threshold-fifo
 Policies:   any scheduler name (unified trait), plus the yarn-fifo,
             yarn-fair, yarn-capacity, yarn-bayes aliases
 Mixes:      balanced | cpu_heavy|io_heavy|mem_heavy|net_heavy|small | cpu:<f>
@@ -180,10 +182,24 @@ fn cmd_run(args: &Args) -> Result<i32> {
             None => println!("scheduler '{}' has no model to save", cfg.scheduler),
         }
     }
-    if jt.metrics.node_failures > 0 {
+    if jt.metrics.node_failures > 0 || jt.metrics.task_failures > 0 {
         println!(
-            "node failures: {} (jobs killed: {})",
-            jt.metrics.node_failures, jt.metrics.failed_jobs
+            "failures: {} node, {} task attempts (jobs killed: {})",
+            jt.metrics.node_failures,
+            jt.metrics.task_failures,
+            jt.metrics.failed_jobs
+        );
+    }
+    if jt.metrics.speculative_launches > 0 {
+        println!(
+            "speculation: {} backup copies launched, {} won their race",
+            jt.metrics.speculative_launches, jt.metrics.speculative_wins
+        );
+    }
+    if jt.engine.clamped_events() > 0 {
+        println!(
+            "warning: {} past-time events clamped to now",
+            jt.engine.clamped_events()
         );
     }
     print_explain(&jt.metrics, args);
@@ -224,7 +240,7 @@ fn cmd_experiment(args: &Args) -> Result<i32> {
     let id = args
         .positionals
         .get(1)
-        .ok_or_else(|| anyhow!("experiment id required (e1..e10 or all)"))?;
+        .ok_or_else(|| anyhow!("experiment id required (e1..e12 or all)"))?;
     let opts = ExpOpts {
         quick: args.flag("quick"),
         out_dir: args.opt("out").map(PathBuf::from),
@@ -257,12 +273,18 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
         ..Default::default()
     });
     let cluster = Cluster::homogeneous(nodes, (nodes / 10).max(1));
+    let mut ycfg = YarnConfig::default();
+    let mtbf = args.opt_f64("mtbf", 0.0)?;
+    if mtbf > 0.0 {
+        ycfg.failures.mtbf = Some(mtbf);
+    }
+    ycfg.failures.mttr = args.opt_f64("mttr", ycfg.failures.mttr)?;
     let mut rm = ResourceManager::new(
         cluster,
         yarn_policy_by_name(policy, 1.0)?,
         specs,
         seed,
-        YarnConfig::default(),
+        ycfg,
     );
     rm.metrics.explain = args.flag("explain");
     rm.run();

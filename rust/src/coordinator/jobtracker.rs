@@ -5,11 +5,21 @@
 //!
 //! Drives the discrete-event simulation: job arrivals enter the queue,
 //! TaskTracker heartbeats trigger scheduling decisions and overload-rule
-//! feedback, task completions update job progress, and OOM failures
-//! re-queue tasks.
+//! feedback, task completions update job progress, OOM kills and node
+//! deaths re-queue (or fail over) task attempts, and every lifecycle
+//! transition is narrated to the scheduler through the [`SchedEvent`]
+//! stream — including the failure detail the learned policy conditions on.
+//!
+//! Speculative execution: a scheduler may propose a backup copy of a
+//! running task (see `scheduler/api.rs` module docs, D6). The tracker
+//! launches it like any attempt; the first copy to complete wins and the
+//! loser is cancelled through per-attempt event stamps.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::bayes::classifier::Label;
+use crate::bayes::features::FailureHistory;
 use crate::bayes::overload::OverloadRule;
 use crate::cluster::heartbeat::HeartbeatConfig;
 use crate::cluster::node::NodeId;
@@ -22,7 +32,7 @@ use crate::job::task::{TaskKind, TaskRef, TaskState};
 use crate::job::JobId;
 use crate::metrics::Metrics;
 use crate::scheduler::api::{
-    Assignment, SchedEvent, SchedView, Scheduler, SlotBudget,
+    Assignment, FailReason, SchedEvent, SchedView, Scheduler, SlotBudget,
 };
 use crate::sim::engine::{Engine, Time};
 use crate::sim::event::Event;
@@ -32,6 +42,14 @@ use crate::sim::event::Event;
 #[derive(Debug, Clone, Copy)]
 struct PendingFeedback {
     feats: crate::bayes::features::FeatureVec,
+}
+
+/// Which live attempt of a task an event refers to (speculative execution
+/// gives a task up to two concurrent attempts on two different nodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Attempt {
+    Primary,
+    Backup,
 }
 
 /// Node failure injection: exponential time-to-failure / time-to-repair.
@@ -89,6 +107,10 @@ pub struct JobTracker {
     pub scheduler: Box<dyn Scheduler>,
     pub metrics: Metrics,
     pub cfg: TrackerConfig,
+    /// Failure history feeding the failure-aware features; maintained here
+    /// (the tracker observes every attempt end) and shared with the
+    /// scheduler through `SchedView::failures`.
+    pub failures: FailureHistory,
     /// Workload sorted by submit time, drained into arrival events.
     pending_specs: std::vec::IntoIter<JobSpec>,
     /// The spec whose arrival event is in flight (submitted when it fires,
@@ -96,9 +118,14 @@ pub struct JobTracker {
     next_spec: Option<JobSpec>,
     /// Per-node placements since that node's last heartbeat.
     pending_feedback: Vec<Vec<PendingFeedback>>,
-    /// Tasks doomed to OOM: excluded from completion rescheduling so their
-    /// pending TaskFail event stays valid.
-    doomed: std::collections::HashSet<TaskRef>,
+    /// Attempts doomed to OOM, keyed by (node, task) since a speculative
+    /// pair can doom independently: excluded from completion rescheduling
+    /// so their pending TaskFail event stays valid.
+    doomed: std::collections::HashSet<(NodeId, TaskRef)>,
+    /// Launch-time feature rows of in-flight attempts, so an OOM kill can
+    /// feed back a `Bad` sample for the exact row the decision was scored
+    /// on.
+    inflight_feats: HashMap<(NodeId, TaskRef), crate::bayes::features::FeatureVec>,
     /// Failure-injection RNG (own stream: does not perturb workloads).
     fail_rng: crate::sim::rng::Pcg,
     arrivals_done: bool,
@@ -132,10 +159,12 @@ impl JobTracker {
             scheduler,
             metrics: Metrics::new(),
             cfg,
+            failures: FailureHistory::new(),
             pending_specs: specs.into_iter(),
             next_spec: None,
             pending_feedback: vec![Vec::new(); n_nodes],
             doomed: std::collections::HashSet::new(),
+            inflight_feats: HashMap::new(),
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA11),
             arrivals_done: false,
         };
@@ -164,8 +193,8 @@ impl JobTracker {
             Some(spec) => {
                 let at = spec.submit_time;
                 self.next_spec = Some(spec);
-                // placeholder id; the spec is submitted when the event fires
-                self.engine.schedule(at, Event::JobArrival(JobId(u32::MAX)));
+                // payload-free: the spec is submitted when the event fires
+                self.engine.schedule(at, Event::JobArrival);
             }
             None => self.arrivals_done = true,
         }
@@ -190,7 +219,7 @@ impl JobTracker {
                 break;
             }
             match ev {
-                Event::JobArrival(_) => self.on_job_arrival(),
+                Event::JobArrival => self.on_job_arrival(),
                 Event::Heartbeat(node) => self.on_heartbeat(node),
                 Event::TaskComplete { node, task, generation } => {
                     self.on_task_complete(node, task, generation)
@@ -201,7 +230,6 @@ impl JobTracker {
                 Event::NodeFail(node) => self.on_node_fail(node),
                 Event::NodeRecover(node) => self.on_node_recover(node),
                 Event::MetricsTick => self.on_metrics_tick(),
-                Event::ArrivalsDone => {}
             }
             if self.arrivals_done
                 && self.jobs.all_complete()
@@ -222,6 +250,58 @@ impl JobTracker {
             self.cluster.nodes.iter().map(|n| n.oom_kills as u64).sum();
     }
 
+    // --------------------------------------------------------- attempts --
+
+    /// Resolve which live attempt of `tref` an event with `(node,
+    /// generation)` refers to; `None` = the event is stale.
+    fn current_attempt(
+        &self,
+        tref: &TaskRef,
+        node: NodeId,
+        generation: u32,
+    ) -> Option<Attempt> {
+        let task = self.jobs.get(tref.job).task(tref);
+        if let TaskState::Running { node: n, .. } = task.state {
+            if n == node && task.generation == generation {
+                return Some(Attempt::Primary);
+            }
+        }
+        if let Some(s) = task.speculative {
+            if s.node == node && task.spec_generation == generation {
+                return Some(Attempt::Backup);
+            }
+        }
+        None
+    }
+
+    /// Remove the losing copy of `tref` from `node_id` (it was cancelled
+    /// because the other copy won). Reported as a `TaskFinished` — a
+    /// cancelled loser is not a failure signal.
+    fn cancel_attempt_on(&mut self, node_id: NodeId, tref: TaskRef, now: Time) {
+        self.cluster.node_mut(node_id).advance(now);
+        let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
+        self.doomed.remove(&(node_id, tref));
+        self.inflight_feats.remove(&(node_id, tref));
+        self.scheduler.observe(&SchedEvent::TaskFinished {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+        });
+        self.reschedule(node_id, horizons);
+    }
+
+    /// If `id` has left the system (succeeded or killed) and no attempt of
+    /// it remains on any node, tell the scheduler it is gone and drop its
+    /// failure history. Every attempt-end path funnels through this, so
+    /// the notification fires exactly once, after the true last attempt.
+    fn notify_if_drained(&mut self, id: JobId) {
+        let job = self.jobs.get(id);
+        if job.finish_time.is_some() && job.fully_drained() {
+            self.scheduler.observe(&SchedEvent::JobCompleted { job: id });
+            self.failures.forget_job(id);
+        }
+    }
+
     // ---------------------------------------------------------- failure --
 
     fn on_node_fail(&mut self, node_id: NodeId) {
@@ -230,23 +310,44 @@ impl JobTracker {
         }
         let now = self.engine.now();
         self.metrics.node_failures += 1;
-        // lost tasks: requeue every task the node was running (their
-        // pending completion events go stale naturally — the state check
-        // in task_is_current rejects them once requeued)
+        // lost attempts: every task copy the node was running. Stale
+        // completion events die via the per-attempt stamp checks.
         let lost = self.cluster.node_mut(node_id).fail(now);
         for rec in lost {
-            self.doomed.remove(&rec.task);
-            // a failed job's tasks are dropped silently
-            if self.jobs.get(rec.task.job).finish_time.is_none() {
-                self.jobs.requeue_task(&rec.task);
+            let tref = rec.task;
+            self.doomed.remove(&(node_id, tref));
+            self.inflight_feats.remove(&(node_id, tref));
+            self.failures.record_failure(tref.job, node_id, now);
+            self.metrics.task_failures += 1;
+            let task = self.jobs.get(tref.job).task(&tref);
+            let attempt = task.attempts;
+            let lost_backup =
+                task.speculative.is_some_and(|s| s.node == node_id);
+            let surviving_backup = !lost_backup && task.speculative.is_some();
+            self.scheduler.observe(&SchedEvent::TaskFailed {
+                job: tref.job,
+                node: node_id,
+                kind: tref.kind,
+                attempt,
+                reason: FailReason::NodeLost,
+            });
+            if lost_backup {
+                // the backup died; the primary keeps running elsewhere
+                self.jobs.get_mut(tref.job).task_mut(&tref).cancel_speculative();
+            } else if surviving_backup {
+                // the primary died but its backup lives: fail over in
+                // place, no work re-queued
+                self.jobs.get_mut(tref.job).task_mut(&tref).promote_speculative();
+            } else if self.jobs.get(tref.job).finish_time.is_none() {
+                self.jobs.requeue_task(&tref);
             } else {
                 // keep the task state machine consistent for drained jobs
-                self.jobs.get_mut(rec.task.job).task_mut(&rec.task).requeue();
+                self.jobs.get_mut(tref.job).task_mut(&tref).requeue();
             }
-            self.scheduler
-                .observe(&SchedEvent::TaskFinished { job: rec.task.job });
+            self.notify_if_drained(tref.job);
         }
         self.pending_feedback[node_id.0 as usize].clear();
+        self.scheduler.observe(&SchedEvent::NodeFailed { node: node_id });
         let mttr = self.cfg.failures.mttr.max(1.0);
         let dt = self.fail_rng.exp(1.0 / mttr);
         self.engine.schedule_in(dt, Event::NodeRecover(node_id));
@@ -255,6 +356,7 @@ impl JobTracker {
     fn on_node_recover(&mut self, node_id: NodeId) {
         let now = self.engine.now();
         self.cluster.node_mut(node_id).recover(now);
+        self.scheduler.observe(&SchedEvent::NodeRecovered { node: node_id });
         // rejoin the heartbeat cycle and the failure process
         self.engine
             .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
@@ -310,7 +412,10 @@ impl JobTracker {
 
         // 2. one batched assign() call fills every free slot of this
         // heartbeat (perf §Perf: the queue is scored once per heartbeat,
-        // not once per slot — Hadoop's assignTasks batch semantics).
+        // not once per slot — Hadoop's assignTasks batch semantics). The
+        // call happens even with an empty pending queue: schedulers with a
+        // straggler path propose speculative copies exactly when nothing
+        // is pending but slow attempts are still running.
         let budget = {
             let node = self.cluster.node(node_id);
             SlotBudget {
@@ -319,7 +424,7 @@ impl JobTracker {
             }
         };
         let queue = self.jobs.schedulable();
-        if budget.total() > 0 && !queue.is_empty() {
+        if budget.total() > 0 {
             // snapshot the features the whole batch was scored against, so
             // each placement's feedback sample matches its decision input
             let node_feats = self.cluster.node(node_id).features();
@@ -328,6 +433,7 @@ impl JobTracker {
                     jobs: &self.jobs,
                     hdfs: &self.hdfs,
                     queue: &queue,
+                    failures: &self.failures,
                     now,
                 };
                 let node = self.cluster.node(node_id);
@@ -339,13 +445,25 @@ impl JobTracker {
             for a in assignments {
                 // driver-side validation: the batch contract forbids these,
                 // but a buggy scheduler must not corrupt the simulation
-                let valid = self.cluster.node(node_id).free_slots(a.task.kind) > 0
-                    && self.jobs.get(a.task.job).task(&a.task).is_pending();
-                debug_assert!(valid, "scheduler broke the batch contract: {}", a.task);
-                if !valid {
-                    continue;
+                if a.decision.speculative {
+                    let valid = self.cluster.node(node_id).free_slots(a.task.kind)
+                        > 0
+                        && self.speculation_target_ok(&a.task, node_id);
+                    debug_assert!(valid, "broken speculative proposal: {}", a.task);
+                    if !valid {
+                        continue;
+                    }
+                    self.launch(a, node_id, now, &node_feats, true);
+                } else {
+                    let valid = self.cluster.node(node_id).free_slots(a.task.kind)
+                        > 0
+                        && self.jobs.get(a.task.job).task(&a.task).is_pending();
+                    debug_assert!(valid, "scheduler broke the batch contract: {}", a.task);
+                    if !valid {
+                        continue;
+                    }
+                    self.launch(a, node_id, now, &node_feats, false);
                 }
-                self.launch(a, node_id, now, &node_feats);
                 launched += 1;
             }
             // metrics count what actually launched, not what was proposed
@@ -361,22 +479,32 @@ impl JobTracker {
         }
     }
 
+    /// Speculation contract: the task's primary runs on a *different*
+    /// node, no backup exists yet, and the job is still live.
+    fn speculation_target_ok(&self, tref: &TaskRef, node_id: NodeId) -> bool {
+        let job = self.jobs.get(tref.job);
+        if job.finish_time.is_some() {
+            return false;
+        }
+        let task = job.task(tref);
+        task.speculative.is_none()
+            && matches!(task.state, TaskState::Running { node: n, .. } if n != node_id)
+    }
+
     // ----------------------------------------------------------- launch --
 
-    fn launch(
+    /// Per-attempt demand/work for launching `tref` on `node_id`, adjusted
+    /// for input locality (recorded in metrics).
+    fn attempt_demand_work(
         &mut self,
-        assignment: Assignment,
+        tref: &TaskRef,
         node_id: NodeId,
-        now: Time,
-        node_feats: &crate::bayes::features::NodeFeatures,
-    ) {
-        let task_ref = assignment.task;
-        // per-task demand and work, adjusted for locality
-        let job = self.jobs.get(task_ref.job);
+    ) -> (crate::cluster::resources::Resources, f64) {
+        let job = self.jobs.get(tref.job);
         let mut demand = job.demand;
-        let mut work = job.task(&task_ref).work;
-        if task_ref.kind == TaskKind::Map {
-            let block = job.task(&task_ref).block.expect("map without block");
+        let mut work = job.task(tref).work;
+        if tref.kind == TaskKind::Map {
+            let block = job.task(tref).block.expect("map without block");
             let loc = self.hdfs.locality(block, node_id);
             self.metrics.record_locality(loc);
             work *= locality_multiplier(loc);
@@ -386,22 +514,53 @@ impl JobTracker {
             demand.net += 0.05;
         }
         demand.clamp_non_negative();
+        (demand, work)
+    }
+
+    /// Launch one attempt on `node_id` — a regular launch of a pending
+    /// task, or (`speculative`) a backup copy of a task already running
+    /// elsewhere. Resource/feedback treatment is identical; only the
+    /// job-side bookkeeping and the event stamp differ.
+    fn launch(
+        &mut self,
+        assignment: Assignment,
+        node_id: NodeId,
+        now: Time,
+        node_feats: &crate::bayes::features::NodeFeatures,
+        speculative: bool,
+    ) {
+        let task_ref = assignment.task;
+        let (demand, work) = self.attempt_demand_work(&task_ref, node_id);
 
         // queue overload feedback sample for this node's next heartbeat,
         // built from the heartbeat-start features the batch was scored on
-        let feats =
-            crate::bayes::features::feature_vec(&job.spec.profile, node_feats);
+        let fail = self.failures.feats_for(task_ref.job, node_id, now);
+        let feats = crate::bayes::features::feature_vec(
+            &self.jobs.get(task_ref.job).spec.profile,
+            node_feats,
+            fail,
+        );
         self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
+        self.inflight_feats.insert((node_id, task_ref), feats);
 
         // OOM cliff check *before* mutating the node
         let dooms = self.cluster.node(node_id).would_oom(&demand);
 
         // job/task state (start_task maintains the pending counters and
-        // the table's ready set)
-        self.jobs.start_task(&task_ref, node_id, now);
-        let generation = self.jobs.get(task_ref.job).task(&task_ref).generation;
-        self.scheduler
-            .observe(&SchedEvent::TaskStarted { job: task_ref.job });
+        // the table's ready set; a backup leaves them untouched)
+        let generation = if speculative {
+            self.jobs.start_speculative(&task_ref, node_id, now);
+            self.metrics.speculative_launches += 1;
+            self.jobs.get(task_ref.job).task(&task_ref).spec_generation
+        } else {
+            self.jobs.start_task(&task_ref, node_id, now);
+            self.jobs.get(task_ref.job).task(&task_ref).generation
+        };
+        self.scheduler.observe(&SchedEvent::TaskStarted {
+            job: task_ref.job,
+            node: node_id,
+            kind: task_ref.kind,
+        });
         self.metrics
             .record_trace(now, node_id, task_ref, assignment.decision);
 
@@ -412,7 +571,7 @@ impl JobTracker {
             .add_task(task_ref, demand, work, now);
         if dooms {
             self.cluster.node_mut(node_id).oom_kills += 1;
-            self.doomed.insert(task_ref);
+            self.doomed.insert((node_id, task_ref));
             self.engine.schedule(
                 now + self.cfg.oom_kill_delay,
                 Event::TaskFail { node: node_id, task: task_ref, generation },
@@ -422,74 +581,141 @@ impl JobTracker {
         self.reschedule(node_id, horizons);
     }
 
-    /// Re-issue completion events for every running task on a node.
-    /// Doomed tasks are skipped so their pending TaskFail stays valid.
+    /// Re-issue completion events for every attempt running on a node,
+    /// stamping each with a fresh per-attempt generation. Doomed attempts
+    /// are skipped so their pending TaskFail stays valid.
     fn reschedule(&mut self, node_id: NodeId, horizons: Vec<(TaskRef, Time)>) {
         for (tref, at) in horizons {
-            if self.doomed.contains(&tref) {
+            if self.doomed.contains(&(node_id, tref)) {
                 continue;
             }
             let task = self.jobs.get_mut(tref.job).task_mut(&tref);
-            // invalidate the previous completion event
-            task.generation += 1;
-            let generation = task.generation;
+            let stamp = task.next_stamp();
+            let on_primary =
+                matches!(task.state, TaskState::Running { node: n, .. } if n == node_id);
+            if on_primary {
+                task.generation = stamp;
+            } else if task.speculative.is_some_and(|s| s.node == node_id) {
+                task.spec_generation = stamp;
+            } else {
+                debug_assert!(false, "rescheduling {tref} which is not on {node_id}");
+                continue;
+            }
             self.engine.schedule(
                 at,
-                Event::TaskComplete { node: node_id, task: tref, generation },
+                Event::TaskComplete { node: node_id, task: tref, generation: stamp },
             );
         }
     }
 
     // ------------------------------------------------------- completion --
 
-    fn task_is_current(&self, tref: &TaskRef, node: NodeId, generation: u32) -> bool {
-        let task = self.jobs.get(tref.job).task(tref);
-        task.generation == generation
-            && matches!(task.state, TaskState::Running { node: n, .. } if n == node)
-    }
-
     fn on_task_complete(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
-        if !self.task_is_current(&tref, node_id, generation) {
+        let Some(which) = self.current_attempt(&tref, node_id, generation) else {
             return; // stale event
-        }
+        };
         let now = self.engine.now();
         self.cluster.node_mut(node_id).advance(now);
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
+        self.doomed.remove(&(node_id, tref));
+        self.inflight_feats.remove(&(node_id, tref));
+        // first copy to finish wins; cancel the losing copy, if any
+        match which {
+            Attempt::Primary => {
+                if let Some(s) = self.jobs.get(tref.job).task(&tref).speculative {
+                    self.cancel_attempt_on(s.node, tref, now);
+                    self.jobs.get_mut(tref.job).task_mut(&tref).cancel_speculative();
+                }
+            }
+            Attempt::Backup => {
+                self.metrics.speculative_wins += 1;
+                let pnode = match self.jobs.get(tref.job).task(&tref).state {
+                    TaskState::Running { node, .. } => node,
+                    _ => unreachable!("backup without running primary"),
+                };
+                self.cancel_attempt_on(pnode, tref, now);
+                // the winner becomes the primary so completion below sees
+                // a task running on `node_id`
+                self.jobs.get_mut(tref.job).task_mut(&tref).promote_speculative();
+            }
+        }
         self.jobs.complete_task(&tref, now);
+        self.scheduler.observe(&SchedEvent::TaskFinished {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+        });
         let job = self.jobs.get(tref.job);
         let finished = !job.failed && job.is_complete();
-        self.scheduler
-            .observe(&SchedEvent::TaskFinished { job: tref.job });
-        self.doomed.remove(&tref);
         if finished {
             self.jobs.mark_complete(tref.job, now);
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
             self.metrics.record_outcome(tref.job, outcome);
-            self.scheduler
-                .observe(&SchedEvent::JobCompleted { job: tref.job });
         }
+        // covers both fresh completions and killed jobs draining their
+        // last attempt
+        self.notify_if_drained(tref.job);
         self.reschedule(node_id, horizons);
     }
 
     fn on_task_fail(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
-        if !self.task_is_current(&tref, node_id, generation) {
+        let Some(which) = self.current_attempt(&tref, node_id, generation) else {
             return;
-        }
+        };
         let now = self.engine.now();
         self.cluster.node_mut(node_id).advance(now);
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
-        self.jobs.requeue_task(&tref);
-        let job = self.jobs.get(tref.job);
-        let attempts = job.task(&tref).attempts;
-        let kill = attempts >= self.cfg.max_task_attempts && job.finish_time.is_none();
-        self.doomed.remove(&tref);
-        self.scheduler
-            .observe(&SchedEvent::TaskFinished { job: tref.job });
-        // Hadoop semantics: a task out of attempts kills the whole job.
-        if kill {
-            self.jobs.mark_failed(tref.job, now);
-            self.metrics.failed_jobs += 1;
+        self.doomed.remove(&(node_id, tref));
+        self.failures.record_failure(tref.job, node_id, now);
+        self.metrics.task_failures += 1;
+        // the OOM-killed placement feeds back a Bad sample for the exact
+        // feature row it was scored on — this is what gives the
+        // failure-history bins their likelihood mass
+        if let Some(feats) = self.inflight_feats.remove(&(node_id, tref)) {
+            self.scheduler
+                .observe(&SchedEvent::Feedback { feats, label: Label::Bad });
+            self.metrics.record_feedback(Label::Bad);
         }
+        self.jobs.get_mut(tref.job).task_mut(&tref).failed_attempts += 1;
+        let attempt = self.jobs.get(tref.job).task(&tref).attempts;
+        self.scheduler.observe(&SchedEvent::TaskFailed {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+            attempt,
+            reason: FailReason::Oom,
+        });
+        let other_alive = match which {
+            Attempt::Backup => true, // the primary still runs by definition
+            Attempt::Primary => {
+                self.jobs.get(tref.job).task(&tref).speculative.is_some()
+            }
+        };
+        if other_alive {
+            // one copy died; the task lives on through the other — no
+            // requeue, no kill check
+            match which {
+                Attempt::Backup => {
+                    self.jobs.get_mut(tref.job).task_mut(&tref).cancel_speculative();
+                }
+                Attempt::Primary => {
+                    self.jobs.get_mut(tref.job).task_mut(&tref).promote_speculative();
+                }
+            }
+        } else {
+            self.jobs.requeue_task(&tref);
+            let job = self.jobs.get(tref.job);
+            // Hadoop semantics: a task out of FAILED attempts kills the
+            // whole job (speculative launches and node-loss kills do not
+            // erode the budget).
+            if job.task(&tref).failed_attempts >= self.cfg.max_task_attempts
+                && job.finish_time.is_none()
+            {
+                self.jobs.mark_failed(tref.job, now);
+                self.metrics.failed_jobs += 1;
+            }
+        }
+        self.notify_if_drained(tref.job);
         self.reschedule(node_id, horizons);
     }
 }
@@ -573,5 +799,12 @@ mod tests {
             .sum();
         let recorded: u64 = jt.metrics.locality.values().sum();
         assert_eq!(recorded, total_maps);
+    }
+
+    #[test]
+    fn failure_history_is_empty_after_clean_run() {
+        // every job left the system, so its failure entry must be gone
+        let jt = small_run(6);
+        assert_eq!(jt.failures.tracked_jobs(), 0);
     }
 }

@@ -37,7 +37,8 @@ pub struct JobOutcome {
     pub submit_time: Time,
     pub first_launch: Option<Time>,
     pub finish_time: Time,
-    /// Total task attempts minus tasks = re-executions due to failures.
+    /// Total task attempts minus tasks = extra executions beyond one per
+    /// task (failure re-runs plus speculative backup copies).
     pub wasted_attempts: u32,
 }
 
@@ -168,6 +169,25 @@ impl Job {
             TaskKind::Map => self.pending_map_count += 1,
             TaskKind::Reduce => self.pending_reduce_count += 1,
         }
+    }
+
+    /// Launch a speculative backup copy of a running task. The pending
+    /// counters are untouched (the task is not pending); only the attempt
+    /// count grows.
+    pub fn start_speculative(&mut self, r: &TaskRef, node: crate::cluster::node::NodeId, now: Time) {
+        self.task_mut(r).start_speculative(node, now);
+    }
+
+    /// No attempt of this job is left anywhere in the cluster (neither a
+    /// primary `Running` state nor a live backup). Drivers gate the final
+    /// `JobCompleted` notification on this for killed jobs, so schedulers
+    /// can drop per-job state without missing late attempt-end events.
+    pub fn fully_drained(&self) -> bool {
+        !self
+            .maps
+            .iter()
+            .chain(&self.reduces)
+            .any(|t| t.is_running() || t.speculative.is_some())
     }
 
     pub fn running_tasks(&self) -> usize {

@@ -11,7 +11,7 @@ pub mod task;
 pub use job::{Job, JobOutcome, JobSpec};
 pub use profile::{demand_from_profile, JobClass};
 pub use queue::JobTable;
-pub use task::{Task, TaskKind, TaskRef, TaskState};
+pub use task::{SpecAttempt, Task, TaskKind, TaskRef, TaskState};
 
 /// Job identifier, dense from 0 in submission order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -96,6 +96,12 @@ impl JobTable {
         self.sync_ready(r.job);
     }
 
+    /// Launch a speculative backup copy (pending counters untouched, so
+    /// the ready set cannot change).
+    pub fn start_speculative(&mut self, r: &TaskRef, node: NodeId, now: Time) {
+        self.get_mut(r.job).start_speculative(r, node, now);
+    }
+
     /// The scheduler's queue view: incomplete jobs with schedulable tasks,
     /// submission order (ties elsewhere are broken by scheduler policy).
     pub fn schedulable(&self) -> Vec<JobId> {
@@ -105,6 +111,13 @@ impl JobTable {
     /// Incomplete job count (queued or running).
     pub fn active_count(&self) -> usize {
         self.active.len()
+    }
+
+    /// Incomplete jobs (queued or running), submission order. The straggler
+    /// scan iterates this — jobs with no pending task (hence absent from
+    /// [`JobTable::schedulable`]) are exactly where stragglers live.
+    pub fn active_ids(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.active.iter().copied()
     }
 
     /// Mark a job finished.

@@ -39,10 +39,19 @@ impl std::fmt::Display for TaskRef {
 pub enum TaskState {
     /// Waiting in the job for a slot.
     Pending,
-    /// Executing on a node since `start`.
+    /// Executing on a node since `start` (the *primary* attempt; a
+    /// concurrent backup copy lives in [`Task::speculative`]).
     Running { node: NodeId, start: Time },
     /// Finished at `finish` (wall time includes contention slowdowns).
     Done { finish: Time },
+}
+
+/// A live speculative backup attempt, racing the primary attempt on a
+/// different node (first copy to finish wins; the loser is cancelled).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecAttempt {
+    pub node: NodeId,
+    pub start: Time,
 }
 
 /// One map or reduce task.
@@ -55,11 +64,24 @@ pub struct Task {
     /// Input block (maps only) — drives the locality decision.
     pub block: Option<BlockId>,
     pub state: TaskState,
-    /// Execution attempts (> 1 after failures/OOM re-queues).
+    /// Execution attempts (> 1 after failures/OOM re-queues or a
+    /// speculative backup launch).
     pub attempts: u32,
-    /// Bumped whenever the task's completion event is rescheduled; stale
-    /// events carry the old generation and are dropped.
+    /// Attempts that ended in an OOM failure. This — not `attempts` —
+    /// feeds the `max_task_attempts` job-kill check (Hadoop's maxattempts
+    /// counts FAILED attempts; node-loss kills and speculative launches
+    /// must not erode a job's failure budget).
+    pub failed_attempts: u32,
+    /// Event stamp of the **primary** attempt: completion/fail events
+    /// carry the stamp current at schedule time; stale events mismatch and
+    /// are dropped. Stamps for both attempts are allocated from one shared
+    /// monotone counter ([`Task::next_stamp`]), so a `(node, stamp)` pair
+    /// can never be reused by a different attempt.
     pub generation: u32,
+    /// Event stamp of the live (or most recent) backup attempt.
+    pub spec_generation: u32,
+    /// The live backup attempt, if one is racing the primary.
+    pub speculative: Option<SpecAttempt>,
 }
 
 impl Task {
@@ -71,7 +93,10 @@ impl Task {
             block: Some(block),
             state: TaskState::Pending,
             attempts: 0,
+            failed_attempts: 0,
             generation: 0,
+            spec_generation: 0,
+            speculative: None,
         }
     }
 
@@ -83,8 +108,17 @@ impl Task {
             block: None,
             state: TaskState::Pending,
             attempts: 0,
+            failed_attempts: 0,
             generation: 0,
+            spec_generation: 0,
+            speculative: None,
         }
+    }
+
+    /// Allocate the next event stamp (shared monotone counter across both
+    /// attempts — see the `generation` field docs).
+    pub fn next_stamp(&self) -> u32 {
+        self.generation.max(self.spec_generation) + 1
     }
 
     pub fn is_pending(&self) -> bool {
@@ -102,22 +136,57 @@ impl Task {
     /// Transition Pending -> Running.
     pub fn start(&mut self, node: NodeId, now: Time) {
         debug_assert!(self.is_pending(), "starting non-pending task");
+        debug_assert!(self.speculative.is_none(), "pending task with backup");
         self.state = TaskState::Running { node, start: now };
         self.attempts += 1;
-        self.generation += 1;
+        self.generation = self.next_stamp();
     }
 
     /// Transition Running -> Done.
     pub fn complete(&mut self, now: Time) {
         debug_assert!(self.is_running(), "completing non-running task");
+        debug_assert!(self.speculative.is_none(), "completing with live backup");
         self.state = TaskState::Done { finish: now };
     }
 
     /// Transition Running -> Pending (failure re-queue).
     pub fn requeue(&mut self) {
         debug_assert!(self.is_running(), "requeueing non-running task");
+        debug_assert!(self.speculative.is_none(), "requeueing with live backup");
         self.state = TaskState::Pending;
-        self.generation += 1;
+        self.generation = self.next_stamp();
+    }
+
+    /// Launch a speculative backup copy on `node` while the primary keeps
+    /// running elsewhere.
+    pub fn start_speculative(&mut self, node: NodeId, now: Time) {
+        debug_assert!(self.is_running(), "backup of a non-running task");
+        debug_assert!(self.speculative.is_none(), "task already has a backup");
+        debug_assert!(
+            !matches!(self.state, TaskState::Running { node: n, .. } if n == node),
+            "backup on the primary's own node"
+        );
+        self.attempts += 1;
+        self.spec_generation = self.next_stamp();
+        self.speculative = Some(SpecAttempt { node, start: now });
+    }
+
+    /// Drop the live backup attempt (it lost the race, failed, or its node
+    /// died). Its pending events die with `speculative == None`.
+    pub fn cancel_speculative(&mut self) {
+        debug_assert!(self.speculative.is_some(), "no backup to cancel");
+        self.speculative = None;
+    }
+
+    /// The primary's node died but the backup lives: the backup becomes
+    /// the primary in place, keeping its event stamp valid (the pending
+    /// completion event re-validates through the primary path because the
+    /// `(node, stamp)` pair is unchanged).
+    pub fn promote_speculative(&mut self) {
+        let s = self.speculative.take().expect("no backup to promote");
+        debug_assert!(self.is_running(), "promoting backup of non-running task");
+        self.state = TaskState::Running { node: s.node, start: s.start };
+        self.generation = self.spec_generation;
     }
 }
 
@@ -159,5 +228,55 @@ mod tests {
     fn display_formats() {
         let r = TaskRef { job: JobId(7), kind: TaskKind::Map, index: 3 };
         assert_eq!(r.to_string(), "job_0007_m00003");
+    }
+
+    #[test]
+    fn speculative_lifecycle_and_stamps() {
+        let mut t = Task::map(0, 10.0, BlockId(0));
+        t.start(NodeId(0), 0.0);
+        assert_eq!((t.attempts, t.generation), (1, 1));
+        t.start_speculative(NodeId(1), 5.0);
+        assert_eq!(t.attempts, 2);
+        // backup stamp drawn from the shared monotone counter
+        assert_eq!(t.spec_generation, 2);
+        assert_eq!(t.speculative, Some(SpecAttempt { node: NodeId(1), start: 5.0 }));
+        // primary wins: backup cancelled, then completion
+        t.cancel_speculative();
+        assert!(t.speculative.is_none());
+        t.complete(8.0);
+        assert!(t.is_done());
+    }
+
+    #[test]
+    fn promotion_keeps_backup_stamp_valid_as_primary() {
+        let mut t = Task::map(0, 10.0, BlockId(0));
+        t.start(NodeId(0), 0.0);
+        t.start_speculative(NodeId(2), 4.0);
+        let backup_stamp = t.spec_generation;
+        t.promote_speculative();
+        assert_eq!(t.state, TaskState::Running { node: NodeId(2), start: 4.0 });
+        assert_eq!(t.generation, backup_stamp);
+        assert!(t.speculative.is_none());
+        // stamps stay strictly monotone after promotion
+        assert!(t.next_stamp() > backup_stamp);
+        t.complete(20.0);
+        assert!(t.is_done());
+    }
+
+    #[test]
+    fn stamps_never_repeat_across_requeues_and_backups() {
+        let mut t = Task::map(0, 10.0, BlockId(0));
+        let mut seen = std::collections::HashSet::new();
+        t.start(NodeId(0), 0.0);
+        assert!(seen.insert(t.generation));
+        t.start_speculative(NodeId(1), 1.0);
+        assert!(seen.insert(t.spec_generation));
+        t.cancel_speculative();
+        t.requeue();
+        assert!(seen.insert(t.generation));
+        t.start(NodeId(1), 2.0);
+        assert!(seen.insert(t.generation));
+        t.start_speculative(NodeId(0), 3.0);
+        assert!(seen.insert(t.spec_generation));
     }
 }

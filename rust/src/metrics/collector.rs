@@ -56,6 +56,12 @@ pub struct Metrics {
     pub failed_jobs: u64,
     /// TaskTracker failures injected.
     pub node_failures: u64,
+    /// Task attempts that ended in failure (OOM kill or node loss).
+    pub task_failures: u64,
+    /// Speculative backup copies launched.
+    pub speculative_launches: u64,
+    /// Backup copies that finished before their primary (stragglers saved).
+    pub speculative_wins: u64,
     /// Periodic cluster snapshots (empty unless timeline_interval > 0).
     pub timeline: Vec<super::TimelineSample>,
     /// Scheduling decisions taken (tasks assigned).

@@ -41,6 +41,11 @@ pub struct RunSummary {
     pub overload_seconds: f64,
     pub oom_kills: u64,
     pub wasted_attempts: u64,
+    pub failed_jobs: u64,
+    pub task_failures: u64,
+    pub node_failures: u64,
+    pub speculative_launches: u64,
+    pub speculative_wins: u64,
     pub locality_node: f64,
     pub locality_rack: f64,
     pub locality_remote: f64,
@@ -76,6 +81,11 @@ pub fn summarize(jt: &JobTracker, cfg: &RunConfig) -> RunSummary {
         overload_seconds: m.overload_seconds,
         oom_kills: m.oom_kills,
         wasted_attempts: m.wasted_attempts(),
+        failed_jobs: m.failed_jobs,
+        task_failures: m.task_failures,
+        node_failures: m.node_failures,
+        speculative_launches: m.speculative_launches,
+        speculative_wins: m.speculative_wins,
         locality_node: m.locality_fraction("node_local"),
         locality_rack: m.locality_fraction("rack_local"),
         locality_remote: m.locality_fraction("remote"),

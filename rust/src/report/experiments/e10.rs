@@ -1,52 +1,76 @@
-//! E10: the Bayes policy inside the YARN RM vs YARN-FIFO/Fair, under the
-//! declared-vs-actual misdeclaration model (paper §2's architecture with
-//! §4's algorithm).
+//! E10: the failure sweep — an MTBF grid × schedulers on a memory-hungry
+//! mix, measuring what failure awareness buys. The headline comparison is
+//! `bayes` (failure-history features + speculative execution) against
+//! `bayes-blind` (the identical learner with the failure bins masked off):
+//! ATLAS (1511.01446) predicts the failure-aware arm loses fewer jobs and
+//! finishes sooner once churn sets in. FIFO anchors the no-learning end.
 
-use crate::cluster::Cluster;
+use crate::coordinator::builder::RunConfig;
+use crate::coordinator::jobtracker::FailureConfig;
 use crate::report::table::{fnum, Table};
-use crate::workload::generator::{generate, WorkloadConfig};
-use crate::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+use crate::workload::generator::{Mix, WorkloadConfig};
 
-use super::common::ExpOpts;
+use super::common::{run_once, ExpOpts};
+
+/// The schedulers of the sweep, no-learning anchor first.
+pub const SWEEP_SCHEDULERS: [&str; 3] = ["fifo", "bayes-blind", "bayes"];
 
 pub fn e10(opts: &ExpOpts) -> Vec<Table> {
+    let mtbfs: Vec<Option<f64>> = if opts.quick {
+        vec![None, Some(400.0)]
+    } else {
+        vec![None, Some(1200.0), Some(600.0), Some(300.0)]
+    };
     let mut table = Table::new(
-        "E10 YARN mode: RM policy comparison (misdeclared demands)",
+        "E10 failure sweep: failure-aware vs failure-blind bayes (mttr = 90s, mem-heavy mix)",
         &[
-            "policy",
+            "mtbf_s",
+            "scheduler",
             "makespan_s",
-            "mean_latency_s",
-            "overload_rate",
+            "failed_jobs",
+            "task_failures",
             "oom_kills",
-            "overload_seconds",
+            "wasted_attempts",
+            "spec_launches",
+            "spec_wins",
         ],
     );
-    for policy in ["yarn-fifo", "yarn-fair", "yarn-bayes"] {
-        let cluster = Cluster::homogeneous(opts.scaled(40, 8) as u32, 4);
-        let specs = generate(&WorkloadConfig {
-            n_jobs: opts.scaled(200, 25),
-            arrival_rate: 0.5,
-            seed: 10,
-            ..Default::default()
-        });
-        let mut rm = ResourceManager::new(
-            cluster,
-            yarn_policy_by_name(policy, 1.0).unwrap(),
-            specs,
-            10,
-            YarnConfig::default(),
-        );
-        rm.run();
-        let m = &rm.metrics;
-        let lat = m.latencies();
-        table.row(vec![
-            policy.into(),
-            fnum(m.makespan),
-            fnum(crate::metrics::stats::mean(&lat)),
-            fnum(m.overload_rate()),
-            fnum(m.oom_kills as f64),
-            fnum(m.overload_seconds),
-        ]);
+    for mtbf in &mtbfs {
+        for sched in SWEEP_SCHEDULERS {
+            let mut cfg = RunConfig {
+                scheduler: sched.into(),
+                n_nodes: opts.scaled(40, 8) as u32,
+                n_racks: 4,
+                workload: WorkloadConfig {
+                    n_jobs: opts.scaled(200, 25),
+                    arrival_rate: 0.5,
+                    // memory-hungry mix: OOM churn is the failure mode the
+                    // failure features must learn around
+                    mix: Mix(vec![
+                        (crate::job::profile::JobClass::MemHeavy, 0.45),
+                        (crate::job::profile::JobClass::CpuHeavy, 0.20),
+                        (crate::job::profile::JobClass::IoHeavy, 0.15),
+                        (crate::job::profile::JobClass::Small, 0.20),
+                    ]),
+                    seed: 12,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            cfg.tracker.failures = FailureConfig { mtbf: *mtbf, mttr: 90.0 };
+            let r = run_once(&cfg);
+            table.row(vec![
+                mtbf.map_or("none".to_string(), |m| format!("{m:.0}")),
+                sched.into(),
+                fnum(r.makespan),
+                format!("{}", r.failed_jobs),
+                format!("{}", r.task_failures),
+                format!("{}", r.oom_kills),
+                format!("{}", r.wasted_attempts),
+                format!("{}", r.speculative_launches),
+                format!("{}", r.speculative_wins),
+            ]);
+        }
     }
     vec![table]
 }

@@ -1,0 +1,52 @@
+//! E12: the Bayes policy inside the YARN RM vs YARN-FIFO/Fair, under the
+//! declared-vs-actual misdeclaration model (paper §2's architecture with
+//! §4's algorithm). (Numbered E10 before the failure sweep took that slot.)
+
+use crate::cluster::Cluster;
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::{generate, WorkloadConfig};
+use crate::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+use super::common::ExpOpts;
+
+pub fn e12(opts: &ExpOpts) -> Vec<Table> {
+    let mut table = Table::new(
+        "E12 YARN mode: RM policy comparison (misdeclared demands)",
+        &[
+            "policy",
+            "makespan_s",
+            "mean_latency_s",
+            "overload_rate",
+            "oom_kills",
+            "overload_seconds",
+        ],
+    );
+    for policy in ["yarn-fifo", "yarn-fair", "yarn-bayes"] {
+        let cluster = Cluster::homogeneous(opts.scaled(40, 8) as u32, 4);
+        let specs = generate(&WorkloadConfig {
+            n_jobs: opts.scaled(200, 25),
+            arrival_rate: 0.5,
+            seed: 10,
+            ..Default::default()
+        });
+        let mut rm = ResourceManager::new(
+            cluster,
+            yarn_policy_by_name(policy, 1.0).unwrap(),
+            specs,
+            10,
+            YarnConfig::default(),
+        );
+        rm.run();
+        let m = &rm.metrics;
+        let lat = m.latencies();
+        table.row(vec![
+            policy.into(),
+            fnum(m.makespan),
+            fnum(crate::metrics::stats::mean(&lat)),
+            fnum(m.overload_rate()),
+            fnum(m.oom_kills as f64),
+            fnum(m.overload_seconds),
+        ]);
+    }
+    vec![table]
+}

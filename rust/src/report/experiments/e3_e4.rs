@@ -103,7 +103,8 @@ pub fn e4(opts: &ExpOpts) -> Vec<Table> {
             io_load: rng.f64() * 0.7,
             net_load: rng.f64() * 0.7,
         };
-        feature_vec(&job, &node)
+        // synthetic oracle rows: failure-free cluster, bins stay 0
+        feature_vec(&job, &node, crate::bayes::features::FailureFeats::default())
     };
     // held-out test set
     let test: Vec<(FeatureVec, Label)> = (0..opts.scaled(2000, 300))

@@ -72,7 +72,8 @@ pub fn e8(opts: &ExpOpts) -> Vec<Table> {
             "job_features_only",
             Box::new(
                 BayesScheduler::new(NaiveBayes::new(1.0)).with_feature_mask([
-                    true, true, true, true, false, false, false, false,
+                    true, true, true, true, false, false, false, false, false,
+                    false,
                 ]),
             ),
         ),
@@ -80,9 +81,26 @@ pub fn e8(opts: &ExpOpts) -> Vec<Table> {
             "node_features_only",
             Box::new(
                 BayesScheduler::new(NaiveBayes::new(1.0)).with_feature_mask([
-                    false, false, false, false, true, true, true, true,
+                    false, false, false, false, true, true, true, true, false,
+                    false,
                 ]),
             ),
+        ),
+        (
+            "failure_blind",
+            Box::new(
+                BayesScheduler::new(NaiveBayes::new(1.0))
+                    .with_feature_mask(crate::scheduler::FAILURE_BLIND_MASK),
+            ),
+        ),
+        (
+            "no_speculation",
+            Box::new(BayesScheduler::new(NaiveBayes::new(1.0)).with_speculation(
+                crate::scheduler::SpeculationConfig {
+                    enabled: false,
+                    ..Default::default()
+                },
+            )),
         ),
         ("alpha_0.1", Box::new(BayesScheduler::new(NaiveBayes::new(0.1)))),
         ("alpha_10", Box::new(BayesScheduler::new(NaiveBayes::new(10.0)))),

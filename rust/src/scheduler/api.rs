@@ -17,20 +17,50 @@
 //!   arrives as one [`SchedEvent`]. Schedulers must tolerate events in any
 //!   driver interleaving, including events for jobs they have never seen.
 //!
-//! ## Migration from the legacy per-slot API
+//! ## The event stream
 //!
-//! | old (per-slot)                         | new (batched / event-driven)              |
-//! |----------------------------------------|-------------------------------------------|
-//! | `select(view, node, kind) -> TaskRef`  | `assign(view, node, budget) -> Vec<Assignment>` |
-//! | `on_cluster_info(total_slots)`         | `observe(SchedEvent::ClusterInfo { .. })` |
-//! | `feedback(feats, label)`               | `observe(SchedEvent::Feedback { .. })`    |
-//! | `on_task_started(job)`                 | `observe(SchedEvent::TaskStarted { .. })` |
-//! | `on_task_finished(job)`                | `observe(SchedEvent::TaskFinished { .. })`|
-//! | `on_job_completed(job)`                | `observe(SchedEvent::JobCompleted { .. })`|
+//! Every driver notification is one [`SchedEvent`]. The lifecycle events
+//! carry full attempt detail (node, kind, attempt number, failure cause) so
+//! failure-aware schedulers can condition on outcome history instead of
+//! seeing every ending as an undifferentiated "task left a node":
+//!
+//! | event                     | when the driver sends it                            |
+//! |---------------------------|-----------------------------------------------------|
+//! | `ClusterInfo { .. }`      | once at startup (slot totals)                       |
+//! | `Feedback { .. }`         | overload-rule verdict for an earlier placement; also an extra `Bad` sample when a placement ends in an OOM kill |
+//! | `TaskStarted { .. }`      | every attempt launch (regular or speculative)       |
+//! | `TaskFinished { .. }`     | an attempt ended **without a failure signal**: it completed, or it was a speculation loser cancelled because the other copy won |
+//! | `TaskFailed { .. }`       | an attempt ended in failure: OOM kill (`FailReason::Oom`) or its node died (`FailReason::NodeLost`) |
+//! | `JobCompleted { .. }`     | the job left the system — succeeded or was killed — and **all** of its attempts have drained from the cluster |
+//! | `NodeFailed { .. }`       | a TaskTracker died (after the per-task `TaskFailed`s) |
+//! | `NodeRecovered { .. }`    | a failed TaskTracker rejoined                       |
+//!
+//! Pairing invariant: every `TaskStarted` is eventually matched by exactly
+//! one `TaskFinished` *or* `TaskFailed` for that attempt, and
+//! `JobCompleted` arrives only after the job's last attempt ended — so
+//! per-job bookkeeping (e.g. the Fair scheduler's pool counters) can be
+//! dropped on `JobCompleted` without leaking.
 //!
 //! Each [`Assignment`] carries a [`Decision`] record (chosen job,
-//! posterior, utility, locality, candidates considered) that drivers thread
-//! into metrics and the `repro run --explain` trace.
+//! posterior, utility, locality, failure bins, candidates considered,
+//! speculative flag) that drivers thread into metrics and the
+//! `repro run --explain` trace.
+//!
+//! ## Speculative execution (deviation D6)
+//!
+//! The paper does not discuss stragglers; Hadoop does (speculative
+//! execution). A scheduler may return an [`Assignment`] with
+//! `Decision::speculative == true` proposing a **backup copy** of a task
+//! that is already running elsewhere. Contract: the task's primary attempt
+//! is `Running` on a *different* node, the task has no live backup yet, and
+//! the proposal consumes slot budget like any other assignment. The driver
+//! launches the copy; whichever attempt finishes first wins, the loser is
+//! cancelled through the per-attempt generation mechanism and reported as a
+//! `TaskFinished` (a cancelled loser is not a failure signal). If the
+//! primary's node dies while a backup runs, the backup is promoted in place
+//! and the job loses no work. Only `BayesScheduler` currently speculates
+//! (when a task runs far past the median elapsed time of its job's running
+//! tasks, and only toward nodes the classifier calls good).
 //!
 //! ## Batch contract
 //!
@@ -48,8 +78,8 @@
 use std::collections::BTreeMap;
 
 use crate::bayes::classifier::Label;
-use crate::bayes::features::FeatureVec;
-use crate::cluster::node::Node;
+use crate::bayes::features::{FailureFeats, FailureHistory, FeatureVec};
+use crate::cluster::node::{Node, NodeId};
 use crate::hdfs::locality::Locality;
 use crate::hdfs::Namespace;
 use crate::job::job::Job;
@@ -64,6 +94,10 @@ pub struct SchedView<'a> {
     pub hdfs: &'a Namespace,
     /// Schedulable jobs (have a pending task), submission order.
     pub queue: &'a [JobId],
+    /// Failure history the driver maintains from the lifecycle events —
+    /// the same state used to build feedback rows, so decision-time and
+    /// feedback-time feature rows agree.
+    pub failures: &'a FailureHistory,
     pub now: Time,
 }
 
@@ -103,14 +137,29 @@ pub struct Decision {
     pub utility: Option<f32>,
     /// Input locality of the picked task (maps only).
     pub locality: Option<Locality>,
+    /// Failure-history bins the decision conditioned on (failure-aware
+    /// schedulers only).
+    pub fail: Option<FailureFeats>,
     /// Queue candidates considered for this slot.
     pub candidates: u32,
+    /// True when this assignment proposes a speculative backup copy of a
+    /// task already running elsewhere (module docs, D6).
+    pub speculative: bool,
 }
 
 impl Decision {
     /// A decision record with no learned scores (heuristic schedulers).
     pub fn unscored(job: JobId, kind: TaskKind, locality: Option<Locality>, candidates: u32) -> Decision {
-        Decision { job, kind, posterior: None, utility: None, locality, candidates }
+        Decision {
+            job,
+            kind,
+            posterior: None,
+            utility: None,
+            locality,
+            fail: None,
+            candidates,
+            speculative: false,
+        }
     }
 }
 
@@ -121,6 +170,9 @@ impl std::fmt::Display for Decision {
             TaskKind::Reduce => "reduce",
         };
         write!(f, "{} [{kind}]", self.job)?;
+        if self.speculative {
+            write!(f, " SPECULATIVE")?;
+        }
         if let Some(p) = self.posterior {
             write!(f, " posterior={p:.3}")?;
         }
@@ -129,6 +181,9 @@ impl std::fmt::Display for Decision {
         }
         if let Some(l) = self.locality {
             write!(f, " locality={}", l.name())?;
+        }
+        if let Some(fb) = self.fail {
+            write!(f, " fail_bins=j{}/n{}", fb.job_bin, fb.node_bin)?;
         }
         write!(f, " candidates={}", self.candidates)
     }
@@ -141,7 +196,17 @@ pub struct Assignment {
     pub decision: Decision,
 }
 
-/// The single event stream drivers feed back into a scheduler.
+/// Why a task attempt failed (carried on [`SchedEvent::TaskFailed`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The attempt was OOM-killed (memory oversubscription on its node).
+    Oom,
+    /// The attempt's node died (crash / partition); the work is lost.
+    NodeLost,
+}
+
+/// The single event stream drivers feed back into a scheduler. See the
+/// module docs for the event table and the started/ended pairing invariant.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SchedEvent {
     /// Cluster-level facts, sent once at startup (the Capacity scheduler
@@ -149,14 +214,35 @@ pub enum SchedEvent {
     ClusterInfo { total_slots: u32 },
     /// Overload-rule verdict for an earlier placement (the Bayes learner's
     /// training signal; the baselines ignore it — that is the paper's
-    /// point).
+    /// point). Placements that end in an OOM kill additionally feed back a
+    /// `Bad`-labelled sample, so failure-history features earn likelihood
+    /// mass in the classifier.
     Feedback { feats: FeatureVec, label: Label },
-    /// A task of `job` started on some node.
-    TaskStarted { job: JobId },
-    /// A task of `job` left a node (completed, failed, or lost).
-    TaskFinished { job: JobId },
-    /// `job` finished entirely.
+    /// A task attempt of `job` started on `node` (regular launch or
+    /// speculative backup copy).
+    TaskStarted { job: JobId, node: NodeId, kind: TaskKind },
+    /// A task attempt of `job` ended on `node` without a failure signal:
+    /// it completed, or it was a speculation loser cancelled because the
+    /// other copy won.
+    TaskFinished { job: JobId, node: NodeId, kind: TaskKind },
+    /// A task attempt of `job` ended on `node` in failure. `attempt` is
+    /// the per-task attempt count after this failure.
+    TaskFailed {
+        job: JobId,
+        node: NodeId,
+        kind: TaskKind,
+        attempt: u32,
+        reason: FailReason,
+    },
+    /// `job` left the system (succeeded, or was killed after exhausting a
+    /// task's attempt budget) and all of its attempts have drained.
+    /// Schedulers can drop per-job state here.
     JobCompleted { job: JobId },
+    /// A TaskTracker died. Sent after the per-task `TaskFailed` events for
+    /// the attempts it was running.
+    NodeFailed { node: NodeId },
+    /// A failed TaskTracker rejoined the cluster (empty, fresh).
+    NodeRecovered { node: NodeId },
 }
 
 /// A job scheduler (FIFO / Fair / Capacity / Bayes / ...), batched and

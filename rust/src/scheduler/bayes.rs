@@ -7,12 +7,25 @@
 //! locality-first until the [`SlotBudget`] or the queue runs dry. Overload
 //! feedback flows back through `observe(SchedEvent::Feedback)` into the
 //! classifier.
+//!
+//! Failure awareness (ATLAS-style, 1511.01446): every scored row includes
+//! the two failure-history bins from [`SchedView::failures`], so the
+//! posterior conditions on "this job keeps failing" / "this node keeps
+//! killing tasks" — the drivers label OOM-killed placements `Bad`, which
+//! gives those bins likelihood mass.
+//!
+//! Straggler path (deviation D6): when slot budget remains after the
+//! regular pass, `assign` scans the *active* jobs (not just the pending
+//! queue) for tasks running far past the median elapsed time of their
+//! job's running tasks and proposes speculative backup copies — but only
+//! when the classifier calls this (job, node) pair good, so speculation
+//! never floods a node the model already distrusts.
 
 use crate::bayes::classifier::{Classifier, MAX_JOBS};
 use crate::bayes::features::{feature_vec, FeatureVec};
 use crate::bayes::utility::UtilityFn;
 use crate::cluster::node::Node;
-use crate::job::task::TaskKind;
+use crate::job::task::{TaskKind, TaskRef, TaskState};
 
 use super::api::{
     Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
@@ -49,13 +62,47 @@ pub enum StarvationPolicy {
     Wait,
 }
 
+/// Straggler / speculative-execution knobs (deviation D6). A backup copy
+/// of a running task is proposed when the task's elapsed time exceeds
+/// `slowdown_factor ×` the median elapsed time of its job's running tasks
+/// of the same kind, with the guardrails below. Elapsed time stands in for
+/// progress (the simulator does not model progress reports).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeculationConfig {
+    pub enabled: bool,
+    /// A task is a straggler when `elapsed > slowdown_factor * median`.
+    pub slowdown_factor: f64,
+    /// Never speculate a task younger than this (seconds) — short tasks
+    /// finish before the backup would help.
+    pub min_elapsed: f64,
+    /// Median needs at least this many running peers to mean anything.
+    pub min_running: usize,
+    /// Backup copies proposed per heartbeat at most (Hadoop similarly caps
+    /// speculative tasks so duplicates cannot flood the cluster).
+    pub max_per_heartbeat: u32,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        SpeculationConfig {
+            enabled: true,
+            slowdown_factor: 2.0,
+            min_elapsed: 25.0,
+            min_running: 3,
+            max_per_heartbeat: 1,
+        }
+    }
+}
+
 /// The Bayes scheduler. Generic over the classifier implementation so the
 /// same policy code runs on [`crate::bayes::NaiveBayes`] (pure rust) or
 /// [`crate::runtime::XlaClassifier`] (PJRT artifacts).
 pub struct BayesScheduler<C: Classifier> {
     classifier: C,
+    name: &'static str,
     utility: UtilityFn,
     policy: StarvationPolicy,
+    speculation: SpeculationConfig,
     /// E8 ablation: features with `false` are collapsed to bin 0 both at
     /// classify and feedback time, removing their signal.
     feature_mask: [bool; crate::bayes::features::N_FEATURES],
@@ -71,8 +118,10 @@ impl<C: Classifier> BayesScheduler<C> {
     pub fn new(classifier: C) -> Self {
         BayesScheduler {
             classifier,
+            name: "bayes",
             utility: UtilityFn::default(),
             policy: StarvationPolicy::WaitUnlessIdle,
+            speculation: SpeculationConfig::default(),
             feature_mask: [true; crate::bayes::features::N_FEATURES],
             scratch_feats: Vec::with_capacity(MAX_JOBS),
             scratch_utility: Vec::with_capacity(MAX_JOBS),
@@ -85,13 +134,26 @@ impl<C: Classifier> BayesScheduler<C> {
         self
     }
 
+    /// Override the reported scheduler name (named `by_name` variants like
+    /// `bayes-blind` keep the name/constructor drift guard honest).
+    pub fn with_name(mut self, name: &'static str) -> Self {
+        self.name = name;
+        self
+    }
+
     pub fn with_policy(mut self, policy: StarvationPolicy) -> Self {
         self.policy = policy;
         self
     }
 
-    /// Restrict the classifier to a feature subset (E8 ablation). The
-    /// first four entries are job features, the last four node features.
+    pub fn with_speculation(mut self, speculation: SpeculationConfig) -> Self {
+        self.speculation = speculation;
+        self
+    }
+
+    /// Restrict the classifier to a feature subset (E8 ablation / the
+    /// failure-blind baseline). Layout: 4 job features, 4 node features,
+    /// 2 failure-history features.
     pub fn with_feature_mask(
         mut self,
         mask: [bool; crate::bayes::features::N_FEATURES],
@@ -111,11 +173,151 @@ impl<C: Classifier> BayesScheduler<C> {
     pub fn classifier_mut(&mut self) -> &mut C {
         &mut self.classifier
     }
+
+    /// Straggler scan (module docs): propose backup copies for tasks far
+    /// behind their job's running-task median, gated on the classifier
+    /// calling this (job, node) pair good. Consumes whatever per-kind
+    /// budget the regular pass left.
+    fn speculate(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        budget: SlotBudget,
+        out: &mut Vec<Assignment>,
+    ) {
+        let used = |k: TaskKind, out: &[Assignment]| {
+            out.iter().filter(|a| a.task.kind == k).count() as u32
+        };
+        let mut left_maps = budget.maps.saturating_sub(used(TaskKind::Map, out));
+        let mut left_reduces =
+            budget.reduces.saturating_sub(used(TaskKind::Reduce, out));
+        if left_maps == 0 && left_reduces == 0 {
+            return;
+        }
+        let cfg = self.speculation;
+        // 1. gather stragglers across ALL active jobs (a job with every
+        // task running is not in the pending queue — that tail is exactly
+        // where stragglers live)
+        let mut cands: Vec<(TaskRef, f64)> = Vec::new();
+        for id in view.jobs.active_ids() {
+            let job = view.jobs.get(id);
+            if job.finish_time.is_some() {
+                continue;
+            }
+            for tasks in [&job.maps, &job.reduces] {
+                let kind_left = match tasks.first().map(|t| t.kind) {
+                    Some(TaskKind::Map) => left_maps,
+                    Some(TaskKind::Reduce) => left_reduces,
+                    None => 0,
+                };
+                if kind_left == 0 {
+                    continue;
+                }
+                let mut elapsed: Vec<f64> = tasks
+                    .iter()
+                    .filter_map(|t| match t.state {
+                        TaskState::Running { start, .. } => Some(view.now - start),
+                        _ => None,
+                    })
+                    .collect();
+                if elapsed.len() < cfg.min_running {
+                    continue;
+                }
+                elapsed.sort_by(f64::total_cmp);
+                let median = elapsed[elapsed.len() / 2];
+                if median <= 0.0 {
+                    continue;
+                }
+                for t in tasks.iter() {
+                    let TaskState::Running { node: pnode, start } = t.state else {
+                        continue;
+                    };
+                    if t.speculative.is_some() || pnode == node.id {
+                        continue;
+                    }
+                    let el = view.now - start;
+                    if el >= cfg.min_elapsed && el > cfg.slowdown_factor * median {
+                        let tref = TaskRef { job: id, kind: t.kind, index: t.index };
+                        cands.push((tref, el / median));
+                    }
+                }
+            }
+        }
+        if cands.is_empty() {
+            return;
+        }
+        // most-behind first; fully deterministic tie-break
+        cands.sort_by(|a, b| {
+            let key = |t: &TaskRef| {
+                (t.job.0, matches!(t.kind, TaskKind::Reduce) as u8, t.index)
+            };
+            b.1.total_cmp(&a.1).then_with(|| key(&a.0).cmp(&key(&b.0)))
+        });
+        cands.truncate(MAX_JOBS);
+        // 2. score the straggler rows against this node, failure bins in
+        let node_feats = node.features();
+        let mut rows = Vec::with_capacity(cands.len());
+        let mut utils = Vec::with_capacity(cands.len());
+        let mut fails = Vec::with_capacity(cands.len());
+        for (tref, _) in &cands {
+            let job = view.jobs.get(tref.job);
+            let fail = view.failures.feats_for(tref.job, node.id, view.now);
+            fails.push(fail);
+            rows.push(apply_mask(
+                &self.feature_mask,
+                feature_vec(&job.spec.profile, &node_feats, fail),
+            ));
+            utils.push(
+                self.utility
+                    .eval(job.spec.priority, view.now - job.spec.submit_time)
+                    as f32,
+            );
+        }
+        let result = self.classifier.classify(&rows, &utils);
+        let total = cands.len() as u32;
+        let mut proposed = 0u32;
+        for (i, (tref, _)) in cands.iter().enumerate() {
+            if proposed >= cfg.max_per_heartbeat {
+                break;
+            }
+            let left = match tref.kind {
+                TaskKind::Map => &mut left_maps,
+                TaskKind::Reduce => &mut left_reduces,
+            };
+            if *left == 0 || !result.is_good(i) {
+                continue;
+            }
+            let job = view.jobs.get(tref.job);
+            let locality = match tref.kind {
+                TaskKind::Map => Some(view.hdfs.locality(
+                    job.task(tref).block.expect("map without block"),
+                    node.id,
+                )),
+                TaskKind::Reduce => None,
+            };
+            out.push(Assignment {
+                task: *tref,
+                decision: Decision {
+                    job: tref.job,
+                    kind: tref.kind,
+                    posterior: Some(result.p_good[i]),
+                    utility: Some(utils[i]),
+                    locality,
+                    // the exact bins the scored row was built from
+                    fail: Some(fails[i]),
+                    candidates: total,
+                    speculative: true,
+                },
+            });
+            *left -= 1;
+            proposed += 1;
+        }
+    }
 }
 
 impl<C: Classifier> Scheduler for BayesScheduler<C> {
     fn name(&self) -> &'static str {
-        "bayes"
+        self.name
     }
 
     fn assign(
@@ -125,9 +327,46 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
         budget: SlotBudget,
     ) -> Vec<Assignment> {
         let mut out = Vec::new();
-        if budget.total() == 0 || view.queue.is_empty() {
+        if budget.total() == 0 {
             return out;
         }
+        if !view.queue.is_empty() {
+            self.assign_queued(view, node, budget, &mut out);
+        }
+        if self.speculation.enabled {
+            self.speculate(view, node, budget, &mut out);
+        }
+        out
+    }
+
+    fn observe(&mut self, ev: &SchedEvent) {
+        if let SchedEvent::Feedback { feats, label } = ev {
+            let masked = self.apply_mask(*feats);
+            self.classifier.observe(masked, *label);
+        }
+    }
+
+    fn export_model(&self) -> Option<crate::config::json::Json> {
+        let (counts, class_counts, alpha) = self.classifier.export_state();
+        let nb = crate::bayes::classifier::NaiveBayes::from_state(
+            counts,
+            class_counts,
+            alpha,
+        );
+        Some(crate::bayes::persist::to_json(&nb))
+    }
+}
+
+impl<C: Classifier> BayesScheduler<C> {
+    /// The regular pass: score the pending queue once, fill the budget in
+    /// expected-utility order (paper §4).
+    fn assign_queued(
+        &mut self,
+        view: &SchedView,
+        node: &Node,
+        budget: SlotBudget,
+        out: &mut Vec<Assignment>,
+    ) {
         // 1. score the whole queue ONCE for this heartbeat. Scoring window:
         // the artifact scores at most MAX_JOBS rows; if the queue is
         // longer, keep the oldest jobs (submission order = utility-age
@@ -185,9 +424,10 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
         self.scratch_feats.clear();
         self.scratch_utility.clear();
         for j in &cands {
+            let fail = view.failures.feats_for(j.id, node.id, view.now);
             self.scratch_feats.push(apply_mask(
                 &self.feature_mask,
-                feature_vec(&j.spec.profile, &node_feats),
+                feature_vec(&j.spec.profile, &node_feats, fail),
             ));
             self.scratch_utility.push(
                 self.utility
@@ -208,6 +448,7 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
         // 2. fill the budget from the per-heartbeat scores
         let mut batch = BatchState::new();
         let utilities = &self.scratch_utility;
+        let failures = view.failures;
         let place = |i: usize,
                      kind: TaskKind,
                      batch: &mut BatchState,
@@ -227,7 +468,13 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
                             posterior: Some(result.p_good[i]),
                             utility: Some(utilities[i]),
                             locality: loc,
+                            fail: Some(failures.feats_for(
+                                cands[i].id,
+                                node.id,
+                                view.now,
+                            )),
                             candidates: cands.len() as u32,
+                            speculative: false,
                         },
                     });
                     true
@@ -241,7 +488,7 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
                 let mut placed = by_score
                     .iter()
                     .filter(|&&i| result.is_good(i))
-                    .any(|&i| place(i, kind, &mut batch, &mut out));
+                    .any(|&i| place(i, kind, &mut batch, &mut *out));
                 // nothing classified good: starvation policy (D3)
                 if !placed {
                     let fallback = match self.policy {
@@ -261,7 +508,7 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
                         });
                         placed = order
                             .iter()
-                            .any(|&i| place(i, kind, &mut batch, &mut out));
+                            .any(|&i| place(i, kind, &mut batch, &mut *out));
                     }
                 }
                 if !placed {
@@ -269,23 +516,5 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
                 }
             }
         }
-        out
-    }
-
-    fn observe(&mut self, ev: &SchedEvent) {
-        if let SchedEvent::Feedback { feats, label } = ev {
-            let masked = self.apply_mask(*feats);
-            self.classifier.observe(masked, *label);
-        }
-    }
-
-    fn export_model(&self) -> Option<crate::config::json::Json> {
-        let (counts, class_counts, alpha) = self.classifier.export_state();
-        let nb = crate::bayes::classifier::NaiveBayes::from_state(
-            counts,
-            class_counts,
-            alpha,
-        );
-        Some(crate::bayes::persist::to_json(&nb))
     }
 }

@@ -202,14 +202,16 @@ impl Scheduler for Capacity {
             SchedEvent::ClusterInfo { total_slots } => {
                 self.total_slots = *total_slots;
             }
-            SchedEvent::TaskStarted { job } => {
+            SchedEvent::TaskStarted { job, .. } => {
                 if let Some((q, u)) = self.job_queue.get(job).cloned() {
                     let queue = self.queues.get_mut(&q).unwrap();
                     queue.running += 1;
                     *queue.per_user_running.entry(u).or_insert(0) += 1;
                 }
             }
-            SchedEvent::TaskFinished { job } => {
+            // both attempt-end flavours release the queue's slot
+            SchedEvent::TaskFinished { job, .. }
+            | SchedEvent::TaskFailed { job, .. } => {
                 if let Some((q, u)) = self.job_queue.get(job).cloned() {
                     let queue = self.queues.get_mut(&q).unwrap();
                     queue.running = queue.running.saturating_sub(1);
@@ -218,7 +220,19 @@ impl Scheduler for Capacity {
                     }
                 }
             }
+            // same leak pattern Fair had: drop the per-job entry when the
+            // job leaves the system fully drained
+            SchedEvent::JobCompleted { job } => {
+                self.job_queue.remove(job);
+            }
             _ => {}
         }
+    }
+}
+
+impl Capacity {
+    /// Jobs with live per-job state (leak regression guard).
+    pub fn tracked_jobs(&self) -> usize {
+        self.job_queue.len()
     }
 }

@@ -22,6 +22,10 @@ struct Pool {
 }
 
 /// Fair scheduler over per-user pools.
+///
+/// Per-job state (`job_pool`) is dropped on `JobCompleted` — the drivers
+/// guarantee that event arrives only after the job's last attempt ended,
+/// so long simulations cannot leak one entry per job.
 #[derive(Debug, Default)]
 pub struct Fair {
     pools: BTreeMap<String, Pool>,
@@ -135,18 +139,32 @@ impl Scheduler for Fair {
 
     fn observe(&mut self, ev: &SchedEvent) {
         match ev {
-            SchedEvent::TaskStarted { job } => {
+            SchedEvent::TaskStarted { job, .. } => {
                 if let Some(pool) = self.job_pool.get(job) {
                     self.pools.get_mut(pool).unwrap().running += 1;
                 }
             }
-            SchedEvent::TaskFinished { job } => {
+            // both attempt-end flavours release the pool's slot
+            SchedEvent::TaskFinished { job, .. }
+            | SchedEvent::TaskFailed { job, .. } => {
                 if let Some(pool) = self.job_pool.get(job) {
                     let p = self.pools.get_mut(pool).unwrap();
                     p.running = p.running.saturating_sub(1);
                 }
             }
+            // the job left the system with all attempts drained: forget it
+            SchedEvent::JobCompleted { job } => {
+                self.job_pool.remove(job);
+            }
             _ => {}
         }
+    }
+}
+
+impl Fair {
+    /// Jobs with live per-job state (regression guard: must be 0 after a
+    /// full run — see `tests/integration_schedulers.rs`).
+    pub fn tracked_jobs(&self) -> usize {
+        self.job_pool.len()
     }
 }

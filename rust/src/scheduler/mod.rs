@@ -13,19 +13,29 @@ pub mod fair;
 pub mod fifo;
 
 pub use api::{
-    Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
+    Assignment, BatchState, Decision, FailReason, SchedEvent, SchedView,
+    Scheduler, SlotBudget,
 };
 pub use baselines::{RandomSched, ThresholdFifo};
-pub use bayes::{BayesScheduler, StarvationPolicy};
+pub use bayes::{BayesScheduler, SpeculationConfig, StarvationPolicy};
 pub use capacity::Capacity;
 pub use fair::Fair;
 pub use fifo::Fifo;
 
 use crate::bayes::classifier::NaiveBayes;
+use crate::bayes::features::N_FEATURES;
+
+/// Feature mask zeroing the two failure-history bins: the ablation that
+/// turns `bayes` into the failure-blind learner the paper described
+/// (E10 measures the gap under failure injection).
+pub const FAILURE_BLIND_MASK: [bool; N_FEATURES] =
+    [true, true, true, true, true, true, true, true, false, false];
 
 /// Construct a scheduler by name (CLI / config entry point).
 /// `bayes` uses the pure-rust classifier; `bayes-xla` is built separately
 /// by the coordinator builder because it needs the artifacts directory.
+/// `bayes-blind` is `bayes` with the failure-history features masked off —
+/// the control arm of the E10 failure sweep.
 ///
 /// Invariant (guarded by a unit test): every [`ALL_NAMES`] entry constructs
 /// here and reports a matching [`Scheduler::name`].
@@ -35,6 +45,11 @@ pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
         "fair" => Some(Box::new(Fair::new())),
         "capacity" => Some(Box::new(Capacity::new())),
         "bayes" => Some(Box::new(BayesScheduler::new(NaiveBayes::new(1.0)))),
+        "bayes-blind" => Some(Box::new(
+            BayesScheduler::new(NaiveBayes::new(1.0))
+                .with_feature_mask(FAILURE_BLIND_MASK)
+                .with_name("bayes-blind"),
+        )),
         "random" => Some(Box::new(RandomSched::new(seed))),
         "threshold-fifo" => Some(Box::new(ThresholdFifo::new(0.9))),
         _ => None,
@@ -42,5 +57,12 @@ pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
 }
 
 /// All scheduler names selectable by `by_name` (for CLI help / sweeps).
-pub const ALL_NAMES: [&str; 6] =
-    ["fifo", "fair", "capacity", "bayes", "random", "threshold-fifo"];
+pub const ALL_NAMES: [&str; 7] = [
+    "fifo",
+    "fair",
+    "capacity",
+    "bayes",
+    "bayes-blind",
+    "random",
+    "threshold-fifo",
+];

@@ -2,7 +2,7 @@
 //! fixtures (integration tests cover whole-simulation behaviour).
 
 use crate::bayes::classifier::{Classifier, Label, NaiveBayes};
-use crate::bayes::features::N_FEATURES;
+use crate::bayes::features::{FailureHistory, N_FEATURES};
 use crate::bayes::utility::Priority;
 use crate::cluster::node::{Node, NodeId, NodeSpec};
 use crate::cluster::resources::Resources;
@@ -18,6 +18,11 @@ use super::bayes::{BayesScheduler, StarvationPolicy};
 use super::capacity::Capacity;
 use super::fair::Fair;
 use super::fifo::Fifo;
+
+/// Empty failure history for fixture views.
+fn no_failures() -> FailureHistory {
+    FailureHistory::new()
+}
 
 /// Fixture: a job table with customizable specs on a 4-node namespace.
 struct Fixture {
@@ -57,7 +62,14 @@ fn idle_node() -> Node {
 /// a batch of budget 1).
 fn select(f: &Fixture, sched: &mut dyn Scheduler, node: &Node) -> Option<TaskRef> {
     let queue = f.jobs.schedulable();
-    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 10.0,
+    };
     sched
         .assign(&view, node, SlotBudget { maps: 1, reduces: 0 })
         .first()
@@ -65,7 +77,11 @@ fn select(f: &Fixture, sched: &mut dyn Scheduler, node: &Node) -> Option<TaskRef
 }
 
 fn started(sched: &mut dyn Scheduler, job: JobId) {
-    sched.observe(&SchedEvent::TaskStarted { job });
+    sched.observe(&SchedEvent::TaskStarted {
+        job,
+        node: NodeId(0),
+        kind: TaskKind::Map,
+    });
 }
 
 // ------------------------------------------------------------- pick_task --
@@ -167,7 +183,14 @@ fn fifo_batch_fills_whole_budget_without_duplicates() {
         spec("b", "u1", JobClass::Small, Priority::Normal),
     ]);
     let queue = f.jobs.schedulable();
-    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 10.0,
+    };
     let out = Fifo::new().assign(
         &view,
         &idle_node(),
@@ -223,7 +246,14 @@ fn fair_spreads_one_batch_across_pools() {
         spec("b", "bob", JobClass::Small, Priority::Normal),
     ]);
     let queue = f.jobs.schedulable();
-    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 10.0,
+    };
     let out = Fair::new().assign(
         &view,
         &idle_node(),
@@ -279,8 +309,8 @@ fn trained_bayes(policy: StarvationPolicy) -> BayesScheduler<NaiveBayes> {
     // teach it: cpu-heavy job features (high bin on feature 0) => bad,
     // light jobs => good, regardless of node state
     for _ in 0..200 {
-        nb.observe([8, 3, 2, 1, 5, 3, 2, 1], Label::Bad);
-        nb.observe([1, 1, 1, 1, 5, 3, 2, 1], Label::Good);
+        nb.observe([8, 3, 2, 1, 5, 3, 2, 1, 0, 0], Label::Bad);
+        nb.observe([1, 1, 1, 1, 5, 3, 2, 1, 0, 0], Label::Good);
     }
     nb.flush();
     BayesScheduler::new(nb).with_policy(policy)
@@ -331,7 +361,14 @@ fn bayes_wait_unless_idle_places_at_most_one_bad_task_per_batch() {
     let f = fixture(vec![spec("heavy", "u0", JobClass::CpuHeavy, Priority::Normal)]);
     let mut sched = trained_bayes(StarvationPolicy::WaitUnlessIdle);
     let queue = f.jobs.schedulable();
-    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 10.0,
+    };
     let out = sched.assign(&view, &idle_node(), SlotBudget { maps: 3, reduces: 0 });
     assert_eq!(out.len(), 1, "fallback must not flood the node");
     let d = out[0].decision;
@@ -347,7 +384,14 @@ fn bayes_decision_records_carry_scores() {
     ]);
     let mut sched = trained_bayes(StarvationPolicy::LeastBad);
     let queue = f.jobs.schedulable();
-    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 10.0 };
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 10.0,
+    };
     let out = sched.assign(&view, &idle_node(), SlotBudget { maps: 1, reduces: 0 });
     let d = out[0].decision;
     assert_eq!(d.job, JobId(1));
@@ -368,8 +412,8 @@ fn bayes_feature_mask_removes_signal() {
     // selection falls back to utility order (equal => first wins)
     let mut nb = NaiveBayes::new(1.0);
     for _ in 0..200 {
-        nb.observe([0, 0, 0, 0, 5, 3, 2, 1], Label::Bad);
-        nb.observe([0, 0, 0, 0, 5, 3, 2, 1], Label::Good);
+        nb.observe([0, 0, 0, 0, 5, 3, 2, 1, 0, 0], Label::Bad);
+        nb.observe([0, 0, 0, 0, 5, 3, 2, 1, 0, 0], Label::Good);
     }
     nb.flush();
     let mut sched = BayesScheduler::new(nb)
@@ -393,4 +437,179 @@ fn bayes_feedback_reaches_classifier() {
     }
     sched.classifier_mut().flush();
     assert_eq!(sched.classifier().class_counts(), [0.0, 50.0]);
+}
+
+// ------------------------------------------------- per-job state hygiene --
+
+#[test]
+fn fair_drops_job_state_on_job_completed() {
+    let f = fixture(vec![
+        spec("a", "alice", JobClass::Small, Priority::Normal),
+        spec("b", "bob", JobClass::Small, Priority::Normal),
+    ]);
+    let mut fair = Fair::new();
+    let _ = select(&f, &mut fair, &idle_node()); // registers jobs in pools
+    assert!(fair.tracked_jobs() > 0, "fixture registered no jobs");
+    fair.observe(&SchedEvent::JobCompleted { job: JobId(0) });
+    fair.observe(&SchedEvent::JobCompleted { job: JobId(1) });
+    assert_eq!(fair.tracked_jobs(), 0, "job_pool leaked after JobCompleted");
+}
+
+#[test]
+fn capacity_drops_job_state_on_job_completed() {
+    let f = fixture(vec![
+        spec("a", "u0", JobClass::Small, Priority::Normal),
+        spec("b", "u1", JobClass::Small, Priority::Normal),
+    ]);
+    let mut cap = Capacity::new();
+    cap.observe(&SchedEvent::ClusterInfo { total_slots: 8 });
+    let _ = select(&f, &mut cap, &idle_node());
+    assert!(cap.tracked_jobs() > 0, "fixture registered no jobs");
+    cap.observe(&SchedEvent::JobCompleted { job: JobId(0) });
+    cap.observe(&SchedEvent::JobCompleted { job: JobId(1) });
+    assert_eq!(cap.tracked_jobs(), 0, "job_queue leaked after JobCompleted");
+}
+
+#[test]
+fn fair_releases_slot_on_task_failed() {
+    // a failed attempt must release the pool's running slot exactly like a
+    // finished one — otherwise churn starves the pool forever
+    let f = fixture(vec![
+        spec("a", "alice", JobClass::Small, Priority::Normal),
+        spec("b", "bob", JobClass::Small, Priority::Normal),
+    ]);
+    let mut fair = Fair::new();
+    let _ = select(&f, &mut fair, &idle_node());
+    for _ in 0..3 {
+        started(&mut fair, JobId(0));
+    }
+    for _ in 0..3 {
+        fair.observe(&SchedEvent::TaskFailed {
+            job: JobId(0),
+            node: NodeId(0),
+            kind: TaskKind::Map,
+            attempt: 1,
+            reason: super::api::FailReason::Oom,
+        });
+    }
+    // alice's pool drained back to 0 running: FIFO order (alice first)
+    // decides again, not a phantom load imbalance
+    let t = select(&f, &mut fair, &idle_node()).unwrap();
+    assert_eq!(t.job, JobId(0));
+}
+
+// ----------------------------------------------------------- speculation --
+
+/// Fixture with one job whose maps all run: task 0 started long ago on
+/// node 0 (the straggler), tasks 1-2 recently.
+fn straggler_fixture() -> Fixture {
+    let f = fixture(vec![spec("slow", "u0", JobClass::Small, Priority::Normal)]);
+    let mut f = f;
+    let start = |jobs: &mut JobTable, index: u32, node: u32, at: f64| {
+        let t = TaskRef { job: JobId(0), kind: TaskKind::Map, index };
+        jobs.start_task(&t, NodeId(node), at);
+    };
+    start(&mut f.jobs, 0, 0, 0.0); // 60s elapsed at now=60
+    start(&mut f.jobs, 1, 0, 40.0); // 20s elapsed
+    start(&mut f.jobs, 2, 0, 40.0); // 20s elapsed
+    f
+}
+
+#[test]
+fn bayes_speculates_on_stragglers_from_another_node() {
+    let f = straggler_fixture();
+    let queue = f.jobs.schedulable();
+    assert!(queue.is_empty(), "all tasks running: nothing schedulable");
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 60.0,
+    };
+    let mut sched = BayesScheduler::new(NaiveBayes::new(1.0));
+    let node = Node::new(NodeId(1), NodeSpec::default());
+    let out = sched.assign(&view, &node, SlotBudget { maps: 2, reduces: 2 });
+    assert_eq!(out.len(), 1, "exactly the one straggler gets a backup");
+    let a = &out[0];
+    assert!(a.decision.speculative);
+    assert_eq!(a.task, TaskRef { job: JobId(0), kind: TaskKind::Map, index: 0 });
+    assert!(a.decision.posterior.is_some());
+    assert!(a.decision.fail.is_some());
+}
+
+#[test]
+fn bayes_never_speculates_onto_the_primarys_node() {
+    let f = straggler_fixture();
+    let queue = f.jobs.schedulable();
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 60.0,
+    };
+    let mut sched = BayesScheduler::new(NaiveBayes::new(1.0));
+    // heartbeat from node 0, where the straggler already runs
+    let node = Node::new(NodeId(0), NodeSpec::default());
+    let out = sched.assign(&view, &node, SlotBudget { maps: 2, reduces: 2 });
+    assert!(out.is_empty(), "backup proposed on the primary's own node");
+}
+
+#[test]
+fn bayes_speculation_can_be_disabled() {
+    let f = straggler_fixture();
+    let queue = f.jobs.schedulable();
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 60.0,
+    };
+    let mut sched = BayesScheduler::new(NaiveBayes::new(1.0)).with_speculation(
+        super::bayes::SpeculationConfig { enabled: false, ..Default::default() },
+    );
+    let node = Node::new(NodeId(1), NodeSpec::default());
+    let out = sched.assign(&view, &node, SlotBudget { maps: 2, reduces: 2 });
+    assert!(out.is_empty());
+}
+
+#[test]
+fn bayes_speculation_respects_classifier_verdict() {
+    // train the model that this job class overloads nodes like ours: the
+    // straggler must NOT get a backup copy onto a node the model distrusts
+    let f = straggler_fixture();
+    let queue = f.jobs.schedulable();
+    let fails = no_failures();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 60.0,
+    };
+    let mut nb = NaiveBayes::new(1.0);
+    let row = {
+        // the exact row the scheduler will score: job profile bins + idle
+        // node bins + zero failure bins
+        let job = f.jobs.get(JobId(0));
+        let node = Node::new(NodeId(1), NodeSpec::default());
+        crate::bayes::features::feature_vec(
+            &job.spec.profile,
+            &node.features(),
+            crate::bayes::features::FailureFeats::default(),
+        )
+    };
+    for _ in 0..200 {
+        nb.observe(row, Label::Bad);
+    }
+    nb.flush();
+    let mut sched = BayesScheduler::new(nb);
+    let node = Node::new(NodeId(1), NodeSpec::default());
+    let out = sched.assign(&view, &node, SlotBudget { maps: 2, reduces: 2 });
+    assert!(out.is_empty(), "speculated onto a node classified bad");
 }

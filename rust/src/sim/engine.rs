@@ -51,6 +51,7 @@ pub struct Engine {
     now: Time,
     seq: u64,
     processed: u64,
+    clamped: u64,
 }
 
 impl Default for Engine {
@@ -61,7 +62,7 @@ impl Default for Engine {
 
 impl Engine {
     pub fn new() -> Engine {
-        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0, clamped: 0 }
     }
 
     /// Current virtual time.
@@ -83,17 +84,26 @@ impl Engine {
         self.heap.is_empty()
     }
 
-    /// Schedule `event` at absolute time `at` (must be >= now).
+    /// Past-time schedules observed (and clamped) so far.
+    pub fn clamped_events(&self) -> u64 {
+        self.clamped
+    }
+
+    /// Schedule `event` at absolute time `at`. A past or non-finite `at`
+    /// (NaN, ±inf — always a driver bug) is clamped to `now` and counted
+    /// in [`Engine::clamped_events`] — the SAME policy in debug and
+    /// release builds, with no assert, so a buggy timestamp can never
+    /// change behavior between profiles or stall the drain at +inf.
     pub fn schedule(&mut self, at: Time, event: Event) {
-        debug_assert!(at.is_finite(), "non-finite event time");
-        debug_assert!(
-            at >= self.now,
-            "scheduling into the past: at={at} now={}",
+        let at = if at >= self.now && at.is_finite() {
+            at
+        } else {
+            self.clamped += 1;
             self.now
-        );
+        };
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { at: at.max(self.now), seq, event });
+        self.heap.push(Entry { at, seq, event });
     }
 
     /// Schedule `event` `delay` seconds from now.
@@ -119,10 +129,10 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::job::JobId;
+    use crate::cluster::node::NodeId;
 
     fn ev(i: u32) -> Event {
-        Event::JobArrival(JobId(i))
+        Event::Heartbeat(NodeId(i))
     }
 
     #[test]
@@ -143,10 +153,56 @@ mod tests {
         }
         for i in 0..100 {
             match e.pop().unwrap().1 {
-                Event::JobArrival(JobId(j)) => assert_eq!(j, i),
+                Event::Heartbeat(NodeId(j)) => assert_eq!(j, i),
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn past_time_schedules_clamp_to_now_in_every_profile() {
+        // the one policy for past-time scheduling: clamp + count, never
+        // panic — identical in debug and release builds
+        let mut e = Engine::new();
+        e.schedule(10.0, ev(0));
+        e.pop(); // now = 10.0
+        assert_eq!(e.clamped_events(), 0);
+        e.schedule(3.0, ev(1)); // into the past
+        assert_eq!(e.clamped_events(), 1);
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, 10.0, "past event must fire at now, not at 3.0");
+        assert_eq!(e.now(), 10.0);
+    }
+
+    #[test]
+    fn clamped_events_counts_every_offender() {
+        let mut e = Engine::new();
+        e.schedule(5.0, ev(0));
+        e.pop();
+        for _ in 0..4 {
+            e.schedule(1.0, ev(1));
+        }
+        e.schedule(5.0, ev(2)); // at == now is NOT past
+        e.schedule(6.0, ev(3));
+        assert_eq!(e.clamped_events(), 4);
+        // clamped events still pop in deterministic insertion order
+        let times: Vec<f64> = std::iter::from_fn(|| e.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![5.0, 5.0, 5.0, 5.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn non_finite_times_clamp_instead_of_diverging() {
+        // NaN and ±inf are driver bugs; the one policy is clamp + count in
+        // every build profile (an uncaught +inf would stall the drain)
+        let mut e = Engine::new();
+        e.schedule(1.0, ev(0));
+        e.pop();
+        e.schedule(f64::NAN, ev(1));
+        e.schedule(f64::INFINITY, ev(2));
+        e.schedule(f64::NEG_INFINITY, ev(3));
+        assert_eq!(e.clamped_events(), 3);
+        let times: Vec<f64> = std::iter::from_fn(|| e.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 1.0, 1.0]);
     }
 
     #[test]

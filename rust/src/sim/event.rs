@@ -3,22 +3,26 @@
 
 use crate::cluster::node::NodeId;
 use crate::job::task::TaskRef;
-use crate::job::JobId;
 
 /// Everything that can happen in the simulated cluster.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Event {
-    /// A job enters the JobTracker queue.
-    JobArrival(JobId),
+    /// The next queued job spec enters the JobTracker queue. Payload-free
+    /// by design: the coordinator holds the in-flight spec (`next_spec`)
+    /// and submits it when the event fires, so no placeholder job id can
+    /// ever be observed by handlers.
+    JobArrival,
     /// A TaskTracker heartbeat: the node reports status and receives task
     /// assignments (Hadoop assigns work on the heartbeat RPC).
     Heartbeat(NodeId),
-    /// A task finishes on a node. `generation` guards against stale
+    /// A task attempt finishes on a node. `generation` guards against stale
     /// completions: contention changes reschedule completions, bumping the
-    /// task's generation so superseded events are ignored.
+    /// attempt's generation so superseded events are ignored. With
+    /// speculative execution a task can have two live attempts on two
+    /// nodes; the `(node, generation)` pair identifies which one fired.
     TaskComplete { node: NodeId, task: TaskRef, generation: u32 },
-    /// A task fails (e.g. OOM from memory oversubscription) and will be
-    /// re-queued.
+    /// A task attempt fails (e.g. OOM from memory oversubscription) and
+    /// will be re-queued unless a backup attempt is still running.
     TaskFail { node: NodeId, task: TaskRef, generation: u32 },
     /// A TaskTracker dies (crash / network partition): its tasks are lost
     /// and re-queued, heartbeats stop until recovery.
@@ -27,8 +31,6 @@ pub enum Event {
     NodeRecover(NodeId),
     /// Periodic metrics sampling tick.
     MetricsTick,
-    /// End of workload injection (no more arrivals); used to detect drain.
-    ArrivalsDone,
 }
 
 #[cfg(test)]
@@ -37,9 +39,10 @@ mod tests {
 
     #[test]
     fn events_are_comparable() {
-        let a = Event::JobArrival(JobId(1));
-        let b = Event::JobArrival(JobId(1));
+        let a = Event::Heartbeat(NodeId(1));
+        let b = Event::Heartbeat(NodeId(1));
         assert_eq!(a, b);
         assert_ne!(a, Event::MetricsTick);
+        assert_eq!(Event::JobArrival, Event::JobArrival);
     }
 }

@@ -33,4 +33,4 @@ pub mod policy;
 pub mod rm;
 
 pub use policy::SchedulerPolicy;
-pub use rm::{yarn_policy_by_name, ResourceManager, YarnConfig};
+pub use rm::{yarn_policy_by_name, FailureConfig, ResourceManager, YarnConfig};

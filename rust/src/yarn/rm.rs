@@ -6,12 +6,19 @@
 //!
 //! Like the MRv1 JobTracker, the RM calls `assign` once per heartbeat with
 //! the node's full free-container budget and feeds everything back through
-//! `observe`. The YARN-specific mechanics stay in the driver: requests are
-//! pre-filtered by the **declared** fit, each proposed assignment is
-//! re-validated against the running declared tally before launch, and the
-//! per-node container cap truncates oversized batches.
+//! `observe` — including the rich failure lifecycle (`TaskFailed`,
+//! `NodeFailed`/`NodeRecovered`) and speculative backup launches, so every
+//! scheduler behaves identically under both drivers. The YARN-specific
+//! mechanics stay in the driver: requests are pre-filtered by the
+//! **declared** fit, each proposed assignment is re-validated against the
+//! running declared tally before launch, and the per-node container cap
+//! truncates oversized batches. NodeManager failure injection mirrors the
+//! JobTracker's (exponential MTBF/MTTR).
 
-use crate::bayes::features::feature_vec;
+use std::collections::HashMap;
+
+use crate::bayes::classifier::Label;
+use crate::bayes::features::{feature_vec, FailureHistory};
 use crate::bayes::overload::OverloadRule;
 use crate::cluster::heartbeat::HeartbeatConfig;
 use crate::cluster::node::NodeId;
@@ -24,9 +31,13 @@ use crate::job::queue::JobTable;
 use crate::job::task::{TaskKind, TaskRef, TaskState};
 use crate::job::JobId;
 use crate::metrics::Metrics;
-use crate::scheduler::api::{Assignment, SchedEvent, SchedView, SlotBudget};
+use crate::scheduler::api::{
+    Assignment, FailReason, SchedEvent, SchedView, SlotBudget,
+};
 use crate::sim::engine::{Engine, Time};
 use crate::sim::event::Event;
+
+pub use crate::coordinator::jobtracker::FailureConfig;
 
 use super::policy::SchedulerPolicy;
 
@@ -35,6 +46,9 @@ use super::policy::SchedulerPolicy;
 pub struct YarnConfig {
     pub heartbeat: HeartbeatConfig,
     pub overload_rule: OverloadRule,
+    /// NodeManager failure injection (exponential MTBF/MTTR), same model
+    /// as the MRv1 tracker.
+    pub failures: FailureConfig,
     /// Max concurrent containers per NM (control-plane cap). Effective
     /// concurrency is additionally bounded by the node's typed executor
     /// slots (`NodeSpec::map_slots`/`reduce_slots`) — the node substrate
@@ -54,6 +68,7 @@ impl Default for YarnConfig {
         YarnConfig {
             heartbeat: HeartbeatConfig::default(),
             overload_rule: OverloadRule::default(),
+            failures: FailureConfig::default(),
             max_containers_per_node: 6,
             fit_headroom: 1.0,
             max_task_attempts: 4,
@@ -84,6 +99,14 @@ struct PendingFeedback {
     feats: crate::bayes::features::FeatureVec,
 }
 
+/// Which live attempt of a task an event refers to (speculative backups
+/// give a task up to two concurrent attempts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Attempt {
+    Primary,
+    Backup,
+}
+
 /// The RM: owns the whole YARN-mode simulation.
 pub struct ResourceManager {
     pub engine: Engine,
@@ -93,6 +116,9 @@ pub struct ResourceManager {
     pub policy: SchedulerPolicy,
     pub metrics: Metrics,
     pub cfg: YarnConfig,
+    /// Failure history feeding the failure-aware features (shared with the
+    /// policy through `SchedView::failures`).
+    pub failures: FailureHistory,
     /// Declared resource usage per node (fit-check bookkeeping — actual
     /// usage lives in the Node's contention state).
     declared: Vec<crate::cluster::resources::Resources>,
@@ -100,9 +126,15 @@ pub struct ResourceManager {
     /// Spec whose arrival event is in flight (submitted when it fires).
     next_spec: Option<JobSpec>,
     pending_feedback: Vec<Vec<PendingFeedback>>,
-    /// OOM-doomed tasks: excluded from completion rescheduling so their
-    /// pending TaskFail stays valid (same mechanism as the MRv1 tracker).
-    doomed: std::collections::HashSet<TaskRef>,
+    /// OOM-doomed attempts keyed by (node, task): excluded from completion
+    /// rescheduling so their pending TaskFail stays valid (same mechanism
+    /// as the MRv1 tracker).
+    doomed: std::collections::HashSet<(NodeId, TaskRef)>,
+    /// Launch-time feature rows of in-flight attempts (OOM kills feed back
+    /// a `Bad` sample for the row the decision was scored on).
+    inflight_feats: HashMap<(NodeId, TaskRef), crate::bayes::features::FeatureVec>,
+    /// Failure-injection RNG (own stream: does not perturb workloads).
+    fail_rng: crate::sim::rng::Pcg,
     arrivals_done: bool,
 }
 
@@ -129,19 +161,30 @@ impl ResourceManager {
             policy,
             metrics: Metrics::new(),
             cfg,
+            failures: FailureHistory::new(),
             declared: vec![crate::cluster::resources::Resources::ZERO; n],
             pending_specs: specs.into_iter(),
             next_spec: None,
             pending_feedback: (0..n).map(|_| Vec::new()).collect(),
             doomed: std::collections::HashSet::new(),
+            inflight_feats: HashMap::new(),
+            fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA17),
             arrivals_done: false,
         };
         rm.schedule_next_arrival();
         for node in rm.cluster.topology.all_nodes() {
             let t = rm.cfg.heartbeat.first_beat(node);
             rm.engine.schedule(t, Event::Heartbeat(node));
+            rm.schedule_next_failure(node);
         }
         rm
+    }
+
+    fn schedule_next_failure(&mut self, node: NodeId) {
+        if let Some(mtbf) = self.cfg.failures.mtbf {
+            let dt = self.fail_rng.exp(1.0 / mtbf);
+            self.engine.schedule_in(dt, Event::NodeFail(node));
+        }
     }
 
     fn schedule_next_arrival(&mut self) {
@@ -149,8 +192,7 @@ impl ResourceManager {
             Some(spec) => {
                 let at = spec.submit_time;
                 self.next_spec = Some(spec);
-                self.engine
-                    .schedule(at, Event::JobArrival(crate::job::JobId(u32::MAX)));
+                self.engine.schedule(at, Event::JobArrival);
             }
             None => self.arrivals_done = true,
         }
@@ -172,7 +214,7 @@ impl ResourceManager {
                 break;
             }
             match ev {
-                Event::JobArrival(_) => self.on_job_arrival(),
+                Event::JobArrival => self.on_job_arrival(),
                 Event::Heartbeat(node) => self.on_heartbeat(node),
                 Event::TaskComplete { node, task, generation } => {
                     self.on_complete(node, task, generation)
@@ -180,7 +222,9 @@ impl ResourceManager {
                 Event::TaskFail { node, task, generation } => {
                     self.on_fail(node, task, generation)
                 }
-                _ => {}
+                Event::NodeFail(node) => self.on_node_fail(node),
+                Event::NodeRecover(node) => self.on_node_recover(node),
+                Event::MetricsTick => {}
             }
             if self.arrivals_done
                 && self.jobs.all_complete()
@@ -206,7 +250,115 @@ impl ResourceManager {
         h
     }
 
+    // --------------------------------------------------------- attempts --
+
+    fn current_attempt(
+        &self,
+        tref: &TaskRef,
+        node: NodeId,
+        generation: u32,
+    ) -> Option<Attempt> {
+        let task = self.jobs.get(tref.job).task(tref);
+        if let TaskState::Running { node: n, .. } = task.state {
+            if n == node && task.generation == generation {
+                return Some(Attempt::Primary);
+            }
+        }
+        if let Some(s) = task.speculative {
+            if s.node == node && task.spec_generation == generation {
+                return Some(Attempt::Backup);
+            }
+        }
+        None
+    }
+
+    /// `JobCompleted` (AM unregistration) only once the job's last attempt
+    /// has drained — the contract that lets schedulers drop per-job state.
+    fn notify_if_drained(&mut self, id: JobId) {
+        let job = self.jobs.get(id);
+        if job.finish_time.is_some() && job.fully_drained() {
+            self.policy.observe(&SchedEvent::JobCompleted { job: id });
+            self.failures.forget_job(id);
+        }
+    }
+
+    /// Remove the losing copy of `tref` from `node_id` after the other
+    /// copy won (reported as `TaskFinished`, not a failure).
+    fn cancel_attempt_on(&mut self, node_id: NodeId, tref: TaskRef, now: Time) {
+        let horizons = self.release(&tref, node_id, now);
+        self.doomed.remove(&(node_id, tref));
+        self.inflight_feats.remove(&(node_id, tref));
+        self.policy.observe(&SchedEvent::TaskFinished {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+        });
+        self.reschedule(node_id, horizons);
+    }
+
+    // ---------------------------------------------------------- failure --
+
+    fn on_node_fail(&mut self, node_id: NodeId) {
+        if !self.cluster.node(node_id).alive {
+            return;
+        }
+        let now = self.engine.now();
+        self.metrics.node_failures += 1;
+        let lost = self.cluster.node_mut(node_id).fail(now);
+        for rec in lost {
+            let tref = rec.task;
+            self.doomed.remove(&(node_id, tref));
+            self.inflight_feats.remove(&(node_id, tref));
+            self.failures.record_failure(tref.job, node_id, now);
+            self.metrics.task_failures += 1;
+            let task = self.jobs.get(tref.job).task(&tref);
+            let attempt = task.attempts;
+            let lost_backup =
+                task.speculative.is_some_and(|s| s.node == node_id);
+            let surviving_backup = !lost_backup && task.speculative.is_some();
+            self.policy.observe(&SchedEvent::TaskFailed {
+                job: tref.job,
+                node: node_id,
+                kind: tref.kind,
+                attempt,
+                reason: FailReason::NodeLost,
+            });
+            if lost_backup {
+                self.jobs.get_mut(tref.job).task_mut(&tref).cancel_speculative();
+            } else if surviving_backup {
+                self.jobs.get_mut(tref.job).task_mut(&tref).promote_speculative();
+            } else if self.jobs.get(tref.job).finish_time.is_none() {
+                self.jobs.requeue_task(&tref);
+            } else {
+                self.jobs.get_mut(tref.job).task_mut(&tref).requeue();
+            }
+            self.notify_if_drained(tref.job);
+        }
+        // every container on the node is gone: declared tally resets
+        self.declared[node_id.0 as usize] =
+            crate::cluster::resources::Resources::ZERO;
+        self.pending_feedback[node_id.0 as usize].clear();
+        self.policy.observe(&SchedEvent::NodeFailed { node: node_id });
+        let mttr = self.cfg.failures.mttr.max(1.0);
+        let dt = self.fail_rng.exp(1.0 / mttr);
+        self.engine.schedule_in(dt, Event::NodeRecover(node_id));
+    }
+
+    fn on_node_recover(&mut self, node_id: NodeId) {
+        let now = self.engine.now();
+        self.cluster.node_mut(node_id).recover(now);
+        self.policy.observe(&SchedEvent::NodeRecovered { node: node_id });
+        self.engine
+            .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
+        self.schedule_next_failure(node_id);
+    }
+
+    // -------------------------------------------------------- heartbeat --
+
     fn on_heartbeat(&mut self, node_id: NodeId) {
+        if !self.cluster.node(node_id).alive {
+            return; // dead NM: heartbeats resume on recovery
+        }
         let now = self.engine.now();
         self.metrics.heartbeats += 1;
         self.cluster.node_mut(node_id).advance(now);
@@ -240,21 +392,22 @@ impl ResourceManager {
                 .into_iter()
                 .filter(|id| self.jobs.get(*id).demand.fits_within(&headroom))
                 .collect();
-            if !queue.is_empty() {
-                let node_feats = self.cluster.node(node_id).features();
-                let budget = {
-                    let node = self.cluster.node(node_id);
-                    SlotBudget {
-                        maps: free_containers.min(node.free_slots(TaskKind::Map)),
-                        reduces: free_containers
-                            .min(node.free_slots(TaskKind::Reduce)),
-                    }
-                };
+            let node_feats = self.cluster.node(node_id).features();
+            let budget = {
+                let node = self.cluster.node(node_id);
+                SlotBudget {
+                    maps: free_containers.min(node.free_slots(TaskKind::Map)),
+                    reduces: free_containers
+                        .min(node.free_slots(TaskKind::Reduce)),
+                }
+            };
+            if budget.total() > 0 {
                 let (assignments, assign_nanos) = {
                     let view = SchedView {
                         jobs: &self.jobs,
                         hdfs: &self.hdfs,
                         queue: &queue,
+                        failures: &self.failures,
                         now,
                     };
                     let node = self.cluster.node(node_id);
@@ -274,13 +427,31 @@ impl ResourceManager {
                     if !declared.fits_within(&self.headroom(node_id)) {
                         continue;
                     }
-                    if self.cluster.node(node_id).free_slots(a.task.kind) == 0
-                        || !self.jobs.get(a.task.job).task(&a.task).is_pending()
-                    {
-                        debug_assert!(false, "batch contract broken: {}", a.task);
+                    if self.cluster.node(node_id).free_slots(a.task.kind) == 0 {
+                        debug_assert!(false, "batch overflowed slots: {}", a.task);
                         continue;
                     }
-                    self.launch_container(a, node_id, now, &node_feats);
+                    if a.decision.speculative {
+                        if !self.speculation_target_ok(&a.task, node_id) {
+                            debug_assert!(
+                                false,
+                                "broken speculative proposal: {}",
+                                a.task
+                            );
+                            continue;
+                        }
+                        self.launch_container(a, node_id, now, &node_feats, true);
+                    } else {
+                        if !self.jobs.get(a.task.job).task(&a.task).is_pending() {
+                            debug_assert!(
+                                false,
+                                "batch contract broken: {}",
+                                a.task
+                            );
+                            continue;
+                        }
+                        self.launch_container(a, node_id, now, &node_feats, false);
+                    }
                     remaining -= 1;
                     launched += 1;
                 }
@@ -296,12 +467,25 @@ impl ResourceManager {
         }
     }
 
+    /// Speculation contract: primary running on a *different* node, no
+    /// live backup, job still live.
+    fn speculation_target_ok(&self, tref: &TaskRef, node_id: NodeId) -> bool {
+        let job = self.jobs.get(tref.job);
+        if job.finish_time.is_some() {
+            return false;
+        }
+        let task = job.task(tref);
+        task.speculative.is_none()
+            && matches!(task.state, TaskState::Running { node: n, .. } if n != node_id)
+    }
+
     fn launch_container(
         &mut self,
         assignment: Assignment,
         node_id: NodeId,
         now: Time,
         node_feats: &crate::bayes::features::NodeFeatures,
+        speculative: bool,
     ) {
         let tref = assignment.task;
         let job = self.jobs.get(tref.job);
@@ -320,13 +504,25 @@ impl ResourceManager {
         }
         actual.clamp_non_negative();
 
-        let feats = feature_vec(&job.spec.profile, node_feats);
+        let fail = self.failures.feats_for(tref.job, node_id, now);
+        let feats = feature_vec(&job.spec.profile, node_feats, fail);
         self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
+        self.inflight_feats.insert((node_id, tref), feats);
 
         let dooms = self.cluster.node(node_id).would_oom(&actual);
-        self.jobs.start_task(&tref, node_id, now);
-        let generation = self.jobs.get(tref.job).task(&tref).generation;
-        self.policy.observe(&SchedEvent::TaskStarted { job: tref.job });
+        let generation = if speculative {
+            self.jobs.start_speculative(&tref, node_id, now);
+            self.metrics.speculative_launches += 1;
+            self.jobs.get(tref.job).task(&tref).spec_generation
+        } else {
+            self.jobs.start_task(&tref, node_id, now);
+            self.jobs.get(tref.job).task(&tref).generation
+        };
+        self.policy.observe(&SchedEvent::TaskStarted {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+        });
         self.metrics
             .record_trace(now, node_id, tref, assignment.decision);
         self.declared[node_id.0 as usize] += declared;
@@ -334,7 +530,7 @@ impl ResourceManager {
             self.cluster.node_mut(node_id).add_task(tref, actual, work, now);
         if dooms {
             self.cluster.node_mut(node_id).oom_kills += 1;
-            self.doomed.insert(tref);
+            self.doomed.insert((node_id, tref));
             self.engine.schedule(
                 now + 4.0,
                 Event::TaskFail { node: node_id, task: tref, generation },
@@ -343,25 +539,34 @@ impl ResourceManager {
         self.reschedule(node_id, horizons);
     }
 
+    /// Re-issue completion events for every attempt on a node with fresh
+    /// per-attempt stamps (doomed attempts keep their pending TaskFail).
     fn reschedule(&mut self, node_id: NodeId, horizons: Vec<(TaskRef, Time)>) {
         for (tref, at) in horizons {
-            if self.doomed.contains(&tref) {
+            if self.doomed.contains(&(node_id, tref)) {
                 continue;
             }
             let task = self.jobs.get_mut(tref.job).task_mut(&tref);
-            task.generation += 1;
-            let generation = task.generation;
-            self.engine
-                .schedule(at, Event::TaskComplete { node: node_id, task: tref, generation });
+            let stamp = task.next_stamp();
+            let on_primary =
+                matches!(task.state, TaskState::Running { node: n, .. } if n == node_id);
+            if on_primary {
+                task.generation = stamp;
+            } else if task.speculative.is_some_and(|s| s.node == node_id) {
+                task.spec_generation = stamp;
+            } else {
+                debug_assert!(false, "rescheduling {tref} which is not on {node_id}");
+                continue;
+            }
+            self.engine.schedule(
+                at,
+                Event::TaskComplete { node: node_id, task: tref, generation: stamp },
+            );
         }
     }
 
-    fn current(&self, tref: &TaskRef, node: NodeId, generation: u32) -> bool {
-        let task = self.jobs.get(tref.job).task(tref);
-        task.generation == generation
-            && matches!(task.state, TaskState::Running { node: n, .. } if n == node)
-    }
-
+    /// Remove one attempt from a node, returning the declared resources
+    /// and the surviving tasks' new horizons.
     fn release(&mut self, tref: &TaskRef, node_id: NodeId, now: Time) -> Vec<(TaskRef, Time)> {
         self.cluster.node_mut(node_id).advance(now);
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(tref, now);
@@ -373,14 +578,36 @@ impl ResourceManager {
     }
 
     fn on_complete(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
-        if !self.current(&tref, node_id, generation) {
+        let Some(which) = self.current_attempt(&tref, node_id, generation) else {
             return;
-        }
+        };
         let now = self.engine.now();
         let horizons = self.release(&tref, node_id, now);
+        self.doomed.remove(&(node_id, tref));
+        self.inflight_feats.remove(&(node_id, tref));
+        match which {
+            Attempt::Primary => {
+                if let Some(s) = self.jobs.get(tref.job).task(&tref).speculative {
+                    self.cancel_attempt_on(s.node, tref, now);
+                    self.jobs.get_mut(tref.job).task_mut(&tref).cancel_speculative();
+                }
+            }
+            Attempt::Backup => {
+                self.metrics.speculative_wins += 1;
+                let pnode = match self.jobs.get(tref.job).task(&tref).state {
+                    TaskState::Running { node, .. } => node,
+                    _ => unreachable!("backup without running primary"),
+                };
+                self.cancel_attempt_on(pnode, tref, now);
+                self.jobs.get_mut(tref.job).task_mut(&tref).promote_speculative();
+            }
+        }
         self.jobs.complete_task(&tref, now);
-        self.doomed.remove(&tref);
-        self.policy.observe(&SchedEvent::TaskFinished { job: tref.job });
+        self.policy.observe(&SchedEvent::TaskFinished {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+        });
         let job = self.jobs.get(tref.job);
         let finished = !job.failed && job.is_complete();
         if finished {
@@ -388,27 +615,63 @@ impl ResourceManager {
             self.jobs.mark_complete(tref.job, now);
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
             self.metrics.record_outcome(tref.job, outcome);
-            self.policy.observe(&SchedEvent::JobCompleted { job: tref.job });
         }
+        self.notify_if_drained(tref.job);
         self.reschedule(node_id, horizons);
     }
 
     fn on_fail(&mut self, node_id: NodeId, tref: TaskRef, generation: u32) {
-        if !self.current(&tref, node_id, generation) {
+        let Some(which) = self.current_attempt(&tref, node_id, generation) else {
             return;
-        }
+        };
         let now = self.engine.now();
         let horizons = self.release(&tref, node_id, now);
-        self.doomed.remove(&tref);
-        self.jobs.requeue_task(&tref);
-        self.policy.observe(&SchedEvent::TaskFinished { job: tref.job });
-        let job = self.jobs.get(tref.job);
-        let kill = job.task(&tref).attempts >= self.cfg.max_task_attempts
-            && job.finish_time.is_none();
-        if kill {
-            self.jobs.mark_failed(tref.job, now);
-            self.metrics.failed_jobs += 1;
+        self.doomed.remove(&(node_id, tref));
+        self.failures.record_failure(tref.job, node_id, now);
+        self.metrics.task_failures += 1;
+        if let Some(feats) = self.inflight_feats.remove(&(node_id, tref)) {
+            self.policy
+                .observe(&SchedEvent::Feedback { feats, label: Label::Bad });
+            self.metrics.record_feedback(Label::Bad);
         }
+        self.jobs.get_mut(tref.job).task_mut(&tref).failed_attempts += 1;
+        let attempt = self.jobs.get(tref.job).task(&tref).attempts;
+        self.policy.observe(&SchedEvent::TaskFailed {
+            job: tref.job,
+            node: node_id,
+            kind: tref.kind,
+            attempt,
+            reason: FailReason::Oom,
+        });
+        let other_alive = match which {
+            Attempt::Backup => true,
+            Attempt::Primary => {
+                self.jobs.get(tref.job).task(&tref).speculative.is_some()
+            }
+        };
+        if other_alive {
+            match which {
+                Attempt::Backup => {
+                    self.jobs.get_mut(tref.job).task_mut(&tref).cancel_speculative();
+                }
+                Attempt::Primary => {
+                    self.jobs.get_mut(tref.job).task_mut(&tref).promote_speculative();
+                }
+            }
+        } else {
+            self.jobs.requeue_task(&tref);
+            let job = self.jobs.get(tref.job);
+            // kill on FAILED attempts, not launches (speculative copies
+            // and node losses must not erode the budget)
+            let kill = job.task(&tref).failed_attempts
+                >= self.cfg.max_task_attempts
+                && job.finish_time.is_none();
+            if kill {
+                self.jobs.mark_failed(tref.job, now);
+                self.metrics.failed_jobs += 1;
+            }
+        }
+        self.notify_if_drained(tref.job);
         self.reschedule(node_id, horizons);
     }
 }
@@ -473,6 +736,36 @@ mod tests {
     #[test]
     fn declared_bookkeeping_returns_to_zero() {
         let rm = run("yarn-fifo", 2);
+        for d in &rm.declared {
+            assert!(d.max_component() < 1e-9, "leaked declared resources {d:?}");
+        }
+        for n in &rm.cluster.nodes {
+            assert!(n.running().is_empty());
+        }
+    }
+
+    #[test]
+    fn declared_bookkeeping_survives_node_churn() {
+        let cluster = Cluster::homogeneous(6, 2);
+        let specs = generate(&WorkloadConfig {
+            n_jobs: 15,
+            arrival_rate: 1.0,
+            seed: 8,
+            ..Default::default()
+        });
+        let mut rm = ResourceManager::new(
+            cluster,
+            yarn_policy_by_name("yarn-bayes", 1.0).unwrap(),
+            specs,
+            8,
+            YarnConfig {
+                failures: FailureConfig { mtbf: Some(250.0), mttr: 40.0 },
+                ..Default::default()
+            },
+        );
+        rm.run();
+        assert!(rm.metrics.node_failures > 0, "no failures injected");
+        assert!(rm.jobs.all_complete(), "churn stalled the RM");
         for d in &rm.declared {
             assert!(d.max_component() < 1e-9, "leaked declared resources {d:?}");
         }

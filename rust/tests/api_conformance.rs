@@ -4,7 +4,7 @@
 //! the MRv1 JobTracker and the YARN ResourceManager drivers rely on.
 
 use bayes_sched::bayes::classifier::Label;
-use bayes_sched::bayes::features::N_FEATURES;
+use bayes_sched::bayes::features::{FailureHistory, N_FEATURES};
 use bayes_sched::bayes::utility::Priority;
 use bayes_sched::cluster::node::{Node, NodeId, NodeSpec};
 use bayes_sched::hdfs::Namespace;
@@ -13,7 +13,9 @@ use bayes_sched::job::profile::JobClass;
 use bayes_sched::job::queue::JobTable;
 use bayes_sched::job::task::{TaskKind, TaskRef};
 use bayes_sched::job::JobId;
-use bayes_sched::scheduler::{self, Assignment, SchedEvent, SchedView, SlotBudget};
+use bayes_sched::scheduler::{
+    self, Assignment, FailReason, SchedEvent, SchedView, SlotBudget,
+};
 
 fn spec(name: &str, user: &str, class: JobClass, maps: usize, reduces: usize) -> JobSpec {
     JobSpec {
@@ -68,7 +70,14 @@ fn assign(
     budget: SlotBudget,
 ) -> Vec<Assignment> {
     let queue = f.jobs.schedulable();
-    let view = SchedView { jobs: &f.jobs, hdfs: &f.hdfs, queue: &queue, now: 50.0 };
+    let fails = FailureHistory::new();
+    let view = SchedView {
+        jobs: &f.jobs,
+        hdfs: &f.hdfs,
+        queue: &queue,
+        failures: &fails,
+        now: 50.0,
+    };
     sched.assign(&view, node, budget)
 }
 
@@ -89,12 +98,27 @@ fn check_batch(name: &str, f: &Fixture, out: &[Assignment], budget: SlotBudget) 
             a.task
         );
         let job = f.jobs.get(a.task.job);
-        assert!(
-            job.task(&a.task).is_pending(),
-            "{name}: assigned non-pending task {}",
-            a.task
-        );
-        if a.task.kind == TaskKind::Reduce {
+        if a.decision.speculative {
+            // backup copies target RUNNING tasks on a different node
+            let task = job.task(&a.task);
+            assert!(
+                task.is_running(),
+                "{name}: speculative copy of non-running {}",
+                a.task
+            );
+            assert!(
+                task.speculative.is_none(),
+                "{name}: second backup proposed for {}",
+                a.task
+            );
+        } else {
+            assert!(
+                job.task(&a.task).is_pending(),
+                "{name}: assigned non-pending task {}",
+                a.task
+            );
+        }
+        if a.task.kind == TaskKind::Reduce && !a.decision.speculative {
             assert!(
                 job.maps_complete(),
                 "{name}: reduce {} assigned before maps_complete()",
@@ -169,14 +193,38 @@ fn reduces_never_assigned_before_map_phase() {
 
 #[test]
 fn observe_tolerates_any_event_interleaving() {
+    let n0 = NodeId(0);
+    let n7 = NodeId(7); // a node id no fixture cluster has
+    let m = TaskKind::Map;
+    let r = TaskKind::Reduce;
     let events = [
-        SchedEvent::TaskFinished { job: JobId(9) }, // never started
+        // never started
+        SchedEvent::TaskFinished { job: JobId(9), node: n7, kind: r },
         SchedEvent::Feedback { feats: [9; N_FEATURES], label: Label::Bad },
         SchedEvent::JobCompleted { job: JobId(5) }, // never seen
-        SchedEvent::TaskStarted { job: JobId(0) },
+        SchedEvent::TaskStarted { job: JobId(0), node: n0, kind: m },
         SchedEvent::ClusterInfo { total_slots: 64 },
-        SchedEvent::TaskFinished { job: JobId(0) },
-        SchedEvent::TaskFinished { job: JobId(0) }, // more finishes than starts
+        SchedEvent::TaskFinished { job: JobId(0), node: n0, kind: m },
+        // more finishes than starts
+        SchedEvent::TaskFinished { job: JobId(0), node: n0, kind: m },
+        // failures for jobs/nodes never seen, in every flavour
+        SchedEvent::TaskFailed {
+            job: JobId(3),
+            node: n7,
+            kind: m,
+            attempt: 9,
+            reason: FailReason::Oom,
+        },
+        SchedEvent::TaskFailed {
+            job: JobId(11),
+            node: n0,
+            kind: r,
+            attempt: 1,
+            reason: FailReason::NodeLost,
+        },
+        SchedEvent::NodeFailed { node: n7 },
+        SchedEvent::NodeRecovered { node: n7 },
+        SchedEvent::NodeRecovered { node: n0 }, // recover without fail
         SchedEvent::Feedback { feats: [0; N_FEATURES], label: Label::Good },
     ];
     for name in scheduler::ALL_NAMES {
@@ -209,13 +257,144 @@ fn observe_between_batches_keeps_batches_valid() {
             let out = assign(&f, s.as_mut(), &big_node(), budget);
             check_batch(name, &f, &out, budget);
             for a in &out {
-                s.observe(&SchedEvent::TaskStarted { job: a.task.job });
+                s.observe(&SchedEvent::TaskStarted {
+                    job: a.task.job,
+                    node: NodeId(1),
+                    kind: a.task.kind,
+                });
             }
             if round % 2 == 1 {
                 for a in &out {
-                    s.observe(&SchedEvent::TaskFinished { job: a.task.job });
+                    // alternate the two attempt-end flavours: both must
+                    // release whatever TaskStarted acquired
+                    if a.task.index % 2 == 0 {
+                        s.observe(&SchedEvent::TaskFinished {
+                            job: a.task.job,
+                            node: NodeId(1),
+                            kind: a.task.kind,
+                        });
+                    } else {
+                        s.observe(&SchedEvent::TaskFailed {
+                            job: a.task.job,
+                            node: NodeId(1),
+                            kind: a.task.kind,
+                            attempt: 1,
+                            reason: FailReason::Oom,
+                        });
+                    }
                 }
             }
         }
     }
+}
+
+// ---------------------------------------------------------- failure churn --
+
+/// Every `by_name` scheduler must survive node fail/recover churn under
+/// BOTH drivers: pending feedback cleared on death, no stale generations
+/// resurrecting tasks, every job terminating (success or kill), every node
+/// draining empty.
+#[test]
+fn every_scheduler_survives_node_churn_under_both_drivers() {
+    use bayes_sched::cluster::Cluster;
+    use bayes_sched::coordinator::jobtracker::{
+        FailureConfig, JobTracker, TrackerConfig,
+    };
+    use bayes_sched::workload::generator::{generate, WorkloadConfig};
+    use bayes_sched::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+    let wl = WorkloadConfig {
+        n_jobs: 14,
+        arrival_rate: 1.0,
+        seed: 77,
+        ..Default::default()
+    };
+    let failures = FailureConfig { mtbf: Some(220.0), mttr: 45.0 };
+    for name in scheduler::ALL_NAMES {
+        // MRv1 driver
+        let mut jt = JobTracker::new(
+            Cluster::homogeneous(6, 2),
+            scheduler::by_name(name, 77).unwrap(),
+            generate(&wl),
+            77,
+            TrackerConfig { failures, ..Default::default() },
+        );
+        jt.run();
+        assert!(jt.jobs.all_complete(), "{name}: churn stalled the tracker");
+        assert_eq!(
+            jt.metrics.outcomes.len() + jt.jobs.failed_count(),
+            14,
+            "{name}: jobs neither completed nor killed"
+        );
+        for n in &jt.cluster.nodes {
+            assert!(
+                n.running().is_empty(),
+                "{name}: {} still busy after drain",
+                n.id
+            );
+        }
+        // the failure history must not leak entries for departed jobs
+        assert_eq!(
+            jt.failures.tracked_jobs(),
+            0,
+            "{name}: failure history leaked job entries"
+        );
+
+        // YARN driver, same churn
+        let mut rm = ResourceManager::new(
+            Cluster::homogeneous(6, 2),
+            yarn_policy_by_name(name, 1.0).unwrap(),
+            generate(&wl),
+            77,
+            YarnConfig { failures, ..Default::default() },
+        );
+        rm.run();
+        assert!(rm.jobs.all_complete(), "{name}: churn stalled the RM");
+        for n in &rm.cluster.nodes {
+            assert!(
+                n.running().is_empty(),
+                "{name}: RM {} still busy after drain",
+                n.id
+            );
+        }
+        assert_eq!(
+            rm.failures.tracked_jobs(),
+            0,
+            "{name}: RM failure history leaked job entries"
+        );
+    }
+}
+
+/// Churn runs are deterministic per seed — the per-attempt generation
+/// mechanism must not depend on hash iteration or wall time.
+#[test]
+fn churn_is_deterministic_per_seed() {
+    use bayes_sched::cluster::Cluster;
+    use bayes_sched::coordinator::jobtracker::{
+        FailureConfig, JobTracker, TrackerConfig,
+    };
+    use bayes_sched::workload::generator::{generate, WorkloadConfig};
+
+    let run = || {
+        let wl = WorkloadConfig { n_jobs: 12, seed: 78, ..Default::default() };
+        let mut jt = JobTracker::new(
+            Cluster::homogeneous(5, 2),
+            scheduler::by_name("bayes", 78).unwrap(),
+            generate(&wl),
+            78,
+            TrackerConfig {
+                failures: FailureConfig { mtbf: Some(180.0), mttr: 30.0 },
+                ..Default::default()
+            },
+        );
+        jt.run();
+        (
+            jt.metrics.makespan,
+            jt.engine.processed(),
+            jt.metrics.task_failures,
+            jt.metrics.speculative_launches,
+            jt.metrics.speculative_wins,
+        )
+    };
+    assert_eq!(run(), run());
 }

@@ -147,6 +147,7 @@ fn bayes_warm_start_beats_cold_start() {
         ..Default::default()
     };
     use bayes_sched::bayes::classifier::{Classifier, Label};
+    use bayes_sched::bayes::features::FeatureVec;
     use bayes_sched::scheduler::SchedEvent;
     let cold = run_with(
         Box::new(BayesScheduler::new(NaiveBayes::new(1.0))),
@@ -157,7 +158,7 @@ fn bayes_warm_start_beats_cold_start() {
     // train a warm classifier from it offline.
     struct Tap {
         inner: BayesScheduler<NaiveBayes>,
-        samples: std::rc::Rc<std::cell::RefCell<Vec<([u8; 8], Label)>>>,
+        samples: std::rc::Rc<std::cell::RefCell<Vec<(FeatureVec, Label)>>>,
     }
     impl Scheduler for Tap {
         fn name(&self) -> &'static str {
@@ -251,4 +252,148 @@ fn random_scheduler_is_a_valid_lower_bound() {
     let wl = WorkloadConfig { n_jobs: 30, seed: 29, ..Default::default() };
     let rand_run = run_with(scheduler::by_name("random", 29).unwrap(), &wl, 4);
     assert!(rand_run.jobs.all_complete());
+}
+
+// ------------------------------------------------------ state-leak guards --
+
+/// Scheduler wrapper sharing its inner state with the test, so per-job
+/// bookkeeping can be inspected *after* a full simulation (the tracker
+/// owns the scheduler as `Box<dyn Scheduler>`).
+struct Shared<S: Scheduler>(std::rc::Rc<std::cell::RefCell<S>>);
+
+impl<S: Scheduler> Scheduler for Shared<S> {
+    fn name(&self) -> &'static str {
+        "shared"
+    }
+    fn assign(
+        &mut self,
+        v: &bayes_sched::scheduler::SchedView,
+        n: &bayes_sched::cluster::node::Node,
+        b: bayes_sched::scheduler::SlotBudget,
+    ) -> Vec<bayes_sched::scheduler::Assignment> {
+        self.0.borrow_mut().assign(v, n, b)
+    }
+    fn observe(&mut self, ev: &bayes_sched::scheduler::SchedEvent) {
+        self.0.borrow_mut().observe(ev);
+    }
+}
+
+#[test]
+fn fair_job_pool_is_empty_after_a_full_run() {
+    // regression: job_pool entries used to be inserted on every heartbeat
+    // and never removed — one BTreeMap entry leaked per job forever
+    let wl = WorkloadConfig {
+        n_jobs: 30,
+        arrival_rate: 2.0,
+        n_users: 3,
+        seed: 91,
+        ..Default::default()
+    };
+    let fair = std::rc::Rc::new(std::cell::RefCell::new(
+        bayes_sched::scheduler::Fair::new(),
+    ));
+    let jt = run_with(Box::new(Shared(fair.clone())), &wl, 4);
+    assert!(jt.jobs.all_complete());
+    assert_eq!(
+        fair.borrow().tracked_jobs(),
+        0,
+        "Fair::job_pool leaked entries after all jobs completed"
+    );
+}
+
+#[test]
+fn fair_job_pool_is_empty_even_under_failure_churn() {
+    use bayes_sched::coordinator::jobtracker::{FailureConfig, TrackerConfig};
+    let wl = WorkloadConfig {
+        n_jobs: 20,
+        arrival_rate: 1.0,
+        n_users: 3,
+        seed: 92,
+        ..Default::default()
+    };
+    let fair = std::rc::Rc::new(std::cell::RefCell::new(
+        bayes_sched::scheduler::Fair::new(),
+    ));
+    let mut cfg = TrackerConfig::default();
+    cfg.failures = FailureConfig { mtbf: Some(250.0), mttr: 40.0 };
+    let mut jt = bayes_sched::coordinator::jobtracker::JobTracker::new(
+        Cluster::homogeneous(5, 2),
+        Box::new(Shared(fair.clone())),
+        generate(&wl),
+        92,
+        cfg,
+    );
+    jt.run();
+    assert!(jt.jobs.all_complete());
+    // killed jobs drain too: JobCompleted fires after the last attempt
+    assert_eq!(fair.borrow().tracked_jobs(), 0, "job_pool leaked under churn");
+}
+
+#[test]
+fn capacity_job_queue_is_empty_after_a_full_run() {
+    // the same leak pattern audited in Capacity
+    let wl = WorkloadConfig {
+        n_jobs: 25,
+        arrival_rate: 2.0,
+        n_users: 3,
+        seed: 93,
+        ..Default::default()
+    };
+    let cap = std::rc::Rc::new(std::cell::RefCell::new(
+        bayes_sched::scheduler::Capacity::new(),
+    ));
+    let jt = run_with(Box::new(Shared(cap.clone())), &wl, 4);
+    assert!(jt.jobs.all_complete());
+    assert_eq!(
+        cap.borrow().tracked_jobs(),
+        0,
+        "Capacity::job_queue leaked entries after all jobs completed"
+    );
+}
+
+// ------------------------------------------------------------ speculation --
+
+#[test]
+fn speculation_fires_on_a_heterogeneous_cluster_and_nothing_breaks() {
+    // one crawling node makes its tasks run far past their peers' median:
+    // the straggler path should launch backups, and whether each backup
+    // wins or loses, the run must stay consistent
+    use bayes_sched::cluster::node::NodeSpec;
+    use bayes_sched::cluster::resources::Resources;
+    use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+    let fast = NodeSpec::default();
+    let crawler = NodeSpec {
+        capacity: Resources::splat(0.6),
+        speed: 0.25,
+        map_slots: 2,
+        reduce_slots: 2,
+    };
+    let classes = [(fast, 0.75), (crawler, 0.25)];
+    let cluster = Cluster::heterogeneous(8, 2, &classes, 5);
+    let wl = WorkloadConfig {
+        n_jobs: 40,
+        arrival_rate: 0.8,
+        seed: 94,
+        ..Default::default()
+    };
+    let mut jt = JobTracker::new(
+        cluster,
+        scheduler::by_name("bayes", 94).unwrap(),
+        generate(&wl),
+        94,
+        TrackerConfig::default(),
+    );
+    jt.run();
+    assert!(jt.jobs.all_complete());
+    for n in &jt.cluster.nodes {
+        assert!(n.running().is_empty(), "{} busy after drain", n.id);
+    }
+    assert!(
+        jt.metrics.speculative_launches > 0,
+        "no backups launched despite a 4x-slow node class"
+    );
+    assert!(
+        jt.metrics.speculative_wins <= jt.metrics.speculative_launches,
+        "more wins than launches"
+    );
 }
