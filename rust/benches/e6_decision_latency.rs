@@ -118,10 +118,10 @@ fn main() {
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("e6_decision_latency".into()));
     doc.insert("slots_per_heartbeat".to_string(), Json::Num(SLOTS as f64));
-    doc.insert(
-        "smoke".to_string(),
-        Json::Num(if smoke() { 1.0 } else { 0.0 }),
-    );
+    // keep each insert on one line: the bench-baseline lint reads the
+    // schema straight out of this source (see LINTS.md)
+    let smoke_flag = if smoke() { 1.0 } else { 0.0 };
+    doc.insert("smoke".to_string(), Json::Num(smoke_flag));
     doc.insert("results".to_string(), Json::Obj(results));
     let json = Json::Obj(doc);
     match std::fs::write("BENCH_e6.json", json.to_string_pretty()) {

@@ -1,0 +1,168 @@
+//! Project-specific static analysis (`repro lint`) and the SchedEvent
+//! protocol auditor.
+//!
+//! Three layers:
+//! * [`source`] — hand-rolled lints over the repo's own sources (registry
+//!   hygiene, N_FEATURES sync, scheduler coverage, forbidden patterns,
+//!   experiment numbering, bench-baseline schema). See LINTS.md.
+//! * [`protocol`] — a state-machine checker for the normative SchedEvent
+//!   lifecycle (rules R1..R8, `scheduler/api.rs` module docs): runs over
+//!   recorded traces, inline as a debug-build shadow auditor in both
+//!   drivers, and inside the churn conformance sweep below.
+//! * [`trace`] — JSONL serialisation of audit-event streams
+//!   (`repro run --record-events`, `repro lint --trace`).
+
+pub mod protocol;
+pub mod source;
+pub mod trace;
+
+use crate::cluster::Cluster;
+use crate::coordinator::jobtracker::{
+    FailureConfig, JobTracker, TrackerConfig,
+};
+use crate::errors::{anyhow, Result};
+use crate::workload::generator::{generate, WorkloadConfig};
+use crate::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+use protocol::{audit_stream, AuditEvent, AuditSink, Violation};
+
+/// One audited fail/recover-churn simulation: which driver and scheduler
+/// ran, the full recorded event stream, and every protocol violation the
+/// replay auditor found (including end-of-stream drain checks).
+pub struct ChurnReport {
+    pub driver: &'static str,
+    pub scheduler: String,
+    pub events: Vec<AuditEvent>,
+    pub violations: Vec<Violation>,
+}
+
+/// Churn workload: small but busy enough to exercise OOM kills,
+/// speculative backups, node failures and recoveries.
+fn churn_specs(seed: u64) -> Vec<crate::job::job::JobSpec> {
+    generate(&WorkloadConfig {
+        n_jobs: 12,
+        arrival_rate: 1.0,
+        seed,
+        ..Default::default()
+    })
+}
+
+const CHURN_MTBF: f64 = 220.0;
+const CHURN_MTTR: f64 = 35.0;
+
+/// Run one scheduler under the MRv1 JobTracker with failure injection and
+/// a recording audit sink; replay the stream through a fresh auditor.
+pub fn audited_mrv1_run(name: &str, seed: u64) -> Result<ChurnReport> {
+    let sched = crate::scheduler::by_name(name, seed)
+        .ok_or_else(|| anyhow!("unknown scheduler '{name}'"))?;
+    let cfg = TrackerConfig {
+        failures: FailureConfig { mtbf: Some(CHURN_MTBF), mttr: CHURN_MTTR },
+        ..Default::default()
+    };
+    let cluster = Cluster::homogeneous(6, 2);
+    let mut jt = JobTracker::new(cluster, sched, churn_specs(seed), seed, cfg);
+    jt.set_audit(AuditSink::recording());
+    jt.run();
+    let events = jt.audit.take_recording();
+    let violations = audit_stream(&events);
+    Ok(ChurnReport {
+        driver: "mrv1",
+        scheduler: name.to_string(),
+        events,
+        violations,
+    })
+}
+
+/// Same as [`audited_mrv1_run`] but under the YARN ResourceManager.
+pub fn audited_yarn_run(name: &str, seed: u64) -> Result<ChurnReport> {
+    let policy = yarn_policy_by_name(name, 1.0)?;
+    let cfg = YarnConfig {
+        failures: FailureConfig { mtbf: Some(CHURN_MTBF), mttr: CHURN_MTTR },
+        ..Default::default()
+    };
+    let cluster = Cluster::homogeneous(6, 2);
+    let mut rm =
+        ResourceManager::new(cluster, policy, churn_specs(seed), seed, cfg);
+    rm.set_audit(AuditSink::recording());
+    rm.run();
+    let events = rm.audit.take_recording();
+    let violations = audit_stream(&events);
+    Ok(ChurnReport {
+        driver: "yarn",
+        scheduler: name.to_string(),
+        events,
+        violations,
+    })
+}
+
+/// The conformance sweep behind `repro lint`: every `by_name` scheduler
+/// through fail/recover churn under BOTH drivers, fully audited.
+pub fn audit_all_schedulers(seed: u64) -> Result<Vec<ChurnReport>> {
+    let mut out = Vec::new();
+    for name in crate::scheduler::ALL_NAMES {
+        out.push(audited_mrv1_run(name, seed)?);
+        out.push(audited_yarn_run(name, seed)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod conformance {
+    use super::*;
+
+    /// Every scheduler, both drivers, failure churn: zero protocol
+    /// violations end to end. This is the live half of the tentpole — the
+    /// broken-fixture tests in `protocol::tests` prove each rule CAN fire;
+    /// this proves the real drivers never make them fire.
+    #[test]
+    fn every_scheduler_survives_churn_audit_under_both_drivers() {
+        for rep in audit_all_schedulers(7).unwrap() {
+            assert!(
+                rep.violations.is_empty(),
+                "{}/{}: {:?}",
+                rep.driver,
+                rep.scheduler,
+                rep.violations
+            );
+            assert!(
+                rep.events.len() > 100,
+                "{}/{} recorded suspiciously few events ({})",
+                rep.driver,
+                rep.scheduler,
+                rep.events.len()
+            );
+        }
+    }
+
+    /// The recorded stream must survive a JSONL round-trip and still audit
+    /// clean — the exact path `repro run --record-events` + `repro lint
+    /// --trace` takes.
+    #[test]
+    fn recorded_stream_roundtrips_and_audits_clean() {
+        let rep = audited_mrv1_run("bayes", 11).unwrap();
+        let text = trace::to_jsonl(&rep.events);
+        let back = trace::from_jsonl(&text).unwrap();
+        assert_eq!(back, rep.events);
+        assert!(audit_stream(&back).is_empty());
+    }
+
+    /// Churn must actually churn: the audited runs see failures, else the
+    /// sweep proves nothing about rules R6..R8.
+    #[test]
+    fn churn_runs_exercise_failures() {
+        let rep = audited_mrv1_run("fifo", 7).unwrap();
+        let failed_nodes = rep
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    AuditEvent::Sched(
+                        crate::scheduler::api::SchedEvent::NodeFailed { .. }
+                    )
+                )
+            })
+            .count();
+        assert!(failed_nodes > 0, "no node failures in churn workload");
+    }
+}

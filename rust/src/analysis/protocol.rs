@@ -1,0 +1,886 @@
+//! The SchedEvent protocol auditor: a state-machine checker that validates
+//! an event stream against the lifecycle contract documented in
+//! `scheduler/api.rs` (the normative state table). The ATLAS line of work
+//! (arXiv 1511.01446, 1507.03562) shows that a learned scheduler degrades
+//! silently when the rows it scores at decision time drift from the rows it
+//! learns from at feedback time — so besides the lifecycle rules, the
+//! auditor carries a train/serve skew check: every `Feedback` row must be
+//! bit-identical to a row some placement was actually scored on.
+//!
+//! The auditor consumes [`AuditEvent`]s: the scheduler-visible
+//! [`SchedEvent`] stream plus the driver-side context the stream alone
+//! cannot carry (node slot capacities, job arrivals, per-attempt launch and
+//! end records with task identity). Drivers produce the full audit stream
+//! through [`AuditSink`]; recorded streams round-trip through
+//! [`crate::analysis::trace`] for offline auditing (`repro lint --trace`).
+//!
+//! Three modes (ISSUE 6):
+//! * offline — replay a recorded trace through [`ProtocolAuditor::observe`]
+//! * shadow — drivers attach [`AuditSink::shadow`] in debug builds and
+//!   panic on the first violation, so every debug test run audits itself
+//! * conformance — [`crate::analysis::audit_all_schedulers`] drives every
+//!   `by_name` scheduler through fail/recover churn with a recording sink
+//!   and replays the streams (the sweep behind `repro lint`)
+
+use std::collections::BTreeMap;
+
+use crate::bayes::features::FeatureVec;
+use crate::cluster::node::NodeId;
+use crate::job::task::{TaskKind, TaskRef};
+use crate::job::JobId;
+use crate::scheduler::api::SchedEvent;
+
+/// One audited event: the scheduler-visible stream plus driver context.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AuditEvent {
+    /// A node exists with these typed slot capacities (sent once per node
+    /// before any other event, like the driver's construction preamble).
+    NodeSpec { node: NodeId, maps: u32, reduces: u32 },
+    /// The driver admitted `job` to the job table.
+    JobArrived { job: JobId },
+    /// The driver launched one attempt of `task` on `node`, scored on
+    /// `feats` (the decision row the skew check matches feedback against).
+    Launched {
+        task: TaskRef,
+        node: NodeId,
+        speculative: bool,
+        feats: FeatureVec,
+    },
+    /// The attempt of `task` running on `node` left the node (completed,
+    /// failed, or was cancelled) — emitted before the paired
+    /// `TaskFinished`/`TaskFailed` scheduler event.
+    Ended { task: TaskRef, node: NodeId },
+    /// One event of the scheduler-visible stream.
+    Sched(SchedEvent),
+}
+
+/// The lifecycle rules the auditor enforces. `R<n>` ids match the
+/// normative state table in the `scheduler/api.rs` module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// R1: no task event before its job arrived (or after it completed).
+    StartBeforeArrival,
+    /// R2: per-(node, kind) running attempts never exceed the node's slot
+    /// capacity — the cumulative form of the `SlotBudget` batch contract.
+    SlotOvercommit,
+    /// R3: a task never has two live attempts of the same role, and a
+    /// regular launch requires the task to have no live attempt at all.
+    DoubleAssign,
+    /// R4: a speculative launch requires a live primary on a *different*
+    /// node and no live backup; a backup is promoted at most once per
+    /// launch (promotion consumes it).
+    BadSpeculation,
+    /// R5: `JobCompleted` only after the job's last attempt drained.
+    CompletedBeforeDrain,
+    /// R6: no event for a failed node until its `NodeRecovered`; fail/
+    /// recover strictly alternate per node.
+    DeadNodeEvent,
+    /// R7: every attempt end pairs with a live attempt (no end without a
+    /// start, no stale duplicate ends).
+    EndWithoutStart,
+    /// R8: every `Feedback` row is bit-identical to a row some placement
+    /// was scored on (train/serve skew).
+    TrainServeSkew,
+    /// Stream-shape errors: unknown node, duplicate arrival, events after
+    /// the audited run was finished.
+    Malformed,
+}
+
+impl Rule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::StartBeforeArrival => "start-before-arrival",
+            Rule::SlotOvercommit => "slot-overcommit",
+            Rule::DoubleAssign => "double-assign",
+            Rule::BadSpeculation => "bad-speculation",
+            Rule::CompletedBeforeDrain => "completed-before-drain",
+            Rule::DeadNodeEvent => "dead-node-event",
+            Rule::EndWithoutStart => "end-without-start",
+            Rule::TrainServeSkew => "train-serve-skew",
+            Rule::Malformed => "malformed-stream",
+        }
+    }
+}
+
+/// One contract violation: which rule, at which event index, and what
+/// happened.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: Rule,
+    /// 0-based index of the offending event in the audited stream.
+    pub index: u64,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] event #{}: {}", self.rule.name(), self.index, self.detail)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct NodeState {
+    maps: u32,
+    reduces: u32,
+    alive: bool,
+    running_maps: u32,
+    running_reduces: u32,
+}
+
+/// Live attempts of one task: where the primary runs, and where the backup
+/// (speculative copy) runs, if any.
+#[derive(Debug, Clone, Copy)]
+struct Attempt {
+    primary: NodeId,
+    backup: Option<NodeId>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobPhase {
+    Arrived,
+    Completed,
+}
+
+/// The state machine. Feed it the full audit stream in order; collect
+/// [`Violation`]s at any point. The checker never panics on bad input —
+/// every contract breach becomes a `Violation` (panicking is the
+/// [`AuditSink::shadow`] wrapper's job).
+#[derive(Debug, Default)]
+pub struct ProtocolAuditor {
+    nodes: BTreeMap<NodeId, NodeState>,
+    jobs: BTreeMap<JobId, JobPhase>,
+    /// Live attempts keyed by task.
+    attempts: BTreeMap<TaskRef, Attempt>,
+    /// Live attempts per job as seen through the SchedEvent stream
+    /// (TaskStarted minus TaskFinished/TaskFailed) — must agree with
+    /// `attempts` at JobCompleted.
+    started: BTreeMap<JobId, i64>,
+    /// Multiset of decision rows placements were scored on. Feedback rows
+    /// must be members (never retired: a row may feed back twice — the
+    /// overload verdict plus an OOM `Bad` sample).
+    scored: BTreeMap<FeatureVec, u64>,
+    violations: Vec<Violation>,
+    seen: u64,
+}
+
+impl ProtocolAuditor {
+    pub fn new() -> ProtocolAuditor {
+        ProtocolAuditor::default()
+    }
+
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    /// Events observed so far.
+    pub fn events_seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Violations recorded so far (cheap check for shadow mode).
+    pub fn violation_count(&self) -> usize {
+        self.violations.len()
+    }
+
+    fn fail(&mut self, rule: Rule, detail: String) {
+        // the offending event is the one currently being observed
+        let index = self.seen.saturating_sub(1);
+        self.violations.push(Violation { rule, index, detail });
+    }
+
+    /// Feed one event. Order matters; call in stream order.
+    pub fn observe(&mut self, ev: &AuditEvent) {
+        self.seen += 1;
+        match *ev {
+            AuditEvent::NodeSpec { node, maps, reduces } => {
+                let st = NodeState {
+                    maps,
+                    reduces,
+                    alive: true,
+                    running_maps: 0,
+                    running_reduces: 0,
+                };
+                if self.nodes.insert(node, st).is_some() {
+                    self.fail(Rule::Malformed, format!("duplicate NodeSpec for {node}"));
+                }
+            }
+            AuditEvent::JobArrived { job } => {
+                if self.jobs.insert(job, JobPhase::Arrived).is_some() {
+                    self.fail(Rule::Malformed, format!("duplicate arrival of {job}"));
+                }
+            }
+            AuditEvent::Launched { task, node, speculative, feats } => {
+                self.on_launched(task, node, speculative, feats)
+            }
+            AuditEvent::Ended { task, node } => self.on_ended(task, node),
+            AuditEvent::Sched(ref sev) => self.on_sched(sev),
+        }
+    }
+
+    fn require_job_live(&mut self, job: JobId, what: &str) {
+        match self.jobs.get(&job) {
+            Some(JobPhase::Arrived) => {}
+            Some(JobPhase::Completed) => self.fail(
+                Rule::StartBeforeArrival,
+                format!("{what} for {job} after its JobCompleted"),
+            ),
+            None => self.fail(
+                Rule::StartBeforeArrival,
+                format!("{what} for {job} before its arrival"),
+            ),
+        }
+    }
+
+    fn require_node_alive(&mut self, node: NodeId, what: &str) {
+        match self.nodes.get(&node) {
+            Some(st) if st.alive => {}
+            Some(_) => self.fail(
+                Rule::DeadNodeEvent,
+                format!("{what} on {node} while it is failed"),
+            ),
+            None => {
+                self.fail(Rule::Malformed, format!("{what} on unknown {node}"))
+            }
+        }
+    }
+
+    fn on_launched(
+        &mut self,
+        task: TaskRef,
+        node: NodeId,
+        speculative: bool,
+        feats: FeatureVec,
+    ) {
+        self.require_job_live(task.job, "attempt launch");
+        self.require_node_alive(node, "attempt launch");
+        *self.scored.entry(feats).or_insert(0) += 1;
+
+        // typed-slot accounting (R2): count on launch, release on end
+        if let Some(st) = self.nodes.get_mut(&node) {
+            let (running, cap) = match task.kind {
+                TaskKind::Map => (&mut st.running_maps, st.maps),
+                TaskKind::Reduce => (&mut st.running_reduces, st.reduces),
+            };
+            *running += 1;
+            if *running > cap {
+                let n = *running;
+                self.fail(
+                    Rule::SlotOvercommit,
+                    format!(
+                        "{node} runs {n} {:?} attempts but has {cap} slots \
+                         (launching {task})",
+                        task.kind
+                    ),
+                );
+            }
+        }
+
+        match (speculative, self.attempts.get(&task).copied()) {
+            (false, None) => {
+                self.attempts.insert(task, Attempt { primary: node, backup: None });
+            }
+            (false, Some(a)) => self.fail(
+                Rule::DoubleAssign,
+                format!(
+                    "regular launch of {task} on {node} but it already runs \
+                     on {}",
+                    a.primary
+                ),
+            ),
+            (true, Some(a)) if a.backup.is_none() && a.primary != node => {
+                self.attempts
+                    .insert(task, Attempt { primary: a.primary, backup: Some(node) });
+            }
+            (true, Some(a)) if a.backup.is_some() => self.fail(
+                Rule::BadSpeculation,
+                format!("{task} already has a live backup; second copy on {node}"),
+            ),
+            (true, Some(_)) => self.fail(
+                Rule::BadSpeculation,
+                format!("speculative copy of {task} on its own primary {node}"),
+            ),
+            (true, None) => self.fail(
+                Rule::BadSpeculation,
+                format!("speculative launch of {task} with no running primary"),
+            ),
+        }
+    }
+
+    fn on_ended(&mut self, task: TaskRef, node: NodeId) {
+        if let Some(st) = self.nodes.get_mut(&node) {
+            let running = match task.kind {
+                TaskKind::Map => &mut st.running_maps,
+                TaskKind::Reduce => &mut st.running_reduces,
+            };
+            *running = running.saturating_sub(1);
+        }
+        match self.attempts.get(&task).copied() {
+            Some(a) if a.backup == Some(node) => {
+                // the backup ended; the primary keeps running
+                self.attempts
+                    .insert(task, Attempt { primary: a.primary, backup: None });
+            }
+            Some(a) if a.primary == node => match a.backup {
+                // the primary ended with a live backup: promotion (R4) —
+                // the backup becomes the new primary, consuming it
+                Some(b) => {
+                    self.attempts.insert(task, Attempt { primary: b, backup: None });
+                }
+                None => {
+                    self.attempts.remove(&task);
+                }
+            },
+            Some(a) => self.fail(
+                Rule::EndWithoutStart,
+                format!(
+                    "end of {task} on {node}, but its attempts run on {} \
+                     (backup {:?})",
+                    a.primary, a.backup
+                ),
+            ),
+            None => self.fail(
+                Rule::EndWithoutStart,
+                format!("end of {task} on {node} with no live attempt"),
+            ),
+        }
+    }
+
+    fn on_sched(&mut self, ev: &SchedEvent) {
+        match *ev {
+            SchedEvent::ClusterInfo { total_slots } => {
+                if !self.nodes.is_empty() {
+                    let declared: u32 =
+                        self.nodes.values().map(|n| n.maps + n.reduces).sum();
+                    if declared != total_slots {
+                        self.fail(
+                            Rule::Malformed,
+                            format!(
+                                "ClusterInfo says {total_slots} slots but \
+                                 NodeSpecs sum to {declared}"
+                            ),
+                        );
+                    }
+                }
+            }
+            SchedEvent::Feedback { feats, .. } => {
+                if self.scored.get(&feats).copied().unwrap_or(0) == 0 {
+                    self.fail(
+                        Rule::TrainServeSkew,
+                        format!(
+                            "feedback row {feats:?} was never a decision row \
+                             — decision-time and feedback-time features drifted"
+                        ),
+                    );
+                }
+            }
+            SchedEvent::TaskStarted { job, node, .. } => {
+                self.require_job_live(job, "TaskStarted");
+                self.require_node_alive(node, "TaskStarted");
+                *self.started.entry(job).or_insert(0) += 1;
+            }
+            SchedEvent::TaskFinished { job, node, .. }
+            | SchedEvent::TaskFailed { job, node, .. } => {
+                self.require_job_live(job, "attempt-end event");
+                self.require_node_alive(node, "attempt-end event");
+                let live = self.started.entry(job).or_insert(0);
+                *live -= 1;
+                if *live < 0 {
+                    self.fail(
+                        Rule::EndWithoutStart,
+                        format!("attempt-end event for {job} with none started"),
+                    );
+                }
+            }
+            SchedEvent::JobCompleted { job } => {
+                match self.jobs.get(&job) {
+                    Some(JobPhase::Arrived) => {}
+                    Some(JobPhase::Completed) => self.fail(
+                        Rule::Malformed,
+                        format!("duplicate JobCompleted for {job}"),
+                    ),
+                    None => self.fail(
+                        Rule::StartBeforeArrival,
+                        format!("JobCompleted for {job} before its arrival"),
+                    ),
+                }
+                let live_events = self.started.get(&job).copied().unwrap_or(0);
+                let live_attempts =
+                    self.attempts.keys().filter(|t| t.job == job).count();
+                if live_events != 0 || live_attempts != 0 {
+                    self.fail(
+                        Rule::CompletedBeforeDrain,
+                        format!(
+                            "JobCompleted for {job} with {live_attempts} live \
+                             attempts ({live_events} by event count)"
+                        ),
+                    );
+                }
+                self.jobs.insert(job, JobPhase::Completed);
+                self.started.remove(&job);
+            }
+            SchedEvent::NodeFailed { node } => match self.nodes.get_mut(&node) {
+                Some(st) if st.alive => {
+                    st.alive = false;
+                    let stranded = st.running_maps + st.running_reduces;
+                    if stranded > 0 {
+                        self.fail(
+                            Rule::DeadNodeEvent,
+                            format!(
+                                "NodeFailed for {node} before its {stranded} \
+                                 running attempts were reported lost"
+                            ),
+                        );
+                    }
+                }
+                Some(_) => self.fail(
+                    Rule::DeadNodeEvent,
+                    format!("NodeFailed for already-failed {node}"),
+                ),
+                None => {
+                    self.fail(Rule::Malformed, format!("NodeFailed for unknown {node}"))
+                }
+            },
+            SchedEvent::NodeRecovered { node } => match self.nodes.get_mut(&node) {
+                Some(st) if !st.alive => st.alive = true,
+                Some(_) => self.fail(
+                    Rule::DeadNodeEvent,
+                    format!("NodeRecovered for {node} which never failed"),
+                ),
+                None => self.fail(
+                    Rule::Malformed,
+                    format!("NodeRecovered for unknown {node}"),
+                ),
+            },
+        }
+    }
+
+    /// End-of-run checks for complete recorded traces: every attempt must
+    /// have drained and every arrived job completed. Do NOT call this from
+    /// shadow mode (a shadow audit can stop mid-run).
+    pub fn finish(&mut self) {
+        let leftovers: Vec<String> =
+            self.attempts.keys().map(|t| t.to_string()).collect();
+        if !leftovers.is_empty() {
+            self.seen += 1;
+            self.fail(
+                Rule::CompletedBeforeDrain,
+                format!("stream ended with live attempts: {}", leftovers.join(", ")),
+            );
+        }
+        let undone: Vec<String> = self
+            .jobs
+            .iter()
+            .filter(|(_, p)| **p == JobPhase::Arrived)
+            .map(|(j, _)| j.to_string())
+            .collect();
+        if !undone.is_empty() {
+            self.seen += 1;
+            self.fail(
+                Rule::CompletedBeforeDrain,
+                format!("stream ended with unfinished jobs: {}", undone.join(", ")),
+            );
+        }
+    }
+}
+
+/// The driver-side fan-out: forwards every audit event to an optional
+/// [`ProtocolAuditor`] (panicking on violations when in shadow mode) and an
+/// optional recording buffer (for `repro run --record-events`).
+#[derive(Debug, Default)]
+pub struct AuditSink {
+    auditor: Option<ProtocolAuditor>,
+    recording: Option<Vec<AuditEvent>>,
+    panic_on_violation: bool,
+}
+
+impl AuditSink {
+    /// No auditing, no recording: every call is a no-op.
+    pub fn disabled() -> AuditSink {
+        AuditSink::default()
+    }
+
+    /// The debug-build default: audit inline and panic on the first
+    /// violation, so every debug test run checks the protocol for free.
+    pub fn shadow() -> AuditSink {
+        AuditSink {
+            auditor: Some(ProtocolAuditor::new()),
+            recording: None,
+            panic_on_violation: true,
+        }
+    }
+
+    /// Audit inline, collecting violations instead of panicking
+    /// (conformance tests, `repro lint`).
+    pub fn auditing() -> AuditSink {
+        AuditSink {
+            auditor: Some(ProtocolAuditor::new()),
+            recording: None,
+            panic_on_violation: false,
+        }
+    }
+
+    /// Record the stream (and audit it, collecting) for later replay.
+    pub fn recording() -> AuditSink {
+        AuditSink {
+            auditor: Some(ProtocolAuditor::new()),
+            recording: Some(Vec::new()),
+            panic_on_violation: false,
+        }
+    }
+
+    /// What drivers attach by default: shadow in debug builds, disabled in
+    /// release (zero overhead on the measured paths).
+    pub fn default_for_build() -> AuditSink {
+        if cfg!(debug_assertions) {
+            AuditSink::shadow()
+        } else {
+            AuditSink::disabled()
+        }
+    }
+
+    /// True when pushes do something (lets drivers skip building events).
+    pub fn enabled(&self) -> bool {
+        self.auditor.is_some() || self.recording.is_some()
+    }
+
+    /// Feed one event through the sink.
+    pub fn push(&mut self, ev: AuditEvent) {
+        if let Some(rec) = &mut self.recording {
+            rec.push(ev);
+        }
+        if let Some(aud) = &mut self.auditor {
+            let before = aud.violation_count();
+            aud.observe(&ev);
+            if self.panic_on_violation && aud.violation_count() > before {
+                let v = &aud.violations()[before];
+                panic!("SchedEvent protocol violation: {v} (on {ev:?})");
+            }
+        }
+    }
+
+    /// Shorthand for pushing a scheduler-visible event.
+    pub fn sched(&mut self, ev: &SchedEvent) {
+        if self.enabled() {
+            self.push(AuditEvent::Sched(*ev));
+        }
+    }
+
+    /// The inline auditor's violations so far (empty when not auditing).
+    pub fn violations(&self) -> &[Violation] {
+        self.auditor.as_ref().map(|a| a.violations()).unwrap_or(&[])
+    }
+
+    /// Take the recorded stream (empty when not recording).
+    pub fn take_recording(&mut self) -> Vec<AuditEvent> {
+        self.recording.take().unwrap_or_default()
+    }
+}
+
+/// Replay a recorded stream through a fresh auditor, including end-of-run
+/// checks. Returns all violations.
+pub fn audit_stream(events: &[AuditEvent]) -> Vec<Violation> {
+    let mut aud = ProtocolAuditor::new();
+    for ev in events {
+        aud.observe(ev);
+    }
+    aud.finish();
+    aud.violations().to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayes::classifier::Label;
+    use crate::bayes::features::N_FEATURES;
+
+    fn node(i: u32) -> NodeId {
+        NodeId(i)
+    }
+
+    fn job(i: u32) -> JobId {
+        JobId(i)
+    }
+
+    fn task(j: u32, index: u32) -> TaskRef {
+        TaskRef { job: job(j), kind: TaskKind::Map, index }
+    }
+
+    fn feats(tag: u8) -> FeatureVec {
+        [tag; N_FEATURES]
+    }
+
+    /// A minimal healthy preamble: one node, one job.
+    fn preamble() -> Vec<AuditEvent> {
+        vec![
+            AuditEvent::NodeSpec { node: node(0), maps: 2, reduces: 1 },
+            AuditEvent::NodeSpec { node: node(1), maps: 2, reduces: 1 },
+            AuditEvent::Sched(SchedEvent::ClusterInfo { total_slots: 6 }),
+            AuditEvent::JobArrived { job: job(0) },
+        ]
+    }
+
+    fn launch(t: TaskRef, n: NodeId, tag: u8) -> [AuditEvent; 2] {
+        [
+            AuditEvent::Launched {
+                task: t,
+                node: n,
+                speculative: false,
+                feats: feats(tag),
+            },
+            AuditEvent::Sched(SchedEvent::TaskStarted {
+                job: t.job,
+                node: n,
+                kind: t.kind,
+            }),
+        ]
+    }
+
+    fn end_ok(t: TaskRef, n: NodeId) -> [AuditEvent; 2] {
+        [
+            AuditEvent::Ended { task: t, node: n },
+            AuditEvent::Sched(SchedEvent::TaskFinished {
+                job: t.job,
+                node: n,
+                kind: t.kind,
+            }),
+        ]
+    }
+
+    fn rules(vs: &[Violation]) -> Vec<Rule> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn clean_lifecycle_has_no_violations() {
+        let mut evs = preamble();
+        evs.extend(launch(task(0, 0), node(0), 1));
+        evs.extend(launch(task(0, 1), node(1), 2));
+        evs.push(AuditEvent::Sched(SchedEvent::Feedback {
+            feats: feats(1),
+            label: Label::Good,
+        }));
+        evs.extend(end_ok(task(0, 0), node(0)));
+        evs.extend(end_ok(task(0, 1), node(1)));
+        evs.push(AuditEvent::Sched(SchedEvent::JobCompleted { job: job(0) }));
+        let vs = audit_stream(&evs);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn start_before_arrival_fires() {
+        let mut evs = vec![AuditEvent::NodeSpec {
+            node: node(0),
+            maps: 2,
+            reduces: 1,
+        }];
+        evs.extend(launch(task(9, 0), node(0), 1));
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::StartBeforeArrival), "{vs:?}");
+    }
+
+    #[test]
+    fn slot_overcommit_fires() {
+        let mut evs = preamble();
+        // node 0 has 2 map slots; launch 3 attempts on it
+        evs.extend(launch(task(0, 0), node(0), 1));
+        evs.extend(launch(task(0, 1), node(0), 1));
+        evs.extend(launch(task(0, 2), node(0), 1));
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::SlotOvercommit), "{vs:?}");
+    }
+
+    #[test]
+    fn double_assign_fires() {
+        let mut evs = preamble();
+        evs.extend(launch(task(0, 0), node(0), 1));
+        evs.extend(launch(task(0, 0), node(1), 1)); // same task, regular again
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::DoubleAssign), "{vs:?}");
+    }
+
+    #[test]
+    fn speculation_without_primary_fires() {
+        let mut evs = preamble();
+        evs.push(AuditEvent::Launched {
+            task: task(0, 0),
+            node: node(0),
+            speculative: true,
+            feats: feats(1),
+        });
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::BadSpeculation), "{vs:?}");
+    }
+
+    #[test]
+    fn second_backup_fires() {
+        let mut evs = preamble();
+        evs.extend(launch(task(0, 0), node(0), 1));
+        for n in [1, 1] {
+            evs.push(AuditEvent::Launched {
+                task: task(0, 0),
+                node: node(n),
+                speculative: true,
+                feats: feats(2),
+            });
+        }
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::BadSpeculation), "{vs:?}");
+    }
+
+    #[test]
+    fn backup_promotion_is_legal_exactly_once() {
+        let mut evs = preamble();
+        let t = task(0, 0);
+        evs.extend(launch(t, node(0), 1));
+        evs.push(AuditEvent::Launched {
+            task: t,
+            node: node(1),
+            speculative: true,
+            feats: feats(2),
+        });
+        evs.push(AuditEvent::Sched(SchedEvent::TaskStarted {
+            job: t.job,
+            node: node(1),
+            kind: t.kind,
+        }));
+        // primary dies -> backup promoted in place
+        evs.push(AuditEvent::Ended { task: t, node: node(0) });
+        evs.push(AuditEvent::Sched(SchedEvent::TaskFailed {
+            job: t.job,
+            node: node(0),
+            kind: t.kind,
+            attempt: 1,
+            reason: crate::scheduler::api::FailReason::NodeLost,
+        }));
+        // the promoted attempt completes on node 1
+        evs.extend(end_ok(t, node(1)));
+        evs.push(AuditEvent::Sched(SchedEvent::JobCompleted { job: job(0) }));
+        let vs = audit_stream(&evs);
+        assert!(vs.is_empty(), "{vs:?}");
+
+        // but ending it twice on node 1 is an end-without-start
+        let mut evs2 = preamble();
+        evs2.extend(launch(t, node(0), 1));
+        evs2.push(AuditEvent::Ended { task: t, node: node(0) });
+        evs2.push(AuditEvent::Ended { task: t, node: node(0) });
+        let vs2 = audit_stream(&evs2);
+        assert!(rules(&vs2).contains(&Rule::EndWithoutStart), "{vs2:?}");
+    }
+
+    #[test]
+    fn completed_before_drain_fires() {
+        let mut evs = preamble();
+        evs.extend(launch(task(0, 0), node(0), 1));
+        evs.push(AuditEvent::Sched(SchedEvent::JobCompleted { job: job(0) }));
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::CompletedBeforeDrain), "{vs:?}");
+    }
+
+    #[test]
+    fn dead_node_event_fires() {
+        let mut evs = preamble();
+        evs.push(AuditEvent::Sched(SchedEvent::NodeFailed { node: node(0) }));
+        evs.extend(launch(task(0, 0), node(0), 1));
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::DeadNodeEvent), "{vs:?}");
+
+        // recovery re-opens the node
+        let mut evs2 = preamble();
+        evs2.push(AuditEvent::Sched(SchedEvent::NodeFailed { node: node(0) }));
+        evs2.push(AuditEvent::Sched(SchedEvent::NodeRecovered { node: node(0) }));
+        evs2.extend(launch(task(0, 0), node(0), 1));
+        evs2.extend(end_ok(task(0, 0), node(0)));
+        evs2.push(AuditEvent::Sched(SchedEvent::JobCompleted { job: job(0) }));
+        assert!(audit_stream(&evs2).is_empty());
+    }
+
+    #[test]
+    fn recover_without_fail_fires() {
+        let mut evs = preamble();
+        evs.push(AuditEvent::Sched(SchedEvent::NodeRecovered { node: node(0) }));
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::DeadNodeEvent), "{vs:?}");
+    }
+
+    #[test]
+    fn train_serve_skew_fires_on_foreign_row() {
+        let mut evs = preamble();
+        evs.extend(launch(task(0, 0), node(0), 1));
+        evs.push(AuditEvent::Sched(SchedEvent::Feedback {
+            feats: feats(9), // never a decision row
+            label: Label::Bad,
+        }));
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::TrainServeSkew), "{vs:?}");
+    }
+
+    #[test]
+    fn oom_double_feedback_of_same_row_is_legal() {
+        let mut evs = preamble();
+        let t = task(0, 0);
+        evs.extend(launch(t, node(0), 3));
+        // OOM: the Bad sample reuses the launch row, then the heartbeat
+        // verdict delivers the same row again
+        evs.push(AuditEvent::Ended { task: t, node: node(0) });
+        evs.push(AuditEvent::Sched(SchedEvent::Feedback {
+            feats: feats(3),
+            label: Label::Bad,
+        }));
+        evs.push(AuditEvent::Sched(SchedEvent::TaskFailed {
+            job: t.job,
+            node: node(0),
+            kind: t.kind,
+            attempt: 1,
+            reason: crate::scheduler::api::FailReason::Oom,
+        }));
+        evs.push(AuditEvent::Sched(SchedEvent::Feedback {
+            feats: feats(3),
+            label: Label::Bad,
+        }));
+        // retry elsewhere, drain
+        evs.extend(launch(t, node(1), 4));
+        evs.extend(end_ok(t, node(1)));
+        evs.push(AuditEvent::Sched(SchedEvent::JobCompleted { job: job(0) }));
+        let vs = audit_stream(&evs);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn unfinished_stream_fails_finish() {
+        let mut evs = preamble();
+        evs.extend(launch(task(0, 0), node(0), 1));
+        let vs = audit_stream(&evs); // finish() runs inside
+        assert!(rules(&vs).contains(&Rule::CompletedBeforeDrain), "{vs:?}");
+    }
+
+    #[test]
+    fn cluster_info_slot_mismatch_is_malformed() {
+        let evs = vec![
+            AuditEvent::NodeSpec { node: node(0), maps: 2, reduces: 1 },
+            AuditEvent::Sched(SchedEvent::ClusterInfo { total_slots: 99 }),
+        ];
+        let vs = audit_stream(&evs);
+        assert!(rules(&vs).contains(&Rule::Malformed), "{vs:?}");
+    }
+
+    #[test]
+    fn shadow_sink_panics_on_violation() {
+        let result = std::panic::catch_unwind(|| {
+            let mut sink = AuditSink::shadow();
+            sink.push(AuditEvent::Sched(SchedEvent::NodeRecovered {
+                node: node(7),
+            }));
+        });
+        assert!(result.is_err(), "shadow sink must panic on a violation");
+    }
+
+    #[test]
+    fn recording_sink_captures_stream() {
+        let mut sink = AuditSink::recording();
+        let evs = preamble();
+        for ev in &evs {
+            sink.push(*ev);
+        }
+        assert_eq!(sink.take_recording().len(), evs.len());
+    }
+}

@@ -1,0 +1,1177 @@
+//! Layer 1 of `repro lint`: project-specific source lints over the
+//! workspace, in the spirit of the in-repo dependency substitutes — a small
+//! hand-rolled scanner (the parsing style of `config/json.rs`), not a
+//! rustc plugin. Each lint enforces one invariant the ROADMAP previously
+//! guarded ad hoc; `LINTS.md` documents every lint, its rationale, and the
+//! allowlist syntax.
+//!
+//! Allowlisting: a line is exempt from lint `<name>` when it, or the line
+//! directly above it, contains `lint: allow(<name>)` (inside a comment); a
+//! whole file is exempt when any line contains `lint: allow-file(<name>)`.
+//!
+//! Test code is out of scope for the style lints: files named `tests.rs`,
+//! anything under `testkit/`, `rust/tests/`, `rust/benches/`, and
+//! `#[cfg(test)]` regions (found by brace counting) are skipped.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+use crate::errors::{Context, Result};
+
+/// One lint hit.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: &'static str,
+    /// Workspace-relative path.
+    pub file: String,
+    /// 1-based; 0 for file-level findings.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}: [{}] {}", self.file, self.lint, self.msg)
+        } else {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+        }
+    }
+}
+
+/// One loaded `rust/src` file with its per-line test-region mask.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<String>,
+    /// `in_test[i]` — line i is inside a `#[cfg(test)]` region.
+    pub in_test: Vec<bool>,
+}
+
+impl SourceFile {
+    fn new(rel: String, text: &str) -> SourceFile {
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let in_test = test_mask(&lines);
+        SourceFile { rel, lines, in_test }
+    }
+
+    /// Is line `i` (0-based) exempt from `lint`?
+    fn allowed(&self, i: usize, lint: &str) -> bool {
+        let file_tag = format!("lint: allow-file({lint})");
+        if self.lines.iter().any(|l| l.contains(&file_tag)) {
+            return true;
+        }
+        let tag = format!("lint: allow({lint})");
+        if self.lines[i].contains(&tag) {
+            return true;
+        }
+        i > 0 && self.lines[i - 1].contains(&tag)
+    }
+}
+
+/// Everything the lints look at, loaded once.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub root: PathBuf,
+    /// `rust/src/**/*.rs`, minus `tests.rs` files and `testkit/`.
+    pub src: Vec<SourceFile>,
+    /// Every `Cargo.toml` (workspace root + members).
+    pub cargo_tomls: Vec<(String, Vec<String>)>,
+    /// `rust/tests/*.rs` (rel path, content).
+    pub tests: Vec<(String, String)>,
+    /// `rust/benches/*.rs` (rel path, content).
+    pub benches: Vec<(String, String)>,
+    /// `python/compile/constants.py` lines, if present.
+    pub py_constants: Option<(String, Vec<String>)>,
+    /// `BENCH_e6.json` content, if present.
+    pub bench_baseline: Option<(String, String)>,
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_of(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+impl Workspace {
+    /// Load the workspace under `root` (the repo checkout). Missing pieces
+    /// are tolerated here; each lint decides whether absence is a finding.
+    pub fn load(root: &Path) -> Result<Workspace> {
+        let mut ws = Workspace { root: root.to_path_buf(), ..Default::default() };
+
+        let src_root = root.join("rust/src");
+        let mut files = Vec::new();
+        walk_rs(&src_root, &mut files);
+        for p in files {
+            let rel = rel_of(root, &p);
+            if rel.contains("/testkit/") || rel.ends_with("/tests.rs") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {rel}"))?;
+            ws.src.push(SourceFile::new(rel, &text));
+        }
+
+        for rel in ["Cargo.toml", "rust/Cargo.toml"] {
+            let p = root.join(rel);
+            if let Ok(text) = std::fs::read_to_string(&p) {
+                ws.cargo_tomls
+                    .push((rel.to_string(), text.lines().map(str::to_string).collect()));
+            }
+        }
+
+        for (dir, bucket) in
+            [("rust/tests", 0usize), ("rust/benches", 1usize)]
+        {
+            let mut files = Vec::new();
+            walk_rs(&root.join(dir), &mut files);
+            for p in files {
+                let rel = rel_of(root, &p);
+                let text = std::fs::read_to_string(&p)
+                    .with_context(|| format!("reading {rel}"))?;
+                if bucket == 0 {
+                    ws.tests.push((rel, text));
+                } else {
+                    ws.benches.push((rel, text));
+                }
+            }
+        }
+
+        let py = root.join("python/compile/constants.py");
+        if let Ok(text) = std::fs::read_to_string(&py) {
+            ws.py_constants = Some((
+                "python/compile/constants.py".to_string(),
+                text.lines().map(str::to_string).collect(),
+            ));
+        }
+
+        let baseline = root.join("BENCH_e6.json");
+        if let Ok(text) = std::fs::read_to_string(&baseline) {
+            ws.bench_baseline = Some(("BENCH_e6.json".to_string(), text));
+        }
+
+        Ok(ws)
+    }
+
+    fn find_src(&self, suffix: &str) -> Option<&SourceFile> {
+        self.src.iter().find(|f| f.rel.ends_with(suffix))
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` regions by brace counting. An
+/// attribute followed by `;` before any `{` (e.g. `#[cfg(test)] mod t;`)
+/// covers only those lines.
+fn test_mask(lines: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].trim_start().starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // scan forward for the region: first `{` opens it, a `;` before
+        // any `{` ends it immediately
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        'scan: while j < lines.len() {
+            mask[j] = true;
+            for c in strip_code(&lines[j]).chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'scan;
+                        }
+                    }
+                    ';' if !opened => break 'scan,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Strip line comments and the *contents* of string/char literals so
+/// pattern lints do not fire inside text. Single-line heuristic (raw
+/// multi-line strings are not tracked — fine for this codebase).
+fn strip_code(line: &str) -> String {
+    let b = line.as_bytes();
+    let mut out = String::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            break;
+        }
+        if c == b'"' {
+            out.push('"');
+            i += 1;
+            while i < b.len() && b[i] != b'"' {
+                i += if b[i] == b'\\' { 2 } else { 1 };
+            }
+            out.push('"');
+            i += 1;
+            continue;
+        }
+        if c == b'\'' {
+            // char literal ('x', '\n', b'"'); lifetimes ('a) pass through
+            if i + 3 < b.len() && b[i + 1] == b'\\' && b[i + 3] == b'\'' {
+                out.push_str("' '");
+                i += 4;
+                continue;
+            }
+            if i + 2 < b.len() && b[i + 2] == b'\'' {
+                out.push_str("' '");
+                i += 3;
+                continue;
+            }
+        }
+        out.push(c as char);
+        i += 1;
+    }
+    out
+}
+
+/// Does `tok` look like a float literal (or float const path)?
+fn is_float_token(tok: &str) -> bool {
+    let t = tok
+        .trim_matches(|c: char| "();,{}".contains(c))
+        .trim_start_matches('-');
+    if t.starts_with("f32::") || t.starts_with("f64::") {
+        return true;
+    }
+    if !t.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+        return false;
+    }
+    let core = t.trim_end_matches("f32").trim_end_matches("f64").trim_end_matches('_');
+    core.contains('.') && core.parse::<f64>().is_ok()
+}
+
+fn first_token_after(s: &str) -> &str {
+    s.trim_start().split_whitespace().next().unwrap_or("")
+}
+
+fn last_token_before(s: &str) -> &str {
+    s.trim_end().split_whitespace().last().unwrap_or("")
+}
+
+// ---------------------------------------------------------------- lints --
+
+/// `registry-deps`: every `[dependencies]`-family section in every
+/// Cargo.toml must be empty — the build is offline by design; in-crate
+/// substitutes replace would-be deps.
+fn lint_registry_deps(ws: &Workspace, out: &mut Vec<Finding>) {
+    for (rel, lines) in &ws.cargo_tomls {
+        let mut in_deps = false;
+        for (i, line) in lines.iter().enumerate() {
+            let t = line.trim();
+            if t.starts_with('[') {
+                let section = t.trim_matches(|c| c == '[' || c == ']');
+                in_deps = section == "dependencies"
+                    || section == "dev-dependencies"
+                    || section == "build-dependencies"
+                    || section.ends_with(".dependencies");
+                continue;
+            }
+            if in_deps && !t.is_empty() && !t.starts_with('#') {
+                out.push(Finding {
+                    lint: "registry-deps",
+                    file: rel.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "registry dependency '{t}' — this build is offline by \
+                         design; write an in-crate substitute instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn parse_const_int(lines: &[String], pattern: &str) -> Option<(usize, u64)> {
+    for (i, line) in lines.iter().enumerate() {
+        if let Some(pos) = line.find(pattern) {
+            let rest = &line[pos + pattern.len()..];
+            let digits: String = rest
+                .chars()
+                .skip_while(|c| !c.is_ascii_digit())
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if let Ok(v) = digits.parse() {
+                return Some((i + 1, v));
+            }
+        }
+    }
+    None
+}
+
+/// `n-features-sync`: the feature width must agree across the rust feature
+/// pipeline (`bayes/features.rs`), the artifact shape contract
+/// (`runtime/artifacts.rs` EXPECTED), and the python lowering constants —
+/// the PR-2 8→10 widening left `runtime/artifacts.rs` behind; this lint
+/// makes that drift impossible to reintroduce.
+fn lint_n_features_sync(ws: &Workspace, out: &mut Vec<Finding>) {
+    let Some(features) = ws.find_src("bayes/features.rs") else { return };
+    let Some((_, nf)) = parse_const_int(&features.lines, "N_FEATURES: usize =")
+    else {
+        out.push(Finding {
+            lint: "n-features-sync",
+            file: features.rel.clone(),
+            line: 0,
+            msg: "cannot find `N_FEATURES: usize = <int>`".into(),
+        });
+        return;
+    };
+    let nb = parse_const_int(&features.lines, "N_BINS: usize =").map(|(_, v)| v);
+
+    match ws.find_src("runtime/artifacts.rs") {
+        Some(art) => {
+            // non-test region only (the test fixture has its own copies)
+            let lib_lines: Vec<String> = art
+                .lines
+                .iter()
+                .zip(&art.in_test)
+                .map(|(l, t)| if *t { String::new() } else { l.clone() })
+                .collect();
+            match parse_const_int(&lib_lines, "n_features:") {
+                Some((line, v)) if v != nf => out.push(Finding {
+                    lint: "n-features-sync",
+                    file: art.rel.clone(),
+                    line,
+                    msg: format!(
+                        "EXPECTED.n_features = {v} but bayes/features.rs has \
+                         N_FEATURES = {nf}"
+                    ),
+                }),
+                Some(_) => {}
+                None => out.push(Finding {
+                    lint: "n-features-sync",
+                    file: art.rel.clone(),
+                    line: 0,
+                    msg: "cannot find `n_features: <int>` in EXPECTED".into(),
+                }),
+            }
+            if let (Some((line, fd)), Some(nb)) =
+                (parse_const_int(&lib_lines, "feature_dim:"), nb)
+            {
+                if fd != nf * nb {
+                    out.push(Finding {
+                        lint: "n-features-sync",
+                        file: art.rel.clone(),
+                        line,
+                        msg: format!(
+                            "EXPECTED.feature_dim = {fd} but N_FEATURES × \
+                             N_BINS = {}",
+                            nf * nb
+                        ),
+                    });
+                }
+            }
+        }
+        None => out.push(Finding {
+            lint: "n-features-sync",
+            file: "rust/src/runtime/artifacts.rs".into(),
+            line: 0,
+            msg: "missing — cannot verify the artifact shape contract".into(),
+        }),
+    }
+
+    match &ws.py_constants {
+        Some((rel, lines)) => {
+            match parse_const_int(lines, "N_FEATURES =") {
+                Some((line, v)) if v != nf => out.push(Finding {
+                    lint: "n-features-sync",
+                    file: rel.clone(),
+                    line,
+                    msg: format!(
+                        "python N_FEATURES = {v} but bayes/features.rs has {nf}"
+                    ),
+                }),
+                Some(_) => {}
+                None => out.push(Finding {
+                    lint: "n-features-sync",
+                    file: rel.clone(),
+                    line: 0,
+                    msg: "cannot find `N_FEATURES = <int>`".into(),
+                }),
+            }
+            if let (Some((line, pb)), Some(nb)) =
+                (parse_const_int(lines, "N_BINS ="), nb)
+            {
+                if pb != nb {
+                    out.push(Finding {
+                        lint: "n-features-sync",
+                        file: rel.clone(),
+                        line,
+                        msg: format!(
+                            "python N_BINS = {pb} but bayes/features.rs has {nb}"
+                        ),
+                    });
+                }
+            }
+        }
+        None => out.push(Finding {
+            lint: "n-features-sync",
+            file: "python/compile/constants.py".into(),
+            line: 0,
+            msg: "missing — cannot verify the lowering constants".into(),
+        }),
+    }
+}
+
+fn all_names(ws: &Workspace) -> Option<(&SourceFile, Vec<(usize, String)>)> {
+    let f = ws.find_src("scheduler/mod.rs")?;
+    let start = f
+        .lines
+        .iter()
+        .position(|l| l.contains("pub const ALL_NAMES"))?;
+    let mut names = Vec::new();
+    for (i, line) in f.lines.iter().enumerate().skip(start) {
+        for part in line.split('"').skip(1).step_by(2) {
+            names.push((i + 1, part.to_string()));
+        }
+        if line.contains(']') && i > start {
+            break;
+        }
+        if line.contains("];") {
+            break;
+        }
+    }
+    Some((f, names))
+}
+
+/// `scheduler-coverage`: every scheduler in `ALL_NAMES` must be exercised
+/// by `rust/tests/api_conformance.rs` (a literal name or an `ALL_NAMES`
+/// sweep) and by at least one experiment — a registered-but-unmeasured
+/// scheduler is dead weight the report tables silently omit.
+fn lint_scheduler_coverage(ws: &Workspace, out: &mut Vec<Finding>) {
+    let Some((modfile, names)) = all_names(ws) else { return };
+    let conformance = ws.tests.iter().find(|(rel, _)| rel.ends_with("api_conformance.rs"));
+    let experiments: Vec<&SourceFile> = ws
+        .src
+        .iter()
+        .filter(|f| f.rel.contains("report/experiments/"))
+        .collect();
+    for (line, name) in &names {
+        let quoted = format!("\"{name}\"");
+        let covered_conf = match &conformance {
+            Some((_, text)) => text.contains(&quoted) || text.contains("ALL_NAMES"),
+            None => false,
+        };
+        if !covered_conf {
+            out.push(Finding {
+                lint: "scheduler-coverage",
+                file: modfile.rel.clone(),
+                line: *line,
+                msg: format!(
+                    "scheduler '{name}' is not exercised by \
+                     rust/tests/api_conformance.rs"
+                ),
+            });
+        }
+        let covered_exp = experiments.iter().any(|f| {
+            f.lines
+                .iter()
+                .any(|l| l.contains(&quoted) || l.contains("ALL_NAMES"))
+        });
+        if !covered_exp {
+            out.push(Finding {
+                lint: "scheduler-coverage",
+                file: modfile.rel.clone(),
+                line: *line,
+                msg: format!("scheduler '{name}' appears in no experiment"),
+            });
+        }
+    }
+}
+
+/// `unwrap-in-lib`: no `.unwrap()` / `.expect(` in library paths — failures
+/// must flow through `errors.rs` so callers can react; panics are for tests.
+fn lint_unwrap(ws: &Workspace, out: &mut Vec<Finding>) {
+    for f in &ws.src {
+        for (i, line) in f.lines.iter().enumerate() {
+            if f.in_test[i] {
+                continue;
+            }
+            let code = strip_code(line);
+            let hit = if code.contains(".unwrap()") {
+                Some(".unwrap()")
+            } else if code.contains(".expect(") {
+                Some(".expect(…)")
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                if f.allowed(i, "unwrap-in-lib") {
+                    continue;
+                }
+                out.push(Finding {
+                    lint: "unwrap-in-lib",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "{what} in library code — return a typed error \
+                         (errors.rs) or allowlist a proven invariant"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `float-eq`: no `==`/`!=` against a float literal — simulation arithmetic
+/// must compare with tolerances (or `total_cmp`), not exact equality.
+fn lint_float_eq(ws: &Workspace, out: &mut Vec<Finding>) {
+    for f in &ws.src {
+        for (i, line) in f.lines.iter().enumerate() {
+            if f.in_test[i] {
+                continue;
+            }
+            let code = strip_code(line);
+            let bytes = code.as_bytes();
+            let mut flagged = false;
+            for (pos, w) in code.match_indices("==").chain(code.match_indices("!=")) {
+                if w == "==" {
+                    // skip <=, >=, ===-like runs and != (handled separately)
+                    let prev = if pos > 0 { bytes[pos - 1] } else { b' ' };
+                    if prev == b'<' || prev == b'>' || prev == b'!' || prev == b'=' {
+                        continue;
+                    }
+                }
+                let left = last_token_before(&code[..pos]);
+                let right = first_token_after(&code[pos + 2..]);
+                if is_float_token(left) || is_float_token(right) {
+                    flagged = true;
+                }
+            }
+            if flagged && !f.allowed(i, "float-eq") {
+                out.push(Finding {
+                    lint: "float-eq",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    msg: "exact equality against a float literal — compare \
+                          with a tolerance or allowlist the invariant"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+/// `engine-hot-loop`: the event-heap core must stay allocation-free and
+/// collection-free per event — `sim/engine.rs` is the per-event hot path
+/// every experiment multiplies by millions of events.
+fn lint_engine_hot_loop(ws: &Workspace, out: &mut Vec<Finding>) {
+    const FORBIDDEN: [&str; 9] = [
+        "BTreeMap",
+        "HashMap",
+        "format!",
+        "to_string",
+        "String::",
+        "vec![",
+        "Vec::new",
+        "Instant",
+        "SystemTime",
+    ];
+    let Some(f) = ws.find_src("sim/engine.rs") else { return };
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.in_test[i] {
+            continue;
+        }
+        let code = strip_code(line);
+        for pat in FORBIDDEN {
+            if code.contains(pat) && !f.allowed(i, "engine-hot-loop") {
+                out.push(Finding {
+                    lint: "engine-hot-loop",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "`{pat}` in the event-heap hot path — keep the \
+                         per-event cost allocation-free"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `wallclock-in-sim`: simulation code must read time from the virtual
+/// clock only — `Instant::now`/`SystemTime::now` break determinism.
+fn lint_wallclock(ws: &Workspace, out: &mut Vec<Finding>) {
+    const SIM_DIRS: [&str; 10] = [
+        "rust/src/sim/",
+        "rust/src/scheduler/",
+        "rust/src/bayes/",
+        "rust/src/cluster/",
+        "rust/src/hdfs/",
+        "rust/src/job/",
+        "rust/src/workload/",
+        "rust/src/coordinator/",
+        "rust/src/yarn/",
+        "rust/src/metrics/",
+    ];
+    for f in &ws.src {
+        if !SIM_DIRS.iter().any(|d| f.rel.starts_with(d)) {
+            continue;
+        }
+        for (i, line) in f.lines.iter().enumerate() {
+            if f.in_test[i] {
+                continue;
+            }
+            let code = strip_code(line);
+            if (code.contains("Instant::now") || code.contains("SystemTime::now"))
+                && !f.allowed(i, "wallclock-in-sim")
+            {
+                out.push(Finding {
+                    lint: "wallclock-in-sim",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    msg: "wall-clock read in simulation code — all time must \
+                          flow from the virtual clock (`Engine::now`)"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+/// `experiment-numbering`: `report/experiments` must stay internally
+/// consistent — every id in `ALL` has a dispatch arm and a `pub fn`, and
+/// every experiment entry point is registered in `ALL`.
+fn lint_experiment_numbering(ws: &Workspace, out: &mut Vec<Finding>) {
+    let Some(modfile) = ws.find_src("report/experiments/mod.rs") else { return };
+    let start = modfile.lines.iter().position(|l| l.contains("pub const ALL"));
+    let Some(start) = start else { return };
+    let mut ids: Vec<String> = Vec::new();
+    for line in modfile.lines.iter().skip(start) {
+        for part in line.split('"').skip(1).step_by(2) {
+            ids.push(part.to_string());
+        }
+        if line.contains("];") {
+            break;
+        }
+    }
+    let exp_files: Vec<&SourceFile> = ws
+        .src
+        .iter()
+        .filter(|f| f.rel.contains("report/experiments/"))
+        .collect();
+    for id in &ids {
+        let arm = format!("\"{id}\" =>");
+        if !modfile.lines.iter().any(|l| l.contains(&arm)) {
+            out.push(Finding {
+                lint: "experiment-numbering",
+                file: modfile.rel.clone(),
+                line: 0,
+                msg: format!("'{id}' is in ALL but has no dispatch arm in run()"),
+            });
+        }
+        let def = format!("pub fn {id}(");
+        if !exp_files.iter().any(|f| f.lines.iter().any(|l| l.contains(&def))) {
+            out.push(Finding {
+                lint: "experiment-numbering",
+                file: modfile.rel.clone(),
+                line: 0,
+                msg: format!("'{id}' is in ALL but `pub fn {id}(` exists nowhere"),
+            });
+        }
+    }
+    for f in &exp_files {
+        for (i, line) in f.lines.iter().enumerate() {
+            let code = strip_code(line);
+            let Some(pos) = code.find("pub fn e") else { continue };
+            let digits: String = code[pos + "pub fn e".len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if digits.is_empty() {
+                continue;
+            }
+            let id = format!("e{digits}");
+            if !ids.contains(&id) {
+                out.push(Finding {
+                    lint: "experiment-numbering",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    msg: format!("experiment `{id}` is not registered in ALL"),
+                });
+            }
+        }
+    }
+}
+
+/// `bench-baseline`: a tracked `BENCH_e6.json` must exist and its schema
+/// must match what the bench emitter actually writes (key sets extracted
+/// from `rust/benches/e6_decision_latency.rs`), so the in-repo perf
+/// trajectory cannot silently diverge from the tool that produces it.
+fn lint_bench_baseline(ws: &Workspace, out: &mut Vec<Finding>) {
+    let Some((bench_rel, bench_src)) = ws
+        .benches
+        .iter()
+        .find(|(rel, _)| rel.ends_with("e6_decision_latency.rs"))
+    else {
+        return;
+    };
+    // key sets straight from the emitter source
+    let keys_of = |var: &str| -> Vec<String> {
+        let pat = format!("{var}.insert(\"");
+        bench_src
+            .lines()
+            .filter_map(|l| {
+                let pos = l.find(&pat)?;
+                let rest = &l[pos + pat.len()..];
+                rest.split('"').next().map(str::to_string)
+            })
+            .collect()
+    };
+    let doc_keys = keys_of("doc");
+    let entry_keys = keys_of("entry");
+    if doc_keys.is_empty() || entry_keys.is_empty() {
+        out.push(Finding {
+            lint: "bench-baseline",
+            file: bench_rel.clone(),
+            line: 0,
+            msg: "cannot extract the emitter's schema keys".into(),
+        });
+        return;
+    }
+
+    let Some((rel, text)) = &ws.bench_baseline else {
+        out.push(Finding {
+            lint: "bench-baseline",
+            file: "BENCH_e6.json".into(),
+            line: 0,
+            msg: "missing — run `BENCH_SMOKE=1 cargo bench --bench \
+                  e6_decision_latency` and commit the baseline"
+                .into(),
+        });
+        return;
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            out.push(Finding {
+                lint: "bench-baseline",
+                file: rel.clone(),
+                line: 0,
+                msg: format!("not valid JSON: {e}"),
+            });
+            return;
+        }
+    };
+    let mut complain = |msg: String| {
+        out.push(Finding { lint: "bench-baseline", file: rel.clone(), line: 0, msg })
+    };
+    let Some(obj) = json.as_obj() else {
+        complain("top level is not an object".into());
+        return;
+    };
+    for k in &doc_keys {
+        if !obj.contains_key(k) {
+            complain(format!("missing top-level key '{k}' (emitter writes it)"));
+        }
+    }
+    for k in obj.keys() {
+        if !doc_keys.contains(k) {
+            complain(format!("unknown top-level key '{k}' (emitter never writes it)"));
+        }
+    }
+    match json.get("results").and_then(Json::as_obj) {
+        Some(results) if !results.is_empty() => {
+            for (name, entry) in results {
+                let Some(eo) = entry.as_obj() else {
+                    complain(format!("results['{name}'] is not an object"));
+                    continue;
+                };
+                for k in &entry_keys {
+                    match eo.get(k) {
+                        Some(v) if v.as_f64().is_some() => {}
+                        Some(_) => complain(format!(
+                            "results['{name}'].{k} is not a number"
+                        )),
+                        None => complain(format!("results['{name}'] misses '{k}'")),
+                    }
+                }
+                for k in eo.keys() {
+                    if !entry_keys.contains(k) {
+                        complain(format!("results['{name}'] has unknown key '{k}'"));
+                    }
+                }
+            }
+        }
+        _ => complain("'results' is missing or empty".into()),
+    }
+}
+
+/// Names of every source lint, for docs/help output.
+pub const LINT_NAMES: [&str; 9] = [
+    "registry-deps",
+    "n-features-sync",
+    "scheduler-coverage",
+    "unwrap-in-lib",
+    "float-eq",
+    "engine-hot-loop",
+    "wallclock-in-sim",
+    "experiment-numbering",
+    "bench-baseline",
+];
+
+/// Run every source lint over the workspace at `root`.
+pub fn run_lints(root: &Path) -> Result<Vec<Finding>> {
+    let ws = Workspace::load(root)?;
+    let mut out = Vec::new();
+    lint_registry_deps(&ws, &mut out);
+    lint_n_features_sync(&ws, &mut out);
+    lint_scheduler_coverage(&ws, &mut out);
+    lint_unwrap(&ws, &mut out);
+    lint_float_eq(&ws, &mut out);
+    lint_engine_hot_loop(&ws, &mut out);
+    lint_wallclock(&ws, &mut out);
+    lint_experiment_numbering(&ws, &mut out);
+    lint_bench_baseline(&ws, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scratch workspace root, unique per test.
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("repro_lint_fixture_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn put(root: &Path, rel: &str, text: &str) {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(p, text).unwrap();
+    }
+
+    fn lints_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.lint).collect()
+    }
+
+    #[test]
+    fn registry_deps_fires_on_dependency() {
+        let root = scratch("deps");
+        put(&root, "Cargo.toml", "[package]\nname = \"x\"\n[dependencies]\nserde = \"1\"\n");
+        let f = run_lints(&root).unwrap();
+        assert!(lints_of(&f).contains(&"registry-deps"), "{f:?}");
+
+        let root2 = scratch("deps_ok");
+        put(&root2, "Cargo.toml", "[package]\nname = \"x\"\n[dependencies]\n\n[features]\nxla = []\n");
+        assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn n_features_sync_fires_on_drift() {
+        let root = scratch("nfeat");
+        put(
+            &root,
+            "rust/src/bayes/features.rs",
+            "pub const N_FEATURES: usize = 10;\npub const N_BINS: usize = 10;\n",
+        );
+        put(
+            &root,
+            "rust/src/runtime/artifacts.rs",
+            "pub const EXPECTED: S = S { n_features: 8, feature_dim: 80 };\n",
+        );
+        put(&root, "python/compile/constants.py", "N_FEATURES = 10\nN_BINS = 10\n");
+        let f = run_lints(&root).unwrap();
+        let hits: Vec<_> =
+            f.iter().filter(|x| x.lint == "n-features-sync").collect();
+        assert_eq!(hits.len(), 2, "n_features and feature_dim both drift: {f:?}");
+
+        // fixing the rust side makes it green
+        let root2 = scratch("nfeat_ok");
+        put(
+            &root2,
+            "rust/src/bayes/features.rs",
+            "pub const N_FEATURES: usize = 10;\npub const N_BINS: usize = 10;\n",
+        );
+        put(
+            &root2,
+            "rust/src/runtime/artifacts.rs",
+            "pub const EXPECTED: S = S { n_features: 10, feature_dim: 100 };\n",
+        );
+        put(&root2, "python/compile/constants.py", "N_FEATURES = 10\nN_BINS = 10\n");
+        assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn python_drift_is_caught() {
+        let root = scratch("pydrift");
+        put(&root, "rust/src/bayes/features.rs", "pub const N_FEATURES: usize = 10;\n");
+        put(&root, "rust/src/runtime/artifacts.rs", "n_features: 10,\n");
+        put(&root, "python/compile/constants.py", "N_FEATURES = 8\n");
+        let f = run_lints(&root).unwrap();
+        assert!(f.iter().any(|x| x.lint == "n-features-sync"
+            && x.file.contains("constants.py")), "{f:?}");
+    }
+
+    #[test]
+    fn scheduler_coverage_fires_on_unexercised_name() {
+        let root = scratch("cov");
+        put(
+            &root,
+            "rust/src/scheduler/mod.rs",
+            "pub const ALL_NAMES: [&str; 2] = [\"fifo\", \"mystery\"];\n",
+        );
+        put(&root, "rust/tests/api_conformance.rs", "run(\"fifo\");\n");
+        put(&root, "rust/src/report/experiments/e1.rs", "let s = \"fifo\";\n");
+        let f = run_lints(&root).unwrap();
+        let hits: Vec<_> =
+            f.iter().filter(|x| x.lint == "scheduler-coverage").collect();
+        assert_eq!(hits.len(), 2, "mystery misses both conformance and experiments: {f:?}");
+
+        // an ALL_NAMES sweep in the conformance test covers everything
+        let root2 = scratch("cov_ok");
+        put(
+            &root2,
+            "rust/src/scheduler/mod.rs",
+            "pub const ALL_NAMES: [&str; 2] = [\"fifo\", \"mystery\"];\n",
+        );
+        put(&root2, "rust/tests/api_conformance.rs", "for n in ALL_NAMES {}\n");
+        put(
+            &root2,
+            "rust/src/report/experiments/e1.rs",
+            "for n in [\"fifo\", \"mystery\"] {}\n",
+        );
+        assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_lib_fires_and_allowlists() {
+        let root = scratch("unwrap");
+        put(
+            &root,
+            "rust/src/a.rs",
+            "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+             pub fn g(x: Option<u32>) -> u32 { x.expect(\"always\") }\n",
+        );
+        let f = run_lints(&root).unwrap();
+        assert_eq!(
+            f.iter().filter(|x| x.lint == "unwrap-in-lib").count(),
+            2,
+            "{f:?}"
+        );
+
+        let root2 = scratch("unwrap_allow");
+        put(
+            &root2,
+            "rust/src/a.rs",
+            "// proven non-empty above -- lint: allow(unwrap-in-lib)\n\
+             pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+             pub fn h(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n",
+        );
+        assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unwrap_inside_cfg_test_is_ignored() {
+        let root = scratch("unwrap_test");
+        put(
+            &root,
+            "rust/src/a.rs",
+            "pub fn f() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 #[test]\n\
+                 fn t() { Some(1).unwrap(); }\n\
+             }\n",
+        );
+        assert!(run_lints(&root).unwrap().is_empty());
+
+        // ...and `#[cfg(test)] mod tests;` only masks its own line
+        let root2 = scratch("unwrap_decl");
+        put(
+            &root2,
+            "rust/src/b.rs",
+            "#[cfg(test)]\nmod tests;\npub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        let f = run_lints(&root2).unwrap();
+        assert!(lints_of(&f).contains(&"unwrap-in-lib"), "{f:?}");
+    }
+
+    #[test]
+    fn unwrap_inside_string_or_comment_is_ignored() {
+        let root = scratch("unwrap_str");
+        put(
+            &root,
+            "rust/src/a.rs",
+            "pub fn f() -> &'static str { \"call .unwrap() later\" }\n\
+             // docs mention .expect( here\n",
+        );
+        assert!(run_lints(&root).unwrap().is_empty());
+    }
+
+    #[test]
+    fn float_eq_fires_on_literal_comparison() {
+        let root = scratch("floateq");
+        put(
+            &root,
+            "rust/src/a.rs",
+            "pub fn f(x: f64) -> bool { x == 0.0 }\n\
+             pub fn g(x: f64) -> bool { 1.5 != x }\n\
+             pub fn h(x: f64) -> bool { x <= 0.5 }\n\
+             pub fn k(x: u32) -> bool { x == 3 }\n",
+        );
+        let f = run_lints(&root).unwrap();
+        assert_eq!(f.iter().filter(|x| x.lint == "float-eq").count(), 2, "{f:?}");
+
+        let root2 = scratch("floateq_allow");
+        put(
+            &root2,
+            "rust/src/a.rs",
+            "pub fn f(x: f64) -> bool { x == 0.0 } // exact by construction -- lint: allow(float-eq)\n",
+        );
+        assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn engine_hot_loop_fires_on_collections() {
+        let root = scratch("hotloop");
+        put(
+            &root,
+            "rust/src/sim/engine.rs",
+            "use std::collections::HashMap;\npub struct Engine { m: HashMap<u32, u32> }\n",
+        );
+        let f = run_lints(&root).unwrap();
+        assert!(
+            f.iter().filter(|x| x.lint == "engine-hot-loop").count() >= 2,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn wallclock_fires_in_sim_dirs_only() {
+        let root = scratch("wallclock");
+        put(
+            &root,
+            "rust/src/sim/clock.rs",
+            "pub fn now() -> std::time::Instant { std::time::Instant::now() }\n",
+        );
+        put(
+            &root,
+            "rust/src/report/bench.rs",
+            "pub fn t() -> std::time::Instant { std::time::Instant::now() }\n",
+        );
+        let f = run_lints(&root).unwrap();
+        let hits: Vec<_> =
+            f.iter().filter(|x| x.lint == "wallclock-in-sim").collect();
+        assert_eq!(hits.len(), 1, "{f:?}");
+        assert!(hits[0].file.contains("sim/clock.rs"));
+    }
+
+    #[test]
+    fn experiment_numbering_fires_on_gaps_and_orphans() {
+        let root = scratch("expnum");
+        put(
+            &root,
+            "rust/src/report/experiments/mod.rs",
+            "pub const ALL: [&str; 2] = [\"e1\", \"e2\"];\n\
+             pub fn run(id: &str) { match id { \"e1\" => e1(), _ => {} } }\n\
+             pub fn e1() {}\n",
+        );
+        put(&root, "rust/src/report/experiments/extra.rs", "pub fn e3() {}\n");
+        let f = run_lints(&root).unwrap();
+        let msgs: Vec<&str> = f
+            .iter()
+            .filter(|x| x.lint == "experiment-numbering")
+            .map(|x| x.msg.as_str())
+            .collect();
+        assert!(msgs.iter().any(|m| m.contains("'e2'") && m.contains("dispatch")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`e2`") || m.contains("'e2'")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("e3")), "{msgs:?}");
+    }
+
+    const EMITTER: &str = r#"
+        doc.insert("bench".to_string(), x);
+        doc.insert("results".to_string(), x);
+        entry.insert("batched_ns".to_string(), x);
+        entry.insert("speedup".to_string(), x);
+    "#;
+
+    #[test]
+    fn bench_baseline_missing_or_mismatched_fires() {
+        let root = scratch("bench_missing");
+        put(&root, "rust/benches/e6_decision_latency.rs", EMITTER);
+        let f = run_lints(&root).unwrap();
+        assert!(lints_of(&f).contains(&"bench-baseline"), "{f:?}");
+
+        // schema drift: an entry misses a key the emitter writes
+        let root2 = scratch("bench_drift");
+        put(&root2, "rust/benches/e6_decision_latency.rs", EMITTER);
+        put(
+            &root2,
+            "BENCH_e6.json",
+            r#"{"bench": "e6", "results": {"fifo_q16": {"batched_ns": 10}}}"#,
+        );
+        let f2 = run_lints(&root2).unwrap();
+        assert!(
+            f2.iter().any(|x| x.lint == "bench-baseline" && x.msg.contains("speedup")),
+            "{f2:?}"
+        );
+
+        // matching schema is green
+        let root3 = scratch("bench_ok");
+        put(&root3, "rust/benches/e6_decision_latency.rs", EMITTER);
+        put(
+            &root3,
+            "BENCH_e6.json",
+            r#"{"bench": "e6", "results": {"fifo_q16": {"batched_ns": 10, "speedup": 2.0}}}"#,
+        );
+        assert!(run_lints(&root3).unwrap().is_empty());
+    }
+
+    #[test]
+    fn testkit_and_tests_rs_are_out_of_scope() {
+        let root = scratch("scope");
+        put(&root, "rust/src/testkit/mod.rs", "pub fn f() { None::<u32>.unwrap(); }\n");
+        put(&root, "rust/src/scheduler/tests.rs", "pub fn g() { None::<u32>.unwrap(); }\n");
+        assert!(run_lints(&root).unwrap().is_empty());
+    }
+
+    #[test]
+    fn the_real_repo_lints_clean() {
+        // repo root = two levels up from rust/src (CARGO_MANIFEST_DIR/..)
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let findings = run_lints(&root).unwrap();
+        assert!(
+            findings.is_empty(),
+            "the repo must lint clean:\n{}",
+            findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

@@ -1,0 +1,374 @@
+//! JSONL (de)serialization of audit-event streams, for
+//! `repro run --record-events FILE` / `repro lint --trace FILE`.
+//!
+//! Format: one JSON object per line, `{"ev": "<tag>", ...fields}`. Feature
+//! vectors serialize as arrays of bin indices. The format is versioned by
+//! the header line `{"ev": "trace", "version": 1, "n_features": N}` so a
+//! replay against a binary with a different feature width fails loudly
+//! instead of mis-auditing.
+
+use std::collections::BTreeMap;
+
+use crate::bayes::classifier::Label;
+use crate::bayes::features::{FeatureVec, N_FEATURES};
+use crate::cluster::node::NodeId;
+use crate::config::json::Json;
+use crate::errors::{Context, Result};
+use crate::job::task::{TaskKind, TaskRef};
+use crate::job::JobId;
+use crate::scheduler::api::{FailReason, SchedEvent};
+
+use super::protocol::AuditEvent;
+
+pub const TRACE_VERSION: u64 = 1;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(n: impl Into<f64>) -> Json {
+    Json::Num(n.into())
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn kind_str(k: TaskKind) -> &'static str {
+    match k {
+        TaskKind::Map => "map",
+        TaskKind::Reduce => "reduce",
+    }
+}
+
+fn feats_json(f: &FeatureVec) -> Json {
+    Json::Arr(f.iter().map(|b| num(*b as f64)).collect())
+}
+
+fn task_fields(t: TaskRef) -> Vec<(&'static str, Json)> {
+    vec![
+        ("job", num(t.job.0)),
+        ("kind", s(kind_str(t.kind))),
+        ("index", num(t.index)),
+    ]
+}
+
+/// Serialize one audit event to a single-line JSON object.
+pub fn event_to_json(ev: &AuditEvent) -> Json {
+    match *ev {
+        AuditEvent::NodeSpec { node, maps, reduces } => obj(vec![
+            ("ev", s("node_spec")),
+            ("node", num(node.0)),
+            ("maps", num(maps)),
+            ("reduces", num(reduces)),
+        ]),
+        AuditEvent::JobArrived { job } => {
+            obj(vec![("ev", s("job_arrived")), ("job", num(job.0))])
+        }
+        AuditEvent::Launched { task, node, speculative, feats } => {
+            let mut fields = vec![("ev", s("launched"))];
+            fields.extend(task_fields(task));
+            fields.push(("node", num(node.0)));
+            fields.push(("speculative", Json::Bool(speculative)));
+            fields.push(("feats", feats_json(&feats)));
+            obj(fields)
+        }
+        AuditEvent::Ended { task, node } => {
+            let mut fields = vec![("ev", s("ended"))];
+            fields.extend(task_fields(task));
+            fields.push(("node", num(node.0)));
+            obj(fields)
+        }
+        AuditEvent::Sched(ref sev) => sched_to_json(sev),
+    }
+}
+
+fn sched_to_json(ev: &SchedEvent) -> Json {
+    match *ev {
+        SchedEvent::ClusterInfo { total_slots } => obj(vec![
+            ("ev", s("cluster_info")),
+            ("total_slots", num(total_slots)),
+        ]),
+        SchedEvent::Feedback { feats, label } => obj(vec![
+            ("ev", s("feedback")),
+            ("feats", feats_json(&feats)),
+            ("label", s(if label == Label::Good { "good" } else { "bad" })),
+        ]),
+        SchedEvent::TaskStarted { job, node, kind } => obj(vec![
+            ("ev", s("task_started")),
+            ("job", num(job.0)),
+            ("node", num(node.0)),
+            ("kind", s(kind_str(kind))),
+        ]),
+        SchedEvent::TaskFinished { job, node, kind } => obj(vec![
+            ("ev", s("task_finished")),
+            ("job", num(job.0)),
+            ("node", num(node.0)),
+            ("kind", s(kind_str(kind))),
+        ]),
+        SchedEvent::TaskFailed { job, node, kind, attempt, reason } => obj(vec![
+            ("ev", s("task_failed")),
+            ("job", num(job.0)),
+            ("node", num(node.0)),
+            ("kind", s(kind_str(kind))),
+            ("attempt", num(attempt)),
+            (
+                "reason",
+                s(match reason {
+                    FailReason::Oom => "oom",
+                    FailReason::NodeLost => "node_lost",
+                }),
+            ),
+        ]),
+        SchedEvent::JobCompleted { job } => {
+            obj(vec![("ev", s("job_completed")), ("job", num(job.0))])
+        }
+        SchedEvent::NodeFailed { node } => {
+            obj(vec![("ev", s("node_failed")), ("node", num(node.0))])
+        }
+        SchedEvent::NodeRecovered { node } => {
+            obj(vec![("ev", s("node_recovered")), ("node", num(node.0))])
+        }
+    }
+}
+
+/// Serialize a stream to JSONL text (header line + one line per event).
+pub fn to_jsonl(events: &[AuditEvent]) -> String {
+    let mut out = String::new();
+    let header = obj(vec![
+        ("ev", s("trace")),
+        ("version", num(TRACE_VERSION as f64)),
+        ("n_features", num(N_FEATURES as f64)),
+    ]);
+    out.push_str(&header.to_string_compact());
+    out.push('\n');
+    for ev in events {
+        out.push_str(&event_to_json(ev).to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+fn get_u32(o: &BTreeMap<String, Json>, key: &str) -> Result<u32> {
+    o.get(key)
+        .and_then(|v| v.as_u64())
+        .and_then(|v| u32::try_from(v).ok())
+        .ok_or_else(|| crate::errors::Error::msg(format!("bad field '{key}'")))
+}
+
+fn get_kind(o: &BTreeMap<String, Json>) -> Result<TaskKind> {
+    match o.get("kind").and_then(|v| v.as_str()) {
+        Some("map") => Ok(TaskKind::Map),
+        Some("reduce") => Ok(TaskKind::Reduce),
+        other => crate::bail!("bad task kind {other:?}"),
+    }
+}
+
+fn get_task(o: &BTreeMap<String, Json>) -> Result<TaskRef> {
+    Ok(TaskRef {
+        job: JobId(get_u32(o, "job")?),
+        kind: get_kind(o)?,
+        index: get_u32(o, "index")?,
+    })
+}
+
+fn get_feats(o: &BTreeMap<String, Json>) -> Result<FeatureVec> {
+    let arr = o
+        .get("feats")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| crate::errors::Error::msg("missing 'feats' array"))?;
+    if arr.len() != N_FEATURES {
+        crate::bail!("feats has {} entries, expected {N_FEATURES}", arr.len());
+    }
+    let mut out = [0u8; N_FEATURES];
+    for (i, v) in arr.iter().enumerate() {
+        out[i] = v
+            .as_u64()
+            .and_then(|b| u8::try_from(b).ok())
+            .ok_or_else(|| crate::errors::Error::msg("bad feats entry"))?;
+    }
+    Ok(out)
+}
+
+fn event_from_json(j: &Json) -> Result<AuditEvent> {
+    let o = j
+        .as_obj()
+        .ok_or_else(|| crate::errors::Error::msg("trace line is not an object"))?;
+    let tag = o
+        .get("ev")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| crate::errors::Error::msg("trace line has no 'ev' tag"))?;
+    let ev = match tag {
+        "node_spec" => AuditEvent::NodeSpec {
+            node: NodeId(get_u32(o, "node")?),
+            maps: get_u32(o, "maps")?,
+            reduces: get_u32(o, "reduces")?,
+        },
+        "job_arrived" => AuditEvent::JobArrived { job: JobId(get_u32(o, "job")?) },
+        "launched" => AuditEvent::Launched {
+            task: get_task(o)?,
+            node: NodeId(get_u32(o, "node")?),
+            speculative: o
+                .get("speculative")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            feats: get_feats(o)?,
+        },
+        "ended" => AuditEvent::Ended {
+            task: get_task(o)?,
+            node: NodeId(get_u32(o, "node")?),
+        },
+        "cluster_info" => AuditEvent::Sched(SchedEvent::ClusterInfo {
+            total_slots: get_u32(o, "total_slots")?,
+        }),
+        "feedback" => AuditEvent::Sched(SchedEvent::Feedback {
+            feats: get_feats(o)?,
+            label: match o.get("label").and_then(|v| v.as_str()) {
+                Some("good") => Label::Good,
+                Some("bad") => Label::Bad,
+                other => crate::bail!("bad feedback label {other:?}"),
+            },
+        }),
+        "task_started" => AuditEvent::Sched(SchedEvent::TaskStarted {
+            job: JobId(get_u32(o, "job")?),
+            node: NodeId(get_u32(o, "node")?),
+            kind: get_kind(o)?,
+        }),
+        "task_finished" => AuditEvent::Sched(SchedEvent::TaskFinished {
+            job: JobId(get_u32(o, "job")?),
+            node: NodeId(get_u32(o, "node")?),
+            kind: get_kind(o)?,
+        }),
+        "task_failed" => AuditEvent::Sched(SchedEvent::TaskFailed {
+            job: JobId(get_u32(o, "job")?),
+            node: NodeId(get_u32(o, "node")?),
+            kind: get_kind(o)?,
+            attempt: get_u32(o, "attempt")?,
+            reason: match o.get("reason").and_then(|v| v.as_str()) {
+                Some("oom") => FailReason::Oom,
+                Some("node_lost") => FailReason::NodeLost,
+                other => crate::bail!("bad fail reason {other:?}"),
+            },
+        }),
+        "job_completed" => {
+            AuditEvent::Sched(SchedEvent::JobCompleted { job: JobId(get_u32(o, "job")?) })
+        }
+        "node_failed" => {
+            AuditEvent::Sched(SchedEvent::NodeFailed { node: NodeId(get_u32(o, "node")?) })
+        }
+        "node_recovered" => AuditEvent::Sched(SchedEvent::NodeRecovered {
+            node: NodeId(get_u32(o, "node")?),
+        }),
+        other => crate::bail!("unknown trace event tag '{other}'"),
+    };
+    Ok(ev)
+}
+
+/// Parse a JSONL trace. Validates the header (version + feature width).
+pub fn from_jsonl(text: &str) -> Result<Vec<AuditEvent>> {
+    let mut events = Vec::new();
+    let mut saw_header = false;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("trace line {}", lineno + 1))?;
+        if !saw_header {
+            saw_header = true;
+            if j.get("ev").and_then(|v| v.as_str()) != Some("trace") {
+                crate::bail!("trace has no header line");
+            }
+            let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+            if version != TRACE_VERSION {
+                crate::bail!("trace version {version}, expected {TRACE_VERSION}");
+            }
+            let nf = j.get("n_features").and_then(|v| v.as_u64()).unwrap_or(0);
+            if nf != N_FEATURES as u64 {
+                crate::bail!(
+                    "trace recorded with {nf} features, this binary has {N_FEATURES}"
+                );
+            }
+            continue;
+        }
+        events.push(
+            event_from_json(&j).with_context(|| format!("trace line {}", lineno + 1))?,
+        );
+    }
+    if !saw_header {
+        crate::bail!("empty trace");
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stream() -> Vec<AuditEvent> {
+        let t = TaskRef { job: JobId(0), kind: TaskKind::Map, index: 3 };
+        vec![
+            AuditEvent::NodeSpec { node: NodeId(0), maps: 2, reduces: 1 },
+            AuditEvent::Sched(SchedEvent::ClusterInfo { total_slots: 3 }),
+            AuditEvent::JobArrived { job: JobId(0) },
+            AuditEvent::Launched {
+                task: t,
+                node: NodeId(0),
+                speculative: false,
+                feats: [1, 2, 3, 4, 5, 6, 7, 8, 9, 0],
+            },
+            AuditEvent::Sched(SchedEvent::TaskStarted {
+                job: JobId(0),
+                node: NodeId(0),
+                kind: TaskKind::Map,
+            }),
+            AuditEvent::Sched(SchedEvent::Feedback {
+                feats: [1, 2, 3, 4, 5, 6, 7, 8, 9, 0],
+                label: Label::Good,
+            }),
+            AuditEvent::Ended { task: t, node: NodeId(0) },
+            AuditEvent::Sched(SchedEvent::TaskFailed {
+                job: JobId(0),
+                node: NodeId(0),
+                kind: TaskKind::Map,
+                attempt: 1,
+                reason: FailReason::Oom,
+            }),
+            AuditEvent::Sched(SchedEvent::JobCompleted { job: JobId(0) }),
+            AuditEvent::Sched(SchedEvent::NodeFailed { node: NodeId(0) }),
+            AuditEvent::Sched(SchedEvent::NodeRecovered { node: NodeId(0) }),
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_variant() {
+        let evs = sample_stream();
+        let text = to_jsonl(&evs);
+        let back = from_jsonl(&text).expect("parse back");
+        assert_eq!(evs, back);
+    }
+
+    #[test]
+    fn missing_header_is_rejected() {
+        let evs = sample_stream();
+        let text = to_jsonl(&evs);
+        let body: String = text.lines().skip(1).collect::<Vec<_>>().join("\n");
+        assert!(from_jsonl(&body).is_err());
+        assert!(from_jsonl("").is_err());
+    }
+
+    #[test]
+    fn wrong_feature_width_is_rejected() {
+        let text = "{\"ev\":\"trace\",\"version\":1,\"n_features\":8}\n";
+        let err = from_jsonl(text).unwrap_err().to_string();
+        assert!(err.contains("features"), "{err}");
+    }
+
+    #[test]
+    fn garbage_line_reports_line_number() {
+        let text = format!("{}not json\n", to_jsonl(&[]));
+        let err = from_jsonl(&text).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+}

@@ -23,13 +23,14 @@ USAGE:
                    [--jobs J] [--rate R] [--seed S] [--mix M] [--csv DIR]
                    [--mtbf SECS] [--mttr SECS] [--timeline FILE.csv]
                    [--save-model FILE.json] [--load-model FILE.json]
-                   [--explain]
+                   [--record-events FILE.jsonl] [--explain]
   repro compare    [--jobs J] [--nodes N] [--seeds K] [--quick]
   repro experiment <e1..e12|all> [--quick] [--out DIR]
   repro yarn       [--policy P] [--jobs J] [--nodes N] [--seed S] [--explain]
                    [--mtbf SECS] [--mttr SECS]
   repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
   repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
+  repro lint       [--root DIR] [--trace FILE.jsonl] [--skip-churn]
   repro info
 
 Schedulers: fifo fair capacity bayes bayes-blind bayes-xla random
@@ -41,7 +42,7 @@ Mixes:      balanced | cpu_heavy|io_heavy|mem_heavy|net_heavy|small | cpu:<f>
 
 /// Dispatch a full command line (without argv[0]). Returns process exit code.
 pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
-    let args = Args::parse(raw, &["quick", "verbose", "explain"])?;
+    let args = Args::parse(raw, &["quick", "verbose", "explain", "skip-churn"])?;
     let Some(cmd) = args.positionals.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(2);
@@ -53,6 +54,7 @@ pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "yarn" => cmd_yarn(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "trace-run" => cmd_trace_run(&args),
+        "lint" => cmd_lint(&args),
         "info" => cmd_info(),
         "help" | "--help" => {
             println!("{USAGE}");
@@ -152,9 +154,17 @@ fn cmd_run(args: &Args) -> Result<i32> {
     );
     let mut jt = build_tracker_with(&cfg, cluster, specs)?;
     jt.metrics.explain = args.flag("explain");
+    if args.opt("record-events").is_some() {
+        jt.set_audit(crate::analysis::protocol::AuditSink::recording());
+    }
     let t0 = std::time::Instant::now();
     jt.run();
     let wall = t0.elapsed();
+    if let Some(path) = args.opt("record-events") {
+        let events = jt.audit.take_recording();
+        std::fs::write(path, crate::analysis::trace::to_jsonl(&events))?;
+        println!("recorded {} audit events to {path}", events.len());
+    }
     let summary = crate::report::experiments::common::summarize(&jt, &cfg);
     let table = summary_table(std::slice::from_ref(&summary));
     println!("{}", table.render());
@@ -170,7 +180,7 @@ fn cmd_run(args: &Args) -> Result<i32> {
         println!("wrote {dir}/run.csv");
     }
     if let Some(path) = args.opt("timeline") {
-        std::fs::write(path, crate::metrics::timeline::to_csv(&jt.metrics.timeline))?;
+        std::fs::write(path, jt.metrics.timeline.to_csv())?;
         println!("wrote {} timeline samples to {path}", jt.metrics.timeline.len());
     }
     if let Some(path) = args.opt("save-model") {
@@ -334,6 +344,68 @@ fn cmd_trace_run(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `repro lint`: the project's own static analysis (LINTS.md) plus the
+/// SchedEvent protocol audit — offline over `--trace FILE` when given,
+/// otherwise the built-in fail/recover churn sweep over every scheduler
+/// under both drivers. Exit code 1 on any finding or violation (CI gate).
+fn cmd_lint(args: &Args) -> Result<i32> {
+    let root = PathBuf::from(args.opt_or("root", "."));
+    if !root.join("rust/src").is_dir() {
+        return Err(anyhow!(
+            "{} does not look like the repo root (no rust/src); pass --root",
+            root.display()
+        ));
+    }
+    let mut bad = 0usize;
+
+    let findings = crate::analysis::source::run_lints(&root)?;
+    for f in &findings {
+        println!("{f}");
+    }
+    println!(
+        "source lints: {} finding(s) across {} lint(s)",
+        findings.len(),
+        crate::analysis::source::LINT_NAMES.len()
+    );
+    bad += findings.len();
+
+    if let Some(path) = args.opt("trace") {
+        let text = std::fs::read_to_string(path)?;
+        let events = crate::analysis::trace::from_jsonl(&text)?;
+        let violations = crate::analysis::protocol::audit_stream(&events);
+        for v in &violations {
+            println!("{path}: {v}");
+        }
+        println!(
+            "protocol audit ({path}): {} event(s), {} violation(s)",
+            events.len(),
+            violations.len()
+        );
+        bad += violations.len();
+    }
+
+    if !args.flag("skip-churn") {
+        for rep in crate::analysis::audit_all_schedulers(7)? {
+            for v in &rep.violations {
+                println!("churn {}/{}: {v}", rep.driver, rep.scheduler);
+            }
+            bad += rep.violations.len();
+        }
+        println!(
+            "churn conformance: {} scheduler(s) x 2 drivers audited",
+            crate::scheduler::ALL_NAMES.len()
+        );
+    }
+
+    if bad > 0 {
+        println!("repro lint: FAIL ({bad} problem(s))");
+        Ok(1)
+    } else {
+        println!("repro lint: clean");
+        Ok(0)
+    }
+}
+
 fn cmd_info() -> Result<i32> {
     println!("bayes-sched {}", env!("CARGO_PKG_VERSION"));
     let dir = crate::runtime::artifacts::default_dir();
@@ -401,6 +473,27 @@ mod tests {
         )
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn record_events_then_lint_trace_via_cli() {
+        let path = std::env::temp_dir().join("bayes_sched_cli_events.jsonl");
+        let run_cmd = format!(
+            "run --scheduler fifo --nodes 4 --jobs 5 --seed 3 --record-events {}",
+            path.display()
+        );
+        assert_eq!(dispatch(run_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let lint_cmd = format!(
+            "lint --root {} --trace {} --skip-churn",
+            root.display(),
+            path.display()
+        );
+        assert_eq!(
+            dispatch(lint_cmd.split_whitespace().map(String::from)).unwrap(),
+            0,
+            "repro lint found problems in the repo or the recorded trace"
+        );
     }
 
     #[test]

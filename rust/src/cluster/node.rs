@@ -228,6 +228,7 @@ impl Node {
             .running
             .iter()
             .position(|r| &r.task == task)
+            // callers only remove tasks they placed -- lint: allow(unwrap-in-lib)
             .expect("removing task not on node");
         let rec = self.running.swap_remove(idx);
         (rec, self.completion_times(now))

@@ -41,6 +41,7 @@ impl Json {
 
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
+            // integrality test is exact by design -- lint: allow(float-eq)
             if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
                 Some(f as u64)
             } else {
@@ -101,6 +102,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
+                // integers print without '.0' -- lint: allow(float-eq)
                 if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
@@ -205,7 +207,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -238,7 +240,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -261,7 +263,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -272,7 +274,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.skip_ws();
             let val = self.value()?;
             out.insert(key, val);
@@ -289,7 +291,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -330,7 +332,10 @@ impl<'a> Parser<'a> {
                     let rest = &self.b[self.i..];
                     let text = std::str::from_utf8(rest)
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = text.chars().next().unwrap();
+                    let c = text
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unterminated string"))?;
                     s.push(c);
                     self.i += c.len_utf8();
                 }
@@ -361,7 +366,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))

@@ -18,6 +18,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::analysis::protocol::{AuditEvent, AuditSink};
 use crate::bayes::classifier::Label;
 use crate::bayes::features::FailureHistory;
 use crate::bayes::overload::OverloadRule;
@@ -129,6 +130,10 @@ pub struct JobTracker {
     /// Failure-injection RNG (own stream: does not perturb workloads).
     fail_rng: crate::sim::rng::Pcg,
     arrivals_done: bool,
+    /// Protocol audit tap: every scheduler-visible event plus driver-side
+    /// launch/end records flow through here. Debug builds shadow-audit by
+    /// default; release builds run disabled (zero overhead).
+    pub audit: AuditSink,
 }
 
 impl JobTracker {
@@ -136,14 +141,11 @@ impl JobTracker {
     /// `submit_time` order.
     pub fn new(
         cluster: Cluster,
-        mut scheduler: Box<dyn Scheduler>,
+        scheduler: Box<dyn Scheduler>,
         mut specs: Vec<JobSpec>,
         seed: u64,
         cfg: TrackerConfig,
     ) -> JobTracker {
-        scheduler.observe(&SchedEvent::ClusterInfo {
-            total_slots: cluster.total_slots(),
-        });
         specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
         let n_nodes = cluster.len();
         let hdfs = Namespace::new(
@@ -167,7 +169,9 @@ impl JobTracker {
             inflight_feats: HashMap::new(),
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA11),
             arrivals_done: false,
+            audit: AuditSink::default_for_build(),
         };
+        jt.emit_preamble();
         // prime: first arrival + first heartbeat per node (+ failures)
         jt.schedule_next_arrival();
         for node in jt.cluster.topology.all_nodes() {
@@ -179,6 +183,46 @@ impl JobTracker {
             jt.engine.schedule(jt.cfg.timeline_interval, Event::MetricsTick);
         }
         jt
+    }
+
+    /// Feed one scheduler-visible event through the audit tap and then to
+    /// the scheduler. Every `SchedEvent` the tracker produces MUST go
+    /// through here — a direct `scheduler.observe` call would hide the
+    /// event from the protocol auditor.
+    fn emit(&mut self, ev: SchedEvent) {
+        self.audit.sched(&ev);
+        self.scheduler.observe(&ev);
+    }
+
+    /// The audit preamble (node capacities + cluster info). The
+    /// `ClusterInfo` half also goes to the scheduler — it is the startup
+    /// notification the trait contract promises.
+    fn emit_preamble(&mut self) {
+        for n in &self.cluster.nodes {
+            self.audit.push(AuditEvent::NodeSpec {
+                node: n.id,
+                maps: n.spec.map_slots,
+                reduces: n.spec.reduce_slots,
+            });
+        }
+        self.emit(SchedEvent::ClusterInfo { total_slots: self.cluster.total_slots() });
+    }
+
+    /// Swap in an audit sink (recording or collecting mode). Call before
+    /// `run()`: the preamble is replayed into the new sink so a recorded
+    /// trace is self-contained. The scheduler does NOT re-observe it.
+    pub fn set_audit(&mut self, mut sink: AuditSink) {
+        for n in &self.cluster.nodes {
+            sink.push(AuditEvent::NodeSpec {
+                node: n.id,
+                maps: n.spec.map_slots,
+                reduces: n.spec.reduce_slots,
+            });
+        }
+        sink.push(AuditEvent::Sched(SchedEvent::ClusterInfo {
+            total_slots: self.cluster.total_slots(),
+        }));
+        self.audit = sink;
     }
 
     fn schedule_next_failure(&mut self, node: NodeId) {
@@ -202,7 +246,8 @@ impl JobTracker {
 
     fn on_job_arrival(&mut self) {
         if let Some(spec) = self.next_spec.take() {
-            self.jobs.submit(spec, &mut self.hdfs);
+            let id = self.jobs.submit(spec, &mut self.hdfs);
+            self.audit.push(AuditEvent::JobArrived { job: id });
         }
         self.schedule_next_arrival();
     }
@@ -282,7 +327,8 @@ impl JobTracker {
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
         self.doomed.remove(&(node_id, tref));
         self.inflight_feats.remove(&(node_id, tref));
-        self.scheduler.observe(&SchedEvent::TaskFinished {
+        self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
+        self.emit(SchedEvent::TaskFinished {
             job: tref.job,
             node: node_id,
             kind: tref.kind,
@@ -297,7 +343,7 @@ impl JobTracker {
     fn notify_if_drained(&mut self, id: JobId) {
         let job = self.jobs.get(id);
         if job.finish_time.is_some() && job.fully_drained() {
-            self.scheduler.observe(&SchedEvent::JobCompleted { job: id });
+            self.emit(SchedEvent::JobCompleted { job: id });
             self.failures.forget_job(id);
         }
     }
@@ -324,7 +370,8 @@ impl JobTracker {
             let lost_backup =
                 task.speculative.is_some_and(|s| s.node == node_id);
             let surviving_backup = !lost_backup && task.speculative.is_some();
-            self.scheduler.observe(&SchedEvent::TaskFailed {
+            self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
+            self.emit(SchedEvent::TaskFailed {
                 job: tref.job,
                 node: node_id,
                 kind: tref.kind,
@@ -347,7 +394,7 @@ impl JobTracker {
             self.notify_if_drained(tref.job);
         }
         self.pending_feedback[node_id.0 as usize].clear();
-        self.scheduler.observe(&SchedEvent::NodeFailed { node: node_id });
+        self.emit(SchedEvent::NodeFailed { node: node_id });
         let mttr = self.cfg.failures.mttr.max(1.0);
         let dt = self.fail_rng.exp(1.0 / mttr);
         self.engine.schedule_in(dt, Event::NodeRecover(node_id));
@@ -356,7 +403,7 @@ impl JobTracker {
     fn on_node_recover(&mut self, node_id: NodeId) {
         let now = self.engine.now();
         self.cluster.node_mut(node_id).recover(now);
-        self.scheduler.observe(&SchedEvent::NodeRecovered { node: node_id });
+        self.emit(SchedEvent::NodeRecovered { node: node_id });
         // rejoin the heartbeat cycle and the failure process
         self.engine
             .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
@@ -404,8 +451,7 @@ impl JobTracker {
             let obs = self.cluster.node(node_id).observation();
             let label = self.cfg.overload_rule.label(&obs);
             for p in pending {
-                self.scheduler
-                    .observe(&SchedEvent::Feedback { feats: p.feats, label });
+                self.emit(SchedEvent::Feedback { feats: p.feats, label });
                 self.metrics.record_feedback(label);
             }
         }
@@ -437,6 +483,8 @@ impl JobTracker {
                     now,
                 };
                 let node = self.cluster.node(node_id);
+                // real (not virtual) time: measures the scheduler's own
+                // compute cost for E6 -- lint: allow(wallclock-in-sim)
                 let t0 = Instant::now();
                 let out = self.scheduler.assign(&view, node, budget);
                 (out, t0.elapsed().as_nanos())
@@ -504,6 +552,7 @@ impl JobTracker {
         let mut demand = job.demand;
         let mut work = job.task(tref).work;
         if tref.kind == TaskKind::Map {
+            // submit() assigns every map a block -- lint: allow(unwrap-in-lib)
             let block = job.task(tref).block.expect("map without block");
             let loc = self.hdfs.locality(block, node_id);
             self.metrics.record_locality(loc);
@@ -556,7 +605,13 @@ impl JobTracker {
             self.jobs.start_task(&task_ref, node_id, now);
             self.jobs.get(task_ref.job).task(&task_ref).generation
         };
-        self.scheduler.observe(&SchedEvent::TaskStarted {
+        self.audit.push(AuditEvent::Launched {
+            task: task_ref,
+            node: node_id,
+            speculative,
+            feats,
+        });
+        self.emit(SchedEvent::TaskStarted {
             job: task_ref.job,
             node: node_id,
             kind: task_ref.kind,
@@ -640,7 +695,8 @@ impl JobTracker {
             }
         }
         self.jobs.complete_task(&tref, now);
-        self.scheduler.observe(&SchedEvent::TaskFinished {
+        self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
+        self.emit(SchedEvent::TaskFinished {
             job: tref.job,
             node: node_id,
             kind: tref.kind,
@@ -649,6 +705,8 @@ impl JobTracker {
         let finished = !job.failed && job.is_complete();
         if finished {
             self.jobs.mark_complete(tref.job, now);
+            // Some by construction: mark_complete just set finish_time
+            // lint: allow(unwrap-in-lib)
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
             self.metrics.record_outcome(tref.job, outcome);
         }
@@ -668,17 +726,17 @@ impl JobTracker {
         self.doomed.remove(&(node_id, tref));
         self.failures.record_failure(tref.job, node_id, now);
         self.metrics.task_failures += 1;
+        self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
         // the OOM-killed placement feeds back a Bad sample for the exact
         // feature row it was scored on — this is what gives the
         // failure-history bins their likelihood mass
         if let Some(feats) = self.inflight_feats.remove(&(node_id, tref)) {
-            self.scheduler
-                .observe(&SchedEvent::Feedback { feats, label: Label::Bad });
+            self.emit(SchedEvent::Feedback { feats, label: Label::Bad });
             self.metrics.record_feedback(Label::Bad);
         }
         self.jobs.get_mut(tref.job).task_mut(&tref).failed_attempts += 1;
         let attempt = self.jobs.get(tref.job).task(&tref).attempts;
-        self.scheduler.observe(&SchedEvent::TaskFailed {
+        self.emit(SchedEvent::TaskFailed {
             job: tref.job,
             node: node_id,
             kind: tref.kind,

@@ -10,14 +10,14 @@ use super::JobId;
 
 /// Map or reduce (MRv1 slots are typed, paper §2.1 notes the waste this
 /// causes — reproduced faithfully).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TaskKind {
     Map,
     Reduce,
 }
 
 /// Globally unique task handle.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct TaskRef {
     pub job: JobId,
     pub kind: TaskKind,
@@ -183,6 +183,7 @@ impl Task {
     /// completion event re-validates through the primary path because the
     /// `(node, stamp)` pair is unchanged).
     pub fn promote_speculative(&mut self) {
+        // caller checked `speculative` -- lint: allow(unwrap-in-lib)
         let s = self.speculative.take().expect("no backup to promote");
         debug_assert!(self.is_running(), "promoting backup of non-running task");
         self.state = TaskState::Running { node: s.node, start: s.start };

@@ -12,8 +12,10 @@
 //! * the contribution — [`bayes`], [`scheduler`]
 //! * runtime — [`runtime`] (PJRT), [`coordinator`] (JobTracker loop)
 //! * extension — [`yarn`] (RM/NM/AM mode)
-//! * tooling — [`config`], [`cli`], [`metrics`], [`report`], [`testkit`]
+//! * tooling — [`config`], [`cli`], [`metrics`], [`report`], [`testkit`],
+//!   [`analysis`] (`repro lint` + SchedEvent protocol auditor)
 
+pub mod analysis;
 pub mod bayes;
 pub mod cli;
 pub mod cluster;

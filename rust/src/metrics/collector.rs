@@ -63,7 +63,8 @@ pub struct Metrics {
     /// Backup copies that finished before their primary (stragglers saved).
     pub speculative_wins: u64,
     /// Periodic cluster snapshots (empty unless timeline_interval > 0).
-    pub timeline: Vec<super::TimelineSample>,
+    /// Bounded: compacts itself instead of growing with run length.
+    pub timeline: super::timeline::Timeline,
     /// Scheduling decisions taken (tasks assigned).
     pub decisions: u64,
     /// Wall-clock nanoseconds spent inside scheduler assign() calls.
@@ -102,7 +103,7 @@ impl Metrics {
         if self.windows.is_empty() {
             self.windows.push(FeedbackWindow::default());
         }
-        let w = self.windows.last_mut().unwrap();
+        let Some(w) = self.windows.last_mut() else { return };
         w.allocations += 1;
         if label == Label::Bad {
             w.overloads += 1;

@@ -5,4 +5,4 @@ pub mod stats;
 pub mod timeline;
 
 pub use collector::{DecisionRecord, FeedbackWindow, Metrics};
-pub use timeline::TimelineSample;
+pub use timeline::{Timeline, TimelineSample};

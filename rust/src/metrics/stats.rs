@@ -21,6 +21,7 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 /// Coefficient of variation (std/mean); 0 when mean is 0.
 pub fn cv(xs: &[f64]) -> f64 {
     let m = mean(xs);
+    // div-by-zero guard, exact sentinel -- lint: allow(float-eq)
     if m == 0.0 {
         0.0
     } else {
@@ -57,6 +58,7 @@ pub fn jain_fairness(xs: &[f64]) -> f64 {
     }
     let s: f64 = xs.iter().sum();
     let s2: f64 = xs.iter().map(|x| x * x).sum();
+    // div-by-zero guard, exact sentinel -- lint: allow(float-eq)
     if s2 == 0.0 {
         1.0
     } else {

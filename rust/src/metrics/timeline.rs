@@ -1,5 +1,11 @@
 //! Timeline sampling: periodic cluster snapshots for utilization plots and
 //! failure-injection visibility (`repro run --timeline out.csv`).
+//!
+//! [`Timeline`] is bounded: it never holds more than its cap, no matter how
+//! long the simulated run is. When the buffer fills it halves itself by
+//! dropping every other kept sample and doubles its sampling stride, so a
+//! week-long simulation costs the same memory as a minute-long one while
+//! still covering the whole run at uniform (coarser) resolution.
 
 use crate::sim::engine::Time;
 
@@ -12,6 +18,86 @@ pub struct TimelineSample {
     pub running_tasks: u32,
     pub queued_jobs: u32,
     pub alive_nodes: u32,
+}
+
+/// Default cap: 4096 samples ≈ 160 KiB, plenty for any plot.
+pub const DEFAULT_CAP: usize = 4096;
+
+/// A bounded, stride-compacting sample buffer — O(cap) memory regardless
+/// of run length.
+#[derive(Debug)]
+pub struct Timeline {
+    samples: Vec<TimelineSample>,
+    cap: usize,
+    /// Keep every `stride`-th offered sample (doubles on each compaction).
+    stride: u64,
+    /// Samples offered since construction.
+    offered: u64,
+}
+
+impl Default for Timeline {
+    fn default() -> Timeline {
+        Timeline::with_cap(DEFAULT_CAP)
+    }
+}
+
+impl Timeline {
+    pub fn with_cap(cap: usize) -> Timeline {
+        Timeline {
+            samples: Vec::new(),
+            cap: cap.max(2),
+            stride: 1,
+            offered: 0,
+        }
+    }
+
+    /// Offer one sample; kept only if it lands on the current stride.
+    pub fn push(&mut self, s: TimelineSample) {
+        let keep = self.offered % self.stride == 0;
+        self.offered += 1;
+        if !keep {
+            return;
+        }
+        self.samples.push(s);
+        if self.samples.len() >= self.cap {
+            // drop every other kept sample, keep covering the whole run
+            let mut i = 0;
+            self.samples.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride *= 2;
+        }
+    }
+
+    /// Samples currently held (≤ cap).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total samples ever offered (kept + compacted away).
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    /// Current sampling stride (1 until the first compaction).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn samples(&self) -> &[TimelineSample] {
+        &self.samples
+    }
+
+    /// Render the kept samples as CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        to_csv(&self.samples)
+    }
 }
 
 /// Render samples as CSV (header + rows).
@@ -30,6 +116,16 @@ pub fn to_csv(samples: &[TimelineSample]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample(t: f64) -> TimelineSample {
+        TimelineSample {
+            time: t,
+            mean_bottleneck_util: 0.5,
+            running_tasks: 12,
+            queued_jobs: 3,
+            alive_nodes: 8,
+        }
+    }
 
     #[test]
     fn csv_shape() {
@@ -60,5 +156,44 @@ mod tests {
     #[test]
     fn empty_is_header_only() {
         assert_eq!(to_csv(&[]).lines().count(), 1);
+        assert_eq!(Timeline::default().to_csv().lines().count(), 1);
+    }
+
+    #[test]
+    fn stays_bounded_forever() {
+        // the O(active)-memory regression guard: a run 1000x the cap still
+        // holds at most `cap` samples
+        let cap = 64;
+        let mut tl = Timeline::with_cap(cap);
+        for i in 0..(cap as u64 * 1000) {
+            tl.push(sample(i as f64));
+        }
+        assert!(tl.len() <= cap, "len={} cap={cap}", tl.len());
+        assert_eq!(tl.offered(), cap as u64 * 1000);
+        assert!(tl.stride() >= 1000, "stride={}", tl.stride());
+    }
+
+    #[test]
+    fn compaction_keeps_whole_run_coverage() {
+        let mut tl = Timeline::with_cap(8);
+        for i in 0..1000 {
+            tl.push(sample(i as f64));
+        }
+        let s = tl.samples();
+        assert!(s.first().map(|x| x.time) == Some(0.0), "lost run start");
+        // strided samples stay in time order and span most of the run
+        assert!(s.windows(2).all(|w| w[0].time < w[1].time));
+        assert!(s.last().map(|x| x.time).unwrap_or(0.0) >= 500.0);
+    }
+
+    #[test]
+    fn below_cap_keeps_everything() {
+        let mut tl = Timeline::with_cap(100);
+        for i in 0..50 {
+            tl.push(sample(i as f64));
+        }
+        assert_eq!(tl.len(), 50);
+        assert_eq!(tl.stride(), 1);
+        assert_eq!(tl.samples()[49].time, 49.0);
     }
 }

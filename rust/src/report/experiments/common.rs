@@ -60,6 +60,7 @@ pub fn run_once(cfg: &RunConfig) -> RunSummary {
     let cluster =
         crate::cluster::Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
     let specs = generate(&cfg.workload);
+    // static experiment config -- lint: allow(unwrap-in-lib)
     let mut jt = build_tracker_with(cfg, cluster, specs).expect("build tracker");
     jt.run();
     summarize(&jt, cfg)

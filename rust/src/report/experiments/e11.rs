@@ -46,6 +46,7 @@ pub fn e11(opts: &ExpOpts) -> Vec<Table> {
             tracker_cfg.failures = FailureConfig { mtbf: *mtbf, mttr: 90.0 };
             let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
             let sched_box =
+                // static experiment config -- lint: allow(unwrap-in-lib)
                 crate::coordinator::builder::build_scheduler(&cfg).unwrap();
             let mut jt = JobTracker::new(
                 cluster,

@@ -31,6 +31,7 @@ pub fn e12(opts: &ExpOpts) -> Vec<Table> {
         });
         let mut rm = ResourceManager::new(
             cluster,
+            // static experiment config -- lint: allow(unwrap-in-lib)
             yarn_policy_by_name(policy, 1.0).unwrap(),
             specs,
             10,

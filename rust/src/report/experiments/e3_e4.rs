@@ -38,6 +38,7 @@ pub fn e3(opts: &ExpOpts) -> Vec<Table> {
         };
         let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
         let specs = generate(&cfg.workload);
+        // static experiment config -- lint: allow(unwrap-in-lib)
         let mut jt = build_tracker_with(&cfg, cluster, specs).unwrap();
         jt.run();
         let curve: Vec<f64> = jt

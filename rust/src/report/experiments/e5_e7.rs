@@ -13,7 +13,7 @@ pub fn e5(opts: &ExpOpts) -> Vec<Table> {
         "E5 map-task data locality by scheduler",
         &["scheduler", "node_local", "rack_local", "remote"],
     );
-    for sched in ["fifo", "fair", "capacity", "bayes", "random"] {
+    for sched in ["fifo", "fair", "capacity", "bayes", "random", "threshold-fifo"] {
         let cfg = RunConfig {
             scheduler: sched.into(),
             n_nodes: opts.scaled(40, 8) as u32,

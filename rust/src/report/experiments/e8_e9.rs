@@ -186,6 +186,7 @@ pub fn e9(opts: &ExpOpts) -> Vec<Table> {
         };
         let cluster = Cluster::heterogeneous(n, 4, classes, 99);
         let specs = generate(&cfg.workload);
+        // static experiment config -- lint: allow(unwrap-in-lib)
         let mut jt = build_tracker_with(&cfg, cluster, specs).unwrap();
         jt.run();
         let r = summarize(&jt, &cfg);

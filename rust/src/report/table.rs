@@ -91,6 +91,7 @@ impl Table {
 
 /// Format an f64 with sensible precision for reports.
 pub fn fnum(x: f64) -> String {
+    // exact-zero prints bare '0' -- lint: allow(float-eq)
     if x == 0.0 {
         "0".into()
     } else if x.abs() >= 100.0 {

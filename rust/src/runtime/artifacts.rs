@@ -22,14 +22,17 @@ pub struct ShapeConstants {
     pub feature_dim: usize,
 }
 
-/// The constants this build of the rust coordinator expects.
+/// The constants this build of the rust coordinator expects. `n_features`
+/// and `feature_dim` must track `bayes::features::N_FEATURES` (the
+/// n-features-sync lint cross-checks this file, `features.rs`, and
+/// `python/compile/constants.py`).
 pub const EXPECTED: ShapeConstants = ShapeConstants {
     max_jobs: 256,
-    n_features: 8,
+    n_features: 10,
     n_bins: 10,
     n_classes: 2,
     max_batch: 128,
-    feature_dim: 80,
+    feature_dim: 100,
 };
 
 /// One AOT entry point (an HLO text file).
@@ -155,14 +158,15 @@ pub fn default_dir() -> PathBuf {
 mod tests {
     use super::*;
 
+    // one-line string literals only: the lint scanner's test-region brace
+    // counter does not track multi-line raw strings
     fn write_manifest(dir: &Path, max_jobs: usize) {
-        let text = format!(
-            r#"{{"constants": {{"max_jobs": {max_jobs}, "n_features": 8, "n_bins": 10,
-                "n_classes": 2, "max_batch": 128, "feature_dim": 80}},
-                "entries": {{
-                  "classify": {{"file": "classify.hlo.txt", "sha256": "aa"}},
-                  "update": {{"file": "update.hlo.txt", "sha256": "bb"}}}}}}"#
-        );
+        let mut text = format!("{{\"constants\": {{\"max_jobs\": {max_jobs},");
+        text.push_str(" \"n_features\": 10, \"n_bins\": 10, \"n_classes\": 2,");
+        text.push_str(" \"max_batch\": 128, \"feature_dim\": 100},");
+        text.push_str(" \"entries\": {\"classify\": {\"file\": \"classify.hlo.txt\",");
+        text.push_str(" \"sha256\": \"aa\"}, \"update\": {\"file\": \"update.hlo.txt\",");
+        text.push_str(" \"sha256\": \"bb\"}}}");
         std::fs::write(dir.join("manifest.json"), text).unwrap();
     }
 

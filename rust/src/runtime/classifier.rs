@@ -142,17 +142,21 @@ impl Classifier for XlaClassifier {
             self.table_bufs = Some(
                 self.rt
                     .upload_tables(&self.log_prior, &self.log_lik)
+                    // a PJRT fault mid-run is unrecoverable by design
+                    // lint: allow(unwrap-in-lib)
                     .expect("uploading classifier tables failed"),
             );
         }
         let out = self
             .rt
             .classify_buffers(
+                // Some by construction above -- lint: allow(unwrap-in-lib)
                 self.table_bufs.as_ref().unwrap(),
                 &self.feats_buf,
                 &self.utility_buf,
                 &self.mask_buf,
             )
+            // lint: allow(unwrap-in-lib)
             .expect("classify artifact execution failed");
         ClassifyResult {
             p_good: out.p_good[..n].to_vec(),
@@ -169,6 +173,7 @@ impl Classifier for XlaClassifier {
     }
 
     fn flush(&mut self) {
+        // a PJRT fault mid-run is unrecoverable -- lint: allow(unwrap-in-lib)
         self.flush_inner().expect("update artifact execution failed");
     }
 

@@ -41,6 +41,34 @@
 //! per-job bookkeeping (e.g. the Fair scheduler's pool counters) can be
 //! dropped on `JobCompleted` without leaking.
 //!
+//! ## Normative lifecycle rules (R1–R8)
+//!
+//! The table below is the **contract**: both drivers must emit streams
+//! satisfying every rule, and any scheduler may rely on them. The
+//! [`crate::analysis::protocol::ProtocolAuditor`] enforces the table — as
+//! a debug-build shadow audit inside both drivers, over recorded traces
+//! (`repro lint --trace`), and in the churn conformance sweep
+//! (`analysis::audit_all_schedulers`). Rule ids match
+//! [`crate::analysis::protocol::Rule`].
+//!
+//! | rule | name                   | invariant                                                 |
+//! |------|------------------------|-----------------------------------------------------------|
+//! | R1   | start-before-arrival   | no task event before its job arrived, none after its `JobCompleted` |
+//! | R2   | slot-overcommit        | per `(node, kind)`, live attempts never exceed the node's slot capacity |
+//! | R3   | double-assign          | a task never has two live attempts in the same role; a regular launch requires no live attempt at all |
+//! | R4   | bad-speculation        | a speculative launch requires a live primary on a *different* node and no live backup; a backup is promoted at most once per launch |
+//! | R5   | completed-before-drain | `JobCompleted` only after every attempt of the job has ended |
+//! | R6   | dead-node-event        | no event touches a failed node until its `NodeRecovered`; fail/recover strictly alternate per node |
+//! | R7   | end-without-start      | every attempt end pairs with exactly one live attempt (no stale or duplicate ends) |
+//! | R8   | train-serve-skew       | every `Feedback` row is bit-identical to a row some placement was scored on at decision time |
+//!
+//! The driver-side event order around failures is also normative: when a
+//! node dies, the per-task `TaskFailed { reason: NodeLost }` events come
+//! *first* and `NodeFailed` last, so by the time a scheduler sees
+//! `NodeFailed` there is nothing left running on the node. When a
+//! speculation race resolves, the loser's end is reported before the
+//! winner's `TaskFinished`.
+//!
 //! Each [`Assignment`] carries a [`Decision`] record (chosen job,
 //! posterior, utility, locality, failure bins, candidates considered,
 //! speculative flag) that drivers thread into metrics and the
@@ -349,8 +377,10 @@ impl BatchState {
                     if self.taken.contains(&tref) {
                         continue;
                     }
-                    let loc =
-                        hdfs.locality(t.block.expect("map without block"), node.id);
+                    let block =
+                        // every map has a block -- lint: allow(unwrap-in-lib)
+                        t.block.expect("map without block");
+                    let loc = hdfs.locality(block, node.id);
                     let rank = |l: Locality| match l {
                         Locality::NodeLocal => 0,
                         Locality::RackLocal => 1,

@@ -290,6 +290,7 @@ impl<C: Classifier> BayesScheduler<C> {
             let job = view.jobs.get(tref.job);
             let locality = match tref.kind {
                 TaskKind::Map => Some(view.hdfs.locality(
+                    // every map has a block -- lint: allow(unwrap-in-lib)
                     job.task(tref).block.expect("map without block"),
                     node.id,
                 )),

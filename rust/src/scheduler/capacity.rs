@@ -77,7 +77,9 @@ impl Capacity {
             // auto-created queues share capacity equally
             let share = 1.0 / self.auto_queues.len() as f64;
             for q in &self.auto_queues {
-                self.queues.get_mut(q).unwrap().capacity = share;
+                if let Some(queue) = self.queues.get_mut(q) {
+                    queue.capacity = share;
+                }
             }
         }
     }
@@ -204,7 +206,7 @@ impl Scheduler for Capacity {
             }
             SchedEvent::TaskStarted { job, .. } => {
                 if let Some((q, u)) = self.job_queue.get(job).cloned() {
-                    let queue = self.queues.get_mut(&q).unwrap();
+                    let Some(queue) = self.queues.get_mut(&q) else { return };
                     queue.running += 1;
                     *queue.per_user_running.entry(u).or_insert(0) += 1;
                 }
@@ -213,7 +215,7 @@ impl Scheduler for Capacity {
             SchedEvent::TaskFinished { job, .. }
             | SchedEvent::TaskFailed { job, .. } => {
                 if let Some((q, u)) = self.job_queue.get(job).cloned() {
-                    let queue = self.queues.get_mut(&q).unwrap();
+                    let Some(queue) = self.queues.get_mut(&q) else { return };
                     queue.running = queue.running.saturating_sub(1);
                     if let Some(c) = queue.per_user_running.get_mut(&u) {
                         *c = c.saturating_sub(1);

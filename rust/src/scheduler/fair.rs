@@ -140,15 +140,18 @@ impl Scheduler for Fair {
     fn observe(&mut self, ev: &SchedEvent) {
         match ev {
             SchedEvent::TaskStarted { job, .. } => {
-                if let Some(pool) = self.job_pool.get(job) {
-                    self.pools.get_mut(pool).unwrap().running += 1;
+                if let Some(p) =
+                    self.job_pool.get(job).and_then(|pool| self.pools.get_mut(pool))
+                {
+                    p.running += 1;
                 }
             }
             // both attempt-end flavours release the pool's slot
             SchedEvent::TaskFinished { job, .. }
             | SchedEvent::TaskFailed { job, .. } => {
-                if let Some(pool) = self.job_pool.get(job) {
-                    let p = self.pools.get_mut(pool).unwrap();
+                if let Some(p) =
+                    self.job_pool.get(job).and_then(|pool| self.pools.get_mut(pool))
+                {
                     p.running = p.running.saturating_sub(1);
                 }
             }

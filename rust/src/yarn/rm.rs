@@ -17,6 +17,7 @@
 
 use std::collections::HashMap;
 
+use crate::analysis::protocol::{AuditEvent, AuditSink};
 use crate::bayes::classifier::Label;
 use crate::bayes::features::{feature_vec, FailureHistory};
 use crate::bayes::overload::OverloadRule;
@@ -136,19 +137,19 @@ pub struct ResourceManager {
     /// Failure-injection RNG (own stream: does not perturb workloads).
     fail_rng: crate::sim::rng::Pcg,
     arrivals_done: bool,
+    /// Protocol audit tap, mirroring the MRv1 tracker: shadow auditor in
+    /// debug builds, disabled in release.
+    pub audit: AuditSink,
 }
 
 impl ResourceManager {
     pub fn new(
         cluster: Cluster,
-        mut policy: SchedulerPolicy,
+        policy: SchedulerPolicy,
         mut specs: Vec<JobSpec>,
         seed: u64,
         cfg: YarnConfig,
     ) -> ResourceManager {
-        policy.observe(&SchedEvent::ClusterInfo {
-            total_slots: cluster.total_slots(),
-        });
         specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
         let n = cluster.len();
         let hdfs =
@@ -170,7 +171,9 @@ impl ResourceManager {
             inflight_feats: HashMap::new(),
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA17),
             arrivals_done: false,
+            audit: AuditSink::default_for_build(),
         };
+        rm.emit_preamble();
         rm.schedule_next_arrival();
         for node in rm.cluster.topology.all_nodes() {
             let t = rm.cfg.heartbeat.first_beat(node);
@@ -185,6 +188,42 @@ impl ResourceManager {
             let dt = self.fail_rng.exp(1.0 / mtbf);
             self.engine.schedule_in(dt, Event::NodeFail(node));
         }
+    }
+
+    /// Feed one scheduler-visible event through the audit tap and then to
+    /// the policy. Every `SchedEvent` the RM produces MUST go through here.
+    fn emit(&mut self, ev: SchedEvent) {
+        self.audit.sched(&ev);
+        self.policy.observe(&ev);
+    }
+
+    /// Audit preamble (node capacities + cluster info); the `ClusterInfo`
+    /// half is also the policy's contractual startup notification.
+    fn emit_preamble(&mut self) {
+        for n in &self.cluster.nodes {
+            self.audit.push(AuditEvent::NodeSpec {
+                node: n.id,
+                maps: n.spec.map_slots,
+                reduces: n.spec.reduce_slots,
+            });
+        }
+        self.emit(SchedEvent::ClusterInfo { total_slots: self.cluster.total_slots() });
+    }
+
+    /// Swap in an audit sink before `run()`; the preamble is replayed into
+    /// it (the policy does NOT re-observe it).
+    pub fn set_audit(&mut self, mut sink: AuditSink) {
+        for n in &self.cluster.nodes {
+            sink.push(AuditEvent::NodeSpec {
+                node: n.id,
+                maps: n.spec.map_slots,
+                reduces: n.spec.reduce_slots,
+            });
+        }
+        sink.push(AuditEvent::Sched(SchedEvent::ClusterInfo {
+            total_slots: self.cluster.total_slots(),
+        }));
+        self.audit = sink;
     }
 
     fn schedule_next_arrival(&mut self) {
@@ -202,7 +241,8 @@ impl ResourceManager {
     /// (paper §2.3 steps 1-3 collapsed to one control-plane event).
     fn on_job_arrival(&mut self) {
         if let Some(spec) = self.next_spec.take() {
-            self.jobs.submit(spec, &mut self.hdfs);
+            let id = self.jobs.submit(spec, &mut self.hdfs);
+            self.audit.push(AuditEvent::JobArrived { job: id });
         }
         self.schedule_next_arrival();
     }
@@ -277,7 +317,7 @@ impl ResourceManager {
     fn notify_if_drained(&mut self, id: JobId) {
         let job = self.jobs.get(id);
         if job.finish_time.is_some() && job.fully_drained() {
-            self.policy.observe(&SchedEvent::JobCompleted { job: id });
+            self.emit(SchedEvent::JobCompleted { job: id });
             self.failures.forget_job(id);
         }
     }
@@ -288,7 +328,8 @@ impl ResourceManager {
         let horizons = self.release(&tref, node_id, now);
         self.doomed.remove(&(node_id, tref));
         self.inflight_feats.remove(&(node_id, tref));
-        self.policy.observe(&SchedEvent::TaskFinished {
+        self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
+        self.emit(SchedEvent::TaskFinished {
             job: tref.job,
             node: node_id,
             kind: tref.kind,
@@ -316,7 +357,8 @@ impl ResourceManager {
             let lost_backup =
                 task.speculative.is_some_and(|s| s.node == node_id);
             let surviving_backup = !lost_backup && task.speculative.is_some();
-            self.policy.observe(&SchedEvent::TaskFailed {
+            self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
+            self.emit(SchedEvent::TaskFailed {
                 job: tref.job,
                 node: node_id,
                 kind: tref.kind,
@@ -338,7 +380,7 @@ impl ResourceManager {
         self.declared[node_id.0 as usize] =
             crate::cluster::resources::Resources::ZERO;
         self.pending_feedback[node_id.0 as usize].clear();
-        self.policy.observe(&SchedEvent::NodeFailed { node: node_id });
+        self.emit(SchedEvent::NodeFailed { node: node_id });
         let mttr = self.cfg.failures.mttr.max(1.0);
         let dt = self.fail_rng.exp(1.0 / mttr);
         self.engine.schedule_in(dt, Event::NodeRecover(node_id));
@@ -347,7 +389,7 @@ impl ResourceManager {
     fn on_node_recover(&mut self, node_id: NodeId) {
         let now = self.engine.now();
         self.cluster.node_mut(node_id).recover(now);
-        self.policy.observe(&SchedEvent::NodeRecovered { node: node_id });
+        self.emit(SchedEvent::NodeRecovered { node: node_id });
         self.engine
             .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
         self.schedule_next_failure(node_id);
@@ -369,8 +411,7 @@ impl ResourceManager {
             let obs = self.cluster.node(node_id).observation();
             let label = self.cfg.overload_rule.label(&obs);
             for p in pend {
-                self.policy
-                    .observe(&SchedEvent::Feedback { feats: p.feats, label });
+                self.emit(SchedEvent::Feedback { feats: p.feats, label });
                 self.metrics.record_feedback(label);
             }
         }
@@ -411,6 +452,8 @@ impl ResourceManager {
                         now,
                     };
                     let node = self.cluster.node(node_id);
+                    // real (not virtual) time: the policy's own compute
+                    // cost for E6 -- lint: allow(wallclock-in-sim)
                     let t0 = std::time::Instant::now();
                     let out = self.policy.assign(&view, node, budget);
                     (out, t0.elapsed().as_nanos())
@@ -494,6 +537,7 @@ impl ResourceManager {
         let mut actual = declared.scale(actual_factor(job));
         let mut work = job.task(&tref).work;
         if tref.kind == TaskKind::Map {
+            // submit() assigns every map a block -- lint: allow(unwrap-in-lib)
             let block = job.task(&tref).block.unwrap();
             let loc = self.hdfs.locality(block, node_id);
             self.metrics.record_locality(loc);
@@ -518,7 +562,13 @@ impl ResourceManager {
             self.jobs.start_task(&tref, node_id, now);
             self.jobs.get(tref.job).task(&tref).generation
         };
-        self.policy.observe(&SchedEvent::TaskStarted {
+        self.audit.push(AuditEvent::Launched {
+            task: tref,
+            node: node_id,
+            speculative,
+            feats,
+        });
+        self.emit(SchedEvent::TaskStarted {
             job: tref.job,
             node: node_id,
             kind: tref.kind,
@@ -603,7 +653,8 @@ impl ResourceManager {
             }
         }
         self.jobs.complete_task(&tref, now);
-        self.policy.observe(&SchedEvent::TaskFinished {
+        self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
+        self.emit(SchedEvent::TaskFinished {
             job: tref.job,
             node: node_id,
             kind: tref.kind,
@@ -613,6 +664,8 @@ impl ResourceManager {
         if finished {
             // AM unregisters (paper §2.3 final step)
             self.jobs.mark_complete(tref.job, now);
+            // Some by construction: mark_complete just set finish_time
+            // lint: allow(unwrap-in-lib)
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
             self.metrics.record_outcome(tref.job, outcome);
         }
@@ -629,14 +682,14 @@ impl ResourceManager {
         self.doomed.remove(&(node_id, tref));
         self.failures.record_failure(tref.job, node_id, now);
         self.metrics.task_failures += 1;
+        self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
         if let Some(feats) = self.inflight_feats.remove(&(node_id, tref)) {
-            self.policy
-                .observe(&SchedEvent::Feedback { feats, label: Label::Bad });
+            self.emit(SchedEvent::Feedback { feats, label: Label::Bad });
             self.metrics.record_feedback(Label::Bad);
         }
         self.jobs.get_mut(tref.job).task_mut(&tref).failed_attempts += 1;
         let attempt = self.jobs.get(tref.job).task(&tref).attempts;
-        self.policy.observe(&SchedEvent::TaskFailed {
+        self.emit(SchedEvent::TaskFailed {
             job: tref.job,
             node: node_id,
             kind: tref.kind,

@@ -1,0 +1,142 @@
+//! Train/serve skew golden tests: the rows the scheduler *learns from*
+//! (Feedback) must be bit-identical to the rows it *scored* at decision
+//! time (Launched), including the OOM-killed Bad-sample path — the failure
+//! mode the ATLAS line of work shows degrades learned schedulers silently.
+
+use std::collections::HashMap;
+
+use bayes_sched::analysis::protocol::{audit_stream, AuditEvent, AuditSink};
+use bayes_sched::bayes::classifier::Label;
+use bayes_sched::bayes::features::FeatureVec;
+use bayes_sched::cluster::node::NodeSpec;
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::job::profile::JobClass;
+use bayes_sched::scheduler::api::{FailReason, SchedEvent};
+use bayes_sched::scheduler::by_name;
+use bayes_sched::workload::generator::{generate, Mix, WorkloadConfig};
+use bayes_sched::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+/// Small cluster with generous slots + mem-heavy-only jobs: guaranteed
+/// OOM kills, so the Bad-sample feedback path is exercised.
+fn oomy_workload(seed: u64) -> (Cluster, Vec<bayes_sched::job::job::JobSpec>) {
+    let cluster = Cluster::with_specs(
+        (0..3)
+            .map(|_| NodeSpec { map_slots: 4, reduce_slots: 2, ..Default::default() })
+            .collect(),
+        1,
+    );
+    let wl = WorkloadConfig {
+        n_jobs: 20,
+        arrival_rate: 2.0,
+        mix: Mix::only(JobClass::MemHeavy),
+        seed,
+        ..Default::default()
+    };
+    (cluster, generate(&wl))
+}
+
+fn recorded_mrv1(sched: &str, seed: u64) -> Vec<AuditEvent> {
+    let (cluster, specs) = oomy_workload(seed);
+    let mut jt = JobTracker::new(
+        cluster,
+        by_name(sched, seed).unwrap(),
+        specs,
+        seed,
+        TrackerConfig::default(),
+    );
+    jt.set_audit(AuditSink::recording());
+    jt.run();
+    assert!(jt.metrics.oom_kills > 0, "workload produced no OOM kills");
+    jt.audit.take_recording()
+}
+
+fn recorded_yarn(sched: &str, seed: u64) -> Vec<AuditEvent> {
+    let (cluster, specs) = oomy_workload(seed);
+    let mut rm = ResourceManager::new(
+        cluster,
+        yarn_policy_by_name(sched, 1.0).unwrap(),
+        specs,
+        seed,
+        YarnConfig::default(),
+    );
+    rm.set_audit(AuditSink::recording());
+    rm.run();
+    assert!(rm.metrics.oom_kills > 0, "workload produced no OOM kills");
+    rm.audit.take_recording()
+}
+
+/// Every Feedback row must appear among the Launched decision rows —
+/// checked directly against the stream, independent of the auditor.
+fn assert_no_skew(events: &[AuditEvent]) {
+    let mut scored: HashMap<FeatureVec, u64> = HashMap::new();
+    let mut feedback_rows = 0u64;
+    let mut bad_rows = 0u64;
+    let mut oom_fails = 0u64;
+    for ev in events {
+        match ev {
+            AuditEvent::Launched { feats, .. } => {
+                *scored.entry(*feats).or_insert(0) += 1;
+            }
+            AuditEvent::Sched(SchedEvent::Feedback { feats, label }) => {
+                feedback_rows += 1;
+                if *label == Label::Bad {
+                    bad_rows += 1;
+                }
+                assert!(
+                    scored.contains_key(feats),
+                    "feedback row {feats:?} was never scored at decision time"
+                );
+            }
+            AuditEvent::Sched(SchedEvent::TaskFailed {
+                reason: FailReason::Oom,
+                ..
+            }) => oom_fails += 1,
+            _ => {}
+        }
+    }
+    assert!(feedback_rows > 0, "no feedback at all");
+    assert!(oom_fails > 0, "no OOM failures recorded");
+    assert!(
+        bad_rows > 0,
+        "OOM kills happened but no Bad feedback row was emitted"
+    );
+}
+
+#[test]
+fn mrv1_feedback_rows_match_decision_rows_including_oom_path() {
+    let events = recorded_mrv1("bayes", 14);
+    assert_no_skew(&events);
+    // and the protocol auditor agrees (train-serve-skew is rule R8)
+    let violations = audit_stream(&events);
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn yarn_feedback_rows_match_decision_rows_including_oom_path() {
+    let events = recorded_yarn("bayes", 14);
+    assert_no_skew(&events);
+    let violations = audit_stream(&events);
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn feedback_stream_is_deterministic_golden() {
+    // same seed, same config -> bit-identical feedback row sequence; any
+    // drift here means decision rows and training rows can drift apart too
+    let rows = |events: &[AuditEvent]| -> Vec<(FeatureVec, Label)> {
+        events
+            .iter()
+            .filter_map(|ev| match ev {
+                AuditEvent::Sched(SchedEvent::Feedback { feats, label }) => {
+                    Some((*feats, *label))
+                }
+                _ => None,
+            })
+            .collect()
+    };
+    let a = rows(&recorded_mrv1("bayes", 31));
+    let b = rows(&recorded_mrv1("bayes", 31));
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "feedback stream not reproducible for identical runs");
+}
