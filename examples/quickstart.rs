@@ -33,7 +33,7 @@ fn main() {
     let m = &jt.metrics;
     let lat = m.latencies();
     println!("scheduler        : bayes");
-    println!("jobs completed   : {}", m.outcomes.len());
+    println!("jobs completed   : {}", m.completed_jobs());
     println!("makespan         : {makespan:.1} s (virtual)");
     println!("throughput       : {:.3} jobs/s", m.throughput());
     println!("mean job latency : {:.1} s", stats::mean(&lat));

@@ -1,0 +1,103 @@
+//! Bench engine_events_per_sec: the classic *hold* benchmark for event
+//! queues — at a steady pending-event population, each operation pops the
+//! earliest event and schedules a successor a random offset later. This is
+//! exactly the drivers' steady state (every completion schedules the next
+//! heartbeat/arrival), so per-hold cost is per-event engine overhead.
+//!
+//! Compares the production calendar-queue backend (`Engine`) against the
+//! binary-heap reference (`HeapEngine`) across pending sizes, and writes
+//! `BENCH_engine.json` so the perf trajectory is tracked across PRs.
+//!
+//!     cargo bench --bench engine_events_per_sec
+
+use std::collections::BTreeMap;
+
+use bayes_sched::cluster::node::NodeId;
+use bayes_sched::config::json::Json;
+use bayes_sched::report::bench::{bench, fmt_ns, Measurement};
+use bayes_sched::sim::engine::EngineImpl;
+use bayes_sched::sim::{Event, EventQueue, Pcg};
+
+/// Hold operations per timed iteration (per-event cost = mean_ns / this).
+const HOLDS_PER_ITER: usize = 1000;
+
+/// `BENCH_SMOKE=1` shrinks pending sizes and iteration counts so CI can
+/// track the trajectory on every push.
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Measure the hold loop on one backend at a steady `pending` population.
+fn hold_bench<Q: EventQueue + Default>(
+    label: &str,
+    pending: usize,
+    warmup: usize,
+    iters: usize,
+) -> Measurement {
+    let mut e: EngineImpl<Q> = EngineImpl::new();
+    let mut rng = Pcg::seeded(7);
+    // prefill with the same spread the holds maintain (~1.5s window), so
+    // the measured regime is the steady state, not a cold start
+    for i in 0..pending {
+        e.schedule(rng.range_f64(0.0, 1.5), Event::Heartbeat(NodeId(i as u32)));
+    }
+    bench(label, warmup, iters, move |_| {
+        for _ in 0..HOLDS_PER_ITER {
+            // the population is constant: every pop is followed by a push
+            let (t, ev) = e.pop().unwrap();
+            e.schedule(t + rng.range_f64(0.5, 1.5), ev);
+        }
+        std::hint::black_box(e.now());
+    })
+}
+
+fn main() {
+    println!("== engine hold throughput: calendar queue vs binary heap ==");
+    let sizes: &[usize] = if smoke() {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000, 500_000]
+    };
+    let (warmup, iters) = if smoke() { (3, 30) } else { (10, 200) };
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    for &n in sizes {
+        let heap = hold_bench::<bayes_sched::sim::engine::HeapQueue>(
+            &format!("hold/heap/{n}"),
+            n,
+            warmup,
+            iters,
+        );
+        let cal = hold_bench::<bayes_sched::sim::CalendarQueue>(
+            &format!("hold/calendar/{n}"),
+            n,
+            warmup,
+            iters,
+        );
+        let heap_ns = heap.mean_ns / HOLDS_PER_ITER as f64;
+        let cal_ns = cal.mean_ns / HOLDS_PER_ITER as f64;
+        let speedup = heap_ns / cal_ns.max(1e-9);
+        println!(
+            "  -> pending {n:>7}: heap {}/ev vs calendar {}/ev ({speedup:.2}x)",
+            fmt_ns(heap_ns),
+            fmt_ns(cal_ns),
+        );
+        let mut entry = BTreeMap::new();
+        entry.insert("heap_ns".to_string(), Json::Num(heap_ns));
+        entry.insert("calendar_ns".to_string(), Json::Num(cal_ns));
+        entry.insert("speedup".to_string(), Json::Num(speedup));
+        results.insert(format!("pending_{n}"), Json::Obj(entry));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("engine_events_per_sec".into()));
+    doc.insert("holds_per_iter".to_string(), Json::Num(HOLDS_PER_ITER as f64));
+    // keep each insert on one line: the bench-baseline lint reads the
+    // schema straight out of this source (see LINTS.md)
+    let smoke_flag = if smoke() { 1.0 } else { 0.0 };
+    doc.insert("smoke".to_string(), Json::Num(smoke_flag));
+    doc.insert("results".to_string(), Json::Obj(results));
+    let json = Json::Obj(doc);
+    match std::fs::write("BENCH_engine.json", json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_engine.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_engine.json: {e}"),
+    }
+}

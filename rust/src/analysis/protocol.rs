@@ -598,7 +598,7 @@ mod tests {
     }
 
     fn job(i: u32) -> JobId {
-        JobId(i)
+        JobId::dense(i)
     }
 
     fn task(j: u32, index: u32) -> TaskRef {

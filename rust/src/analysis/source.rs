@@ -84,8 +84,9 @@ pub struct Workspace {
     pub benches: Vec<(String, String)>,
     /// `python/compile/constants.py` lines, if present.
     pub py_constants: Option<(String, Vec<String>)>,
-    /// `BENCH_e6.json` content, if present.
-    pub bench_baseline: Option<(String, String)>,
+    /// Committed perf baselines (`BENCH_e6.json`, `BENCH_engine.json`), as
+    /// present: `(file name, content)`.
+    pub bench_baselines: Vec<(String, String)>,
 }
 
 fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
@@ -160,9 +161,10 @@ impl Workspace {
             ));
         }
 
-        let baseline = root.join("BENCH_e6.json");
-        if let Ok(text) = std::fs::read_to_string(&baseline) {
-            ws.bench_baseline = Some(("BENCH_e6.json".to_string(), text));
+        for name in ["BENCH_e6.json", "BENCH_engine.json"] {
+            if let Ok(text) = std::fs::read_to_string(root.join(name)) {
+                ws.bench_baselines.push((name.to_string(), text));
+            }
         }
 
         Ok(ws)
@@ -581,9 +583,11 @@ fn lint_float_eq(ws: &Workspace, out: &mut Vec<Finding>) {
     }
 }
 
-/// `engine-hot-loop`: the event-heap core must stay allocation-free and
-/// collection-free per event — `sim/engine.rs` is the per-event hot path
-/// every experiment multiplies by millions of events.
+/// `engine-hot-loop`: the per-event core must stay allocation-free,
+/// collection-free, and iterative — `sim/engine.rs`, `sim/calendar.rs`,
+/// and `sim/arena.rs` are the paths every experiment multiplies by
+/// millions of events, and a recursive pop/schedule path would turn a deep
+/// backlog into a stack overflow.
 fn lint_engine_hot_loop(ws: &Workspace, out: &mut Vec<Finding>) {
     const FORBIDDEN: [&str; 9] = [
         "BTreeMap",
@@ -596,24 +600,85 @@ fn lint_engine_hot_loop(ws: &Workspace, out: &mut Vec<Finding>) {
         "Instant",
         "SystemTime",
     ];
-    let Some(f) = ws.find_src("sim/engine.rs") else { return };
+    const HOT_FILES: [&str; 3] =
+        ["sim/engine.rs", "sim/calendar.rs", "sim/arena.rs"];
+    for suffix in HOT_FILES {
+        let Some(f) = ws.find_src(suffix) else { continue };
+        for (i, line) in f.lines.iter().enumerate() {
+            if f.in_test[i] {
+                continue;
+            }
+            let code = strip_code(line);
+            for pat in FORBIDDEN {
+                if code.contains(pat) && !f.allowed(i, "engine-hot-loop") {
+                    out.push(Finding {
+                        lint: "engine-hot-loop",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "`{pat}` in the per-event hot path — keep the \
+                             per-event cost allocation-free"
+                        ),
+                    });
+                }
+            }
+        }
+        lint_self_recursion(f, out);
+    }
+}
+
+/// The recursion half of `engine-hot-loop`: inside each `fn name(...)` of a
+/// hot file, a direct `self.name(` call is direct self-recursion. Brace
+/// counting bounds the body; delegation to a field's same-named method
+/// (`self.queue.pop()`) does not match the `self.name(` pattern.
+fn lint_self_recursion(f: &SourceFile, out: &mut Vec<Finding>) {
     for (i, line) in f.lines.iter().enumerate() {
         if f.in_test[i] {
             continue;
         }
-        let code = strip_code(line);
-        for pat in FORBIDDEN {
-            if code.contains(pat) && !f.allowed(i, "engine-hot-loop") {
+        let sig = strip_code(line);
+        let Some(pos) = sig.find("fn ") else { continue };
+        let name: String = sig[pos + 3..]
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if name.is_empty() {
+            continue;
+        }
+        let needle = format!("self.{name}(");
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        'body: while j < f.lines.len() {
+            let code = strip_code(&f.lines[j]);
+            if code.contains(&needle) && !f.allowed(j, "engine-hot-loop") {
                 out.push(Finding {
                     lint: "engine-hot-loop",
                     file: f.rel.clone(),
-                    line: i + 1,
+                    line: j + 1,
                     msg: format!(
-                        "`{pat}` in the event-heap hot path — keep the \
-                         per-event cost allocation-free"
+                        "`fn {name}` calls `self.{name}(` — the hot paths \
+                         must be iterative, not recursive"
                     ),
                 });
             }
+            for c in code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'body;
+                        }
+                    }
+                    ';' if !opened => break 'body, // trait method decl
+                    _ => {}
+                }
+            }
+            j += 1;
         }
     }
 }
@@ -723,15 +788,30 @@ fn lint_experiment_numbering(ws: &Workspace, out: &mut Vec<Finding>) {
     }
 }
 
-/// `bench-baseline`: a tracked `BENCH_e6.json` must exist and its schema
-/// must match what the bench emitter actually writes (key sets extracted
-/// from `rust/benches/e6_decision_latency.rs`), so the in-repo perf
-/// trajectory cannot silently diverge from the tool that produces it.
+/// `bench-baseline`: each tracked perf baseline (`BENCH_e6.json`,
+/// `BENCH_engine.json`) must exist and its schema must match what its bench
+/// emitter actually writes (key sets extracted from the bench source), so
+/// the in-repo perf trajectory cannot silently diverge from the tool that
+/// produces it. A pair is skipped when its bench source is absent.
 fn lint_bench_baseline(ws: &Workspace, out: &mut Vec<Finding>) {
-    let Some((bench_rel, bench_src)) = ws
-        .benches
-        .iter()
-        .find(|(rel, _)| rel.ends_with("e6_decision_latency.rs"))
+    const PAIRS: [(&str, &str); 2] = [
+        ("e6_decision_latency.rs", "BENCH_e6.json"),
+        ("engine_events_per_sec.rs", "BENCH_engine.json"),
+    ];
+    for (bench_file, baseline_file) in PAIRS {
+        lint_bench_pair(ws, bench_file, baseline_file, out);
+    }
+}
+
+/// Check one `(bench source, committed baseline)` pair.
+fn lint_bench_pair(
+    ws: &Workspace,
+    bench_file: &str,
+    baseline_file: &str,
+    out: &mut Vec<Finding>,
+) {
+    let Some((bench_rel, bench_src)) =
+        ws.benches.iter().find(|(rel, _)| rel.ends_with(bench_file))
     else {
         return;
     };
@@ -759,14 +839,18 @@ fn lint_bench_baseline(ws: &Workspace, out: &mut Vec<Finding>) {
         return;
     }
 
-    let Some((rel, text)) = &ws.bench_baseline else {
+    let Some((rel, text)) =
+        ws.bench_baselines.iter().find(|(name, _)| name == baseline_file)
+    else {
+        let stem = bench_file.trim_end_matches(".rs");
         out.push(Finding {
             lint: "bench-baseline",
-            file: "BENCH_e6.json".into(),
+            file: baseline_file.into(),
             line: 0,
-            msg: "missing — run `BENCH_SMOKE=1 cargo bench --bench \
-                  e6_decision_latency` and commit the baseline"
-                .into(),
+            msg: format!(
+                "missing — run `BENCH_SMOKE=1 cargo bench --bench {stem}` \
+                 and commit the baseline"
+            ),
         });
         return;
     };
@@ -1071,6 +1155,55 @@ mod tests {
     }
 
     #[test]
+    fn engine_hot_loop_covers_calendar_and_arena() {
+        // the per-event hot path spans all three files, not just engine.rs
+        let root = scratch("hotloop_span");
+        put(&root, "rust/src/sim/calendar.rs", "pub fn f() -> String { format!(\"x\") }\n");
+        put(&root, "rust/src/sim/arena.rs", "use std::collections::BTreeMap;\n");
+        let f = run_lints(&root).unwrap();
+        let files: Vec<&str> = f
+            .iter()
+            .filter(|x| x.lint == "engine-hot-loop")
+            .map(|x| x.file.as_str())
+            .collect();
+        assert!(files.iter().any(|p| p.contains("calendar.rs")), "{f:?}");
+        assert!(files.iter().any(|p| p.contains("arena.rs")), "{f:?}");
+    }
+
+    #[test]
+    fn engine_hot_loop_fires_on_self_recursion() {
+        let root = scratch("hotloop_rec");
+        put(
+            &root,
+            "rust/src/sim/calendar.rs",
+            "pub struct Q { n: u64 }\n\
+             impl Q {\n\
+                 pub fn pop(&mut self) -> u64 {\n\
+                     if self.n > 0 { self.n -= 1; return self.pop(); }\n\
+                     0\n\
+                 }\n\
+             }\n",
+        );
+        let f = run_lints(&root).unwrap();
+        assert!(
+            f.iter().any(|x| x.lint == "engine-hot-loop" && x.msg.contains("recursive")),
+            "{f:?}"
+        );
+
+        // delegation to a field's same-named method is not recursion
+        let root2 = scratch("hotloop_deleg");
+        put(
+            &root2,
+            "rust/src/sim/calendar.rs",
+            "pub struct Q { inner: Inner }\n\
+             impl Q {\n\
+                 pub fn pop(&mut self) -> u64 { self.inner.pop() }\n\
+             }\n",
+        );
+        assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
     fn wallclock_fires_in_sim_dirs_only() {
         let root = scratch("wallclock");
         put(
@@ -1149,6 +1282,44 @@ mod tests {
             r#"{"bench": "e6", "results": {"fifo_q16": {"batched_ns": 10, "speedup": 2.0}}}"#,
         );
         assert!(run_lints(&root3).unwrap().is_empty());
+    }
+
+    const ENGINE_EMITTER: &str = r#"
+        doc.insert("bench".to_string(), x);
+        doc.insert("results".to_string(), x);
+        entry.insert("heap_ns".to_string(), x);
+        entry.insert("calendar_ns".to_string(), x);
+    "#;
+
+    #[test]
+    fn bench_baseline_checks_each_pair_independently() {
+        // the engine bench present without its baseline fires for
+        // BENCH_engine.json specifically
+        let root = scratch("bench_engine_missing");
+        put(&root, "rust/benches/engine_events_per_sec.rs", ENGINE_EMITTER);
+        let f = run_lints(&root).unwrap();
+        assert!(
+            f.iter().any(|x| {
+                x.lint == "bench-baseline" && x.file == "BENCH_engine.json"
+            }),
+            "{f:?}"
+        );
+
+        // both pairs present and matching is green
+        let root2 = scratch("bench_engine_ok");
+        put(&root2, "rust/benches/e6_decision_latency.rs", EMITTER);
+        put(
+            &root2,
+            "BENCH_e6.json",
+            r#"{"bench": "e6", "results": {"fifo_q16": {"batched_ns": 10, "speedup": 2.0}}}"#,
+        );
+        put(&root2, "rust/benches/engine_events_per_sec.rs", ENGINE_EMITTER);
+        put(
+            &root2,
+            "BENCH_engine.json",
+            r#"{"bench": "engine", "results": {"pending_1000": {"heap_ns": 95.0, "calendar_ns": 88.0}}}"#,
+        );
+        assert!(run_lints(&root2).unwrap().is_empty());
     }
 
     #[test]

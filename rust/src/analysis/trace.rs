@@ -3,9 +3,13 @@
 //!
 //! Format: one JSON object per line, `{"ev": "<tag>", ...fields}`. Feature
 //! vectors serialize as arrays of bin indices. The format is versioned by
-//! the header line `{"ev": "trace", "version": 1, "n_features": N}` so a
+//! the header line `{"ev": "trace", "version": 2, "n_features": N}` so a
 //! replay against a binary with a different feature width fails loudly
 //! instead of mis-auditing.
+//!
+//! Version 2: generational job ids — `"job"` carries the serial
+//! (submission number) and the `"slot"` field carries the arena slot, so
+//! replays reconstruct the exact handles of runs with slot reclamation on.
 
 use std::collections::BTreeMap;
 
@@ -20,7 +24,7 @@ use crate::scheduler::api::{FailReason, SchedEvent};
 
 use super::protocol::AuditEvent;
 
-pub const TRACE_VERSION: u64 = 1;
+pub const TRACE_VERSION: u64 = 2;
 
 fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -45,12 +49,15 @@ fn feats_json(f: &FeatureVec) -> Json {
     Json::Arr(f.iter().map(|b| num(*b as f64)).collect())
 }
 
+fn job_fields(j: JobId) -> [(&'static str, Json); 2] {
+    [("job", num(j.serial)), ("slot", num(j.slot))]
+}
+
 fn task_fields(t: TaskRef) -> Vec<(&'static str, Json)> {
-    vec![
-        ("job", num(t.job.0)),
-        ("kind", s(kind_str(t.kind))),
-        ("index", num(t.index)),
-    ]
+    let mut fields: Vec<(&'static str, Json)> = job_fields(t.job).into();
+    fields.push(("kind", s(kind_str(t.kind))));
+    fields.push(("index", num(t.index)));
+    fields
 }
 
 /// Serialize one audit event to a single-line JSON object.
@@ -63,7 +70,9 @@ pub fn event_to_json(ev: &AuditEvent) -> Json {
             ("reduces", num(reduces)),
         ]),
         AuditEvent::JobArrived { job } => {
-            obj(vec![("ev", s("job_arrived")), ("job", num(job.0))])
+            let mut fields = vec![("ev", s("job_arrived"))];
+            fields.extend(job_fields(job));
+            obj(fields)
         }
         AuditEvent::Launched { task, node, speculative, feats } => {
             let mut fields = vec![("ev", s("launched"))];
@@ -94,34 +103,39 @@ fn sched_to_json(ev: &SchedEvent) -> Json {
             ("feats", feats_json(&feats)),
             ("label", s(if label == Label::Good { "good" } else { "bad" })),
         ]),
-        SchedEvent::TaskStarted { job, node, kind } => obj(vec![
-            ("ev", s("task_started")),
-            ("job", num(job.0)),
-            ("node", num(node.0)),
-            ("kind", s(kind_str(kind))),
-        ]),
-        SchedEvent::TaskFinished { job, node, kind } => obj(vec![
-            ("ev", s("task_finished")),
-            ("job", num(job.0)),
-            ("node", num(node.0)),
-            ("kind", s(kind_str(kind))),
-        ]),
-        SchedEvent::TaskFailed { job, node, kind, attempt, reason } => obj(vec![
-            ("ev", s("task_failed")),
-            ("job", num(job.0)),
-            ("node", num(node.0)),
-            ("kind", s(kind_str(kind))),
-            ("attempt", num(attempt)),
-            (
+        SchedEvent::TaskStarted { job, node, kind } => {
+            let mut fields = vec![("ev", s("task_started"))];
+            fields.extend(job_fields(job));
+            fields.push(("node", num(node.0)));
+            fields.push(("kind", s(kind_str(kind))));
+            obj(fields)
+        }
+        SchedEvent::TaskFinished { job, node, kind } => {
+            let mut fields = vec![("ev", s("task_finished"))];
+            fields.extend(job_fields(job));
+            fields.push(("node", num(node.0)));
+            fields.push(("kind", s(kind_str(kind))));
+            obj(fields)
+        }
+        SchedEvent::TaskFailed { job, node, kind, attempt, reason } => {
+            let mut fields = vec![("ev", s("task_failed"))];
+            fields.extend(job_fields(job));
+            fields.push(("node", num(node.0)));
+            fields.push(("kind", s(kind_str(kind))));
+            fields.push(("attempt", num(attempt)));
+            fields.push((
                 "reason",
                 s(match reason {
                     FailReason::Oom => "oom",
                     FailReason::NodeLost => "node_lost",
                 }),
-            ),
-        ]),
+            ));
+            obj(fields)
+        }
         SchedEvent::JobCompleted { job } => {
-            obj(vec![("ev", s("job_completed")), ("job", num(job.0))])
+            let mut fields = vec![("ev", s("job_completed"))];
+            fields.extend(job_fields(job));
+            obj(fields)
         }
         SchedEvent::NodeFailed { node } => {
             obj(vec![("ev", s("node_failed")), ("node", num(node.0))])
@@ -164,12 +178,12 @@ fn get_kind(o: &BTreeMap<String, Json>) -> Result<TaskKind> {
     }
 }
 
+fn get_job(o: &BTreeMap<String, Json>) -> Result<JobId> {
+    Ok(JobId { slot: get_u32(o, "slot")?, serial: get_u32(o, "job")? })
+}
+
 fn get_task(o: &BTreeMap<String, Json>) -> Result<TaskRef> {
-    Ok(TaskRef {
-        job: JobId(get_u32(o, "job")?),
-        kind: get_kind(o)?,
-        index: get_u32(o, "index")?,
-    })
+    Ok(TaskRef { job: get_job(o)?, kind: get_kind(o)?, index: get_u32(o, "index")? })
 }
 
 fn get_feats(o: &BTreeMap<String, Json>) -> Result<FeatureVec> {
@@ -204,7 +218,7 @@ fn event_from_json(j: &Json) -> Result<AuditEvent> {
             maps: get_u32(o, "maps")?,
             reduces: get_u32(o, "reduces")?,
         },
-        "job_arrived" => AuditEvent::JobArrived { job: JobId(get_u32(o, "job")?) },
+        "job_arrived" => AuditEvent::JobArrived { job: get_job(o)? },
         "launched" => AuditEvent::Launched {
             task: get_task(o)?,
             node: NodeId(get_u32(o, "node")?),
@@ -230,17 +244,17 @@ fn event_from_json(j: &Json) -> Result<AuditEvent> {
             },
         }),
         "task_started" => AuditEvent::Sched(SchedEvent::TaskStarted {
-            job: JobId(get_u32(o, "job")?),
+            job: get_job(o)?,
             node: NodeId(get_u32(o, "node")?),
             kind: get_kind(o)?,
         }),
         "task_finished" => AuditEvent::Sched(SchedEvent::TaskFinished {
-            job: JobId(get_u32(o, "job")?),
+            job: get_job(o)?,
             node: NodeId(get_u32(o, "node")?),
             kind: get_kind(o)?,
         }),
         "task_failed" => AuditEvent::Sched(SchedEvent::TaskFailed {
-            job: JobId(get_u32(o, "job")?),
+            job: get_job(o)?,
             node: NodeId(get_u32(o, "node")?),
             kind: get_kind(o)?,
             attempt: get_u32(o, "attempt")?,
@@ -251,7 +265,7 @@ fn event_from_json(j: &Json) -> Result<AuditEvent> {
             },
         }),
         "job_completed" => {
-            AuditEvent::Sched(SchedEvent::JobCompleted { job: JobId(get_u32(o, "job")?) })
+            AuditEvent::Sched(SchedEvent::JobCompleted { job: get_job(o)? })
         }
         "node_failed" => {
             AuditEvent::Sched(SchedEvent::NodeFailed { node: NodeId(get_u32(o, "node")?) })
@@ -307,11 +321,13 @@ mod tests {
     use super::*;
 
     fn sample_stream() -> Vec<AuditEvent> {
-        let t = TaskRef { job: JobId(0), kind: TaskKind::Map, index: 3 };
+        // a recycled slot (slot != serial) must survive the round trip
+        let recycled = JobId { slot: 0, serial: 7 };
+        let t = TaskRef { job: recycled, kind: TaskKind::Map, index: 3 };
         vec![
             AuditEvent::NodeSpec { node: NodeId(0), maps: 2, reduces: 1 },
             AuditEvent::Sched(SchedEvent::ClusterInfo { total_slots: 3 }),
-            AuditEvent::JobArrived { job: JobId(0) },
+            AuditEvent::JobArrived { job: recycled },
             AuditEvent::Launched {
                 task: t,
                 node: NodeId(0),
@@ -319,7 +335,7 @@ mod tests {
                 feats: [1, 2, 3, 4, 5, 6, 7, 8, 9, 0],
             },
             AuditEvent::Sched(SchedEvent::TaskStarted {
-                job: JobId(0),
+                job: recycled,
                 node: NodeId(0),
                 kind: TaskKind::Map,
             }),
@@ -329,13 +345,13 @@ mod tests {
             }),
             AuditEvent::Ended { task: t, node: NodeId(0) },
             AuditEvent::Sched(SchedEvent::TaskFailed {
-                job: JobId(0),
+                job: recycled,
                 node: NodeId(0),
                 kind: TaskKind::Map,
                 attempt: 1,
                 reason: FailReason::Oom,
             }),
-            AuditEvent::Sched(SchedEvent::JobCompleted { job: JobId(0) }),
+            AuditEvent::Sched(SchedEvent::JobCompleted { job: recycled }),
             AuditEvent::Sched(SchedEvent::NodeFailed { node: NodeId(0) }),
             AuditEvent::Sched(SchedEvent::NodeRecovered { node: NodeId(0) }),
         ]
@@ -360,9 +376,16 @@ mod tests {
 
     #[test]
     fn wrong_feature_width_is_rejected() {
-        let text = "{\"ev\":\"trace\",\"version\":1,\"n_features\":8}\n";
+        let text = "{\"ev\":\"trace\",\"version\":2,\"n_features\":8}\n";
         let err = from_jsonl(text).unwrap_err().to_string();
         assert!(err.contains("features"), "{err}");
+    }
+
+    #[test]
+    fn old_trace_version_is_rejected() {
+        let text = "{\"ev\":\"trace\",\"version\":1,\"n_features\":10}\n";
+        let err = from_jsonl(text).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
     }
 
     #[test]

@@ -10,10 +10,9 @@
 //! a sample occupies one-hot slots `j*N_BINS .. (j+1)*N_BINS` of the
 //! flattened table.
 
-use std::collections::BTreeMap;
-
 use crate::cluster::node::NodeId;
 use crate::job::JobId;
+use crate::sim::arena::SlotMap;
 use crate::sim::engine::Time;
 
 use super::discretize::bin_fraction;
@@ -92,11 +91,15 @@ pub struct FailureFeats {
 /// feedback-time rows are built from the identical state.
 #[derive(Debug, Clone)]
 pub struct FailureHistory {
-    /// Failed attempts per job; entries are dropped when the job leaves
-    /// the system (bounded memory on long runs).
-    job_failures: BTreeMap<JobId, u32>,
-    /// Exponentially decayed kill score per node: `(score, last_update)`.
-    node_kills: BTreeMap<NodeId, (f64, Time)>,
+    /// Failed attempts per job, slot-indexed by the job's arena handle;
+    /// entries are dropped when the job leaves the system, and a recycled
+    /// slot's stale count is invisible to the new occupant's id (the
+    /// serial stamp mismatches), so memory stays O(live jobs).
+    job_failures: SlotMap<u32>,
+    /// Exponentially decayed kill score per node, dense by `NodeId`:
+    /// `(score, last_update)`. Nodes are never reclaimed, so a plain
+    /// vector indexed by node id is the right shape.
+    node_kills: Vec<Option<(f64, Time)>>,
     /// Half-life of the per-node kill score, seconds.
     half_life: f64,
 }
@@ -115,8 +118,8 @@ impl FailureHistory {
 
     pub fn new() -> FailureHistory {
         FailureHistory {
-            job_failures: BTreeMap::new(),
-            node_kills: BTreeMap::new(),
+            job_failures: SlotMap::new(),
+            node_kills: Vec::with_capacity(0),
             half_life: Self::DEFAULT_HALF_LIFE,
         }
     }
@@ -127,29 +130,36 @@ impl FailureHistory {
 
     /// One task attempt of `job` ended in failure on `node`.
     pub fn record_failure(&mut self, job: JobId, node: NodeId, now: Time) {
-        *self.job_failures.entry(job).or_insert(0) += 1;
+        *self.job_failures.get_or_insert_with(job, || 0) += 1;
         let score = self.node_score(node, now) + 1.0;
-        self.node_kills.insert(node, (score, now));
+        let i = node.0 as usize;
+        if i >= self.node_kills.len() {
+            self.node_kills.resize_with(i + 1, || None);
+        }
+        self.node_kills[i] = Some((score, now));
     }
 
     /// Drop a job's entry once it leaves the system (completed or killed).
     pub fn forget_job(&mut self, job: JobId) {
-        self.job_failures.remove(&job);
+        self.job_failures.remove(job);
     }
 
     /// Failed attempts recorded for `job` (0 if never seen).
     pub fn job_failures(&self, job: JobId) -> u32 {
-        *self.job_failures.get(&job).unwrap_or(&0)
+        match self.job_failures.get(job) {
+            Some(&n) => n,
+            None => 0,
+        }
     }
 
     /// Decayed kill score of `node` at virtual time `now`.
     pub fn node_score(&self, node: NodeId, now: Time) -> f64 {
-        match self.node_kills.get(&node) {
-            Some(&(score, last)) => {
+        match self.node_kills.get(node.0 as usize) {
+            Some(&Some((score, last))) => {
                 let dt = (now - last).max(0.0);
                 score * 0.5f64.powf(dt / self.half_life)
             }
-            None => 0.0,
+            _ => 0.0,
         }
     }
 
@@ -221,9 +231,9 @@ mod tests {
         };
         let mut hist = FailureHistory::new();
         for _ in 0..50 {
-            hist.record_failure(JobId(1), NodeId(0), 10.0);
+            hist.record_failure(JobId::dense(1), NodeId(0), 10.0);
         }
-        let fail = hist.feats_for(JobId(1), NodeId(0), 10.0);
+        let fail = hist.feats_for(JobId::dense(1), NodeId(0), 10.0);
         for b in feature_vec(&job, &node, fail) {
             assert!((b as usize) < N_BINS);
         }
@@ -234,8 +244,8 @@ mod tests {
     #[test]
     fn node_score_decays_with_half_life() {
         let mut hist = FailureHistory::with_half_life(100.0);
-        hist.record_failure(JobId(0), NodeId(3), 0.0);
-        hist.record_failure(JobId(0), NodeId(3), 0.0);
+        hist.record_failure(JobId::dense(0), NodeId(3), 0.0);
+        hist.record_failure(JobId::dense(0), NodeId(3), 0.0);
         assert!((hist.node_score(NodeId(3), 0.0) - 2.0).abs() < 1e-12);
         assert!((hist.node_score(NodeId(3), 100.0) - 1.0).abs() < 1e-12);
         assert!((hist.node_score(NodeId(3), 200.0) - 0.5).abs() < 1e-12);
@@ -247,20 +257,20 @@ mod tests {
     fn forget_job_bounds_memory() {
         let mut hist = FailureHistory::new();
         for i in 0..100 {
-            hist.record_failure(JobId(i), NodeId(0), 1.0);
+            hist.record_failure(JobId::dense(i), NodeId(0), 1.0);
         }
         assert_eq!(hist.tracked_jobs(), 100);
         for i in 0..100 {
-            hist.forget_job(JobId(i));
+            hist.forget_job(JobId::dense(i));
         }
         assert_eq!(hist.tracked_jobs(), 0);
-        assert_eq!(hist.job_failures(JobId(5)), 0);
+        assert_eq!(hist.job_failures(JobId::dense(5)), 0);
     }
 
     #[test]
     fn empty_history_yields_zero_bins() {
         let hist = FailureHistory::new();
-        let f = hist.feats_for(JobId(9), NodeId(9), 123.0);
+        let f = hist.feats_for(JobId::dense(9), NodeId(9), 123.0);
         assert_eq!(f, FailureFeats::default());
     }
 }

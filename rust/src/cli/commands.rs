@@ -299,7 +299,6 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
     rm.metrics.explain = args.flag("explain");
     rm.run();
     let m = &rm.metrics;
-    let lat = m.latencies();
     let mut t = Table::new(
         "yarn run",
         &["policy", "makespan_s", "mean_latency_s", "overload_rate", "oom"],
@@ -307,7 +306,7 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
     t.row(vec![
         policy.into(),
         fnum(m.makespan),
-        fnum(crate::metrics::stats::mean(&lat)),
+        fnum(m.mean_latency()),
         fnum(m.overload_rate()),
         format!("{}", m.oom_kills),
     ]);

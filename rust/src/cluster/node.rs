@@ -276,7 +276,7 @@ mod tests {
     use crate::job::JobId;
 
     fn tref(i: u32) -> TaskRef {
-        TaskRef { job: JobId(0), kind: TaskKind::Map, index: i }
+        TaskRef { job: JobId::dense(0), kind: TaskKind::Map, index: i }
     }
 
     fn node() -> Node {

@@ -15,7 +15,6 @@
 //! launches it like any attempt; the first copy to complete wins and the
 //! loser is cancelled through per-attempt event stamps.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::analysis::protocol::{AuditEvent, AuditSink};
@@ -83,6 +82,15 @@ pub struct TrackerConfig {
     pub max_task_attempts: u32,
     /// Hard stop for the virtual clock (safety net against livelock).
     pub max_sim_time: Time,
+    /// Max schedulable jobs exposed per heartbeat (`SchedView::queue` is
+    /// the first `queue_cap` jobs of the backlog, submission order). At
+    /// million-job scale this bounds one heartbeat's scoring work to
+    /// O(cap) instead of O(backlog); `usize::MAX` = the full queue.
+    pub queue_cap: usize,
+    /// Recycle a job's arena slot once it leaves the system fully drained
+    /// (keeps the job table O(active) on huge runs). Off by default:
+    /// tests and reports inspect completed jobs in place.
+    pub reclaim_jobs: bool,
 }
 
 impl Default for TrackerConfig {
@@ -95,6 +103,8 @@ impl Default for TrackerConfig {
             oom_kill_delay: 4.0,
             max_task_attempts: 4,
             max_sim_time: 1e7,
+            queue_cap: usize::MAX,
+            reclaim_jobs: false,
         }
     }
 }
@@ -112,21 +122,29 @@ pub struct JobTracker {
     /// (the tracker observes every attempt end) and shared with the
     /// scheduler through `SchedView::failures`.
     pub failures: FailureHistory,
-    /// Workload sorted by submit time, drained into arrival events.
-    pending_specs: std::vec::IntoIter<JobSpec>,
+    /// Workload in submit-time order, drained into arrival events. A boxed
+    /// iterator so million-job runs can stream specs into existence
+    /// instead of materializing them all up front
+    /// ([`JobTracker::new_streaming`]).
+    pending_specs: Box<dyn Iterator<Item = JobSpec>>,
     /// The spec whose arrival event is in flight (submitted when it fires,
     /// so jobs are never schedulable before their submit time).
     next_spec: Option<JobSpec>,
     /// Per-node placements since that node's last heartbeat.
     pending_feedback: Vec<Vec<PendingFeedback>>,
-    /// Attempts doomed to OOM, keyed by (node, task) since a speculative
-    /// pair can doom independently: excluded from completion rescheduling
-    /// so their pending TaskFail event stays valid.
-    doomed: std::collections::HashSet<(NodeId, TaskRef)>,
-    /// Launch-time feature rows of in-flight attempts, so an OOM kill can
-    /// feed back a `Bad` sample for the exact row the decision was scored
-    /// on.
-    inflight_feats: HashMap<(NodeId, TaskRef), crate::bayes::features::FeatureVec>,
+    /// Attempts doomed to OOM, per node (a speculative pair can doom
+    /// independently): excluded from completion rescheduling so their
+    /// pending TaskFail event stays valid. A node runs a handful of tasks,
+    /// so the inner vectors are scanned linearly — allocation-free and
+    /// faster than hashing at this size.
+    doomed: Vec<Vec<TaskRef>>,
+    /// Launch-time feature rows of in-flight attempts, per node, so an OOM
+    /// kill can feed back a `Bad` sample for the exact row the decision
+    /// was scored on.
+    inflight_feats: Vec<Vec<(TaskRef, crate::bayes::features::FeatureVec)>>,
+    /// Scratch buffer for the per-heartbeat queue view (reused across
+    /// heartbeats; capped at `cfg.queue_cap`).
+    queue_scratch: Vec<JobId>,
     /// Failure-injection RNG (own stream: does not perturb workloads).
     fail_rng: crate::sim::rng::Pcg,
     arrivals_done: bool,
@@ -147,12 +165,30 @@ impl JobTracker {
         cfg: TrackerConfig,
     ) -> JobTracker {
         specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
+        JobTracker::new_streaming(cluster, scheduler, Box::new(specs.into_iter()), seed, cfg)
+    }
+
+    /// Build a tracker over a streaming workload: `specs` is pulled one
+    /// job ahead of the virtual clock, so a million-job run never holds
+    /// more than one unsubmitted spec in memory. The iterator MUST yield
+    /// specs in nondecreasing `submit_time` order (workload generators
+    /// produce cumulative arrival times, so their streams qualify; an
+    /// out-of-order spec would have its arrival clamped to `now` and
+    /// counted in `engine.clamped_events()`).
+    pub fn new_streaming(
+        cluster: Cluster,
+        scheduler: Box<dyn Scheduler>,
+        specs: Box<dyn Iterator<Item = JobSpec>>,
+        seed: u64,
+        cfg: TrackerConfig,
+    ) -> JobTracker {
         let n_nodes = cluster.len();
         let hdfs = Namespace::new(
             cluster.topology.n_nodes,
             cluster.topology.n_racks,
             seed,
         );
+        let reclaim = cfg.reclaim_jobs;
         let mut jt = JobTracker {
             engine: Engine::new(),
             cluster,
@@ -162,15 +198,17 @@ impl JobTracker {
             metrics: Metrics::new(),
             cfg,
             failures: FailureHistory::new(),
-            pending_specs: specs.into_iter(),
+            pending_specs: specs,
             next_spec: None,
             pending_feedback: vec![Vec::new(); n_nodes],
-            doomed: std::collections::HashSet::new(),
-            inflight_feats: HashMap::new(),
+            doomed: vec![Vec::new(); n_nodes],
+            inflight_feats: vec![Vec::new(); n_nodes],
+            queue_scratch: Vec::new(),
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA11),
             arrivals_done: false,
             audit: AuditSink::default_for_build(),
         };
+        jt.jobs.set_reclaim(reclaim);
         jt.emit_preamble();
         // prime: first arrival + first heartbeat per node (+ failures)
         jt.schedule_next_arrival();
@@ -297,6 +335,37 @@ impl JobTracker {
 
     // --------------------------------------------------------- attempts --
 
+    fn doom_insert(&mut self, node: NodeId, tref: TaskRef) {
+        self.doomed[node.0 as usize].push(tref);
+    }
+
+    fn doom_remove(&mut self, node: NodeId, tref: &TaskRef) {
+        self.doomed[node.0 as usize].retain(|t| t != tref);
+    }
+
+    fn doom_contains(&self, node: NodeId, tref: &TaskRef) -> bool {
+        self.doomed[node.0 as usize].contains(tref)
+    }
+
+    fn feats_insert(
+        &mut self,
+        node: NodeId,
+        tref: TaskRef,
+        feats: crate::bayes::features::FeatureVec,
+    ) {
+        self.inflight_feats[node.0 as usize].push((tref, feats));
+    }
+
+    fn feats_remove(
+        &mut self,
+        node: NodeId,
+        tref: &TaskRef,
+    ) -> Option<crate::bayes::features::FeatureVec> {
+        let v = &mut self.inflight_feats[node.0 as usize];
+        let i = v.iter().position(|(t, _)| t == tref)?;
+        Some(v.swap_remove(i).1)
+    }
+
     /// Resolve which live attempt of `tref` an event with `(node,
     /// generation)` refers to; `None` = the event is stale.
     fn current_attempt(
@@ -305,7 +374,8 @@ impl JobTracker {
         node: NodeId,
         generation: u32,
     ) -> Option<Attempt> {
-        let task = self.jobs.get(tref.job).task(tref);
+        // a released (reclaimed) job makes every in-flight event stale
+        let task = self.jobs.try_get(tref.job)?.task(tref);
         if let TaskState::Running { node: n, .. } = task.state {
             if n == node && task.generation == generation {
                 return Some(Attempt::Primary);
@@ -325,8 +395,8 @@ impl JobTracker {
     fn cancel_attempt_on(&mut self, node_id: NodeId, tref: TaskRef, now: Time) {
         self.cluster.node_mut(node_id).advance(now);
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
-        self.doomed.remove(&(node_id, tref));
-        self.inflight_feats.remove(&(node_id, tref));
+        self.doom_remove(node_id, &tref);
+        self.feats_remove(node_id, &tref);
         self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
         self.emit(SchedEvent::TaskFinished {
             job: tref.job,
@@ -341,10 +411,12 @@ impl JobTracker {
     /// failure history. Every attempt-end path funnels through this, so
     /// the notification fires exactly once, after the true last attempt.
     fn notify_if_drained(&mut self, id: JobId) {
-        let job = self.jobs.get(id);
+        let Some(job) = self.jobs.try_get(id) else { return };
         if job.finish_time.is_some() && job.fully_drained() {
             self.emit(SchedEvent::JobCompleted { job: id });
             self.failures.forget_job(id);
+            // recycle the arena slot (no-op unless cfg.reclaim_jobs)
+            self.jobs.release(id);
         }
     }
 
@@ -361,8 +433,8 @@ impl JobTracker {
         let lost = self.cluster.node_mut(node_id).fail(now);
         for rec in lost {
             let tref = rec.task;
-            self.doomed.remove(&(node_id, tref));
-            self.inflight_feats.remove(&(node_id, tref));
+            self.doom_remove(node_id, &tref);
+            self.feats_remove(node_id, &tref);
             self.failures.record_failure(tref.job, node_id, now);
             self.metrics.task_failures += 1;
             let task = self.jobs.get(tref.job).task(&tref);
@@ -426,7 +498,7 @@ impl JobTracker {
             time: now,
             mean_bottleneck_util: if alive > 0 { util / alive as f64 } else { 0.0 },
             running_tasks: running as u32,
-            queued_jobs: self.jobs.schedulable().len() as u32,
+            queued_jobs: self.jobs.ready_count() as u32,
             alive_nodes: alive as u32,
         });
         if !self.arrivals_done || !self.jobs.all_complete() {
@@ -469,7 +541,10 @@ impl JobTracker {
                 reduces: node.free_slots(TaskKind::Reduce),
             }
         };
-        let queue = self.jobs.schedulable();
+        // reuse the scratch buffer for the (possibly capped) queue view —
+        // no per-heartbeat allocation once the buffer is warm
+        let mut queue = std::mem::take(&mut self.queue_scratch);
+        self.jobs.schedulable_prefix(self.cfg.queue_cap, &mut queue);
         if budget.total() > 0 {
             // snapshot the features the whole batch was scored against, so
             // each placement's feedback sample matches its decision input
@@ -517,6 +592,7 @@ impl JobTracker {
             // metrics count what actually launched, not what was proposed
             self.metrics.record_assign(assign_nanos, launched);
         }
+        self.queue_scratch = queue;
 
         // 3. next beat — only while there is (or may be) work
         if !self.arrivals_done || !self.jobs.all_complete() {
@@ -590,7 +666,7 @@ impl JobTracker {
             fail,
         );
         self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
-        self.inflight_feats.insert((node_id, task_ref), feats);
+        self.feats_insert(node_id, task_ref, feats);
 
         // OOM cliff check *before* mutating the node
         let dooms = self.cluster.node(node_id).would_oom(&demand);
@@ -626,7 +702,7 @@ impl JobTracker {
             .add_task(task_ref, demand, work, now);
         if dooms {
             self.cluster.node_mut(node_id).oom_kills += 1;
-            self.doomed.insert((node_id, task_ref));
+            self.doom_insert(node_id, task_ref);
             self.engine.schedule(
                 now + self.cfg.oom_kill_delay,
                 Event::TaskFail { node: node_id, task: task_ref, generation },
@@ -641,7 +717,7 @@ impl JobTracker {
     /// are skipped so their pending TaskFail stays valid.
     fn reschedule(&mut self, node_id: NodeId, horizons: Vec<(TaskRef, Time)>) {
         for (tref, at) in horizons {
-            if self.doomed.contains(&(node_id, tref)) {
+            if self.doom_contains(node_id, &tref) {
                 continue;
             }
             let task = self.jobs.get_mut(tref.job).task_mut(&tref);
@@ -672,8 +748,8 @@ impl JobTracker {
         let now = self.engine.now();
         self.cluster.node_mut(node_id).advance(now);
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
-        self.doomed.remove(&(node_id, tref));
-        self.inflight_feats.remove(&(node_id, tref));
+        self.doom_remove(node_id, &tref);
+        self.feats_remove(node_id, &tref);
         // first copy to finish wins; cancel the losing copy, if any
         match which {
             Attempt::Primary => {
@@ -708,7 +784,7 @@ impl JobTracker {
             // Some by construction: mark_complete just set finish_time
             // lint: allow(unwrap-in-lib)
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
-            self.metrics.record_outcome(tref.job, outcome);
+            self.metrics.record_outcome(outcome);
         }
         // covers both fresh completions and killed jobs draining their
         // last attempt
@@ -723,14 +799,14 @@ impl JobTracker {
         let now = self.engine.now();
         self.cluster.node_mut(node_id).advance(now);
         let (_rec, horizons) = self.cluster.node_mut(node_id).remove_task(&tref, now);
-        self.doomed.remove(&(node_id, tref));
+        self.doom_remove(node_id, &tref);
         self.failures.record_failure(tref.job, node_id, now);
         self.metrics.task_failures += 1;
         self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
         // the OOM-killed placement feeds back a Bad sample for the exact
         // feature row it was scored on — this is what gives the
         // failure-history bins their likelihood mass
-        if let Some(feats) = self.inflight_feats.remove(&(node_id, tref)) {
+        if let Some(feats) = self.feats_remove(node_id, &tref) {
             self.emit(SchedEvent::Feedback { feats, label: Label::Bad });
             self.metrics.record_feedback(Label::Bad);
         }
@@ -808,7 +884,7 @@ mod tests {
     fn all_jobs_complete() {
         let jt = small_run(1);
         assert!(jt.jobs.all_complete());
-        assert_eq!(jt.metrics.outcomes.len(), 10);
+        assert_eq!(jt.metrics.completed_jobs(), 10);
         assert!(jt.metrics.makespan > 0.0);
     }
 

@@ -236,7 +236,7 @@ mod tests {
 
     fn job(n_maps: usize, n_reduces: usize) -> Job {
         let blocks = (0..n_maps as u64).map(BlockId).collect();
-        Job::new(JobId(0), test_spec("j", n_maps, n_reduces), blocks)
+        Job::new(JobId::dense(0), test_spec("j", n_maps, n_reduces), blocks)
     }
 
     #[test]
@@ -296,6 +296,6 @@ mod tests {
     #[test]
     #[should_panic]
     fn mismatched_blocks_panic() {
-        let _ = Job::new(JobId(0), test_spec("j", 3, 0), vec![BlockId(0)]);
+        let _ = Job::new(JobId::dense(0), test_spec("j", 3, 0), vec![BlockId(0)]);
     }
 }

@@ -13,12 +13,57 @@ pub use profile::{demand_from_profile, JobClass};
 pub use queue::JobTable;
 pub use task::{SpecAttempt, Task, TaskKind, TaskRef, TaskState};
 
-/// Job identifier, dense from 0 in submission order.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct JobId(pub u32);
+/// Job identifier: a generational arena handle (see `sim::arena`).
+///
+/// * `slot` — dense index into the job table's arena. Recycled once the
+///   job leaves the system fully drained, so storage stays O(live jobs).
+/// * `serial` — globally monotone submission counter, never reused. It is
+///   the generation stamp that makes stale handles detectable, the
+///   submission-order sort key, and the number shown in displays/traces.
+///
+/// Two ids are equal only if both fields match; ordering is by `serial`
+/// (then `slot`, unreachable for distinct ids in practice), so ordered
+/// sets iterate in submission order exactly as before the arena rewrite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobId {
+    pub slot: u32,
+    pub serial: u32,
+}
+
+impl JobId {
+    /// Id with `slot == serial == n` — exactly what a fresh job table
+    /// with no recycling assigns to the n-th submitted job. Test fixture
+    /// shorthand.
+    pub const fn dense(n: u32) -> JobId {
+        JobId { slot: n, serial: n }
+    }
+}
+
+impl Ord for JobId {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.serial
+            .cmp(&other.serial)
+            .then_with(|| self.slot.cmp(&other.slot))
+    }
+}
+
+impl PartialOrd for JobId {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl crate::sim::arena::SlotKey for JobId {
+    fn slot_index(self) -> u32 {
+        self.slot
+    }
+    fn serial_stamp(self) -> u32 {
+        self.serial
+    }
+}
 
 impl std::fmt::Display for JobId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "job_{:04}", self.0)
+        write!(f, "job_{:04}", self.serial)
     }
 }

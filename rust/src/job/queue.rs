@@ -1,10 +1,11 @@
-//! The JobTracker's job table: all jobs by id, plus the queue view
-//! schedulers iterate over (jobs with schedulable tasks, in submission
-//! order — the paper's single "job queue").
+//! The JobTracker's job table: all live jobs in a generational arena,
+//! plus the queue view schedulers iterate over (jobs with schedulable
+//! tasks, in submission order — the paper's single "job queue").
 
 use std::collections::BTreeSet;
 
 use crate::hdfs::Namespace;
+use crate::sim::arena::Arena;
 use crate::sim::engine::Time;
 
 use crate::cluster::node::NodeId;
@@ -13,20 +14,31 @@ use crate::job::task::TaskRef;
 use super::job::{Job, JobSpec};
 use super::JobId;
 
-/// Owns every job in the simulation.
+/// Owns every live job in the simulation.
 ///
-/// Jobs live in a dense `Vec` indexed by id (ids are sequential), and the
-/// schedulable-queue view is maintained **incrementally** by the task
+/// Jobs live in a dense [`Arena`] indexed by `JobId::slot` and stamped
+/// with `JobId::serial` (see `sim::arena` for the aliasing guarantees);
+/// the schedulable-queue view is maintained **incrementally** by the task
 /// transition wrappers — both were coordinator hotspots when recomputed
 /// per heartbeat (perf §Perf).
+///
+/// With [`JobTable::set_reclaim`] enabled, [`JobTable::release`] frees a
+/// drained job's slot for recycling so multi-million-job runs keep the
+/// table at O(peak live jobs). Reclamation is off by default because
+/// tests and post-run reports inspect completed jobs in place.
 #[derive(Debug, Default)]
 pub struct JobTable {
-    jobs: Vec<Job>,
+    jobs: Arena<Job>,
+    /// Monotone submission counter; doubles as the id generation stamp.
+    next_serial: u32,
     /// Incomplete jobs.
     active: BTreeSet<JobId>,
     /// Incomplete jobs with at least one schedulable task right now.
     ready: BTreeSet<JobId>,
-    completed: Vec<JobId>,
+    completed: u64,
+    failed: u64,
+    peak_active: usize,
+    reclaim: bool,
 }
 
 impl JobTable {
@@ -34,42 +46,82 @@ impl JobTable {
         JobTable::default()
     }
 
+    /// Enable slot reclamation: [`JobTable::release`] will free drained
+    /// jobs' arena slots for reuse (O(active) storage on long runs).
+    pub fn set_reclaim(&mut self, on: bool) {
+        self.reclaim = on;
+    }
+
     /// Submit a job: allocates its input blocks in HDFS (3-replica,
     /// rack-aware) and instantiates the task vectors.
     pub fn submit(&mut self, spec: JobSpec, hdfs: &mut Namespace) -> JobId {
-        let id = JobId(self.jobs.len() as u32);
+        let id = JobId { slot: self.jobs.next_slot(), serial: self.next_serial };
+        self.next_serial += 1;
         let blocks = hdfs.allocate_blocks(spec.map_works.len());
-        self.jobs.push(Job::new(id, spec, blocks));
+        let slot = self.jobs.insert(id.serial, Job::new(id, spec, blocks));
+        debug_assert_eq!(slot, id.slot);
         self.active.insert(id);
+        self.peak_active = self.peak_active.max(self.active.len());
         self.sync_ready(id);
         id
     }
 
+    /// Panicking lookup — stale ids in a driver's main path are a bug.
+    /// Event handlers racing a reclaimed job use [`JobTable::try_get`].
     pub fn get(&self, id: JobId) -> &Job {
-        &self.jobs[id.0 as usize]
+        match self.jobs.get(id) {
+            Some(j) => j,
+            None => panic!("stale or unknown {id}"),
+        }
     }
 
     pub fn get_mut(&mut self, id: JobId) -> &mut Job {
-        &mut self.jobs[id.0 as usize]
+        match self.jobs.get_mut(id) {
+            Some(j) => j,
+            None => panic!("stale or unknown {id}"),
+        }
     }
 
+    /// Stale-tolerant lookup: `None` once the job's slot was released
+    /// (e.g. a completion event arriving after the job left the system).
+    pub fn try_get(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(id)
+    }
+
+    /// Total jobs ever submitted.
     pub fn len(&self) -> usize {
-        self.jobs.len()
+        self.next_serial as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.jobs.is_empty()
+        self.next_serial == 0
     }
 
-    /// All jobs, submission order.
+    /// Jobs currently resident in the arena (= all submitted jobs unless
+    /// reclamation is on, then live jobs only).
+    pub fn resident(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// High-water mark of simultaneously incomplete jobs — the bound that
+    /// matters for O(active) memory claims.
+    pub fn peak_active(&self) -> usize {
+        self.peak_active
+    }
+
+    /// Resident jobs in slot order (equals submission order while no slot
+    /// has been recycled).
     pub fn iter(&self) -> impl Iterator<Item = &Job> {
-        self.jobs.iter()
+        self.jobs.iter().map(|(_, _, job)| job)
     }
 
     /// Re-derive one job's membership in the ready set.
     fn sync_ready(&mut self, id: JobId) {
-        let job = &self.jobs[id.0 as usize];
-        if job.finish_time.is_none() && job.has_schedulable_task() {
+        let is_ready = match self.jobs.get(id) {
+            Some(job) => job.finish_time.is_none() && job.has_schedulable_task(),
+            None => false,
+        };
+        if is_ready {
             self.ready.insert(id);
         } else {
             self.ready.remove(&id);
@@ -108,9 +160,23 @@ impl JobTable {
         self.ready.iter().copied().collect()
     }
 
+    /// Bounded queue view reusing the caller's buffer: the first `cap`
+    /// schedulable jobs in submission order. At million-job scale the
+    /// drivers cap the per-heartbeat view (`TrackerConfig::queue_cap`) so
+    /// one heartbeat's scoring work is O(cap), not O(backlog).
+    pub fn schedulable_prefix(&self, cap: usize, out: &mut Vec<JobId>) {
+        out.clear();
+        out.extend(self.ready.iter().take(cap).copied());
+    }
+
     /// Incomplete job count (queued or running).
     pub fn active_count(&self) -> usize {
         self.active.len()
+    }
+
+    /// Schedulable job count (the queue view's length), allocation-free.
+    pub fn ready_count(&self) -> usize {
+        self.ready.len()
     }
 
     /// Incomplete jobs (queued or running), submission order. The straggler
@@ -125,7 +191,7 @@ impl JobTable {
         let job = self.get_mut(id);
         debug_assert!(job.is_complete() && job.finish_time.is_none());
         job.finish_time = Some(now);
-        self.completed.push(id);
+        self.completed += 1;
         self.active.remove(&id);
         self.ready.remove(&id);
     }
@@ -137,16 +203,27 @@ impl JobTable {
         debug_assert!(job.finish_time.is_none());
         job.finish_time = Some(now);
         job.failed = true;
+        self.failed += 1;
         self.active.remove(&id);
         self.ready.remove(&id);
     }
 
-    pub fn completed_ids(&self) -> &[JobId] {
-        &self.completed
+    /// The job left the system fully drained (drivers call this right
+    /// after emitting `JobCompleted`): recycle its slot if reclamation is
+    /// on. Stale/double releases are no-ops.
+    pub fn release(&mut self, id: JobId) {
+        if self.reclaim {
+            debug_assert!(!self.active.contains(&id) && !self.ready.contains(&id));
+            self.jobs.remove(id);
+        }
+    }
+
+    pub fn completed_count(&self) -> u64 {
+        self.completed
     }
 
     pub fn failed_count(&self) -> usize {
-        self.jobs.iter().filter(|j| j.failed).count()
+        self.failed as usize
     }
 
     pub fn all_complete(&self) -> bool {
@@ -169,8 +246,8 @@ mod tests {
         let mut h = ns();
         let a = t.submit(test_spec("a", 2, 1), &mut h);
         let b = t.submit(test_spec("b", 2, 1), &mut h);
-        assert_eq!(a, JobId(0));
-        assert_eq!(b, JobId(1));
+        assert_eq!(a, JobId::dense(0));
+        assert_eq!(b, JobId::dense(1));
         assert_eq!(t.len(), 2);
     }
 
@@ -183,8 +260,11 @@ mod tests {
         }
         assert_eq!(
             t.schedulable(),
-            (0..5).map(JobId).collect::<Vec<_>>()
+            (0..5).map(JobId::dense).collect::<Vec<_>>()
         );
+        let mut prefix = Vec::new();
+        t.schedulable_prefix(3, &mut prefix);
+        assert_eq!(prefix, (0..3).map(JobId::dense).collect::<Vec<_>>());
     }
 
     #[test]
@@ -202,7 +282,7 @@ mod tests {
         t.mark_complete(id, 1.0);
         assert!(t.schedulable().is_empty());
         assert!(t.all_complete());
-        assert_eq!(t.completed_ids(), &[id]);
+        assert_eq!(t.completed_count(), 1);
         assert_eq!(t.active_count(), 0);
     }
 
@@ -214,5 +294,53 @@ mod tests {
         let j = t.get(id);
         assert_eq!(j.maps.len(), 7);
         assert!(j.maps.iter().all(|m| m.block.is_some()));
+    }
+
+    #[test]
+    fn release_recycles_slots_without_id_reuse() {
+        let mut t = JobTable::new();
+        let mut h = ns();
+        t.set_reclaim(true);
+        let a = t.submit(test_spec("a", 1, 0), &mut h);
+        {
+            use crate::cluster::node::NodeId;
+            let j = t.get_mut(a);
+            j.maps[0].start(NodeId(0), 0.0);
+            j.maps[0].complete(1.0);
+            j.maps_done = 1;
+        }
+        t.mark_complete(a, 1.0);
+        t.release(a);
+        assert_eq!(t.resident(), 0);
+        assert!(t.try_get(a).is_none(), "released id must be stale");
+        // next submission recycles the slot under a fresh serial
+        let b = t.submit(test_spec("b", 1, 0), &mut h);
+        assert_eq!(b.slot, a.slot);
+        assert_ne!(b.serial, a.serial);
+        assert!(t.try_get(a).is_none(), "old id must not alias new job");
+        assert_eq!(t.get(b).spec.name, "b");
+        assert_eq!(t.len(), 2, "len counts submissions, not residents");
+        // double release is inert
+        t.release(a);
+        assert_eq!(t.resident(), 1);
+    }
+
+    #[test]
+    fn peak_active_tracks_high_water_mark() {
+        let mut t = JobTable::new();
+        let mut h = ns();
+        let a = t.submit(test_spec("a", 1, 0), &mut h);
+        let _b = t.submit(test_spec("b", 1, 0), &mut h);
+        {
+            use crate::cluster::node::NodeId;
+            let j = t.get_mut(a);
+            j.maps[0].start(NodeId(0), 0.0);
+            j.maps[0].complete(1.0);
+            j.maps_done = 1;
+        }
+        t.mark_complete(a, 1.0);
+        t.submit(test_spec("c", 1, 0), &mut h);
+        assert_eq!(t.active_count(), 2);
+        assert_eq!(t.peak_active(), 2);
     }
 }

@@ -227,7 +227,7 @@ mod tests {
 
     #[test]
     fn display_formats() {
-        let r = TaskRef { job: JobId(7), kind: TaskKind::Map, index: 3 };
+        let r = TaskRef { job: JobId::dense(7), kind: TaskKind::Map, index: 3 };
         assert_eq!(r.to_string(), "job_0007_m00003");
     }
 

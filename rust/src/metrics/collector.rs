@@ -7,9 +7,17 @@ use crate::bayes::classifier::Label;
 use crate::cluster::node::NodeId;
 use crate::hdfs::Locality;
 use crate::job::task::TaskRef;
-use crate::job::{JobId, JobOutcome};
+use crate::job::JobOutcome;
 use crate::scheduler::api::Decision;
 use crate::sim::engine::Time;
+use crate::sim::rng::Pcg;
+
+/// Bound on the per-run outcome reservoir: latency/wait *distributions*
+/// (percentiles) are estimated from at most this many jobs, while the
+/// means and counts stay exact via streaming sums. Keeps metrics memory
+/// O(1) in completed jobs — a million-job run must not retain a million
+/// outcomes.
+pub const SAMPLE_CAP: usize = 4096;
 
 /// One `--explain` trace entry: what was launched, where, and why.
 #[derive(Debug, Clone, Copy)]
@@ -39,10 +47,27 @@ pub struct FeedbackWindow {
 }
 
 /// Collected over one simulation run.
+///
+/// Job outcomes are folded in **streaming**: exact counters and sums plus
+/// a fixed-size reservoir sample (Algorithm R, deterministic seed) for
+/// the distribution views. Nothing here grows with completed-job count.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    /// Completed-job outcomes keyed by job.
-    pub outcomes: BTreeMap<JobId, JobOutcome>,
+    /// Completed jobs (exact).
+    completed: u64,
+    /// Sum of job latencies (submit -> finish), exact.
+    latency_sum: f64,
+    /// Sum of queue waits (submit -> first launch) and its sample count.
+    wait_sum: f64,
+    wait_n: u64,
+    /// Total wasted task attempts (failure re-runs), exact.
+    wasted: u64,
+    /// Uniform reservoir of (latency, wait) pairs; wait is None for jobs
+    /// whose outcome never recorded a first launch.
+    sample: Vec<(f64, Option<f64>)>,
+    /// Reservoir RNG (fixed seed: replacement choices are part of the
+    /// determinism contract). Lazy so `Default` stays derivable.
+    sample_rng: Option<Pcg>,
     /// Map-task locality decisions.
     pub locality: BTreeMap<&'static str, u64>,
     /// Total feedback labels seen (good, bad).
@@ -89,9 +114,33 @@ impl Metrics {
         Metrics { window_allocs: 100, ..Default::default() }
     }
 
-    pub fn record_outcome(&mut self, id: JobId, o: JobOutcome) {
+    /// Fold one completed job's outcome into the streaming accumulators.
+    pub fn record_outcome(&mut self, o: JobOutcome) {
         self.makespan = self.makespan.max(o.finish_time);
-        self.outcomes.insert(id, o);
+        let latency = o.finish_time - o.submit_time;
+        let wait = o.first_launch.map(|f| f - o.submit_time);
+        self.completed += 1;
+        self.latency_sum += latency;
+        if let Some(w) = wait {
+            self.wait_sum += w;
+            self.wait_n += 1;
+        }
+        self.wasted += o.wasted_attempts as u64;
+        // Algorithm R: the first SAMPLE_CAP outcomes land in submission
+        // order (so small runs see every job, in order); after that each
+        // new outcome replaces a uniformly random slot with probability
+        // cap/completed.
+        if self.sample.len() < SAMPLE_CAP {
+            self.sample.push((latency, wait));
+        } else {
+            let rng = self
+                .sample_rng
+                .get_or_insert_with(|| Pcg::new(0x5EED_CA55, 0xA11));
+            let j = rng.below(self.completed) as usize;
+            if j < SAMPLE_CAP {
+                self.sample[j] = (latency, wait);
+            }
+        }
     }
 
     pub fn record_locality(&mut self, l: Locality) {
@@ -133,20 +182,38 @@ impl Metrics {
         }
     }
 
-    /// Job latency (submit -> finish) samples.
-    pub fn latencies(&self) -> Vec<f64> {
-        self.outcomes
-            .values()
-            .map(|o| o.finish_time - o.submit_time)
-            .collect()
+    /// Completed-job count (exact).
+    pub fn completed_jobs(&self) -> usize {
+        self.completed as usize
     }
 
-    /// Queue-wait (submit -> first task launch) samples.
+    /// Job latency (submit -> finish) samples — the full population up to
+    /// [`SAMPLE_CAP`] jobs, a uniform reservoir beyond that.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.sample.iter().map(|&(l, _)| l).collect()
+    }
+
+    /// Queue-wait (submit -> first task launch) samples (same reservoir).
     pub fn waits(&self) -> Vec<f64> {
-        self.outcomes
-            .values()
-            .filter_map(|o| o.first_launch.map(|f| f - o.submit_time))
-            .collect()
+        self.sample.iter().filter_map(|&(_, w)| w).collect()
+    }
+
+    /// Mean job latency over **all** completed jobs (exact, streaming).
+    pub fn mean_latency(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.completed as f64
+        }
+    }
+
+    /// Mean queue wait over all jobs that launched (exact, streaming).
+    pub fn mean_wait(&self) -> f64 {
+        if self.wait_n == 0 {
+            0.0
+        } else {
+            self.wait_sum / self.wait_n as f64
+        }
     }
 
     /// Jobs per second of virtual time.
@@ -154,7 +221,7 @@ impl Metrics {
         if self.makespan <= 0.0 {
             0.0
         } else {
-            self.outcomes.len() as f64 / self.makespan
+            self.completed as f64 / self.makespan
         }
     }
 
@@ -197,9 +264,9 @@ impl Metrics {
         }
     }
 
-    /// Wasted task attempts across all jobs (failure re-runs).
+    /// Wasted task attempts across all jobs (failure re-runs, exact).
     pub fn wasted_attempts(&self) -> u64 {
-        self.outcomes.values().map(|o| o.wasted_attempts as u64).sum()
+        self.wasted
     }
 }
 
@@ -219,13 +286,44 @@ mod tests {
     #[test]
     fn makespan_tracks_max_finish() {
         let mut m = Metrics::new();
-        m.record_outcome(JobId(0), outcome(0.0, 50.0));
-        m.record_outcome(JobId(1), outcome(10.0, 30.0));
+        m.record_outcome(outcome(0.0, 50.0));
+        m.record_outcome(outcome(10.0, 30.0));
         assert_eq!(m.makespan, 50.0);
+        assert_eq!(m.completed_jobs(), 2);
         assert_eq!(m.latencies(), vec![50.0, 20.0]);
         assert_eq!(m.waits(), vec![1.0, 1.0]);
+        assert_eq!(m.mean_latency(), 35.0);
+        assert_eq!(m.mean_wait(), 1.0);
         assert_eq!(m.throughput(), 2.0 / 50.0);
         assert_eq!(m.wasted_attempts(), 4);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_but_counts_stay_exact() {
+        let mut m = Metrics::new();
+        let n = SAMPLE_CAP + 1000;
+        for i in 0..n {
+            m.record_outcome(outcome(i as f64, i as f64 + 7.0));
+        }
+        assert_eq!(m.completed_jobs(), n);
+        assert_eq!(m.latencies().len(), SAMPLE_CAP);
+        assert!(m.waits().len() <= SAMPLE_CAP);
+        assert_eq!(m.mean_latency(), 7.0);
+        assert_eq!(m.wasted_attempts(), 2 * n as u64);
+        // every reservoir entry is a real observation
+        assert!(m.latencies().iter().all(|&l| l == 7.0));
+    }
+
+    #[test]
+    fn reservoir_replacement_is_deterministic() {
+        let run = || {
+            let mut m = Metrics::new();
+            for i in 0..(SAMPLE_CAP + 500) {
+                m.record_outcome(outcome(0.0, (i % 97) as f64 + 1.0));
+            }
+            m.latencies()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]
@@ -270,13 +368,14 @@ mod tests {
     #[test]
     fn trace_only_recorded_when_explain() {
         use crate::job::task::TaskKind;
+        use crate::job::JobId;
         use crate::scheduler::api::Decision;
         let rec = |m: &mut Metrics| {
             m.record_trace(
                 1.0,
                 NodeId(0),
-                TaskRef { job: JobId(0), kind: TaskKind::Map, index: 0 },
-                Decision::unscored(JobId(0), TaskKind::Map, None, 1),
+                TaskRef { job: JobId::dense(0), kind: TaskKind::Map, index: 0 },
+                Decision::unscored(JobId::dense(0), TaskKind::Map, None, 1),
             )
         };
         let mut m = Metrics::new();

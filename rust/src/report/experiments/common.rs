@@ -69,15 +69,18 @@ pub fn run_once(cfg: &RunConfig) -> RunSummary {
 /// Summarize a finished tracker.
 pub fn summarize(jt: &JobTracker, cfg: &RunConfig) -> RunSummary {
     let m = &jt.metrics;
+    // means are exact (streaming sums); the percentile comes from the
+    // bounded reservoir sample, which is the full population on runs
+    // below metrics::collector::SAMPLE_CAP jobs
     let lat = m.latencies();
     RunSummary {
         scheduler: cfg.scheduler.clone(),
         seed: cfg.workload.seed,
         makespan: m.makespan,
         throughput: m.throughput(),
-        mean_latency: stats::mean(&lat),
+        mean_latency: m.mean_latency(),
         p95_latency: stats::percentile(&lat, 95.0),
-        mean_wait: stats::mean(&m.waits()),
+        mean_wait: m.mean_wait(),
         overload_rate: m.overload_rate(),
         overload_seconds: m.overload_seconds,
         oom_kills: m.oom_kills,

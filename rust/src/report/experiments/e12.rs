@@ -39,11 +39,10 @@ pub fn e12(opts: &ExpOpts) -> Vec<Table> {
         );
         rm.run();
         let m = &rm.metrics;
-        let lat = m.latencies();
         table.row(vec![
             policy.into(),
             fnum(m.makespan),
-            fnum(crate::metrics::stats::mean(&lat)),
+            fnum(m.mean_latency()),
             fnum(m.overload_rate()),
             fnum(m.oom_kills as f64),
             fnum(m.overload_seconds),

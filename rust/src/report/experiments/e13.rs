@@ -1,0 +1,77 @@
+//! E13: the million-job core — drive 1,000,000 jobs through a 10,000-node
+//! cluster on the arena-indexed tracker with the calendar-queue engine,
+//! streaming specs and reclaiming job slots so memory stays O(active
+//! jobs). Reports makespan, event and job counts, the active-job
+//! high-water mark, and end-of-run residency (the reclamation proof).
+//!
+//! The workload is all-Small jobs at ~60% of the cluster's service rate:
+//! the point is scale of the *core* (event queue, arena, queue view), not
+//! scheduler quality, so FIFO with a capped per-heartbeat queue view is
+//! the right baseline.
+
+use crate::cluster::Cluster;
+use crate::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use crate::job::profile::JobClass;
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::{stream, Mix, WorkloadConfig};
+
+use super::common::ExpOpts;
+
+pub fn e13(opts: &ExpOpts) -> Vec<Table> {
+    let n_jobs = opts.scaled(1_000_000, 20_000);
+    let n_nodes = opts.scaled(10_000, 500) as u32;
+    // ~60% of the map-slot service rate for the Small class (≈5 maps of
+    // ≈5s on 2 map slots per node), so the backlog stays bounded
+    let arrival_rate = if opts.quick { 20.0 } else { 450.0 };
+    let mut table = Table::new(
+        "E13 million-job core: streaming specs, arena reclamation, calendar queue",
+        &[
+            "scheduler",
+            "jobs",
+            "nodes",
+            "makespan_s",
+            "events",
+            "clamped",
+            "peak_active",
+            "resident_end",
+            "completed",
+            "wall_s",
+        ],
+    );
+    let workload = WorkloadConfig {
+        n_jobs,
+        arrival_rate,
+        mix: Mix::only(JobClass::Small),
+        n_users: 8,
+        seed: 13,
+    };
+    let cfg = TrackerConfig {
+        // bound per-heartbeat scoring work: O(cap), not O(backlog)
+        queue_cap: 128,
+        // recycle drained jobs' slots: O(active) memory
+        reclaim_jobs: true,
+        ..Default::default()
+    };
+    let cluster = Cluster::homogeneous(n_nodes, (n_nodes / 40).max(1));
+    // by_name covers every registered name -- lint: allow(unwrap-in-lib)
+    let scheduler = crate::scheduler::by_name("fifo", workload.seed).unwrap();
+    let specs = Box::new(stream(&workload));
+    let started = std::time::Instant::now();
+    let mut jt =
+        JobTracker::new_streaming(cluster, scheduler, specs, workload.seed, cfg);
+    jt.run();
+    let wall = started.elapsed().as_secs_f64();
+    table.row(vec![
+        "fifo".into(),
+        format!("{n_jobs}"),
+        format!("{n_nodes}"),
+        fnum(jt.metrics.makespan),
+        format!("{}", jt.engine.processed()),
+        format!("{}", jt.engine.clamped_events()),
+        format!("{}", jt.jobs.peak_active()),
+        format!("{}", jt.jobs.resident()),
+        format!("{}", jt.metrics.completed_jobs()),
+        fnum(wall),
+    ]);
+    vec![table]
+}

@@ -103,8 +103,6 @@
 //! because it is only updated through `observe` events for tasks that
 //! actually launched.
 
-use std::collections::BTreeMap;
-
 use crate::bayes::classifier::Label;
 use crate::bayes::features::{FailureFeats, FailureHistory, FeatureVec};
 use crate::cluster::node::{Node, NodeId};
@@ -120,7 +118,11 @@ use crate::sim::engine::Time;
 pub struct SchedView<'a> {
     pub jobs: &'a JobTable,
     pub hdfs: &'a Namespace,
-    /// Schedulable jobs (have a pending task), submission order.
+    /// Schedulable jobs (have a pending task), submission order. The ids
+    /// are generational arena handles (`JobId { slot, serial }`) valid for
+    /// dense O(1) lookups in `jobs` and in any `sim::arena::SlotMap` side
+    /// table a scheduler keeps. Drivers may cap this view to a prefix of
+    /// the backlog (`TrackerConfig::queue_cap`) at large scale.
     pub queue: &'a [JobId],
     /// Failure history the driver maintains from the lifecycle events —
     /// the same state used to build feedback rows, so decision-time and
@@ -297,11 +299,14 @@ pub trait Scheduler {
 /// heartbeat's batch has already claimed, so later picks in the same batch
 /// never double-assign (the job table is not mutated until the driver
 /// launches the batch).
+/// A batch spans one node's free slots (a handful of entries), so the
+/// per-job tallies are flat vectors scanned linearly — cheaper than any
+/// tree/hash map at this size and allocation-free once warm.
 #[derive(Debug, Default)]
 pub struct BatchState {
     taken: Vec<TaskRef>,
-    maps_taken: BTreeMap<JobId, u32>,
-    reduces_taken: BTreeMap<JobId, u32>,
+    maps_taken: Vec<(JobId, u32)>,
+    reduces_taken: Vec<(JobId, u32)>,
 }
 
 impl BatchState {
@@ -317,7 +322,10 @@ impl BatchState {
             TaskKind::Map => &mut self.maps_taken,
             TaskKind::Reduce => &mut self.reduces_taken,
         };
-        *tally.entry(task.job).or_insert(0) += 1;
+        match tally.iter_mut().find(|(j, _)| *j == task.job) {
+            Some((_, n)) => *n += 1,
+            None => tally.push((task.job, 1)),
+        }
     }
 
     /// Tasks of `kind` the batch already claimed from `job`.
@@ -326,7 +334,10 @@ impl BatchState {
             TaskKind::Map => &self.maps_taken,
             TaskKind::Reduce => &self.reduces_taken,
         };
-        *tally.get(&job).unwrap_or(&0)
+        match tally.iter().find(|(j, _)| *j == job) {
+            Some(&(_, n)) => n,
+            None => 0,
+        }
     }
 
     pub fn len(&self) -> usize {

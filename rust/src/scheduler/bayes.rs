@@ -249,7 +249,7 @@ impl<C: Classifier> BayesScheduler<C> {
         // most-behind first; fully deterministic tie-break
         cands.sort_by(|a, b| {
             let key = |t: &TaskRef| {
-                (t.job.0, matches!(t.kind, TaskKind::Reduce) as u8, t.index)
+                (t.job.serial, matches!(t.kind, TaskKind::Reduce) as u8, t.index)
             };
             b.1.total_cmp(&a.1).then_with(|| key(&a.0).cmp(&key(&b.0)))
         });

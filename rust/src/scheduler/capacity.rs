@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use crate::cluster::node::Node;
 use crate::job::task::TaskKind;
 use crate::job::JobId;
+use crate::sim::arena::SlotMap;
 
 use super::api::{
     Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
@@ -31,7 +32,8 @@ pub struct Capacity {
     /// Queues auto-created from job specs (share capacity equally unless
     /// explicitly configured via `set_queue`).
     auto_queues: Vec<String>,
-    job_queue: BTreeMap<JobId, (String, String)>, // job -> (queue, user)
+    /// job -> (queue, user), slot-indexed by the job's arena handle.
+    job_queue: SlotMap<(String, String)>,
     /// Max fraction of a queue's *promised* slots one user may hold
     /// (Hadoop's user-limit-factor semantics; 1.0 = a user may fill the
     /// queue's whole promise but not poach other queues' shares).
@@ -45,7 +47,7 @@ impl Capacity {
         Capacity {
             queues: BTreeMap::new(),
             auto_queues: Vec::new(),
-            job_queue: BTreeMap::new(),
+            job_queue: SlotMap::new(),
             user_limit: 1.0,
             total_slots: 0,
         }
@@ -205,7 +207,7 @@ impl Scheduler for Capacity {
                 self.total_slots = *total_slots;
             }
             SchedEvent::TaskStarted { job, .. } => {
-                if let Some((q, u)) = self.job_queue.get(job).cloned() {
+                if let Some((q, u)) = self.job_queue.get(*job).cloned() {
                     let Some(queue) = self.queues.get_mut(&q) else { return };
                     queue.running += 1;
                     *queue.per_user_running.entry(u).or_insert(0) += 1;
@@ -214,7 +216,7 @@ impl Scheduler for Capacity {
             // both attempt-end flavours release the queue's slot
             SchedEvent::TaskFinished { job, .. }
             | SchedEvent::TaskFailed { job, .. } => {
-                if let Some((q, u)) = self.job_queue.get(job).cloned() {
+                if let Some((q, u)) = self.job_queue.get(*job).cloned() {
                     let Some(queue) = self.queues.get_mut(&q) else { return };
                     queue.running = queue.running.saturating_sub(1);
                     if let Some(c) = queue.per_user_running.get_mut(&u) {
@@ -225,7 +227,7 @@ impl Scheduler for Capacity {
             // same leak pattern Fair had: drop the per-job entry when the
             // job leaves the system fully drained
             SchedEvent::JobCompleted { job } => {
-                self.job_queue.remove(job);
+                self.job_queue.remove(*job);
             }
             _ => {}
         }

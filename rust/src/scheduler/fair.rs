@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use crate::cluster::node::Node;
 use crate::job::task::TaskKind;
 use crate::job::JobId;
+use crate::sim::arena::SlotMap;
 
 use super::api::{
     Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
@@ -23,13 +24,16 @@ struct Pool {
 
 /// Fair scheduler over per-user pools.
 ///
-/// Per-job state (`job_pool`) is dropped on `JobCompleted` — the drivers
+/// Per-job state (`job_pool`) lives in a slot-indexed [`SlotMap`] keyed by
+/// the job's arena handle and is dropped on `JobCompleted` — the drivers
 /// guarantee that event arrives only after the job's last attempt ended,
-/// so long simulations cannot leak one entry per job.
+/// so long simulations cannot leak one entry per job; and even if an entry
+/// lingered, the serial stamp keeps it invisible to the slot's next
+/// occupant.
 #[derive(Debug, Default)]
 pub struct Fair {
     pools: BTreeMap<String, Pool>,
-    job_pool: BTreeMap<JobId, String>,
+    job_pool: SlotMap<String>,
     /// Default min share granted to a pool on first sight.
     pub default_min_share: u32,
 }
@@ -141,7 +145,7 @@ impl Scheduler for Fair {
         match ev {
             SchedEvent::TaskStarted { job, .. } => {
                 if let Some(p) =
-                    self.job_pool.get(job).and_then(|pool| self.pools.get_mut(pool))
+                    self.job_pool.get(*job).and_then(|pool| self.pools.get_mut(pool))
                 {
                     p.running += 1;
                 }
@@ -150,14 +154,14 @@ impl Scheduler for Fair {
             SchedEvent::TaskFinished { job, .. }
             | SchedEvent::TaskFailed { job, .. } => {
                 if let Some(p) =
-                    self.job_pool.get(job).and_then(|pool| self.pools.get_mut(pool))
+                    self.job_pool.get(*job).and_then(|pool| self.pools.get_mut(pool))
                 {
                     p.running = p.running.saturating_sub(1);
                 }
             }
             // the job left the system with all attempts drained: forget it
             SchedEvent::JobCompleted { job } => {
-                self.job_pool.remove(job);
+                self.job_pool.remove(*job);
             }
             _ => {}
         }

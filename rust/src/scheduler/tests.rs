@@ -89,7 +89,7 @@ fn started(sched: &mut dyn Scheduler, job: JobId) {
 #[test]
 fn pick_task_prefers_node_local() {
     let f = fixture(vec![spec("a", "u0", JobClass::Small, Priority::Normal)]);
-    let job = f.jobs.get(JobId(0));
+    let job = f.jobs.get(JobId::dense(0));
     // find a node holding a replica of some map's block
     let block = job.maps[1].block.unwrap();
     let local = f.hdfs.replicas(block)[0];
@@ -107,7 +107,7 @@ fn pick_task_prefers_node_local() {
 #[test]
 fn pick_task_gates_reduces_on_map_phase() {
     let f = fixture(vec![spec("a", "u0", JobClass::Small, Priority::Normal)]);
-    let job = f.jobs.get(JobId(0));
+    let job = f.jobs.get(JobId::dense(0));
     let batch = BatchState::new();
     assert_eq!(batch.pick_task(job, &idle_node(), &f.hdfs, TaskKind::Reduce), None);
 }
@@ -115,7 +115,7 @@ fn pick_task_gates_reduces_on_map_phase() {
 #[test]
 fn pick_task_skips_claimed_tasks() {
     let f = fixture(vec![spec("a", "u0", JobClass::Small, Priority::Normal)]);
-    let job = f.jobs.get(JobId(0));
+    let job = f.jobs.get(JobId::dense(0));
     let node = idle_node();
     let mut batch = BatchState::new();
     let mut seen = std::collections::HashSet::new();
@@ -157,7 +157,7 @@ fn fifo_picks_highest_priority_first() {
         spec("normal", "u2", JobClass::Small, Priority::Normal),
     ]);
     let t = select(&f, &mut Fifo::new(), &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(1));
+    assert_eq!(t.job, JobId::dense(1));
 }
 
 #[test]
@@ -167,7 +167,7 @@ fn fifo_breaks_priority_ties_by_submission() {
         spec("b", "u1", JobClass::Small, Priority::Normal),
     ]);
     let t = select(&f, &mut Fifo::new(), &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(0));
+    assert_eq!(t.job, JobId::dense(0));
 }
 
 #[test]
@@ -199,7 +199,7 @@ fn fifo_batch_fills_whole_budget_without_duplicates() {
     // 2 jobs x 3 pending maps = 6 maps; reduces all gated on map phase
     assert_eq!(out.len(), 6);
     let mut tasks: Vec<_> = out.iter().map(|a| a.task).collect();
-    tasks.sort_by_key(|t| (t.job.0, t.index));
+    tasks.sort_by_key(|t| (t.job.serial, t.index));
     tasks.dedup();
     assert_eq!(tasks.len(), 6, "duplicate task in batch");
     assert!(out.iter().all(|a| a.task.kind == TaskKind::Map));
@@ -218,10 +218,10 @@ fn fair_prefers_pool_with_fewest_running() {
     // alice's pool already has 3 running tasks; bob has none
     let first = select(&f, &mut fair, &idle_node()).unwrap();
     for _ in 0..3 {
-        started(&mut fair, JobId(0));
+        started(&mut fair, JobId::dense(0));
     }
     let t = select(&f, &mut fair, &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(2), "bob's pool should win after alice loads up");
+    assert_eq!(t.job, JobId::dense(2), "bob's pool should win after alice loads up");
     let _ = first;
 }
 
@@ -234,9 +234,9 @@ fn fair_min_share_prioritizes_starved_pool() {
     let mut fair = Fair::new();
     fair.set_pool("bob", 4, 1.0); // bob promised 4 slots
     fair.set_pool("alice", 0, 1.0);
-    started(&mut fair, JobId(0)); // prime pool registration indirectly
+    started(&mut fair, JobId::dense(0)); // prime pool registration indirectly
     let t = select(&f, &mut fair, &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(1), "below-min-share pool must win");
+    assert_eq!(t.job, JobId::dense(1), "below-min-share pool must win");
 }
 
 #[test]
@@ -260,8 +260,8 @@ fn fair_spreads_one_batch_across_pools() {
         SlotBudget { maps: 4, reduces: 0 },
     );
     assert_eq!(out.len(), 4);
-    let alice = out.iter().filter(|a| a.task.job == JobId(0)).count();
-    let bob = out.iter().filter(|a| a.task.job == JobId(1)).count();
+    let alice = out.iter().filter(|a| a.task.job == JobId::dense(0)).count();
+    let bob = out.iter().filter(|a| a.task.job == JobId::dense(1)).count();
     assert_eq!((alice, bob), (2, 2), "batch must alternate between pools");
 }
 
@@ -277,12 +277,12 @@ fn capacity_picks_hungriest_queue() {
     cap.observe(&SchedEvent::ClusterInfo { total_slots: 16 });
     // make u0's queue busy
     let first = select(&f, &mut cap, &idle_node()).unwrap();
-    assert_eq!(first.job, JobId(0)); // BTreeMap order tie-break
+    assert_eq!(first.job, JobId::dense(0)); // BTreeMap order tie-break
     for _ in 0..4 {
-        started(&mut cap, JobId(0));
+        started(&mut cap, JobId::dense(0));
     }
     let t = select(&f, &mut cap, &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(1), "hungrier queue must win");
+    assert_eq!(t.job, JobId::dense(1), "hungrier queue must win");
 }
 
 #[test]
@@ -296,10 +296,10 @@ fn capacity_user_limit_blocks_hog() {
     cap.user_limit = 0.5;
     // u0 user already runs 2 tasks in its queue (promise = 4*0.5 = 2)
     let _ = select(&f, &mut cap, &idle_node());
-    started(&mut cap, JobId(0));
-    started(&mut cap, JobId(0));
+    started(&mut cap, JobId::dense(0));
+    started(&mut cap, JobId::dense(0));
     let t = select(&f, &mut cap, &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(1), "user over limit must be skipped");
+    assert_eq!(t.job, JobId::dense(1), "user over limit must be skipped");
 }
 
 // ----------------------------------------------------------------- bayes --
@@ -324,7 +324,7 @@ fn bayes_prefers_job_classified_good() {
     ]);
     let mut sched = trained_bayes(StarvationPolicy::LeastBad);
     let t = select(&f, &mut sched, &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(1), "light job should classify good and win");
+    assert_eq!(t.job, JobId::dense(1), "light job should classify good and win");
 }
 
 #[test]
@@ -345,7 +345,7 @@ fn bayes_wait_unless_idle_accepts_on_idle_node() {
     let mut busy = idle_node();
     busy.advance(0.0);
     busy.add_task(
-        TaskRef { job: JobId(9), kind: TaskKind::Map, index: 0 },
+        TaskRef { job: JobId::dense(9), kind: TaskKind::Map, index: 0 },
         Resources::splat(0.4),
         100.0,
         0.0,
@@ -373,7 +373,7 @@ fn bayes_wait_unless_idle_places_at_most_one_bad_task_per_batch() {
     assert_eq!(out.len(), 1, "fallback must not flood the node");
     let d = out[0].decision;
     assert!(d.posterior.unwrap() < 0.5);
-    assert_eq!(d.job, JobId(0));
+    assert_eq!(d.job, JobId::dense(0));
 }
 
 #[test]
@@ -394,7 +394,7 @@ fn bayes_decision_records_carry_scores() {
     };
     let out = sched.assign(&view, &idle_node(), SlotBudget { maps: 1, reduces: 0 });
     let d = out[0].decision;
-    assert_eq!(d.job, JobId(1));
+    assert_eq!(d.job, JobId::dense(1));
     assert_eq!(d.kind, TaskKind::Map);
     assert_eq!(d.candidates, 2);
     assert!(d.posterior.unwrap() > 0.5);
@@ -423,7 +423,7 @@ fn bayes_feature_mask_removes_signal() {
     // with everything masked to bin 0 and balanced labels, posterior = 0.5
     // for both; equal scores keep the sort stable, so the first candidate
     // (submission order) wins deterministically
-    assert_eq!(t.job, JobId(0));
+    assert_eq!(t.job, JobId::dense(0));
 }
 
 #[test]
@@ -450,8 +450,8 @@ fn fair_drops_job_state_on_job_completed() {
     let mut fair = Fair::new();
     let _ = select(&f, &mut fair, &idle_node()); // registers jobs in pools
     assert!(fair.tracked_jobs() > 0, "fixture registered no jobs");
-    fair.observe(&SchedEvent::JobCompleted { job: JobId(0) });
-    fair.observe(&SchedEvent::JobCompleted { job: JobId(1) });
+    fair.observe(&SchedEvent::JobCompleted { job: JobId::dense(0) });
+    fair.observe(&SchedEvent::JobCompleted { job: JobId::dense(1) });
     assert_eq!(fair.tracked_jobs(), 0, "job_pool leaked after JobCompleted");
 }
 
@@ -465,8 +465,8 @@ fn capacity_drops_job_state_on_job_completed() {
     cap.observe(&SchedEvent::ClusterInfo { total_slots: 8 });
     let _ = select(&f, &mut cap, &idle_node());
     assert!(cap.tracked_jobs() > 0, "fixture registered no jobs");
-    cap.observe(&SchedEvent::JobCompleted { job: JobId(0) });
-    cap.observe(&SchedEvent::JobCompleted { job: JobId(1) });
+    cap.observe(&SchedEvent::JobCompleted { job: JobId::dense(0) });
+    cap.observe(&SchedEvent::JobCompleted { job: JobId::dense(1) });
     assert_eq!(cap.tracked_jobs(), 0, "job_queue leaked after JobCompleted");
 }
 
@@ -481,11 +481,11 @@ fn fair_releases_slot_on_task_failed() {
     let mut fair = Fair::new();
     let _ = select(&f, &mut fair, &idle_node());
     for _ in 0..3 {
-        started(&mut fair, JobId(0));
+        started(&mut fair, JobId::dense(0));
     }
     for _ in 0..3 {
         fair.observe(&SchedEvent::TaskFailed {
-            job: JobId(0),
+            job: JobId::dense(0),
             node: NodeId(0),
             kind: TaskKind::Map,
             attempt: 1,
@@ -495,7 +495,7 @@ fn fair_releases_slot_on_task_failed() {
     // alice's pool drained back to 0 running: FIFO order (alice first)
     // decides again, not a phantom load imbalance
     let t = select(&f, &mut fair, &idle_node()).unwrap();
-    assert_eq!(t.job, JobId(0));
+    assert_eq!(t.job, JobId::dense(0));
 }
 
 // ----------------------------------------------------------- speculation --
@@ -506,7 +506,7 @@ fn straggler_fixture() -> Fixture {
     let f = fixture(vec![spec("slow", "u0", JobClass::Small, Priority::Normal)]);
     let mut f = f;
     let start = |jobs: &mut JobTable, index: u32, node: u32, at: f64| {
-        let t = TaskRef { job: JobId(0), kind: TaskKind::Map, index };
+        let t = TaskRef { job: JobId::dense(0), kind: TaskKind::Map, index };
         jobs.start_task(&t, NodeId(node), at);
     };
     start(&mut f.jobs, 0, 0, 0.0); // 60s elapsed at now=60
@@ -534,7 +534,7 @@ fn bayes_speculates_on_stragglers_from_another_node() {
     assert_eq!(out.len(), 1, "exactly the one straggler gets a backup");
     let a = &out[0];
     assert!(a.decision.speculative);
-    assert_eq!(a.task, TaskRef { job: JobId(0), kind: TaskKind::Map, index: 0 });
+    assert_eq!(a.task, TaskRef { job: JobId::dense(0), kind: TaskKind::Map, index: 0 });
     assert!(a.decision.posterior.is_some());
     assert!(a.decision.fail.is_some());
 }
@@ -596,7 +596,7 @@ fn bayes_speculation_respects_classifier_verdict() {
     let row = {
         // the exact row the scheduler will score: job profile bins + idle
         // node bins + zero failure bins
-        let job = f.jobs.get(JobId(0));
+        let job = f.jobs.get(JobId::dense(0));
         let node = Node::new(NodeId(1), NodeSpec::default());
         crate::bayes::features::feature_vec(
             &job.spec.profile,
@@ -612,4 +612,46 @@ fn bayes_speculation_respects_classifier_verdict() {
     let node = Node::new(NodeId(1), NodeSpec::default());
     let out = sched.assign(&view, &node, SlotBudget { maps: 2, reduces: 2 });
     assert!(out.is_empty(), "speculated onto a node classified bad");
+}
+
+// ------------------------------------------------- slot recycling safety --
+
+/// Regression: arena slots recycle, ids do not. A job id whose slot was
+/// reused must never observe (or mutate) the previous occupant's scheduler
+/// or failure-history state — the serial stamp gates every lookup.
+#[test]
+fn recycled_slot_does_not_alias_scheduler_or_failure_state() {
+    // failure history: job A accumulated failures on slot 3
+    let a = JobId { slot: 3, serial: 0 };
+    let b = JobId { slot: 3, serial: 8 }; // later job recycling slot 3
+    let mut hist = FailureHistory::new();
+    hist.record_failure(a, NodeId(1), 10.0);
+    assert_eq!(hist.job_failures(a), 1);
+    // B starts clean even though A's entry was never forgotten
+    assert_eq!(hist.job_failures(b), 0);
+    // recording for B evicts the stale entry instead of merging counts
+    hist.record_failure(b, NodeId(1), 20.0);
+    assert_eq!(hist.job_failures(b), 1);
+    assert_eq!(hist.tracked_jobs(), 1, "stale entry must be evicted");
+    // and forgetting via the stale id is inert for the new occupant
+    hist.forget_job(a);
+    assert_eq!(hist.job_failures(b), 1);
+
+    // fair scheduler: pool membership is keyed by the full id, not the slot
+    let f = fixture(vec![spec("a", "u0", JobClass::Small, Priority::Normal)]);
+    let mut fair = Fair::new();
+    let picked = select(&f, &mut fair, &idle_node());
+    assert!(picked.is_some());
+    assert_eq!(fair.tracked_jobs(), 1); // job 0 (slot 0) entered pool "u0"
+    let recycled = JobId { slot: 0, serial: 9 };
+    // events for a future occupant of slot 0 must miss, not misattribute:
+    started(&mut fair, recycled);
+    fair.observe(&SchedEvent::TaskFinished {
+        job: recycled,
+        node: NodeId(0),
+        kind: TaskKind::Map,
+    });
+    fair.observe(&SchedEvent::JobCompleted { job: recycled });
+    // the original job's pool entry survives the stray remove untouched
+    assert_eq!(fair.tracked_jobs(), 1);
 }

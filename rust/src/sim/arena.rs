@@ -1,0 +1,389 @@
+//! Generational arenas: dense slot-indexed storage with stale-handle
+//! detection, the backing store for per-job state across the whole stack
+//! (job table, scheduler per-job maps, failure history).
+//!
+//! A key (see [`SlotKey`]) is a pair `(slot, serial)`:
+//!
+//! * `slot` — dense index into the backing storage. Slots are recycled
+//!   LIFO through a free list, so long simulations keep the storage at
+//!   O(peak live entries) instead of O(total ever inserted).
+//! * `serial` — a generation stamp allocated by the *caller* (for jobs:
+//!   the globally monotone submission counter). A recycled slot gets a new
+//!   serial, so a stale key held by any layer can never alias the slot's
+//!   new occupant: lookups compare serials and miss.
+//!
+//! Hot-path discipline (enforced by the `engine-hot-loop` lint, see
+//! LINTS.md): insert/get/remove never allocate except for amortized
+//! backing growth, and nothing here recurses.
+
+/// A generational handle: dense slot index plus caller-allocated serial.
+/// Implemented by `JobId`; anything slot-shaped can use these containers.
+pub trait SlotKey: Copy {
+    fn slot_index(self) -> u32;
+    fn serial_stamp(self) -> u32;
+}
+
+#[derive(Debug, Clone)]
+enum Entry<T> {
+    Occupied { serial: u32, value: T },
+    Vacant,
+}
+
+/// Primary owner of per-entity values (e.g. the job table's `Job`s).
+/// The caller allocates serials; [`Arena::insert`] fills the slot that
+/// [`Arena::next_slot`] predicts, so ids can be built before the value.
+#[derive(Debug, Clone)]
+pub struct Arena<T> {
+    entries: Vec<Entry<T>>,
+    free: Vec<u32>,
+    live: u32,
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena {
+            entries: Vec::with_capacity(0),
+            free: Vec::with_capacity(0),
+            live: 0,
+        }
+    }
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Arena<T> {
+        Arena::default()
+    }
+
+    /// The slot the next [`Arena::insert`] will use (top of the free list,
+    /// else one past the end). Lets callers mint the id first.
+    pub fn next_slot(&self) -> u32 {
+        match self.free.last() {
+            Some(&slot) => slot,
+            None => self.entries.len() as u32,
+        }
+    }
+
+    /// Store `value` under caller-allocated generation `serial`; returns
+    /// the slot used (always equal to what `next_slot()` reported).
+    pub fn insert(&mut self, serial: u32, value: T) -> u32 {
+        self.live += 1;
+        match self.free.pop() {
+            Some(slot) => {
+                self.entries[slot as usize] = Entry::Occupied { serial, value };
+                slot
+            }
+            None => {
+                let slot = self.entries.len() as u32;
+                self.entries.push(Entry::Occupied { serial, value });
+                slot
+            }
+        }
+    }
+
+    /// Lookup; `None` for vacant slots and for stale keys (serial
+    /// mismatch after the slot was recycled).
+    pub fn get(&self, key: impl SlotKey) -> Option<&T> {
+        match self.entries.get(key.slot_index() as usize) {
+            Some(Entry::Occupied { serial, value }) if *serial == key.serial_stamp() => {
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: impl SlotKey) -> Option<&mut T> {
+        match self.entries.get_mut(key.slot_index() as usize) {
+            Some(Entry::Occupied { serial, value }) if *serial == key.serial_stamp() => {
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+
+    /// Free the slot and return its value; stale/vacant keys are a no-op
+    /// (`None`), so double-release cannot corrupt the free list.
+    pub fn remove(&mut self, key: impl SlotKey) -> Option<T> {
+        let e = self.entries.get_mut(key.slot_index() as usize)?;
+        match e {
+            Entry::Occupied { serial, .. } if *serial == key.serial_stamp() => {
+                let old = std::mem::replace(e, Entry::Vacant);
+                self.free.push(key.slot_index());
+                self.live -= 1;
+                match old {
+                    Entry::Occupied { value, .. } => Some(value),
+                    Entry::Vacant => None,
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.live as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Backing slots allocated (live + recyclable) — the O(peak) bound.
+    pub fn slot_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Live entries in slot order as `(slot, serial, &value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, &T)> {
+        self.entries.iter().enumerate().filter_map(|(i, e)| match e {
+            Entry::Occupied { serial, value } => Some((i as u32, *serial, value)),
+            Entry::Vacant => None,
+        })
+    }
+}
+
+/// Secondary per-entity map keyed by the *same* generational keys as the
+/// owning [`Arena`] — the replacement for `BTreeMap<JobId, V>` side tables
+/// (scheduler pool/queue membership, failure counts). Storage is a dense
+/// `Vec` indexed by slot; every access checks the serial, so state left
+/// behind for a dead entity is invisible to (and reclaimed by) the slot's
+/// next occupant.
+#[derive(Debug, Clone)]
+pub struct SlotMap<V> {
+    entries: Vec<Option<(u32, V)>>,
+    live: u32,
+}
+
+impl<V> Default for SlotMap<V> {
+    fn default() -> Self {
+        SlotMap { entries: Vec::with_capacity(0), live: 0 }
+    }
+}
+
+impl<V> SlotMap<V> {
+    pub fn new() -> SlotMap<V> {
+        SlotMap::default()
+    }
+
+    fn ensure_slot(&mut self, slot: u32) {
+        let i = slot as usize;
+        if i >= self.entries.len() {
+            self.entries.resize_with(i + 1, || None);
+        }
+    }
+
+    /// Insert/overwrite. A stale entry left behind by a previous occupant
+    /// of the slot is silently evicted (that is the aliasing fix: the old
+    /// occupant's state can never be read through the new key or vice
+    /// versa). Returns the previous value only if it belonged to the SAME
+    /// serial.
+    pub fn insert(&mut self, key: impl SlotKey, value: V) -> Option<V> {
+        self.ensure_slot(key.slot_index());
+        let e = &mut self.entries[key.slot_index() as usize];
+        match e.take() {
+            Some((serial, old)) if serial == key.serial_stamp() => {
+                *e = Some((serial, value));
+                Some(old)
+            }
+            prev => {
+                if prev.is_none() {
+                    self.live += 1;
+                }
+                *e = Some((key.serial_stamp(), value));
+                None
+            }
+        }
+    }
+
+    pub fn get(&self, key: impl SlotKey) -> Option<&V> {
+        match self.entries.get(key.slot_index() as usize) {
+            Some(Some((serial, v))) if *serial == key.serial_stamp() => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: impl SlotKey) -> Option<&mut V> {
+        match self.entries.get_mut(key.slot_index() as usize) {
+            Some(Some((serial, v))) if *serial == key.serial_stamp() => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Current value for `key`, inserting `make()` first when the slot is
+    /// empty or holds a stale serial.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: impl SlotKey,
+        make: impl FnOnce() -> V,
+    ) -> &mut V {
+        self.ensure_slot(key.slot_index());
+        let i = key.slot_index() as usize;
+        let fresh = !matches!(
+            &self.entries[i],
+            Some((serial, _)) if *serial == key.serial_stamp()
+        );
+        if fresh {
+            if self.entries[i].is_none() {
+                self.live += 1;
+            }
+            self.entries[i] = Some((key.serial_stamp(), make()));
+        }
+        match &mut self.entries[i] {
+            Some((_, v)) => v,
+            // written one line above; the match exists only to re-borrow
+            None => unreachable!(),
+        }
+    }
+
+    pub fn remove(&mut self, key: impl SlotKey) -> Option<V> {
+        let e = self.entries.get_mut(key.slot_index() as usize)?;
+        match e.take() {
+            Some((serial, v)) if serial == key.serial_stamp() => {
+                self.live -= 1;
+                Some(v)
+            }
+            prev => {
+                *e = prev;
+                None
+            }
+        }
+    }
+
+    /// Occupied slots (live entries for ANY serial, including ones whose
+    /// owner has left — the leak-regression guards count these).
+    pub fn len(&self) -> usize {
+        self.live as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Live entries in slot order as `(slot, serial, &value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, &V)> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|(s, v)| (i as u32, *s, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Key {
+        slot: u32,
+        serial: u32,
+    }
+    impl SlotKey for Key {
+        fn slot_index(self) -> u32 {
+            self.slot
+        }
+        fn serial_stamp(self) -> u32 {
+            self.serial
+        }
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a: Arena<&'static str> = Arena::new();
+        let s0 = a.insert(0, "zero");
+        let s1 = a.insert(1, "one");
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(a.len(), 2);
+        let k0 = Key { slot: 0, serial: 0 };
+        assert_eq!(a.get(k0), Some(&"zero"));
+        assert_eq!(a.remove(k0), Some("zero"));
+        assert_eq!(a.get(k0), None);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn slots_recycle_lifo_and_stale_keys_miss() {
+        let mut a: Arena<u64> = Arena::new();
+        a.insert(0, 100);
+        a.insert(1, 200);
+        let old = Key { slot: 1, serial: 1 };
+        a.remove(old);
+        assert_eq!(a.next_slot(), 1, "freed slot must be recycled first");
+        let slot = a.insert(2, 300);
+        assert_eq!(slot, 1);
+        // the stale handle to the old occupant misses; the new one hits
+        assert_eq!(a.get(old), None);
+        assert_eq!(a.get(Key { slot: 1, serial: 2 }), Some(&300));
+        // storage stayed dense: 2 slots for 2 live entries
+        assert_eq!(a.slot_count(), 2);
+    }
+
+    #[test]
+    fn double_remove_is_inert() {
+        let mut a: Arena<u8> = Arena::new();
+        a.insert(7, 1);
+        let k = Key { slot: 0, serial: 7 };
+        assert_eq!(a.remove(k), Some(1));
+        assert_eq!(a.remove(k), None, "second release must not corrupt");
+        assert_eq!(a.next_slot(), 0);
+        a.insert(8, 2);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.next_slot(), 1, "free list must hold slot 0 only once");
+    }
+
+    #[test]
+    fn arena_iter_skips_vacant() {
+        let mut a: Arena<i32> = Arena::new();
+        a.insert(0, 10);
+        a.insert(1, 11);
+        a.insert(2, 12);
+        a.remove(Key { slot: 1, serial: 1 });
+        let got: Vec<(u32, u32, i32)> =
+            a.iter().map(|(s, g, v)| (s, g, *v)).collect();
+        assert_eq!(got, vec![(0, 0, 10), (2, 2, 12)]);
+    }
+
+    #[test]
+    fn slotmap_serial_mismatch_misses() {
+        let mut m: SlotMap<&'static str> = SlotMap::new();
+        let old = Key { slot: 3, serial: 5 };
+        let new = Key { slot: 3, serial: 9 };
+        m.insert(old, "old");
+        assert_eq!(m.get(new), None, "new occupant must not see stale state");
+        assert_eq!(m.remove(new), None, "stale entry survives a mismatched remove");
+        assert_eq!(m.get(old), Some(&"old"));
+    }
+
+    #[test]
+    fn slotmap_insert_evicts_stale_entry() {
+        let mut m: SlotMap<u32> = SlotMap::new();
+        m.insert(Key { slot: 0, serial: 1 }, 111);
+        // slot recycled to serial 2: the write takes over the slot
+        assert_eq!(m.insert(Key { slot: 0, serial: 2 }, 222), None);
+        assert_eq!(m.get(Key { slot: 0, serial: 1 }), None);
+        assert_eq!(m.get(Key { slot: 0, serial: 2 }), Some(&222));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn slotmap_get_or_insert_with_replaces_stale() {
+        let mut m: SlotMap<u32> = SlotMap::new();
+        *m.get_or_insert_with(Key { slot: 2, serial: 0 }, || 0) += 5;
+        *m.get_or_insert_with(Key { slot: 2, serial: 0 }, || 0) += 5;
+        assert_eq!(m.get(Key { slot: 2, serial: 0 }), Some(&10));
+        // recycled slot: counter must restart, not inherit 10
+        *m.get_or_insert_with(Key { slot: 2, serial: 4 }, || 0) += 1;
+        assert_eq!(m.get(Key { slot: 2, serial: 4 }), Some(&1));
+    }
+
+    #[test]
+    fn slotmap_len_and_iter() {
+        let mut m: SlotMap<char> = SlotMap::new();
+        m.insert(Key { slot: 0, serial: 0 }, 'a');
+        m.insert(Key { slot: 4, serial: 2 }, 'b');
+        assert_eq!(m.len(), 2);
+        let got: Vec<(u32, u32, char)> =
+            m.iter().map(|(s, g, v)| (s, g, *v)).collect();
+        assert_eq!(got, vec![(0, 0, 'a'), (4, 2, 'b')]);
+        m.remove(Key { slot: 0, serial: 0 });
+        assert_eq!(m.len(), 1);
+    }
+}

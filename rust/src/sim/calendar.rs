@@ -1,0 +1,334 @@
+//! Calendar-queue event storage (Brown 1988): the O(1) amortized backend
+//! behind [`crate::sim::Engine`], replacing the binary heap whose
+//! per-operation cost grows O(log n) with pending events.
+//!
+//! Layout: a power-of-two ring of unsorted buckets. Virtual time is cut
+//! into fixed-width "days"; an event lands in bucket `day & mask` where
+//! `day = floor(at / width)`. Pop scans the current day's bucket for the
+//! minimum `(at, seq)` (the same total order the heap used, so FIFO
+//! tie-breaking by seq is preserved bit-for-bit), advancing day by day;
+//! when a full rotation finds nothing — the sparse-tail case — the cursor
+//! jumps straight to the day of the global minimum instead of spinning.
+//!
+//! The ring resizes by doubling/halving when the event count crosses 2x /
+//! 0.5x the bucket count, recomputing the day width from the live span so
+//! the steady state keeps O(1) events per bucket. Buckets retain their
+//! capacity across pushes and pops, so the steady state allocates nothing.
+//!
+//! Determinism: pop order is a pure function of the multiset of pushed
+//! `(at, seq)` pairs — bucketing, rotation and resizing only change WHERE
+//! an event waits, never the order selected — which the differential test
+//! in `tests/engine_differential.rs` checks against the heap backend.
+//!
+//! Invariant relied on throughout: callers never push an `at` below the
+//! time of the last popped event (the engine clamps past/non-finite
+//! times), so no event can ever land behind the day cursor.
+
+use super::engine::Time;
+use super::event::Event;
+
+/// Backend interface the generic engine drives. Implementations must pop
+/// strictly by `(at, seq)` order and may assume pushes are monotone with
+/// respect to the last popped `at` (the engine's clamp guarantees it).
+pub trait EventQueue {
+    fn push(&mut self, at: Time, seq: u64, event: Event);
+    fn pop(&mut self) -> Option<(Time, u64, Event)>;
+    /// Earliest pending timestamp. May cost O(n); not a hot-path call.
+    fn peek_time(&self) -> Option<Time>;
+    fn len(&self) -> usize;
+}
+
+type Item = (Time, u64, Event);
+
+/// Smallest ring size; also the size below which we never shrink.
+const MIN_BUCKETS: usize = 16;
+
+#[derive(Debug)]
+pub struct CalendarQueue {
+    buckets: Vec<Vec<Item>>,
+    /// `buckets.len() - 1`; the ring size is always a power of two.
+    mask: u64,
+    /// Day width in virtual seconds.
+    width: Time,
+    /// Day of the last popped event (events never land behind it).
+    cur_day: u64,
+    /// Timestamp of the last popped event (resize re-anchors on it).
+    cur_time: Time,
+    len: usize,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        let mut buckets = Vec::with_capacity(MIN_BUCKETS);
+        buckets.resize_with(MIN_BUCKETS, || Vec::with_capacity(0));
+        CalendarQueue {
+            buckets,
+            mask: (MIN_BUCKETS - 1) as u64,
+            width: 1.0,
+            cur_day: 0,
+            cur_time: 0.0,
+            len: 0,
+        }
+    }
+}
+
+impl CalendarQueue {
+    pub fn new() -> CalendarQueue {
+        CalendarQueue::default()
+    }
+
+    #[inline]
+    fn day_of(&self, at: Time) -> u64 {
+        // finite, non-negative by the engine's clamp; the cast saturates
+        (at / self.width) as u64
+    }
+
+    #[inline]
+    fn place(&mut self, item: Item) {
+        let day = self.day_of(item.0);
+        let b = (day & self.mask) as usize;
+        self.buckets[b].push(item);
+    }
+
+    /// Index of the minimum `(at, seq)` entry of `bucket` belonging to
+    /// exactly `day` (the bucket may also hold later ring laps).
+    fn min_in_day(&self, bucket: usize, day: u64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, it) in self.buckets[bucket].iter().enumerate() {
+            if self.day_of(it.0) != day {
+                continue;
+            }
+            best = match best {
+                Some(j) => {
+                    let b = &self.buckets[bucket][j];
+                    if (it.0, it.1) < (b.0, b.1) {
+                        Some(i)
+                    } else {
+                        Some(j)
+                    }
+                }
+                None => Some(i),
+            };
+        }
+        best
+    }
+
+    /// Locate the global minimum `(at, seq)` as `(bucket, index)`.
+    /// Only runs when a full rotation found nothing (sparse tail) or for
+    /// `peek_time`; O(n) but off the steady-state path.
+    fn global_min(&self) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, it) in bucket.iter().enumerate() {
+                best = match best {
+                    Some((bb, bi)) => {
+                        let cur = &self.buckets[bb][bi];
+                        if (it.0, it.1) < (cur.0, cur.1) {
+                            Some((b, i))
+                        } else {
+                            Some((bb, bi))
+                        }
+                    }
+                    None => Some((b, i)),
+                };
+            }
+        }
+        best
+    }
+
+    /// Extract `index` from `bucket`, advancing the cursor to the item's
+    /// day, then maybe shrink the ring.
+    fn take(&mut self, bucket: usize, index: usize) -> Item {
+        let item = self.buckets[bucket].swap_remove(index);
+        self.len -= 1;
+        self.cur_day = self.day_of(item.0);
+        self.cur_time = item.0;
+        if self.len < self.buckets.len() / 2 && self.buckets.len() > MIN_BUCKETS {
+            self.resize(self.buckets.len() / 2);
+        }
+        item
+    }
+
+    /// Rebuild the ring at `n` buckets (power of two), recomputing the day
+    /// width so the live span averages about one event per day. Iterative
+    /// throughout — the hot-loop lint forbids recursion here.
+    fn resize(&mut self, n: usize) {
+        debug_assert!(n.is_power_of_two() && n >= MIN_BUCKETS);
+        let mut items: Vec<Item> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            items.append(b);
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for it in &items {
+            lo = lo.min(it.0);
+            hi = hi.max(it.0);
+        }
+        let span = hi - lo;
+        self.width = if items.len() < 2 || span <= 0.0 {
+            1.0
+        } else {
+            (span / items.len() as f64).max(1e-9)
+        };
+        if self.buckets.len() != n {
+            self.buckets.resize_with(n, || Vec::with_capacity(0));
+        }
+        self.mask = (n - 1) as u64;
+        self.cur_day = self.day_of(self.cur_time);
+        for item in items {
+            self.place(item);
+        }
+    }
+}
+
+impl EventQueue for CalendarQueue {
+    fn push(&mut self, at: Time, seq: u64, event: Event) {
+        debug_assert!(at.is_finite() && at >= self.cur_time);
+        self.place((at, seq, event));
+        self.len += 1;
+        if self.len > self.buckets.len() * 2 {
+            self.resize(self.buckets.len() * 2);
+        }
+    }
+
+    fn pop(&mut self) -> Option<(Time, u64, Event)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut day = self.cur_day;
+        for _ in 0..self.buckets.len() {
+            let b = (day & self.mask) as usize;
+            if let Some(i) = self.min_in_day(b, day) {
+                self.cur_day = day;
+                return Some(self.take(b, i));
+            }
+            day += 1;
+        }
+        // sparse tail: one rotation was empty — jump to the global min
+        match self.global_min() {
+            Some((b, i)) => Some(self.take(b, i)),
+            None => None,
+        }
+    }
+
+    fn peek_time(&self) -> Option<Time> {
+        self.global_min().map(|(b, i)| self.buckets[b][i].0)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::NodeId;
+    use crate::sim::Pcg;
+
+    fn ev(i: u32) -> Event {
+        Event::Heartbeat(NodeId(i))
+    }
+
+    fn drain(q: &mut CalendarQueue) -> Vec<(Time, u64)> {
+        std::iter::from_fn(|| q.pop().map(|(t, s, _)| (t, s))).collect()
+    }
+
+    #[test]
+    fn pops_by_time_then_seq() {
+        let mut q = CalendarQueue::new();
+        q.push(5.0, 0, ev(0));
+        q.push(1.0, 1, ev(1));
+        q.push(5.0, 2, ev(2));
+        q.push(3.0, 3, ev(3));
+        assert_eq!(drain(&mut q), vec![(1.0, 1), (3.0, 3), (5.0, 0), (5.0, 2)]);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn resize_preserves_order_across_growth() {
+        let mut q = CalendarQueue::new();
+        // far more than 2x MIN_BUCKETS so the ring doubles repeatedly
+        let mut rng = Pcg::new(7, 1);
+        let mut expect: Vec<(Time, u64)> = Vec::new();
+        for seq in 0..5000u64 {
+            let at = rng.range_f64(0.0, 1000.0);
+            expect.push((at, seq));
+            q.push(at, seq, ev(seq as u32));
+        }
+        expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        assert_eq!(drain(&mut q), expect);
+    }
+
+    #[test]
+    fn shrink_keeps_remaining_events() {
+        let mut q = CalendarQueue::new();
+        for seq in 0..1000u64 {
+            q.push(seq as f64, seq, ev(0));
+        }
+        // drain most of it so the ring halves on the way down
+        for want in 0..990u64 {
+            assert_eq!(q.pop().map(|(_, s, _)| s), Some(want));
+        }
+        assert_eq!(q.len(), 10);
+        assert_eq!(
+            drain(&mut q).iter().map(|(_, s)| *s).collect::<Vec<_>>(),
+            (990..1000).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn sparse_tail_jumps_instead_of_spinning() {
+        let mut q = CalendarQueue::new();
+        q.push(2.0, 0, ev(0));
+        q.pop();
+        // next event millions of days ahead of the cursor
+        q.push(9.0e6, 1, ev(1));
+        assert_eq!(q.pop().map(|(t, s, _)| (t, s)), Some((9.0e6, 1)));
+    }
+
+    #[test]
+    fn massive_tie_bucket_stays_fifo() {
+        let mut q = CalendarQueue::new();
+        for seq in 0..500u64 {
+            q.push(42.0, seq, ev(seq as u32));
+        }
+        let seqs: Vec<u64> = drain(&mut q).iter().map(|(_, s)| *s).collect();
+        assert_eq!(seqs, (0..500).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_hold_pattern() {
+        // the classic hold model: pop one, push one slightly later
+        let mut q = CalendarQueue::new();
+        let mut rng = Pcg::new(3, 9);
+        for seq in 0..64u64 {
+            q.push(rng.range_f64(0.0, 10.0), seq, ev(0));
+        }
+        let mut seq = 64u64;
+        let mut last = 0.0;
+        for _ in 0..10_000 {
+            let (t, _, _) = q.pop().expect("hold queue never empties");
+            assert!(t >= last, "time went backwards: {t} < {last}");
+            last = t;
+            q.push(t + rng.range_f64(0.0, 5.0), seq, ev(0));
+            seq += 1;
+        }
+        assert_eq!(q.len(), 64);
+    }
+
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut q = CalendarQueue::new();
+        assert_eq!(q.peek_time(), None);
+        let mut rng = Pcg::new(11, 2);
+        for seq in 0..200u64 {
+            q.push(rng.range_f64(0.0, 50.0), seq, ev(0));
+        }
+        while q.len() > 0 {
+            let peeked = q.peek_time().unwrap();
+            let (t, _, _) = q.pop().unwrap();
+            assert_eq!(peeked, t);
+        }
+    }
+}

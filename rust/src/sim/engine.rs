@@ -1,14 +1,18 @@
-//! The discrete-event engine: a virtual clock plus a time-ordered event
-//! heap with deterministic FIFO tie-breaking.
+//! The discrete-event engine: a virtual clock over a pluggable,
+//! time-ordered event queue with deterministic FIFO tie-breaking.
 //!
 //! Determinism contract: given the same seed (all randomness flows through
 //! [`crate::sim::Pcg`] streams) and the same schedule() call sequence, the
 //! pop() sequence is identical — equal timestamps are served in insertion
-//! order via a monotone sequence number.
+//! order via a monotone sequence number. The clamp policy for past and
+//! non-finite timestamps lives HERE, in [`EngineImpl`], so every backend
+//! ([`CalendarQueue`] in production, [`HeapQueue`] as the differential
+//! reference) inherits the identical behavior.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use super::calendar::{CalendarQueue, EventQueue};
 use super::event::Event;
 
 /// Virtual time in seconds since simulation start.
@@ -44,27 +48,68 @@ impl PartialOrd for Entry {
     }
 }
 
-/// The event queue + clock.
-#[derive(Debug)]
-pub struct Engine {
+/// The original binary-heap backend. Kept as the reference implementation
+/// the calendar queue is differentially tested against, and as the
+/// baseline arm of the `engine_events_per_sec` bench.
+#[derive(Debug, Default)]
+pub struct HeapQueue {
     heap: BinaryHeap<Entry>,
+}
+
+impl EventQueue for HeapQueue {
+    fn push(&mut self, at: Time, seq: u64, event: Event) {
+        self.heap.push(Entry { at, seq, event });
+    }
+
+    fn pop(&mut self) -> Option<(Time, u64, Event)> {
+        self.heap.pop().map(|e| (e.at, e.seq, e.event))
+    }
+
+    fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// The event queue + clock, generic over the queue backend.
+#[derive(Debug)]
+pub struct EngineImpl<Q> {
+    queue: Q,
     now: Time,
     seq: u64,
     processed: u64,
     clamped: u64,
 }
 
-impl Default for Engine {
+/// The production engine: calendar-queue backend (amortized O(1) per
+/// event, no steady-state allocation).
+pub type Engine = EngineImpl<CalendarQueue>;
+
+/// Heap-backed engine, for differential tests and the engine bench.
+pub type HeapEngine = EngineImpl<HeapQueue>;
+
+impl<Q: EventQueue + Default> Default for EngineImpl<Q> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Engine {
-    pub fn new() -> Engine {
-        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0, clamped: 0 }
+impl<Q: EventQueue + Default> EngineImpl<Q> {
+    pub fn new() -> EngineImpl<Q> {
+        EngineImpl {
+            queue: Q::default(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            clamped: 0,
+        }
     }
+}
 
+impl<Q: EventQueue> EngineImpl<Q> {
     /// Current virtual time.
     pub fn now(&self) -> Time {
         self.now
@@ -77,11 +122,11 @@ impl Engine {
 
     /// Pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.queue.len() == 0
     }
 
     /// Past-time schedules observed (and clamped) so far.
@@ -91,7 +136,7 @@ impl Engine {
 
     /// Schedule `event` at absolute time `at`. A past or non-finite `at`
     /// (NaN, ±inf — always a driver bug) is clamped to `now` and counted
-    /// in [`Engine::clamped_events`] — the SAME policy in debug and
+    /// in [`EngineImpl::clamped_events`] — the SAME policy in debug and
     /// release builds, with no assert, so a buggy timestamp can never
     /// change behavior between profiles or stall the drain at +inf.
     pub fn schedule(&mut self, at: Time, event: Event) {
@@ -103,7 +148,7 @@ impl Engine {
         };
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { at, seq, event });
+        self.queue.push(at, seq, event);
     }
 
     /// Schedule `event` `delay` seconds from now.
@@ -113,16 +158,16 @@ impl Engine {
 
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(Time, Event)> {
-        let e = self.heap.pop()?;
-        debug_assert!(e.at >= self.now);
-        self.now = e.at;
+        let (at, _, event) = self.queue.pop()?;
+        debug_assert!(at >= self.now);
+        self.now = at;
         self.processed += 1;
-        Some((e.at, e.event))
+        Some((at, event))
     }
 
     /// Peek the next event time without advancing.
     pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.at)
+        self.queue.peek_time()
     }
 }
 
@@ -252,5 +297,25 @@ mod tests {
         assert_eq!(e.pop().unwrap().0, 1.25);
         assert_eq!(e.pop().unwrap().0, 1.5);
         assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn heap_backend_honors_the_same_contract() {
+        // the reference backend behind the differential suite: same clamp
+        // policy (it lives in EngineImpl), same tie-breaking
+        let mut e = HeapEngine::new();
+        e.schedule(5.0, ev(0));
+        e.schedule(5.0, ev(1));
+        e.pop();
+        e.schedule(1.0, ev(2)); // past -> clamped to 5.0
+        e.schedule(f64::NAN, ev(3));
+        assert_eq!(e.clamped_events(), 2);
+        let got: Vec<u32> = std::iter::from_fn(|| e.pop())
+            .map(|(_, ev)| match ev {
+                Event::Heartbeat(NodeId(i)) => i,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(got, vec![1, 2, 3]);
     }
 }

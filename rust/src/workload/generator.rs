@@ -67,22 +67,31 @@ impl Default for WorkloadConfig {
     }
 }
 
-/// Generate the job stream. Deterministic in `cfg.seed`.
-pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
+/// Generate the job stream lazily. Deterministic in `cfg.seed` and
+/// RNG-identical to [`generate`] — collecting this iterator reproduces the
+/// eager vector bit for bit — but O(1) memory, so million-job runs feed
+/// the drivers' streaming constructors without materializing the specs.
+pub fn stream(cfg: &WorkloadConfig) -> impl Iterator<Item = JobSpec> {
     let mut arrivals = Pcg::new(cfg.seed, 1);
     let mut classes = Pcg::new(cfg.seed, 2);
     let mut shapes = Pcg::new(cfg.seed, 3);
 
-    let weights: Vec<f64> = cfg.mix.0.iter().map(|(_, w)| *w).collect();
+    let mix = cfg.mix.0.clone();
+    let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+    let arrival_rate = cfg.arrival_rate;
+    let n_users = cfg.n_users.max(1);
     let mut t = 0.0;
-    let mut specs = Vec::with_capacity(cfg.n_jobs);
-    for i in 0..cfg.n_jobs {
-        t += arrivals.exp(cfg.arrival_rate);
-        let class = cfg.mix.0[classes.weighted(&weights)].0;
-        let user_idx = classes.index(cfg.n_users.max(1));
-        specs.push(make_spec(i, class, user_idx, t, &mut shapes));
-    }
-    specs
+    (0..cfg.n_jobs).map(move |i| {
+        t += arrivals.exp(arrival_rate);
+        let class = mix[classes.weighted(&weights)].0;
+        let user_idx = classes.index(n_users);
+        make_spec(i, class, user_idx, t, &mut shapes)
+    })
+}
+
+/// Generate the job stream eagerly. Deterministic in `cfg.seed`.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
+    stream(cfg).collect()
 }
 
 fn jitter(rng: &mut Pcg, v: f64) -> f64 {
@@ -152,6 +161,21 @@ mod tests {
             assert_eq!(x.name, y.name);
             assert_eq!(x.submit_time, y.submit_time);
             assert_eq!(x.map_works, y.map_works);
+        }
+    }
+
+    #[test]
+    fn stream_matches_generate() {
+        let cfg = WorkloadConfig { n_jobs: 300, ..Default::default() };
+        let eager = generate(&cfg);
+        let lazy: Vec<JobSpec> = stream(&cfg).collect();
+        assert_eq!(eager.len(), lazy.len());
+        for (x, y) in eager.iter().zip(&lazy) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.submit_time, y.submit_time);
+            assert_eq!(x.map_works, y.map_works);
+            assert_eq!(x.reduce_works, y.reduce_works);
+            assert_eq!(x.user, y.user);
         }
     }
 

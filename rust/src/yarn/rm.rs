@@ -15,8 +15,6 @@
 //! truncates oversized batches. NodeManager failure injection mirrors the
 //! JobTracker's (exponential MTBF/MTTR).
 
-use std::collections::HashMap;
-
 use crate::analysis::protocol::{AuditEvent, AuditSink};
 use crate::bayes::classifier::Label;
 use crate::bayes::features::{feature_vec, FailureHistory};
@@ -82,7 +80,8 @@ impl Default for YarnConfig {
 /// Heavy classes under-declare more (the YARN failure mode we model).
 pub fn actual_factor(job: &crate::job::job::Job) -> f64 {
     let phi = 0.618_033_988_749_894_9_f64;
-    let noise = (job.id.0 as f64 * phi).fract(); // [0,1), deterministic
+    // keyed on the serial (submission number): stable under slot recycling
+    let noise = (job.id.serial as f64 * phi).fract(); // [0,1), deterministic
     use crate::job::profile::JobClass::*;
     match job.spec.class {
         CpuHeavy | MemHeavy => 1.0 + 0.5 * noise, // up to 1.5x declared
@@ -127,13 +126,14 @@ pub struct ResourceManager {
     /// Spec whose arrival event is in flight (submitted when it fires).
     next_spec: Option<JobSpec>,
     pending_feedback: Vec<Vec<PendingFeedback>>,
-    /// OOM-doomed attempts keyed by (node, task): excluded from completion
-    /// rescheduling so their pending TaskFail stays valid (same mechanism
-    /// as the MRv1 tracker).
-    doomed: std::collections::HashSet<(NodeId, TaskRef)>,
-    /// Launch-time feature rows of in-flight attempts (OOM kills feed back
-    /// a `Bad` sample for the row the decision was scored on).
-    inflight_feats: HashMap<(NodeId, TaskRef), crate::bayes::features::FeatureVec>,
+    /// OOM-doomed attempts, per node: excluded from completion
+    /// rescheduling so their pending TaskFail stays valid (same per-node
+    /// linear-scan layout as the MRv1 tracker — a node runs a handful of
+    /// containers, so scanning beats hashing and never allocates).
+    doomed: Vec<Vec<TaskRef>>,
+    /// Launch-time feature rows of in-flight attempts, per node (OOM kills
+    /// feed back a `Bad` sample for the row the decision was scored on).
+    inflight_feats: Vec<Vec<(TaskRef, crate::bayes::features::FeatureVec)>>,
     /// Failure-injection RNG (own stream: does not perturb workloads).
     fail_rng: crate::sim::rng::Pcg,
     arrivals_done: bool,
@@ -167,8 +167,8 @@ impl ResourceManager {
             pending_specs: specs.into_iter(),
             next_spec: None,
             pending_feedback: (0..n).map(|_| Vec::new()).collect(),
-            doomed: std::collections::HashSet::new(),
-            inflight_feats: HashMap::new(),
+            doomed: vec![Vec::new(); n],
+            inflight_feats: vec![Vec::new(); n],
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA17),
             arrivals_done: false,
             audit: AuditSink::default_for_build(),
@@ -292,13 +292,45 @@ impl ResourceManager {
 
     // --------------------------------------------------------- attempts --
 
+    fn doom_insert(&mut self, node: NodeId, tref: TaskRef) {
+        self.doomed[node.0 as usize].push(tref);
+    }
+
+    fn doom_remove(&mut self, node: NodeId, tref: &TaskRef) {
+        self.doomed[node.0 as usize].retain(|t| t != tref);
+    }
+
+    fn doom_contains(&self, node: NodeId, tref: &TaskRef) -> bool {
+        self.doomed[node.0 as usize].contains(tref)
+    }
+
+    fn feats_insert(
+        &mut self,
+        node: NodeId,
+        tref: TaskRef,
+        feats: crate::bayes::features::FeatureVec,
+    ) {
+        self.inflight_feats[node.0 as usize].push((tref, feats));
+    }
+
+    fn feats_remove(
+        &mut self,
+        node: NodeId,
+        tref: &TaskRef,
+    ) -> Option<crate::bayes::features::FeatureVec> {
+        let v = &mut self.inflight_feats[node.0 as usize];
+        let i = v.iter().position(|(t, _)| t == tref)?;
+        Some(v.swap_remove(i).1)
+    }
+
     fn current_attempt(
         &self,
         tref: &TaskRef,
         node: NodeId,
         generation: u32,
     ) -> Option<Attempt> {
-        let task = self.jobs.get(tref.job).task(tref);
+        // a released (reclaimed) job makes every in-flight event stale
+        let task = self.jobs.try_get(tref.job)?.task(tref);
         if let TaskState::Running { node: n, .. } = task.state {
             if n == node && task.generation == generation {
                 return Some(Attempt::Primary);
@@ -315,10 +347,12 @@ impl ResourceManager {
     /// `JobCompleted` (AM unregistration) only once the job's last attempt
     /// has drained — the contract that lets schedulers drop per-job state.
     fn notify_if_drained(&mut self, id: JobId) {
-        let job = self.jobs.get(id);
+        let Some(job) = self.jobs.try_get(id) else { return };
         if job.finish_time.is_some() && job.fully_drained() {
             self.emit(SchedEvent::JobCompleted { job: id });
             self.failures.forget_job(id);
+            // recycle the arena slot (no-op unless reclamation is enabled)
+            self.jobs.release(id);
         }
     }
 
@@ -326,8 +360,8 @@ impl ResourceManager {
     /// copy won (reported as `TaskFinished`, not a failure).
     fn cancel_attempt_on(&mut self, node_id: NodeId, tref: TaskRef, now: Time) {
         let horizons = self.release(&tref, node_id, now);
-        self.doomed.remove(&(node_id, tref));
-        self.inflight_feats.remove(&(node_id, tref));
+        self.doom_remove(node_id, &tref);
+        self.feats_remove(node_id, &tref);
         self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
         self.emit(SchedEvent::TaskFinished {
             job: tref.job,
@@ -348,8 +382,8 @@ impl ResourceManager {
         let lost = self.cluster.node_mut(node_id).fail(now);
         for rec in lost {
             let tref = rec.task;
-            self.doomed.remove(&(node_id, tref));
-            self.inflight_feats.remove(&(node_id, tref));
+            self.doom_remove(node_id, &tref);
+            self.feats_remove(node_id, &tref);
             self.failures.record_failure(tref.job, node_id, now);
             self.metrics.task_failures += 1;
             let task = self.jobs.get(tref.job).task(&tref);
@@ -551,7 +585,7 @@ impl ResourceManager {
         let fail = self.failures.feats_for(tref.job, node_id, now);
         let feats = feature_vec(&job.spec.profile, node_feats, fail);
         self.pending_feedback[node_id.0 as usize].push(PendingFeedback { feats });
-        self.inflight_feats.insert((node_id, tref), feats);
+        self.feats_insert(node_id, tref, feats);
 
         let dooms = self.cluster.node(node_id).would_oom(&actual);
         let generation = if speculative {
@@ -580,7 +614,7 @@ impl ResourceManager {
             self.cluster.node_mut(node_id).add_task(tref, actual, work, now);
         if dooms {
             self.cluster.node_mut(node_id).oom_kills += 1;
-            self.doomed.insert((node_id, tref));
+            self.doom_insert(node_id, tref);
             self.engine.schedule(
                 now + 4.0,
                 Event::TaskFail { node: node_id, task: tref, generation },
@@ -593,7 +627,7 @@ impl ResourceManager {
     /// per-attempt stamps (doomed attempts keep their pending TaskFail).
     fn reschedule(&mut self, node_id: NodeId, horizons: Vec<(TaskRef, Time)>) {
         for (tref, at) in horizons {
-            if self.doomed.contains(&(node_id, tref)) {
+            if self.doom_contains(node_id, &tref) {
                 continue;
             }
             let task = self.jobs.get_mut(tref.job).task_mut(&tref);
@@ -633,8 +667,8 @@ impl ResourceManager {
         };
         let now = self.engine.now();
         let horizons = self.release(&tref, node_id, now);
-        self.doomed.remove(&(node_id, tref));
-        self.inflight_feats.remove(&(node_id, tref));
+        self.doom_remove(node_id, &tref);
+        self.feats_remove(node_id, &tref);
         match which {
             Attempt::Primary => {
                 if let Some(s) = self.jobs.get(tref.job).task(&tref).speculative {
@@ -667,7 +701,7 @@ impl ResourceManager {
             // Some by construction: mark_complete just set finish_time
             // lint: allow(unwrap-in-lib)
             let outcome = self.jobs.get(tref.job).outcome().unwrap();
-            self.metrics.record_outcome(tref.job, outcome);
+            self.metrics.record_outcome(outcome);
         }
         self.notify_if_drained(tref.job);
         self.reschedule(node_id, horizons);
@@ -679,11 +713,11 @@ impl ResourceManager {
         };
         let now = self.engine.now();
         let horizons = self.release(&tref, node_id, now);
-        self.doomed.remove(&(node_id, tref));
+        self.doom_remove(node_id, &tref);
         self.failures.record_failure(tref.job, node_id, now);
         self.metrics.task_failures += 1;
         self.audit.push(AuditEvent::Ended { task: tref, node: node_id });
-        if let Some(feats) = self.inflight_feats.remove(&(node_id, tref)) {
+        if let Some(feats) = self.feats_remove(node_id, &tref) {
             self.emit(SchedEvent::Feedback { feats, label: Label::Bad });
             self.metrics.record_feedback(Label::Bad);
         }
@@ -760,12 +794,12 @@ mod tests {
             assert!(rm.jobs.all_complete(), "{p} left jobs unfinished");
             // jobs either succeed or are killed after max attempts
             assert_eq!(
-                rm.metrics.outcomes.len() + rm.jobs.failed_count(),
+                rm.metrics.completed_jobs() + rm.jobs.failed_count(),
                 12,
                 "{p}"
             );
             // the bulk of the workload must still succeed
-            assert!(rm.metrics.outcomes.len() >= 8, "{p}");
+            assert!(rm.metrics.completed_jobs() >= 8, "{p}");
         }
     }
 

@@ -48,11 +48,11 @@ fn fixture() -> Fixture {
     jobs.submit(spec("d", "u1", JobClass::Small, 2, 2), &mut hdfs);
     // drive job 3 (id 3) through its map phase
     for index in 0..2 {
-        let t = TaskRef { job: JobId(3), kind: TaskKind::Map, index };
+        let t = TaskRef { job: JobId::dense(3), kind: TaskKind::Map, index };
         jobs.start_task(&t, NodeId(0), 1.0);
         jobs.complete_task(&t, 5.0);
     }
-    assert!(jobs.get(JobId(3)).maps_complete());
+    assert!(jobs.get(JobId::dense(3)).maps_complete());
     Fixture { jobs, hdfs }
 }
 
@@ -199,24 +199,24 @@ fn observe_tolerates_any_event_interleaving() {
     let r = TaskKind::Reduce;
     let events = [
         // never started
-        SchedEvent::TaskFinished { job: JobId(9), node: n7, kind: r },
+        SchedEvent::TaskFinished { job: JobId::dense(9), node: n7, kind: r },
         SchedEvent::Feedback { feats: [9; N_FEATURES], label: Label::Bad },
-        SchedEvent::JobCompleted { job: JobId(5) }, // never seen
-        SchedEvent::TaskStarted { job: JobId(0), node: n0, kind: m },
+        SchedEvent::JobCompleted { job: JobId::dense(5) }, // never seen
+        SchedEvent::TaskStarted { job: JobId::dense(0), node: n0, kind: m },
         SchedEvent::ClusterInfo { total_slots: 64 },
-        SchedEvent::TaskFinished { job: JobId(0), node: n0, kind: m },
+        SchedEvent::TaskFinished { job: JobId::dense(0), node: n0, kind: m },
         // more finishes than starts
-        SchedEvent::TaskFinished { job: JobId(0), node: n0, kind: m },
+        SchedEvent::TaskFinished { job: JobId::dense(0), node: n0, kind: m },
         // failures for jobs/nodes never seen, in every flavour
         SchedEvent::TaskFailed {
-            job: JobId(3),
+            job: JobId::dense(3),
             node: n7,
             kind: m,
             attempt: 9,
             reason: FailReason::Oom,
         },
         SchedEvent::TaskFailed {
-            job: JobId(11),
+            job: JobId::dense(11),
             node: n0,
             kind: r,
             attempt: 1,
@@ -322,7 +322,7 @@ fn every_scheduler_survives_node_churn_under_both_drivers() {
         jt.run();
         assert!(jt.jobs.all_complete(), "{name}: churn stalled the tracker");
         assert_eq!(
-            jt.metrics.outcomes.len() + jt.jobs.failed_count(),
+            jt.metrics.completed_jobs() + jt.jobs.failed_count(),
             14,
             "{name}: jobs neither completed nor killed"
         );

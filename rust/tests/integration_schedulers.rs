@@ -45,7 +45,7 @@ fn fifo_priority_beats_submission_order() {
         TrackerConfig::default(),
     );
     jt.run();
-    let high_launch = jt.jobs.get(bayes_sched::job::JobId(11)).first_launch.unwrap();
+    let high_launch = jt.jobs.get(bayes_sched::job::JobId::dense(11)).first_launch.unwrap();
     // at least one earlier-submitted Normal job should launch after it
     let later = jt
         .jobs

@@ -106,7 +106,7 @@ fn mem_heavy_overload_causes_ooms_and_they_recover() {
     assert!(jt.metrics.oom_kills > 0, "expected OOM kills in this workload");
     assert_eq!(jt.jobs.failed_count() as u64, jt.metrics.failed_jobs);
     assert_eq!(
-        jt.metrics.outcomes.len() + jt.jobs.failed_count(),
+        jt.metrics.completed_jobs() + jt.jobs.failed_count(),
         jt.jobs.len()
     );
     // nodes fully drained

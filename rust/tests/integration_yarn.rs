@@ -26,11 +26,11 @@ fn workload_completes_under_all_policies() {
         assert!(rm.jobs.all_complete(), "{p}");
         // success + max-attempts kills account for every job
         assert_eq!(
-            rm.metrics.outcomes.len() + rm.jobs.failed_count(),
+            rm.metrics.completed_jobs() + rm.jobs.failed_count(),
             30,
             "{p}"
         );
-        assert!(rm.metrics.outcomes.len() >= 24, "{p} failed too many jobs");
+        assert!(rm.metrics.completed_jobs() >= 24, "{p} failed too many jobs");
     }
 }
 

@@ -47,7 +47,7 @@ fn prop_all_jobs_complete_under_every_scheduler() {
         assert!(jt.jobs.all_complete(), "{sched_name} stalled");
         // every job terminates: success (outcome) or max-attempts kill
         assert_eq!(
-            jt.metrics.outcomes.len() + jt.jobs.failed_count(),
+            jt.metrics.completed_jobs() + jt.jobs.failed_count(),
             n_specs,
             "{sched_name}"
         );
@@ -201,7 +201,7 @@ fn prop_node_work_conservation() {
                 || (g.rng.chance(0.6) && node.free_slots(TaskKind::Map) > 0);
             if add {
                 let tref =
-                    TaskRef { job: JobId(0), kind: TaskKind::Map, index: next_idx };
+                    TaskRef { job: JobId::dense(0), kind: TaskKind::Map, index: next_idx };
                 next_idx += 1;
                 let demand = Resources::new(
                     g.float(0.05, 0.9),
