@@ -32,7 +32,7 @@ fn main() {
     }
 
     println!("\n== E1 efficiency table ==");
-    let opts = ExpOpts { quick: false, out_dir: Some("results".into()) };
+    let opts = ExpOpts { quick: false, out_dir: Some("results".into()), ..Default::default() };
     for t in experiments::run("e1", &opts).unwrap() {
         println!("{}", t.render());
     }

@@ -130,7 +130,7 @@ fn main() {
     }
 
     println!("\n== E6 scalability table ==");
-    let opts = ExpOpts { quick: smoke(), out_dir: Some("results".into()) };
+    let opts = ExpOpts { quick: smoke(), out_dir: Some("results".into()), ..Default::default() };
     for t in experiments::run("e6", &opts).unwrap() {
         println!("{}", t.render());
     }

@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 
 use bayes_sched::cluster::node::NodeId;
 use bayes_sched::config::json::Json;
+use bayes_sched::obs::Registry;
 use bayes_sched::report::bench::{bench, fmt_ns, Measurement};
 use bayes_sched::sim::engine::EngineImpl;
 use bayes_sched::sim::{Event, EventQueue, Pcg};
@@ -51,6 +52,31 @@ fn hold_bench<Q: EventQueue + Default>(
     })
 }
 
+/// The hold loop on the calendar queue with the obs record path live: one
+/// counter bump plus one histogram record per hold, the same shape the
+/// instrumented engine/driver hot paths pay. The delta against the plain
+/// calendar arm is the observability overhead CI bounds (<5%).
+fn obs_hold_bench(pending: usize, warmup: usize, iters: usize) -> Measurement {
+    let mut e: EngineImpl<bayes_sched::sim::CalendarQueue> = EngineImpl::new();
+    let mut rng = Pcg::seeded(7);
+    for i in 0..pending {
+        e.schedule(rng.range_f64(0.0, 1.5), Event::Heartbeat(NodeId(i as u32)));
+    }
+    let registry = Registry::new();
+    registry.set_enabled(true);
+    let dispatched = registry.counter("engine_events_dispatched");
+    let hold_nanos = registry.histogram("bench_hold_nanos");
+    bench(&format!("hold/calendar+obs/{pending}"), warmup, iters, move |_| {
+        for _ in 0..HOLDS_PER_ITER {
+            let (t, ev) = e.pop().unwrap();
+            dispatched.inc();
+            hold_nanos.record(t.to_bits() & 0xFFFF);
+            e.schedule(t + rng.range_f64(0.5, 1.5), ev);
+        }
+        std::hint::black_box(e.now());
+    })
+}
+
 fn main() {
     println!("== engine hold throughput: calendar queue vs binary heap ==");
     let sizes: &[usize] = if smoke() {
@@ -73,18 +99,25 @@ fn main() {
             warmup,
             iters,
         );
+        let obs = obs_hold_bench(n, warmup, iters);
         let heap_ns = heap.mean_ns / HOLDS_PER_ITER as f64;
         let cal_ns = cal.mean_ns / HOLDS_PER_ITER as f64;
+        let obs_ns = obs.mean_ns / HOLDS_PER_ITER as f64;
         let speedup = heap_ns / cal_ns.max(1e-9);
+        let obs_overhead_pct = (obs_ns - cal_ns) / cal_ns.max(1e-9) * 100.0;
         println!(
-            "  -> pending {n:>7}: heap {}/ev vs calendar {}/ev ({speedup:.2}x)",
+            "  -> pending {n:>7}: heap {}/ev vs calendar {}/ev ({speedup:.2}x), \
+             +obs {}/ev ({obs_overhead_pct:.1}% overhead)",
             fmt_ns(heap_ns),
             fmt_ns(cal_ns),
+            fmt_ns(obs_ns),
         );
         let mut entry = BTreeMap::new();
         entry.insert("heap_ns".to_string(), Json::Num(heap_ns));
         entry.insert("calendar_ns".to_string(), Json::Num(cal_ns));
         entry.insert("speedup".to_string(), Json::Num(speedup));
+        entry.insert("obs_ns".to_string(), Json::Num(obs_ns));
+        entry.insert("obs_overhead_pct".to_string(), Json::Num(obs_overhead_pct));
         results.insert(format!("pending_{n}"), Json::Obj(entry));
     }
     let mut doc = BTreeMap::new();

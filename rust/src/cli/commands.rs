@@ -23,11 +23,11 @@ USAGE:
                    [--jobs J] [--rate R] [--seed S] [--mix M] [--csv DIR]
                    [--mtbf SECS] [--mttr SECS] [--timeline FILE.csv]
                    [--save-model FILE.json] [--load-model FILE.json]
-                   [--record-events FILE.jsonl] [--explain]
+                   [--record-events FILE.jsonl] [--explain] [obs flags]
   repro compare    [--jobs J] [--nodes N] [--seeds K] [--quick]
-  repro experiment <e1..e12|all> [--quick] [--out DIR]
+  repro experiment <e1..e12|all> [--quick] [--out DIR] [obs flags]
   repro yarn       [--policy P] [--jobs J] [--nodes N] [--seed S] [--explain]
-                   [--mtbf SECS] [--mttr SECS]
+                   [--mtbf SECS] [--mttr SECS] [obs flags]
   repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
   repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
   repro lint       [--root DIR] [--trace FILE.jsonl] [--skip-churn]
@@ -38,11 +38,19 @@ Schedulers: fifo fair capacity bayes bayes-blind bayes-xla random
 Policies:   any scheduler name (unified trait), plus the yarn-fifo,
             yarn-fair, yarn-capacity, yarn-bayes aliases
 Mixes:      balanced | cpu_heavy|io_heavy|mem_heavy|net_heavy|small | cpu:<f>
+Obs flags:  --obs-dump FILE.prom (Prometheus text snapshot)
+            --obs-trace FILE.json (chrome://tracing spans)
+            --obs-jsonl FILE.jsonl (metrics + spans, one JSON per line)
+            --obs-sample N (keep every Nth duration span, default 1)
+            --verbose (enable warn/info driver logs, off by default)
 ";
 
 /// Dispatch a full command line (without argv[0]). Returns process exit code.
 pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
     let args = Args::parse(raw, &["quick", "verbose", "explain", "skip-churn"])?;
+    if args.flag("verbose") {
+        crate::obs::log::set_level(crate::obs::log::INFO);
+    }
     let Some(cmd) = args.positionals.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(2);
@@ -105,7 +113,19 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     if let Some(p) = args.opt("load-model") {
         cfg.model_path = Some(PathBuf::from(p));
     }
+    cfg.obs = obs_from_args(args)?;
     Ok(cfg)
+}
+
+/// Parse the shared `--obs-*` observability flags.
+fn obs_from_args(args: &Args) -> Result<crate::obs::ObsOptions> {
+    Ok(crate::obs::ObsOptions {
+        dump: args.opt("obs-dump").map(PathBuf::from),
+        trace: args.opt("obs-trace").map(PathBuf::from),
+        jsonl: args.opt("obs-jsonl").map(PathBuf::from),
+        sample: args.opt_u64("obs-sample", 1)?.max(1),
+        verbose: args.flag("verbose"),
+    })
 }
 
 fn summary_table(rows: &[crate::report::experiments::common::RunSummary]) -> Table {
@@ -157,9 +177,22 @@ fn cmd_run(args: &Args) -> Result<i32> {
     if args.opt("record-events").is_some() {
         jt.set_audit(crate::analysis::protocol::AuditSink::recording());
     }
-    let t0 = std::time::Instant::now();
+    if cfg.obs.any_output() {
+        jt.enable_obs(&cfg.obs);
+    }
+    let t0 = crate::obs::Stopwatch::start();
     jt.run();
-    let wall = t0.elapsed();
+    let wall = t0.elapsed_secs();
+    jt.finish_obs(&cfg.obs)?;
+    for (p, what) in [
+        (&cfg.obs.dump, "prometheus snapshot"),
+        (&cfg.obs.trace, "chrome trace"),
+        (&cfg.obs.jsonl, "obs jsonl"),
+    ] {
+        if let Some(p) = p {
+            println!("wrote {what} to {}", p.display());
+        }
+    }
     if let Some(path) = args.opt("record-events") {
         let events = jt.audit.take_recording();
         std::fs::write(path, crate::analysis::trace::to_jsonl(&events))?;
@@ -171,7 +204,7 @@ fn cmd_run(args: &Args) -> Result<i32> {
     println!(
         "virtual makespan {:.1}s simulated in {:.2}s wall ({} events, {} heartbeats)",
         jt.metrics.makespan,
-        wall.as_secs_f64(),
+        wall,
         jt.engine.processed(),
         jt.metrics.heartbeats
     );
@@ -224,7 +257,7 @@ fn print_explain(m: &crate::metrics::Metrics, args: &Args) {
     println!(
         "decision trace: {} assignments over {} heartbeat batches",
         m.decision_log.len(),
-        m.assign_calls
+        m.assign_calls()
     );
     for rec in &m.decision_log {
         println!("  {rec}");
@@ -254,6 +287,7 @@ fn cmd_experiment(args: &Args) -> Result<i32> {
     let opts = ExpOpts {
         quick: args.flag("quick"),
         out_dir: args.opt("out").map(PathBuf::from),
+        obs: obs_from_args(args)?,
     };
     let ids: Vec<&str> = if id == "all" {
         experiments::ALL.to_vec()
@@ -261,13 +295,13 @@ fn cmd_experiment(args: &Args) -> Result<i32> {
         vec![id.as_str()]
     };
     for id in ids {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::obs::Stopwatch::start();
         let tables = experiments::run(id, &opts)
             .ok_or_else(|| anyhow!("unknown experiment '{id}'"))?;
         for t in &tables {
             println!("{}", t.render());
         }
-        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+        println!("[{id} took {:.1}s]\n", t0.elapsed_secs());
     }
     Ok(0)
 }
@@ -297,7 +331,12 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
         ycfg,
     );
     rm.metrics.explain = args.flag("explain");
+    let obs = obs_from_args(args)?;
+    if obs.any_output() {
+        rm.enable_obs(&obs);
+    }
     rm.run();
+    rm.finish_obs(&obs)?;
     let m = &rm.metrics;
     let mut t = Table::new(
         "yarn run",

@@ -30,6 +30,10 @@ pub struct RunConfig {
     pub artifacts_dir: Option<std::path::PathBuf>,
     /// Warm-start model for `bayes` (JSON from `--save-model`).
     pub model_path: Option<std::path::PathBuf>,
+    /// Observability layer (`--obs-*` flags). Disabled by default; when
+    /// any exporter output is requested the run drivers call
+    /// `enable_obs`/`finish_obs` around `run()`.
+    pub obs: crate::obs::ObsOptions,
 }
 
 impl Default for RunConfig {
@@ -44,6 +48,7 @@ impl Default for RunConfig {
             starvation_wait: false,
             artifacts_dir: None,
             model_path: None,
+            obs: crate::obs::ObsOptions::default(),
         }
     }
 }

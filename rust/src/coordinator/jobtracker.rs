@@ -15,8 +15,6 @@
 //! launches it like any attempt; the first copy to complete wins and the
 //! loser is cancelled through per-attempt event stamps.
 
-use std::time::Instant;
-
 use crate::analysis::protocol::{AuditEvent, AuditSink};
 use crate::bayes::classifier::Label;
 use crate::bayes::features::FailureHistory;
@@ -31,8 +29,9 @@ use crate::job::queue::JobTable;
 use crate::job::task::{TaskKind, TaskRef, TaskState};
 use crate::job::JobId;
 use crate::metrics::Metrics;
+use crate::obs::{DriverObs, ObsOptions, Stopwatch};
 use crate::scheduler::api::{
-    Assignment, FailReason, SchedEvent, SchedView, Scheduler, SlotBudget,
+    Assignment, FailReason, OBS_EVENT_NAMES, SchedEvent, SchedView, Scheduler, SlotBudget,
 };
 use crate::sim::engine::{Engine, Time};
 use crate::sim::event::Event;
@@ -152,6 +151,10 @@ pub struct JobTracker {
     /// launch/end records flow through here. Debug builds shadow-audit by
     /// default; release builds run disabled (zero overhead).
     pub audit: AuditSink,
+    /// Observability tap (event counters, latency histograms, span
+    /// tracer). Disabled — a single `Option` check per use — until
+    /// [`JobTracker::enable_obs`].
+    pub obs: DriverObs,
 }
 
 impl JobTracker {
@@ -207,6 +210,7 @@ impl JobTracker {
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA11),
             arrivals_done: false,
             audit: AuditSink::default_for_build(),
+            obs: DriverObs::default(),
         };
         jt.jobs.set_reclaim(reclaim);
         jt.emit_preamble();
@@ -229,6 +233,7 @@ impl JobTracker {
     /// event from the protocol auditor.
     fn emit(&mut self, ev: SchedEvent) {
         self.audit.sched(&ev);
+        self.obs.on_event(ev.obs_index(), ev.obs_name(), self.engine.now());
         self.scheduler.observe(&ev);
     }
 
@@ -263,6 +268,28 @@ impl JobTracker {
         self.audit = sink;
     }
 
+    /// Switch on the observability layer: event counters, driver latency
+    /// histograms, and the span tracer, plus whatever the installed
+    /// scheduler registers for itself. Call before `run()`.
+    pub fn enable_obs(&mut self, opts: &ObsOptions) {
+        let registry = self.obs.enable(opts, &OBS_EVENT_NAMES);
+        self.scheduler.install_obs(&registry);
+        self.metrics.install_obs(&registry);
+    }
+
+    /// Drain engine counters into gauges and write every exporter file
+    /// requested in `opts`. Call after `run()`; a no-op when obs was
+    /// never enabled.
+    pub fn finish_obs(&mut self, opts: &ObsOptions) -> crate::errors::Result<()> {
+        if let Some((registry, tracer)) = self.obs.finish() {
+            registry.gauge("engine_events_dispatched").set(self.engine.processed());
+            registry.gauge("engine_clamped_events").set(self.engine.clamped_events());
+            registry.gauge("engine_bucket_scan_steps").set(self.engine.scan_steps());
+            crate::obs::export::write_all(opts, &registry, &tracer)?;
+        }
+        Ok(())
+    }
+
     fn schedule_next_failure(&mut self, node: NodeId) {
         if let Some(mtbf) = self.cfg.failures.mtbf {
             let dt = self.fail_rng.exp(1.0 / mtbf);
@@ -295,7 +322,8 @@ impl JobTracker {
     pub fn run(&mut self) -> Time {
         while let Some((t, ev)) = self.engine.pop() {
             if t > self.cfg.max_sim_time {
-                eprintln!(
+                crate::obs_log!(
+                    crate::obs::log::WARN,
                     "warning: hit max_sim_time with {} active jobs",
                     self.jobs.active_count()
                 );
@@ -514,6 +542,7 @@ impl JobTracker {
             return; // dead node: heartbeats resume on recovery
         }
         let now = self.engine.now();
+        let hb_sw = self.obs.is_enabled().then(Stopwatch::start);
         self.metrics.heartbeats += 1;
         self.cluster.node_mut(node_id).advance(now);
 
@@ -534,12 +563,15 @@ impl JobTracker {
         // call happens even with an empty pending queue: schedulers with a
         // straggler path propose speculative copies exactly when nothing
         // is pending but slow attempts are still running.
-        let budget = {
+        let (budget, node_total_slots) = {
             let node = self.cluster.node(node_id);
-            SlotBudget {
-                maps: node.free_slots(TaskKind::Map),
-                reduces: node.free_slots(TaskKind::Reduce),
-            }
+            (
+                SlotBudget {
+                    maps: node.free_slots(TaskKind::Map),
+                    reduces: node.free_slots(TaskKind::Reduce),
+                },
+                node.spec.map_slots + node.spec.reduce_slots,
+            )
         };
         // reuse the scratch buffer for the (possibly capped) queue view —
         // no per-heartbeat allocation once the buffer is warm
@@ -559,10 +591,10 @@ impl JobTracker {
                 };
                 let node = self.cluster.node(node_id);
                 // real (not virtual) time: measures the scheduler's own
-                // compute cost for E6 -- lint: allow(wallclock-in-sim)
-                let t0 = Instant::now();
+                // compute cost for E6
+                let sw = Stopwatch::start();
                 let out = self.scheduler.assign(&view, node, budget);
-                (out, t0.elapsed().as_nanos())
+                (out, sw.elapsed_nanos())
             };
             let mut launched = 0usize;
             for a in assignments {
@@ -591,6 +623,14 @@ impl JobTracker {
             }
             // metrics count what actually launched, not what was proposed
             self.metrics.record_assign(assign_nanos, launched);
+            if self.obs.is_enabled() {
+                let total = u64::from(node_total_slots);
+                let free = u64::from(budget.total());
+                let util_pct =
+                    if total == 0 { 0 } else { (total - free) * 100 / total };
+                self.obs
+                    .record_assign(now, assign_nanos, launched, queue.len(), util_pct);
+            }
         }
         self.queue_scratch = queue;
 
@@ -600,6 +640,9 @@ impl JobTracker {
                 self.cfg.heartbeat.next_beat(now),
                 Event::Heartbeat(node_id),
             );
+        }
+        if let Some(sw) = hb_sw {
+            self.obs.record_heartbeat(now, sw.elapsed_nanos());
         }
     }
 

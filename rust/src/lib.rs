@@ -12,8 +12,9 @@
 //! * the contribution — [`bayes`], [`scheduler`]
 //! * runtime — [`runtime`] (PJRT), [`coordinator`] (JobTracker loop)
 //! * extension — [`yarn`] (RM/NM/AM mode)
-//! * tooling — [`config`], [`cli`], [`metrics`], [`report`], [`testkit`],
-//!   [`analysis`] (`repro lint` + SchedEvent protocol auditor)
+//! * tooling — [`config`], [`cli`], [`metrics`], [`obs`] (registry +
+//!   span tracing + exporters), [`report`], [`testkit`], [`analysis`]
+//!   (`repro lint` + SchedEvent protocol auditor)
 
 pub mod analysis;
 pub mod bayes;
@@ -25,6 +26,7 @@ pub mod errors;
 pub mod hdfs;
 pub mod job;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;

@@ -92,10 +92,13 @@ pub struct Metrics {
     pub timeline: super::timeline::Timeline,
     /// Scheduling decisions taken (tasks assigned).
     pub decisions: u64,
-    /// Wall-clock nanoseconds spent inside scheduler assign() calls.
-    pub decision_nanos: u128,
-    /// Batched assign() invocations (at most one per heartbeat).
-    pub assign_calls: u64,
+    /// Wall-clock time spent inside scheduler assign() calls: a
+    /// log-bucketed histogram whose exact count/sum pair doubles as the
+    /// old `assign_calls`/`decision_nanos` accumulators. Detached (and
+    /// always-on) by default; [`Metrics::install_obs`] swaps in the
+    /// registry's `driver_assign_nanos` so the same recordings feed the
+    /// experiment tables AND every obs exporter from one code path.
+    assign_latency: crate::obs::Histogram,
     /// When true, every assignment's [`Decision`] lands in `decision_log`
     /// (the `--explain` trace).
     pub explain: bool,
@@ -163,10 +166,23 @@ impl Metrics {
     }
 
     /// Account one batched assign() call that produced `assigned` tasks.
-    pub fn record_assign(&mut self, nanos: u128, assigned: usize) {
-        self.assign_calls += 1;
+    pub fn record_assign(&mut self, nanos: u64, assigned: usize) {
         self.decisions += assigned as u64;
-        self.decision_nanos += nanos;
+        self.assign_latency.record(nanos);
+    }
+
+    /// Re-point the assign-latency histogram at an obs registry (as
+    /// `driver_assign_nanos`), so decision-latency numbers in the
+    /// experiment tables and the exporters come from one recording.
+    /// Call before the run starts: any prior recordings stay behind on
+    /// the detached histogram.
+    pub fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.assign_latency = registry.histogram("driver_assign_nanos");
+    }
+
+    /// Batched assign() invocations (at most one per heartbeat).
+    pub fn assign_calls(&self) -> u64 {
+        self.assign_latency.count()
     }
 
     /// Keep one assignment's decision for the `--explain` trace.
@@ -250,18 +266,14 @@ impl Metrics {
         if self.decisions == 0 {
             0.0
         } else {
-            self.decision_nanos as f64 / self.decisions as f64 / 1000.0
+            self.assign_latency.sum() as f64 / self.decisions as f64 / 1000.0
         }
     }
 
     /// Mean per-heartbeat batch latency in microseconds (one assign() call
     /// scores the queue once and fills every free slot).
     pub fn mean_assign_micros(&self) -> f64 {
-        if self.assign_calls == 0 {
-            0.0
-        } else {
-            self.decision_nanos as f64 / self.assign_calls as f64 / 1000.0
-        }
+        self.assign_latency.mean() / 1000.0
     }
 
     /// Wasted task attempts across all jobs (failure re-runs, exact).
@@ -359,10 +371,25 @@ mod tests {
         let mut m = Metrics::new();
         m.record_assign(2000, 1);
         m.record_assign(4000, 2);
-        assert_eq!(m.assign_calls, 2);
+        assert_eq!(m.assign_calls(), 2);
         assert_eq!(m.decisions, 3);
         assert_eq!(m.mean_assign_micros(), 3.0);
         assert_eq!(m.mean_decision_micros(), 2.0);
+    }
+
+    #[test]
+    fn install_obs_routes_assign_latency_into_the_registry() {
+        let registry = crate::obs::Registry::new();
+        let mut m = Metrics::new();
+        m.record_assign(999, 1); // stays behind on the detached histogram
+        m.install_obs(&registry);
+        m.record_assign(2000, 1);
+        m.record_assign(4000, 2);
+        assert_eq!(m.assign_calls(), 2);
+        assert_eq!(m.mean_assign_micros(), 3.0);
+        let h = registry.histogram("driver_assign_nanos");
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 6000);
     }
 
     #[test]

@@ -1,0 +1,66 @@
+//! The one sanctioned wall-clock site in the library.
+//!
+//! Everything under `rust/src/` except `obs/` is forbidden from touching
+//! `Instant::now` / `SystemTime::now` (the `wallclock-in-sim` lint
+//! enforces it): simulation time flows from `Engine::now`, and stray
+//! wall-clock reads break determinism. Code that genuinely needs wall
+//! time — latency instrumentation, span tracing, bench harnesses — goes
+//! through [`Stopwatch`] and [`wall_micros_since_start`] instead, so
+//! every wall-clock read in the tree is greppable to this file.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Wall-clock interval timer.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    started: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            started: Instant::now(),
+        }
+    }
+
+    /// Nanoseconds since `start()`, saturating at `u64::MAX` (~585 years).
+    pub fn elapsed_nanos(&self) -> u64 {
+        let nanos = self.started.elapsed().as_nanos();
+        nanos.min(u128::from(u64::MAX)) as u64
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since this function was first called in the process —
+/// the shared zero point for every span's `ts` in a chrome trace.
+pub fn wall_micros_since_start() -> u64 {
+    let t0 = PROCESS_START.get_or_init(Instant::now);
+    t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_nanos();
+        let b = sw.elapsed_nanos();
+        assert!(b >= a);
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn wall_anchor_is_monotone() {
+        let a = wall_micros_since_start();
+        let b = wall_micros_since_start();
+        assert!(b >= a);
+    }
+}

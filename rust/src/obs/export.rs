@@ -1,0 +1,427 @@
+//! The three exporters: Prometheus text snapshot, chrome://tracing JSON,
+//! and a versioned JSONL event stream (same codec conventions as
+//! `analysis/trace.rs`: one compact object per line, `"ev"` tag,
+//! versioned header). Each format has a parse helper so round-trips are
+//! testable without external tooling.
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+use crate::errors::{Context, Result};
+
+use super::registry::{bucket_upper, HistSnapshot, Registry, Snapshot};
+use super::span::Tracer;
+use super::ObsOptions;
+
+/// Version stamp of the JSONL obs stream (`{"ev":"obs","version":1}`).
+pub const OBS_VERSION: u64 = 1;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(n: impl Into<f64>) -> Json {
+    Json::Num(n.into())
+}
+
+// u64 has no Into<f64>; counts above 2^53 lose precision in JSON, which
+// is acceptable for observability payloads (the .prom snapshot is exact).
+fn numu(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+// ---------------------------------------------------------------- prom
+
+/// Render a Prometheus text-format snapshot. Histograms emit cumulative
+/// `_bucket{le="..."}` samples at power-of-two bounds (empty buckets are
+/// skipped; `+Inf` always present) plus exact `_sum` / `_count`.
+pub fn to_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, h) in &snap.histograms {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, n) in h.buckets.iter().enumerate() {
+            if *n == 0 {
+                continue;
+            }
+            cum += n;
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                bucket_upper(i)
+            ));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{name}_sum {}\n", h.sum));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+/// Parse a Prometheus text snapshot back into `sample name -> value`
+/// (label suffixes like `{le="3"}` stay part of the key). Every
+/// non-comment line must be `name value`.
+pub fn parse_prometheus(text: &str) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(' ')
+            .with_context(|| format!("prom line {}: no value", lineno + 1))?;
+        let value: f64 = value
+            .parse()
+            .with_context(|| format!("prom line {}: bad value", lineno + 1))?;
+        out.insert(name.to_string(), value);
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------- chrome trace
+
+/// Render a chrome://tracing (Trace Event Format) document: sampled
+/// duration spans become `"ph":"X"` complete events, unsampled instants
+/// become `"ph":"i"` events, both with `ts`/`dur` in wall microseconds
+/// and the sim-time stamps under `args`.
+pub fn to_chrome_trace(tracer: &Tracer) -> String {
+    let mut events = Vec::new();
+    for sp in tracer.spans() {
+        events.push(obj(vec![
+            ("name", s(sp.name)),
+            ("ph", s("X")),
+            ("ts", numu(sp.wall_start_us)),
+            ("dur", numu(sp.wall_dur_us)),
+            ("pid", num(1u32)),
+            ("tid", num(1u32)),
+            (
+                "args",
+                obj(vec![
+                    ("sim_start", Json::Num(sp.sim_start)),
+                    ("sim_end", Json::Num(sp.sim_end)),
+                ]),
+            ),
+        ]));
+    }
+    for iv in tracer.instants() {
+        events.push(obj(vec![
+            ("name", s(iv.name)),
+            ("ph", s("i")),
+            ("ts", numu(iv.wall_us)),
+            ("pid", num(1u32)),
+            ("tid", num(1u32)),
+            ("s", s("t")),
+            ("args", obj(vec![("sim_time", Json::Num(iv.sim_time))])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", s("ms")),
+    ])
+    .to_string_compact()
+}
+
+/// Parse a chrome trace and count events per `(ph, name)`. The keys look
+/// like `"i:sched_ev_task_started"` / `"X:heartbeat"` — what the
+/// acceptance check compares against `SchedEvent` totals.
+pub fn chrome_event_counts(text: &str) -> Result<BTreeMap<String, u64>> {
+    let doc = Json::parse(text).context("chrome trace")?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .context("chrome trace: no traceEvents array")?;
+    let mut out: BTreeMap<String, u64> = BTreeMap::new();
+    for ev in events {
+        let name = ev
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("chrome trace: event without name")?;
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .context("chrome trace: event without ph")?;
+        *out.entry(format!("{ph}:{name}")).or_insert(0) += 1;
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------- jsonl
+
+fn hist_json(name: &str, h: &HistSnapshot) -> Json {
+    // sparse bucket encoding: [index, count] pairs for non-empty buckets
+    let buckets: Vec<Json> = h
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| **n > 0)
+        .map(|(i, n)| Json::Arr(vec![num(i as f64), numu(*n)]))
+        .collect();
+    obj(vec![
+        ("ev", s("hist")),
+        ("name", s(name)),
+        ("count", numu(h.count)),
+        ("sum", numu(h.sum)),
+        ("buckets", Json::Arr(buckets)),
+    ])
+}
+
+/// Serialize the whole observation of a run — metric snapshot plus span
+/// stream — as versioned JSONL.
+pub fn to_jsonl(snap: &Snapshot, tracer: &Tracer) -> String {
+    let mut out = String::new();
+    let mut push = |j: Json| {
+        out.push_str(&j.to_string_compact());
+        out.push('\n');
+    };
+    push(obj(vec![
+        ("ev", s("obs")),
+        ("version", num(OBS_VERSION as f64)),
+        ("dropped", numu(tracer.dropped())),
+    ]));
+    for (name, v) in &snap.counters {
+        push(obj(vec![
+            ("ev", s("counter")),
+            ("name", s(name)),
+            ("value", numu(*v)),
+        ]));
+    }
+    for (name, v) in &snap.gauges {
+        push(obj(vec![
+            ("ev", s("gauge")),
+            ("name", s(name)),
+            ("value", numu(*v)),
+        ]));
+    }
+    for (name, h) in &snap.histograms {
+        push(hist_json(name, h));
+    }
+    for sp in tracer.spans() {
+        push(obj(vec![
+            ("ev", s("span")),
+            ("name", s(sp.name)),
+            ("sim_start", Json::Num(sp.sim_start)),
+            ("sim_end", Json::Num(sp.sim_end)),
+            ("wall_start_us", numu(sp.wall_start_us)),
+            ("wall_dur_us", numu(sp.wall_dur_us)),
+        ]));
+    }
+    for iv in tracer.instants() {
+        push(obj(vec![
+            ("ev", s("instant")),
+            ("name", s(iv.name)),
+            ("sim", Json::Num(iv.sim_time)),
+            ("wall_us", numu(iv.wall_us)),
+        ]));
+    }
+    out
+}
+
+/// Parsed-back JSONL obs stream, for round-trip tests and offline tools.
+#[derive(Clone, Debug, Default)]
+pub struct JsonlDoc {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    /// `name -> (count, sum)` per histogram.
+    pub histograms: BTreeMap<String, (u64, u64)>,
+    pub spans: u64,
+    pub instants: u64,
+    pub dropped: u64,
+}
+
+fn get_name(o: &BTreeMap<String, Json>) -> Result<String> {
+    o.get("name")
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .context("obs line has no 'name'")
+}
+
+fn get_u64(o: &BTreeMap<String, Json>, key: &str) -> Result<u64> {
+    o.get(key)
+        .and_then(|v| v.as_u64())
+        .with_context(|| format!("bad field '{key}'"))
+}
+
+/// Parse a JSONL obs stream. Validates the versioned header line.
+pub fn parse_jsonl(text: &str) -> Result<JsonlDoc> {
+    let mut doc = JsonlDoc::default();
+    let mut saw_header = false;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("obs line {}", lineno + 1))?;
+        let o = j
+            .as_obj()
+            .with_context(|| format!("obs line {} is not an object", lineno + 1))?;
+        let tag = o
+            .get("ev")
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("obs line {} has no 'ev' tag", lineno + 1))?;
+        if !saw_header {
+            if tag != "obs" {
+                crate::bail!("obs stream has no header line");
+            }
+            let version = get_u64(o, "version")?;
+            if version != OBS_VERSION {
+                crate::bail!("obs stream version {version}, expected {OBS_VERSION}");
+            }
+            doc.dropped = get_u64(o, "dropped").unwrap_or(0);
+            saw_header = true;
+            continue;
+        }
+        match tag {
+            "counter" => {
+                doc.counters.insert(get_name(o)?, get_u64(o, "value")?);
+            }
+            "gauge" => {
+                doc.gauges.insert(get_name(o)?, get_u64(o, "value")?);
+            }
+            "hist" => {
+                doc.histograms
+                    .insert(get_name(o)?, (get_u64(o, "count")?, get_u64(o, "sum")?));
+            }
+            "span" => doc.spans += 1,
+            "instant" => doc.instants += 1,
+            other => crate::bail!("unknown obs event tag '{other}'"),
+        }
+    }
+    if !saw_header {
+        crate::bail!("empty obs stream");
+    }
+    Ok(doc)
+}
+
+// --------------------------------------------------------------- files
+
+/// Write every export the options ask for. Called once, after the run.
+pub fn write_all(opts: &ObsOptions, registry: &Registry, tracer: &Tracer) -> Result<()> {
+    let snap = registry.snapshot();
+    if let Some(path) = &opts.dump {
+        std::fs::write(path, to_prometheus(&snap))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    if let Some(path) = &opts.trace {
+        std::fs::write(path, to_chrome_trace(tracer))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    if let Some(path) = &opts.jsonl {
+        std::fs::write(path, to_jsonl(&snap, tracer))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Registry, Tracer) {
+        let r = Registry::new();
+        let c = r.counter("sched_ev_task_started");
+        c.add(3);
+        r.gauge("engine_events_dispatched").set(42);
+        let h = r.histogram("driver_assign_nanos");
+        h.record(0);
+        h.record(2000);
+        h.record(4000);
+        let mut t = Tracer::new(2);
+        t.record_span("heartbeat", 1.0, 1.0, 5_000);
+        t.record_span("heartbeat", 2.0, 2.0, 5_000); // sampled out
+        t.record_span("assign", 3.0, 3.0, 1_000);
+        t.record_instant("sched_ev_task_started", 1.0);
+        t.record_instant("sched_ev_task_started", 2.0);
+        t.record_instant("sched_ev_task_started", 3.0);
+        (r, t)
+    }
+
+    #[test]
+    fn prometheus_round_trips() {
+        let (r, _) = sample();
+        let text = to_prometheus(&r.snapshot());
+        let samples = parse_prometheus(&text).expect("parse prom");
+        assert_eq!(samples["sched_ev_task_started"], 3.0);
+        assert_eq!(samples["engine_events_dispatched"], 42.0);
+        assert_eq!(samples["obs_collisions"], 0.0);
+        assert_eq!(samples["driver_assign_nanos_count"], 3.0);
+        assert_eq!(samples["driver_assign_nanos_sum"], 6000.0);
+        // cumulative buckets: zero -> le="0", 2000 -> le="2047",
+        // 4000 -> le="4095", then +Inf equals _count
+        assert_eq!(samples["driver_assign_nanos_bucket{le=\"0\"}"], 1.0);
+        assert_eq!(samples["driver_assign_nanos_bucket{le=\"2047\"}"], 2.0);
+        assert_eq!(samples["driver_assign_nanos_bucket{le=\"4095\"}"], 3.0);
+        assert_eq!(samples["driver_assign_nanos_bucket{le=\"+Inf\"}"], 3.0);
+    }
+
+    #[test]
+    fn prometheus_rejects_garbage() {
+        assert!(parse_prometheus("oops").is_err());
+        assert!(parse_prometheus("name notanumber").is_err());
+        assert!(parse_prometheus("# comment only\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_with_exact_instant_counts() {
+        let (_, t) = sample();
+        let text = to_chrome_trace(&t);
+        let counts = chrome_event_counts(&text).expect("parse chrome trace");
+        assert_eq!(counts["X:heartbeat"], 1); // one of two sampled in
+        assert_eq!(counts["X:assign"], 1);
+        // instants are never sampled: all three survive
+        assert_eq!(counts["i:sched_ev_task_started"], 3);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let (r, t) = sample();
+        let text = to_jsonl(&r.snapshot(), &t);
+        let doc = parse_jsonl(&text).expect("parse obs jsonl");
+        assert_eq!(doc.counters["sched_ev_task_started"], 3);
+        assert_eq!(doc.counters["obs_collisions"], 0);
+        assert_eq!(doc.gauges["engine_events_dispatched"], 42);
+        assert_eq!(doc.histograms["driver_assign_nanos"], (3, 6000));
+        assert_eq!(doc.spans, 2);
+        assert_eq!(doc.instants, 3);
+        assert_eq!(doc.dropped, 0);
+    }
+
+    #[test]
+    fn jsonl_rejects_missing_or_wrong_header() {
+        assert!(parse_jsonl("").is_err());
+        assert!(parse_jsonl("{\"ev\":\"counter\",\"name\":\"x\",\"value\":1}").is_err());
+        assert!(parse_jsonl("{\"ev\":\"obs\",\"version\":99,\"dropped\":0}").is_err());
+        let ok = parse_jsonl("{\"ev\":\"obs\",\"version\":1,\"dropped\":2}").unwrap();
+        assert_eq!(ok.dropped, 2);
+    }
+
+    #[test]
+    fn write_all_honors_each_option() {
+        let dir = std::env::temp_dir().join(format!("obs_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (r, t) = sample();
+        let opts = ObsOptions {
+            dump: Some(dir.join("m.prom")),
+            trace: Some(dir.join("t.json")),
+            jsonl: Some(dir.join("o.jsonl")),
+            ..ObsOptions::default()
+        };
+        write_all(&opts, &r, &t).expect("write exports");
+        let prom = std::fs::read_to_string(dir.join("m.prom")).unwrap();
+        assert!(parse_prometheus(&prom).is_ok());
+        let trace = std::fs::read_to_string(dir.join("t.json")).unwrap();
+        assert!(chrome_event_counts(&trace).is_ok());
+        let jsonl = std::fs::read_to_string(dir.join("o.jsonl")).unwrap();
+        assert!(parse_jsonl(&jsonl).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,66 @@
+//! Leveled stderr logging for library code.
+//!
+//! Library code must not write to stderr directly — a million-job run
+//! would drown in it, and tests capture nothing. The [`crate::obs_log!`]
+//! macro routes through a process-wide level (default: errors only), so
+//! diagnostics are silent unless `--verbose` raises the level. The
+//! `eprintln!` inside the macro expansion below is the sanctioned sink.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Always shown (the default level): unrecoverable or wrong-answer cases.
+pub const ERROR: u8 = 1;
+/// Suspicious-but-survivable conditions (e.g. hitting `max_sim_time`).
+pub const WARN: u8 = 2;
+/// Progress chatter, enabled by `--verbose`.
+pub const INFO: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(ERROR);
+
+/// Set the process-wide log level (one of [`ERROR`], [`WARN`], [`INFO`]).
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Would a message at `at` be printed right now?
+pub fn enabled(at: u8) -> bool {
+    at <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log to stderr iff the process-wide level admits `$level`.
+///
+/// ```ignore
+/// crate::obs_log!(crate::obs::log::WARN, "hit max_sim_time with {n} jobs");
+/// ```
+#[macro_export]
+macro_rules! obs_log {
+    ($level:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($level) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warn_is_hidden_until_verbose() {
+        // the global is process-wide; restore it so test order never matters
+        let before = level();
+        set_level(ERROR);
+        assert!(enabled(ERROR));
+        assert!(!enabled(WARN));
+        assert!(!enabled(INFO));
+        set_level(INFO);
+        assert!(enabled(ERROR));
+        assert!(enabled(WARN));
+        assert!(enabled(INFO));
+        set_level(before);
+    }
+}

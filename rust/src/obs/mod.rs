@@ -1,0 +1,262 @@
+//! Zero-dependency observability: a metrics [`Registry`] (counters,
+//! gauges, log-bucketed histograms), dual-clock span tracing
+//! ([`Tracer`]), leveled logging ([`log`]), and three exporters
+//! ([`export`]: Prometheus text, chrome://tracing JSON, versioned
+//! JSONL).
+//!
+//! Design rules:
+//!
+//! - **Off by default, zero cost when off.** Drivers carry a
+//!   [`DriverObs`] whose inner state is `None` until
+//!   `enable_obs` is called; the disabled record path is one `Option`
+//!   check. Detached handles keep `Metrics` working standalone.
+//! - **Never touches simulation behavior.** Instruments only read the
+//!   virtual clock; nothing feeds back. A run with obs enabled is
+//!   bit-identical to one without.
+//! - **Wall time flows only through [`clock`]** — the one site the
+//!   `wallclock-in-sim` lint sanctions outside `rust/benches/`.
+//!
+//! The full metric-name catalog and exporter formats are documented in
+//! `OBSERVABILITY.md` at the repo root.
+
+pub mod clock;
+pub mod export;
+pub mod log;
+pub mod registry;
+pub mod span;
+
+use std::path::PathBuf;
+
+pub use clock::Stopwatch;
+pub use registry::{Counter, Gauge, HistSnapshot, Histogram, Registry, Snapshot};
+pub use span::{InstantRecord, SpanRecord, Tracer};
+
+/// What the user asked for on the command line (`--obs-dump`,
+/// `--obs-trace`, `--obs-jsonl`, `--obs-sample N`, `--verbose`).
+#[derive(Clone, Debug)]
+pub struct ObsOptions {
+    /// Prometheus text snapshot path (`--obs-dump metrics.prom`).
+    pub dump: Option<PathBuf>,
+    /// chrome://tracing JSON path (`--obs-trace trace.json`).
+    pub trace: Option<PathBuf>,
+    /// JSONL obs stream path (`--obs-jsonl obs.jsonl`).
+    pub jsonl: Option<PathBuf>,
+    /// Keep every Nth duration span (`--obs-sample N`; instants are
+    /// always kept).
+    pub sample: u64,
+    /// Raise the log level to INFO (`--verbose`).
+    pub verbose: bool,
+}
+
+impl Default for ObsOptions {
+    fn default() -> ObsOptions {
+        ObsOptions {
+            dump: None,
+            trace: None,
+            jsonl: None,
+            sample: 1,
+            verbose: false,
+        }
+    }
+}
+
+impl ObsOptions {
+    /// True when any export file was requested — the signal drivers use
+    /// to turn instrumentation on at all.
+    pub fn any_output(&self) -> bool {
+        self.dump.is_some() || self.trace.is_some() || self.jsonl.is_some()
+    }
+}
+
+#[derive(Debug)]
+struct DriverObsInner {
+    registry: Registry,
+    tracer: Tracer,
+    /// One counter per `SchedEvent` variant, indexed by `obs_index()`.
+    events: Vec<Counter>,
+    heartbeat_nanos: Histogram,
+    assign_nanos: Histogram,
+    assign_batch_size: Histogram,
+    queue_depth: Histogram,
+    slot_util_pct: Histogram,
+}
+
+/// Per-driver observability state. Defaults to disabled (`inner: None`),
+/// so driver constructors stay unchanged and the per-heartbeat cost of a
+/// non-observed run is a single `Option` check.
+#[derive(Debug, Default)]
+pub struct DriverObs {
+    inner: Option<Box<DriverObsInner>>,
+}
+
+impl DriverObs {
+    /// Turn instrumentation on. `event_names[i]` names the counter for
+    /// the `SchedEvent` with `obs_index() == i` (the obs layer itself
+    /// knows nothing about scheduler types). Returns the registry so the
+    /// caller can hand it to `Scheduler::install_obs` /
+    /// `Metrics::install_obs`.
+    pub fn enable(&mut self, opts: &ObsOptions, event_names: &[&'static str]) -> Registry {
+        let registry = Registry::new();
+        let events = event_names.iter().map(|n| registry.counter(n)).collect();
+        self.inner = Some(Box::new(DriverObsInner {
+            tracer: Tracer::new(opts.sample),
+            events,
+            heartbeat_nanos: registry.histogram("driver_heartbeat_nanos"),
+            assign_nanos: registry.histogram("driver_assign_nanos"),
+            assign_batch_size: registry.histogram("driver_assign_batch_size"),
+            queue_depth: registry.histogram("driver_queue_depth"),
+            slot_util_pct: registry.histogram("driver_slot_util_pct"),
+            registry: registry.clone(),
+        }));
+        registry
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Count one `SchedEvent` and stamp an unsampled instant for it.
+    pub fn on_event(&mut self, index: usize, name: &'static str, sim_now: f64) {
+        if let Some(inner) = self.inner.as_deref_mut() {
+            if let Some(c) = inner.events.get(index) {
+                c.inc();
+            }
+            inner.tracer.record_instant(name, sim_now);
+        }
+    }
+
+    /// Record one whole heartbeat: latency histogram + sampled span.
+    pub fn record_heartbeat(&mut self, sim_now: f64, wall_nanos: u64) {
+        if let Some(inner) = self.inner.as_deref_mut() {
+            inner.heartbeat_nanos.record(wall_nanos);
+            inner
+                .tracer
+                .record_span("heartbeat", sim_now, sim_now, wall_nanos);
+        }
+    }
+
+    /// Record one assign batch: latency, batch size, queue depth, and
+    /// slot-utilization histograms + a sampled `assign` span.
+    pub fn record_assign(
+        &mut self,
+        sim_now: f64,
+        wall_nanos: u64,
+        batch: usize,
+        queue_depth: usize,
+        util_pct: u64,
+    ) {
+        if let Some(inner) = self.inner.as_deref_mut() {
+            inner.assign_nanos.record(wall_nanos);
+            inner.assign_batch_size.record(batch as u64);
+            inner.queue_depth.record(queue_depth as u64);
+            inner.slot_util_pct.record(util_pct);
+            inner
+                .tracer
+                .record_span("assign", sim_now, sim_now, wall_nanos);
+        }
+    }
+
+    /// Tear down, returning the registry and tracer for export (engine
+    /// gauges are set by the driver between `finish` and `write_all`).
+    pub fn finish(&mut self) -> Option<(Registry, Tracer)> {
+        self.inner.take().map(|inner| {
+            inner
+                .registry
+                .gauge("obs_spans_dropped")
+                .set(inner.tracer.dropped());
+            (inner.registry, inner.tracer)
+        })
+    }
+}
+
+/// Assign-phase instruments shared by every `by_name` scheduler:
+/// `sched_<name>_assign_nanos` + `sched_<name>_assigned_total`.
+/// Disabled (and free) until `install` is called; scheduler names are
+/// sanitized (`-` -> `_`) to stay valid Prometheus metric names.
+#[derive(Debug, Default)]
+pub struct SchedObs {
+    assign_nanos: Option<Histogram>,
+    assigned_total: Option<Counter>,
+}
+
+impl SchedObs {
+    pub fn install(&mut self, registry: &Registry, sched_name: &str) {
+        let base = sched_name.replace('-', "_");
+        self.assign_nanos = Some(registry.histogram(&format!("sched_{base}_assign_nanos")));
+        self.assigned_total = Some(registry.counter(&format!("sched_{base}_assigned_total")));
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.assign_nanos.is_some()
+    }
+
+    /// Start timing an assign call; `None` (no clock read) when disabled.
+    pub fn start(&self) -> Option<Stopwatch> {
+        self.assign_nanos.is_some().then(Stopwatch::start)
+    }
+
+    /// Close out the timing started by [`SchedObs::start`].
+    pub fn finish(&mut self, sw: Option<Stopwatch>, assigned: usize) {
+        if let Some(sw) = sw {
+            if let Some(h) = &self.assign_nanos {
+                h.record(sw.elapsed_nanos());
+            }
+            if let Some(c) = &self.assigned_total {
+                c.add(assigned as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn driver_obs_is_inert_until_enabled() {
+        let mut obs = DriverObs::default();
+        assert!(!obs.is_enabled());
+        obs.on_event(0, "ev", 1.0);
+        obs.record_heartbeat(1.0, 100);
+        obs.record_assign(1.0, 100, 2, 5, 50);
+        assert!(obs.finish().is_none());
+    }
+
+    #[test]
+    fn driver_obs_counts_events_and_spans() {
+        let mut obs = DriverObs::default();
+        let registry = obs.enable(&ObsOptions::default(), &["ev_a", "ev_b"]);
+        obs.on_event(0, "ev_a", 1.0);
+        obs.on_event(0, "ev_a", 2.0);
+        obs.on_event(1, "ev_b", 3.0);
+        obs.on_event(99, "out_of_range", 4.0); // counts nothing, still traced
+        obs.record_heartbeat(5.0, 1_000);
+        obs.record_assign(5.0, 500, 3, 7, 42);
+        assert_eq!(registry.counter("ev_a").get(), 2);
+        assert_eq!(registry.counter("ev_b").get(), 1);
+        assert_eq!(registry.histogram("driver_heartbeat_nanos").count(), 1);
+        assert_eq!(registry.histogram("driver_assign_batch_size").sum(), 3);
+        assert_eq!(registry.histogram("driver_queue_depth").sum(), 7);
+        assert_eq!(registry.histogram("driver_slot_util_pct").sum(), 42);
+        let (_, tracer) = obs.finish().expect("was enabled");
+        assert_eq!(tracer.instants().len(), 4);
+        assert_eq!(tracer.spans().len(), 2);
+    }
+
+    #[test]
+    fn sched_obs_times_only_when_installed() {
+        let mut so = SchedObs::default();
+        assert!(so.start().is_none());
+        so.finish(None, 5); // no-op
+        let registry = Registry::new();
+        so.install(&registry, "bayes-blind");
+        let sw = so.start();
+        assert!(sw.is_some());
+        so.finish(sw, 5);
+        assert_eq!(
+            registry.histogram("sched_bayes_blind_assign_nanos").count(),
+            1
+        );
+        assert_eq!(registry.counter("sched_bayes_blind_assigned_total").get(), 5);
+    }
+}

@@ -1,0 +1,490 @@
+//! Named counters, gauges, and log-bucketed histograms.
+//!
+//! The registry is the single naming authority: asking for `counter("x")`
+//! twice returns two handles onto the SAME atomic cell, so any layer can
+//! pick up a metric by name without plumbing handles through every
+//! constructor. The record path is one relaxed load (the shared enabled
+//! flag) plus one to three relaxed `fetch_add`s — no locks, no allocation
+//! — cheap enough for the engine hot loop. Registration (`counter` /
+//! `gauge` / `histogram`) takes a mutex and allocates; do it once at
+//! setup, never per event.
+//!
+//! Histograms are HDR-style log-bucketed: value `v` lands in bucket
+//! `64 - v.leading_zeros()` (bucket 0 holds zeros), so [`N_BUCKETS`]
+//! buckets cover the whole `u64` range with power-of-two boundaries,
+//! while an exact `count`/`sum` pair keeps means precise — that is what
+//! lets `Metrics::mean_assign_micros` ride on a histogram without
+//! changing its reported numbers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Number of histogram buckets: one for zero plus one per bit of `u64`.
+pub const N_BUCKETS: usize = 65;
+
+/// Bucket index for a recorded value: 0 for 0, else `64 - leading_zeros`
+/// (1 -> 1, 2..=3 -> 2, 4..=7 -> 3, ..., `u64::MAX` -> 64).
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` — the exporter's `le` label.
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Monotone counter. Clone shares the underlying cell.
+#[derive(Clone, Debug)]
+pub struct Counter {
+    enabled: Arc<AtomicBool>,
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    fn with_flag(enabled: Arc<AtomicBool>) -> Counter {
+        Counter {
+            enabled,
+            cell: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// A handle not backed by any registry; always enabled, never
+    /// exported. Used both as the pre-`install_obs` default inside
+    /// `Metrics` and as the sink returned on a name collision.
+    pub fn detached() -> Counter {
+        Counter::with_flag(Arc::new(AtomicBool::new(true)))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::detached()
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Clone, Debug)]
+pub struct Gauge {
+    enabled: Arc<AtomicBool>,
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    fn with_flag(enabled: Arc<AtomicBool>) -> Gauge {
+        Gauge {
+            enabled,
+            cell: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// See [`Counter::detached`].
+    pub fn detached() -> Gauge {
+        Gauge::with_flag(Arc::new(AtomicBool::new(true)))
+    }
+
+    pub fn set(&self, v: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::detached()
+    }
+}
+
+#[derive(Debug)]
+struct HistCells {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+/// Log-bucketed histogram with an exact count/sum pair. The record path
+/// is three relaxed `fetch_add`s; `sum` wraps on overflow (nanosecond
+/// latencies would need ~585 years of recorded time to get there).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    enabled: Arc<AtomicBool>,
+    cells: Arc<HistCells>,
+}
+
+impl Histogram {
+    fn with_flag(enabled: Arc<AtomicBool>) -> Histogram {
+        Histogram {
+            enabled,
+            cells: Arc::new(HistCells {
+                count: AtomicU64::new(0),
+                sum: AtomicU64::new(0),
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            }),
+        }
+    }
+
+    /// See [`Counter::detached`].
+    pub fn detached() -> Histogram {
+        Histogram::with_flag(Arc::new(AtomicBool::new(true)))
+    }
+
+    pub fn record(&self, v: u64) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.cells.count.fetch_add(1, Ordering::Relaxed);
+        self.cells.sum.fetch_add(v, Ordering::Relaxed);
+        self.cells.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cells.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.cells.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            buckets: std::array::from_fn(|i| self.cells.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::detached()
+    }
+}
+
+/// Point-in-time copy of one histogram, for exporters and tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Debug)]
+struct Inner {
+    enabled: Arc<AtomicBool>,
+    collisions: AtomicU64,
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            enabled: Arc::new(AtomicBool::new(true)),
+            collisions: AtomicU64::new(0),
+            metrics: Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+/// Shared, clonable handle onto one family of named metrics.
+///
+/// Same name + same kind returns a handle onto the same cell. Same name
+/// with a DIFFERENT kind is a collision: the `obs_collisions` counter is
+/// bumped and a detached handle is returned, so the caller still works
+/// but the conflict is visible in every export.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Flip the shared enabled flag checked (relaxed) by every record
+    /// call of every handle this registry has issued.
+    pub fn set_enabled(&self, on: bool) {
+        self.inner.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    fn table(&self) -> MutexGuard<'_, BTreeMap<String, Metric>> {
+        match self.inner.metrics.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn collide(&self) -> u64 {
+        self.inner.collisions.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut table = self.table();
+        match table.get(name) {
+            Some(Metric::Counter(c)) => c.clone(),
+            Some(_) => {
+                drop(table);
+                self.collide();
+                Counter::detached()
+            }
+            None => {
+                let c = Counter::with_flag(self.inner.enabled.clone());
+                table.insert(name.to_string(), Metric::Counter(c.clone()));
+                c
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut table = self.table();
+        match table.get(name) {
+            Some(Metric::Gauge(g)) => g.clone(),
+            Some(_) => {
+                drop(table);
+                self.collide();
+                Gauge::detached()
+            }
+            None => {
+                let g = Gauge::with_flag(self.inner.enabled.clone());
+                table.insert(name.to_string(), Metric::Gauge(g.clone()));
+                g
+            }
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut table = self.table();
+        match table.get(name) {
+            Some(Metric::Histogram(h)) => h.clone(),
+            Some(_) => {
+                drop(table);
+                self.collide();
+                Histogram::detached()
+            }
+            None => {
+                let h = Histogram::with_flag(self.inner.enabled.clone());
+                table.insert(name.to_string(), Metric::Histogram(h.clone()));
+                h
+            }
+        }
+    }
+
+    /// Kind-mismatch registrations observed so far.
+    pub fn collisions(&self) -> u64 {
+        self.inner.collisions.load(Ordering::Relaxed)
+    }
+
+    /// Sorted point-in-time copy of every metric, plus the registry's
+    /// own `obs_collisions` counter.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for (name, metric) in self.table().iter() {
+            match metric {
+                Metric::Counter(c) => snap.counters.push((name.clone(), c.get())),
+                Metric::Gauge(g) => snap.gauges.push((name.clone(), g.get())),
+                Metric::Histogram(h) => snap.histograms.push((name.clone(), h.snapshot())),
+            }
+        }
+        snap.counters
+            .push(("obs_collisions".to_string(), self.collisions()));
+        snap.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+}
+
+/// Everything an exporter needs, sorted by name for deterministic output.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub histograms: Vec<(String, HistSnapshot)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        for k in 1..64usize {
+            let v = 1u64 << k;
+            assert_eq!(bucket_index(v), k + 1, "2^{k} opens bucket {}", k + 1);
+            assert_eq!(bucket_index(v - 1), k, "2^{k}-1 closes bucket {k}");
+        }
+        assert_eq!(bucket_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn bucket_upper_brackets_every_value() {
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(63), (1u64 << 63) - 1);
+        assert_eq!(bucket_upper(64), u64::MAX);
+        for v in [0u64, 1, 2, 3, 4, 5, 1023, 1024, 1025, u64::MAX - 1, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(bucket_upper(i) >= v, "upper({i}) must cover {v}");
+            if i > 0 {
+                assert!(bucket_upper(i - 1) < v, "{v} must not fit bucket {}", i - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_is_exact_and_buckets_add_up() {
+        let h = Histogram::detached();
+        h.record(0);
+        h.record(1);
+        h.record(2000);
+        h.record(4000);
+        h.record(u64::MAX);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 5);
+        // sum wraps on u64::MAX by design; check the exact pair without it
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 5);
+        assert_eq!(snap.buckets[0], 1);
+        assert_eq!(snap.buckets[1], 1);
+        assert_eq!(snap.buckets[11], 1, "2000 lands in [1024, 2047]");
+        assert_eq!(snap.buckets[12], 1, "4000 lands in [2048, 4095]");
+        assert_eq!(snap.buckets[64], 1);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn histogram_mean_is_exact_for_small_sums() {
+        let h = Histogram::detached();
+        assert_eq!(h.count(), 0);
+        assert!(h.mean().abs() < f64::EPSILON);
+        h.record(2000);
+        h.record(4000);
+        assert_eq!(h.sum(), 6000);
+        assert!((h.mean() - 3000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_name_same_kind_shares_the_cell() {
+        let r = Registry::new();
+        let a = r.counter("hits");
+        let b = r.counter("hits");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(b.get(), 3);
+        assert_eq!(r.collisions(), 0);
+    }
+
+    #[test]
+    fn kind_collision_returns_detached_and_counts() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        c.inc();
+        let h = r.histogram("x");
+        let g = r.gauge("x");
+        assert_eq!(r.collisions(), 2);
+        // the detached handles still work, they just are not exported
+        h.record(7);
+        g.set(9);
+        assert_eq!(h.count(), 1);
+        assert_eq!(g.get(), 9);
+        // the original registration is untouched
+        assert_eq!(c.get(), 1);
+        let snap = r.snapshot();
+        assert_eq!(snap.histograms.len(), 0);
+        assert_eq!(snap.gauges.len(), 0);
+        let coll = snap
+            .counters
+            .iter()
+            .find(|(n, _)| n == "obs_collisions")
+            .map(|(_, v)| *v);
+        assert_eq!(coll, Some(2));
+    }
+
+    #[test]
+    fn disabling_the_registry_mutes_every_handle() {
+        let r = Registry::new();
+        let c = r.counter("c");
+        let g = r.gauge("g");
+        let h = r.histogram("h");
+        r.set_enabled(false);
+        c.inc();
+        g.set(5);
+        h.record(5);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0);
+        assert_eq!(h.count(), 0);
+        r.set_enabled(true);
+        c.inc();
+        assert_eq!(c.get(), 1);
+        // detached handles have their own always-on flag
+        let d = Counter::detached();
+        r.set_enabled(false);
+        d.inc();
+        assert_eq!(d.get(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_by_name() {
+        let r = Registry::new();
+        r.counter("zz");
+        r.counter("aa");
+        r.gauge("mid");
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["aa", "obs_collisions", "zz"]);
+        assert_eq!(snap.gauges.len(), 1);
+    }
+}

@@ -1,0 +1,214 @@
+//! Structured spans stamped with BOTH clocks.
+//!
+//! Every record carries the virtual time it describes (`Engine::now`,
+//! seconds) and the wall time it cost (microseconds since process
+//! start), so one trace answers both "when in the simulation" and "how
+//! expensive on this machine".
+//!
+//! Two record kinds, two policies:
+//!
+//! - **Duration spans** (heartbeats, assign batches) are SAMPLED: with
+//!   `--obs-sample N` every Nth call is kept. Sampling is counter-based,
+//!   not random, so a fixed seed reproduces a bit-identical span set.
+//! - **Instants** (one per `SchedEvent`) are NEVER sampled: the
+//!   chrome-trace exporter promises per-name instant counts equal to the
+//!   run's `SchedEvent` totals, which a sampler would break.
+//!
+//! The buffer is bounded ([`DEFAULT_CAP`]); overflow increments a
+//! `dropped` count that the exporters surface rather than silently
+//! truncating.
+
+use super::clock;
+
+/// Combined spans+instants buffer bound: ~1M records, plenty for a quick
+/// experiment and a hard stop for a million-job run.
+pub const DEFAULT_CAP: usize = 1 << 20;
+
+/// One sampled duration span.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    /// Virtual time (seconds) when the span began.
+    pub sim_start: f64,
+    /// Virtual time (seconds) when the span ended.
+    pub sim_end: f64,
+    /// Wall microseconds since process start when the span began.
+    pub wall_start_us: u64,
+    /// Wall duration in microseconds.
+    pub wall_dur_us: u64,
+}
+
+/// One unsampled instantaneous event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InstantRecord {
+    pub name: &'static str,
+    /// Virtual time (seconds) the event fired at.
+    pub sim_time: f64,
+    /// Wall microseconds since process start when it was recorded.
+    pub wall_us: u64,
+}
+
+/// Owner of the span/instant buffers; one per driver run.
+#[derive(Debug)]
+pub struct Tracer {
+    sample_every: u64,
+    seen: u64,
+    cap: usize,
+    spans: Vec<SpanRecord>,
+    instants: Vec<InstantRecord>,
+    dropped: u64,
+}
+
+impl Tracer {
+    /// `sample_every` = N keeps every Nth duration span (0 acts as 1).
+    pub fn new(sample_every: u64) -> Tracer {
+        Tracer::with_cap(sample_every, DEFAULT_CAP)
+    }
+
+    pub fn with_cap(sample_every: u64, cap: usize) -> Tracer {
+        Tracer {
+            sample_every: sample_every.max(1),
+            seen: 0,
+            cap,
+            spans: Vec::new(),
+            instants: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    fn full(&self) -> bool {
+        self.spans.len() + self.instants.len() >= self.cap
+    }
+
+    /// Record a duration span; subject to sampling and the buffer cap.
+    /// The wall start is anchored by subtracting `wall_dur_nanos` from
+    /// the current [`clock::wall_micros_since_start`].
+    pub fn record_span(
+        &mut self,
+        name: &'static str,
+        sim_start: f64,
+        sim_end: f64,
+        wall_dur_nanos: u64,
+    ) {
+        self.seen += 1;
+        if (self.seen - 1) % self.sample_every != 0 {
+            return;
+        }
+        if self.full() {
+            self.dropped += 1;
+            return;
+        }
+        let dur_us = wall_dur_nanos / 1_000;
+        let now_us = clock::wall_micros_since_start();
+        self.spans.push(SpanRecord {
+            name,
+            sim_start,
+            sim_end,
+            wall_start_us: now_us.saturating_sub(dur_us),
+            wall_dur_us: dur_us,
+        });
+    }
+
+    /// Record an instantaneous event; never sampled, only capped.
+    pub fn record_instant(&mut self, name: &'static str, sim_time: f64) {
+        if self.full() {
+            self.dropped += 1;
+            return;
+        }
+        self.instants.push(InstantRecord {
+            name,
+            sim_time,
+            wall_us: clock::wall_micros_since_start(),
+        });
+    }
+
+    pub fn spans(&self) -> &[SpanRecord] {
+        &self.spans
+    }
+
+    pub fn instants(&self) -> &[InstantRecord] {
+        &self.instants
+    }
+
+    /// Records lost to the buffer cap (sampled-out spans are not drops).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Duration-span record calls observed, kept or not.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(t: &mut Tracer, n: u64) {
+        for i in 0..n {
+            t.record_span("hb", i as f64, i as f64 + 0.5, 1_000 * (i + 1));
+        }
+    }
+
+    #[test]
+    fn sampling_keeps_every_nth_deterministically() {
+        let mut a = Tracer::new(3);
+        let mut b = Tracer::new(3);
+        feed(&mut a, 10);
+        feed(&mut b, 10);
+        // calls 0, 3, 6, 9 are kept — same set in both tracers
+        assert_eq!(a.spans().len(), 4);
+        assert_eq!(b.spans().len(), 4);
+        let durs_a: Vec<u64> = a.spans().iter().map(|s| s.wall_dur_us).collect();
+        let durs_b: Vec<u64> = b.spans().iter().map(|s| s.wall_dur_us).collect();
+        assert_eq!(durs_a, durs_b);
+        assert_eq!(durs_a, vec![1, 4, 7, 10]);
+        assert_eq!(a.seen(), 10);
+        assert_eq!(a.dropped(), 0);
+    }
+
+    #[test]
+    fn sample_every_zero_acts_as_one() {
+        let mut t = Tracer::new(0);
+        feed(&mut t, 5);
+        assert_eq!(t.spans().len(), 5);
+        assert_eq!(t.sample_every(), 1);
+    }
+
+    #[test]
+    fn instants_are_never_sampled() {
+        let mut t = Tracer::new(100);
+        for i in 0..10 {
+            t.record_instant("ev", i as f64);
+        }
+        assert_eq!(t.instants().len(), 10);
+    }
+
+    #[test]
+    fn cap_counts_drops_instead_of_growing() {
+        let mut t = Tracer::with_cap(1, 3);
+        feed(&mut t, 2);
+        t.record_instant("ev", 0.0);
+        t.record_instant("ev", 1.0); // over cap
+        feed(&mut t, 1); // over cap
+        assert_eq!(t.spans().len(), 2);
+        assert_eq!(t.instants().len(), 1);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn span_carries_both_clocks() {
+        let mut t = Tracer::new(1);
+        t.record_span("hb", 12.0, 12.5, 2_000_000);
+        let s = t.spans()[0];
+        assert_eq!(s.name, "hb");
+        assert!((s.sim_start - 12.0).abs() < 1e-12);
+        assert!((s.sim_end - 12.5).abs() < 1e-12);
+        assert_eq!(s.wall_dur_us, 2_000);
+    }
+}

@@ -4,7 +4,7 @@
 //!
 //! `bench <name> ... mean 12.34 ms  (min 11.90, max 13.02, n=20)`
 
-use std::time::Instant;
+use crate::obs::Stopwatch;
 
 /// One measured result.
 #[derive(Debug, Clone)]
@@ -52,9 +52,9 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut(usize)) 
     }
     let mut samples = Vec::with_capacity(iters);
     for i in 0..iters {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         f(i);
-        samples.push(t0.elapsed().as_nanos() as f64);
+        samples.push(t0.elapsed_nanos() as f64);
     }
     let mean = samples.iter().sum::<f64>() / iters as f64;
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);

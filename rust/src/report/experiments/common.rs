@@ -14,6 +14,8 @@ pub struct ExpOpts {
     pub quick: bool,
     /// Where to write CSVs (skipped when None).
     pub out_dir: Option<PathBuf>,
+    /// Observability flags, forwarded into each run's `RunConfig`.
+    pub obs: crate::obs::ObsOptions,
 }
 
 impl ExpOpts {
@@ -62,7 +64,13 @@ pub fn run_once(cfg: &RunConfig) -> RunSummary {
     let specs = generate(&cfg.workload);
     // static experiment config -- lint: allow(unwrap-in-lib)
     let mut jt = build_tracker_with(cfg, cluster, specs).expect("build tracker");
+    if cfg.obs.any_output() {
+        jt.enable_obs(&cfg.obs);
+    }
     jt.run();
+    if let Err(e) = jt.finish_obs(&cfg.obs) {
+        crate::obs_log!(crate::obs::log::ERROR, "obs export failed: {e}");
+    }
     summarize(&jt, cfg)
 }
 

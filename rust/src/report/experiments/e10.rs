@@ -58,6 +58,9 @@ pub fn e10(opts: &ExpOpts) -> Vec<Table> {
                 ..Default::default()
             };
             cfg.tracker.failures = FailureConfig { mtbf: *mtbf, mttr: 90.0 };
+            // obs exporters overwrite per cell; the files that survive the
+            // sweep describe the last (highest-churn, bayes) run
+            cfg.obs = opts.obs.clone();
             let r = run_once(&cfg);
             table.row(vec![
                 mtbf.map_or("none".to_string(), |m| format!("{m:.0}")),

@@ -56,11 +56,11 @@ pub fn e13(opts: &ExpOpts) -> Vec<Table> {
     // by_name covers every registered name -- lint: allow(unwrap-in-lib)
     let scheduler = crate::scheduler::by_name("fifo", workload.seed).unwrap();
     let specs = Box::new(stream(&workload));
-    let started = std::time::Instant::now();
+    let started = crate::obs::Stopwatch::start();
     let mut jt =
         JobTracker::new_streaming(cluster, scheduler, specs, workload.seed, cfg);
     jt.run();
-    let wall = started.elapsed().as_secs_f64();
+    let wall = started.elapsed_secs();
     table.row(vec![
         "fifo".into(),
         format!("{n_jobs}"),

@@ -62,6 +62,28 @@
 //! | R7   | end-without-start      | every attempt end pairs with exactly one live attempt (no stale or duplicate ends) |
 //! | R8   | train-serve-skew       | every `Feedback` row is bit-identical to a row some placement was scored on at decision time |
 //!
+//! ### Lifecycle events in the obs layer
+//!
+//! With observability enabled (`repro run --obs-dump/--obs-trace/
+//! --obs-jsonl`, see `OBSERVABILITY.md`), every `SchedEvent` a driver
+//! emits increments one registry counter and stamps one unsampled
+//! chrome-trace instant, both named by [`SchedEvent::obs_name`]:
+//!
+//! | event           | obs counter / instant     | rules it witnesses |
+//! |-----------------|---------------------------|--------------------|
+//! | `ClusterInfo`   | `sched_ev_cluster_info`   | —                  |
+//! | `Feedback`      | `sched_ev_feedback`       | R8                 |
+//! | `TaskStarted`   | `sched_ev_task_started`   | R1, R2, R3, R4     |
+//! | `TaskFinished`  | `sched_ev_task_finished`  | R7                 |
+//! | `TaskFailed`    | `sched_ev_task_failed`    | R7                 |
+//! | `JobCompleted`  | `sched_ev_job_completed`  | R5                 |
+//! | `NodeFailed`    | `sched_ev_node_failed`    | R6                 |
+//! | `NodeRecovered` | `sched_ev_node_recovered` | R6                 |
+//!
+//! Because instants are exempt from `--obs-sample`, the per-name instant
+//! counts in a chrome trace equal the run's `SchedEvent` totals exactly —
+//! the protocol auditor sees the same stream the trace shows.
+//!
 //! The driver-side event order around failures is also normative: when a
 //! node dies, the per-task `TaskFailed { reason: NodeLost }` events come
 //! *first* and `NodeFailed` last, so by the time a scheduler sees
@@ -275,6 +297,42 @@ pub enum SchedEvent {
     NodeRecovered { node: NodeId },
 }
 
+/// Obs counter/instant names, indexed by [`SchedEvent::obs_index`] —
+/// what drivers pass to `obs::DriverObs::enable` (the obs layer itself
+/// is scheduler-agnostic). See the module docs table mapping each name
+/// to the lifecycle rules it witnesses.
+pub const OBS_EVENT_NAMES: [&str; 8] = [
+    "sched_ev_cluster_info",
+    "sched_ev_feedback",
+    "sched_ev_task_started",
+    "sched_ev_task_finished",
+    "sched_ev_task_failed",
+    "sched_ev_job_completed",
+    "sched_ev_node_failed",
+    "sched_ev_node_recovered",
+];
+
+impl SchedEvent {
+    /// Stable per-variant index into [`OBS_EVENT_NAMES`].
+    pub fn obs_index(&self) -> usize {
+        match self {
+            SchedEvent::ClusterInfo { .. } => 0,
+            SchedEvent::Feedback { .. } => 1,
+            SchedEvent::TaskStarted { .. } => 2,
+            SchedEvent::TaskFinished { .. } => 3,
+            SchedEvent::TaskFailed { .. } => 4,
+            SchedEvent::JobCompleted { .. } => 5,
+            SchedEvent::NodeFailed { .. } => 6,
+            SchedEvent::NodeRecovered { .. } => 7,
+        }
+    }
+
+    /// The obs counter/instant name for this event.
+    pub fn obs_name(&self) -> &'static str {
+        OBS_EVENT_NAMES[self.obs_index()]
+    }
+}
+
 /// A job scheduler (FIFO / Fair / Capacity / Bayes / ...), batched and
 /// event-driven. Runs unchanged under both the MRv1 JobTracker and the
 /// YARN ResourceManager drivers.
@@ -293,6 +351,11 @@ pub trait Scheduler {
     fn export_model(&self) -> Option<crate::config::json::Json> {
         None
     }
+
+    /// Register this scheduler's instruments (phase timings, speculative
+    /// counters, ...) with an obs registry. Called by drivers when
+    /// observability is enabled; the default is no instrumentation.
+    fn install_obs(&mut self, _registry: &crate::obs::Registry) {}
 }
 
 /// Within-batch bookkeeping shared by every scheduler: which tasks this

@@ -5,6 +5,7 @@
 use crate::cluster::node::Node;
 use crate::cluster::resources::Resources;
 use crate::job::task::TaskKind;
+use crate::obs::SchedObs;
 use crate::sim::rng::Pcg;
 
 use super::api::{Assignment, BatchState, Decision, SchedView, Scheduler, SlotBudget};
@@ -12,11 +13,12 @@ use super::api::{Assignment, BatchState, Decision, SchedView, Scheduler, SlotBud
 /// Uniform-random job selection (lower bound).
 pub struct RandomSched {
     rng: Pcg,
+    obs: SchedObs,
 }
 
 impl RandomSched {
     pub fn new(seed: u64) -> RandomSched {
-        RandomSched { rng: Pcg::new(seed, 0x5EED) }
+        RandomSched { rng: Pcg::new(seed, 0x5EED), obs: SchedObs::default() }
     }
 }
 
@@ -25,12 +27,17 @@ impl Scheduler for RandomSched {
         "random"
     }
 
+    fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.obs.install(registry, self.name());
+    }
+
     fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
         budget: SlotBudget,
     ) -> Vec<Assignment> {
+        let sw = self.obs.start();
         let mut batch = BatchState::new();
         let mut out = Vec::new();
         for kind in [TaskKind::Map, TaskKind::Reduce] {
@@ -72,6 +79,7 @@ impl Scheduler for RandomSched {
                 }
             }
         }
+        self.obs.finish(sw, out.len());
         out
     }
 }
@@ -83,11 +91,12 @@ impl Scheduler for RandomSched {
 pub struct ThresholdFifo {
     /// Refuse placement when predicted bottleneck utilization exceeds this.
     pub max_util: f64,
+    obs: SchedObs,
 }
 
 impl ThresholdFifo {
     pub fn new(max_util: f64) -> ThresholdFifo {
-        ThresholdFifo { max_util }
+        ThresholdFifo { max_util, obs: SchedObs::default() }
     }
 }
 
@@ -96,12 +105,17 @@ impl Scheduler for ThresholdFifo {
         "threshold-fifo"
     }
 
+    fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.obs.install(registry, self.name());
+    }
+
     fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
         budget: SlotBudget,
     ) -> Vec<Assignment> {
+        let sw = self.obs.start();
         let mut batch = BatchState::new();
         let mut out = Vec::new();
         // demand the batch has already committed to this node, so the
@@ -146,6 +160,7 @@ impl Scheduler for ThresholdFifo {
                 }
             }
         }
+        self.obs.finish(sw, out.len());
         out
     }
 }

@@ -26,10 +26,58 @@ use crate::bayes::features::{feature_vec, FeatureVec};
 use crate::bayes::utility::UtilityFn;
 use crate::cluster::node::Node;
 use crate::job::task::{TaskKind, TaskRef, TaskState};
+use crate::obs::{Counter, Histogram, Registry, SchedObs, Stopwatch};
 
 use super::api::{
     Assignment, BatchState, Decision, SchedEvent, SchedView, Scheduler, SlotBudget,
 };
+
+/// Bayes-pipeline obs handles: `None` until
+/// [`Scheduler::install_obs`], so the scoring hot path pays one branch
+/// per site when obs is off.
+#[derive(Debug, Default)]
+struct BayesObs {
+    classify_nanos: Option<Histogram>,
+    feature_nanos: Option<Histogram>,
+    train_nanos: Option<Histogram>,
+    margin_milli: Option<Histogram>,
+    speculative: Option<Counter>,
+}
+
+impl BayesObs {
+    fn install(&mut self, registry: &Registry) {
+        self.classify_nanos = Some(registry.histogram("bayes_classify_nanos"));
+        self.feature_nanos = Some(registry.histogram("bayes_feature_nanos"));
+        self.train_nanos = Some(registry.histogram("bayes_train_nanos"));
+        self.margin_milli =
+            Some(registry.histogram("bayes_posterior_margin_milli"));
+        self.speculative =
+            Some(registry.counter("bayes_speculative_launches_total"));
+    }
+
+    /// A running stopwatch when installed, `None` otherwise.
+    fn sw(&self) -> Option<Stopwatch> {
+        self.classify_nanos.is_some().then(Stopwatch::start)
+    }
+
+    fn record(hist: &Option<Histogram>, sw: Option<Stopwatch>) {
+        if let (Some(h), Some(sw)) = (hist, sw) {
+            h.record(sw.elapsed_nanos());
+        }
+    }
+
+    /// Posterior decisiveness per scored row: `|p_good − 0.5| × 2000`, so
+    /// 0 = coin flip and 1000 = certain. A margin distribution collapsing
+    /// toward 0 is the first sign the classifier stopped separating good
+    /// placements from bad ones.
+    fn record_margins(&self, p_good: &[f32]) {
+        if let Some(h) = &self.margin_milli {
+            for &p in p_good {
+                h.record(((p - 0.5).abs() * 2000.0) as u64);
+            }
+        }
+    }
+}
 
 fn apply_mask(
     mask: &[bool; crate::bayes::features::N_FEATURES],
@@ -112,6 +160,8 @@ pub struct BayesScheduler<C: Classifier> {
     scratch_utility: Vec<f32>,
     /// Scoring-window truncation count (metrics / diagnostics).
     pub truncated_windows: u64,
+    obs: SchedObs,
+    bobs: BayesObs,
 }
 
 impl<C: Classifier> BayesScheduler<C> {
@@ -126,6 +176,8 @@ impl<C: Classifier> BayesScheduler<C> {
             scratch_feats: Vec::with_capacity(MAX_JOBS),
             scratch_utility: Vec::with_capacity(MAX_JOBS),
             truncated_windows: 0,
+            obs: SchedObs::default(),
+            bobs: BayesObs::default(),
         }
     }
 
@@ -256,6 +308,7 @@ impl<C: Classifier> BayesScheduler<C> {
         cands.truncate(MAX_JOBS);
         // 2. score the straggler rows against this node, failure bins in
         let node_feats = node.features();
+        let fsw = self.bobs.sw();
         let mut rows = Vec::with_capacity(cands.len());
         let mut utils = Vec::with_capacity(cands.len());
         let mut fails = Vec::with_capacity(cands.len());
@@ -273,7 +326,11 @@ impl<C: Classifier> BayesScheduler<C> {
                     as f32,
             );
         }
+        BayesObs::record(&self.bobs.feature_nanos, fsw);
+        let csw = self.bobs.sw();
         let result = self.classifier.classify(&rows, &utils);
+        BayesObs::record(&self.bobs.classify_nanos, csw);
+        self.bobs.record_margins(&result.p_good);
         let total = cands.len() as u32;
         let mut proposed = 0u32;
         for (i, (tref, _)) in cands.iter().enumerate() {
@@ -313,6 +370,9 @@ impl<C: Classifier> BayesScheduler<C> {
             *left -= 1;
             proposed += 1;
         }
+        if let Some(c) = &self.bobs.speculative {
+            c.add(u64::from(proposed));
+        }
     }
 }
 
@@ -321,14 +381,21 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
         self.name
     }
 
+    fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.obs.install(registry, self.name());
+        self.bobs.install(registry);
+    }
+
     fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
         budget: SlotBudget,
     ) -> Vec<Assignment> {
+        let sw = self.obs.start();
         let mut out = Vec::new();
         if budget.total() == 0 {
+            self.obs.finish(sw, 0);
             return out;
         }
         if !view.queue.is_empty() {
@@ -337,13 +404,16 @@ impl<C: Classifier> Scheduler for BayesScheduler<C> {
         if self.speculation.enabled {
             self.speculate(view, node, budget, &mut out);
         }
+        self.obs.finish(sw, out.len());
         out
     }
 
     fn observe(&mut self, ev: &SchedEvent) {
         if let SchedEvent::Feedback { feats, label } = ev {
             let masked = self.apply_mask(*feats);
+            let sw = self.bobs.sw();
             self.classifier.observe(masked, *label);
+            BayesObs::record(&self.bobs.train_nanos, sw);
         }
     }
 
@@ -422,6 +492,7 @@ impl<C: Classifier> BayesScheduler<C> {
             }
             all.into_iter().filter(|j| keep.contains(&j.id)).collect()
         };
+        let fsw = self.bobs.sw();
         self.scratch_feats.clear();
         self.scratch_utility.clear();
         for j in &cands {
@@ -436,9 +507,13 @@ impl<C: Classifier> BayesScheduler<C> {
                     as f32,
             );
         }
+        BayesObs::record(&self.bobs.feature_nanos, fsw);
+        let csw = self.bobs.sw();
         let result = self
             .classifier
             .classify(&self.scratch_feats, &self.scratch_utility);
+        BayesObs::record(&self.bobs.classify_nanos, csw);
+        self.bobs.record_margins(&result.p_good);
         // expected-utility order for the good jobs, computed once per
         // heartbeat; the posterior order for the starvation fallback is
         // built lazily, only if a slot actually falls through

@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use crate::cluster::node::Node;
 use crate::job::task::TaskKind;
 use crate::job::JobId;
+use crate::obs::SchedObs;
 use crate::sim::arena::SlotMap;
 
 use super::api::{
@@ -40,6 +41,7 @@ pub struct Capacity {
     pub user_limit: f64,
     /// Total slots in the cluster (from `SchedEvent::ClusterInfo`).
     pub total_slots: u32,
+    obs: SchedObs,
 }
 
 impl Capacity {
@@ -50,6 +52,7 @@ impl Capacity {
             job_queue: SlotMap::new(),
             user_limit: 1.0,
             total_slots: 0,
+            obs: SchedObs::default(),
         }
     }
 
@@ -123,12 +126,17 @@ impl Scheduler for Capacity {
         "capacity"
     }
 
+    fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.obs.install(registry, self.name());
+    }
+
     fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
         budget: SlotBudget,
     ) -> Vec<Assignment> {
+        let sw = self.obs.start();
         let mut batch = BatchState::new();
         let mut out = Vec::new();
         // batch grants per queue and per (queue, user)
@@ -198,6 +206,7 @@ impl Scheduler for Capacity {
                 }
             }
         }
+        self.obs.finish(sw, out.len());
         out
     }
 

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use crate::cluster::node::Node;
 use crate::job::task::TaskKind;
 use crate::job::JobId;
+use crate::obs::SchedObs;
 use crate::sim::arena::SlotMap;
 
 use super::api::{
@@ -36,6 +37,7 @@ pub struct Fair {
     job_pool: SlotMap<String>,
     /// Default min share granted to a pool on first sight.
     pub default_min_share: u32,
+    obs: SchedObs,
 }
 
 impl Fair {
@@ -79,12 +81,17 @@ impl Scheduler for Fair {
         "fair"
     }
 
+    fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.obs.install(registry, self.name());
+    }
+
     fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
         budget: SlotBudget,
     ) -> Vec<Assignment> {
+        let sw = self.obs.start();
         let mut batch = BatchState::new();
         let mut out = Vec::new();
         // tasks the batch granted per pool (both kinds count toward a
@@ -138,6 +145,7 @@ impl Scheduler for Fair {
                 }
             }
         }
+        self.obs.finish(sw, out.len());
         out
     }
 

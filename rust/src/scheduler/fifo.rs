@@ -4,16 +4,19 @@
 
 use crate::cluster::node::Node;
 use crate::job::task::TaskKind;
+use crate::obs::SchedObs;
 
 use super::api::{Assignment, BatchState, Decision, SchedView, Scheduler, SlotBudget};
 
 /// Priority-then-submission-order FIFO.
 #[derive(Debug, Default)]
-pub struct Fifo;
+pub struct Fifo {
+    obs: SchedObs,
+}
 
 impl Fifo {
     pub fn new() -> Fifo {
-        Fifo
+        Fifo::default()
     }
 }
 
@@ -22,12 +25,17 @@ impl Scheduler for Fifo {
         "fifo"
     }
 
+    fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.obs.install(registry, self.name());
+    }
+
     fn assign(
         &mut self,
         view: &SchedView,
         node: &Node,
         budget: SlotBudget,
     ) -> Vec<Assignment> {
+        let sw = self.obs.start();
         let mut batch = BatchState::new();
         let mut out = Vec::new();
         for kind in [TaskKind::Map, TaskKind::Reduce] {
@@ -65,6 +73,7 @@ impl Scheduler for Fifo {
                 }
             }
         }
+        self.obs.finish(sw, out.len());
         out
     }
 }

@@ -36,6 +36,12 @@ pub trait EventQueue {
     /// Earliest pending timestamp. May cost O(n); not a hot-path call.
     fn peek_time(&self) -> Option<Time>;
     fn len(&self) -> usize;
+    /// Cumulative bucket-scan depth: day-advance steps taken by `pop`
+    /// across the queue's lifetime (obs gauge `engine_bucket_scan_steps`).
+    /// Backends without a scan (the heap) report 0.
+    fn scan_steps(&self) -> u64 {
+        0
+    }
 }
 
 type Item = (Time, u64, Event);
@@ -55,6 +61,9 @@ pub struct CalendarQueue {
     /// Timestamp of the last popped event (resize re-anchors on it).
     cur_time: Time,
     len: usize,
+    /// Day-advance steps taken by `pop` since construction — a plain u64
+    /// (no atomics in the hot loop) drained into an obs gauge at export.
+    scan_steps: u64,
 }
 
 impl Default for CalendarQueue {
@@ -68,6 +77,7 @@ impl Default for CalendarQueue {
             cur_day: 0,
             cur_time: 0.0,
             len: 0,
+            scan_steps: 0,
         }
     }
 }
@@ -197,6 +207,7 @@ impl EventQueue for CalendarQueue {
         }
         let mut day = self.cur_day;
         for _ in 0..self.buckets.len() {
+            self.scan_steps += 1;
             let b = (day & self.mask) as usize;
             if let Some(i) = self.min_in_day(b, day) {
                 self.cur_day = day;
@@ -217,6 +228,10 @@ impl EventQueue for CalendarQueue {
 
     fn len(&self) -> usize {
         self.len
+    }
+
+    fn scan_steps(&self) -> u64 {
+        self.scan_steps
     }
 }
 
@@ -315,6 +330,19 @@ mod tests {
             seq += 1;
         }
         assert_eq!(q.len(), 64);
+    }
+
+    #[test]
+    fn scan_steps_accumulate_per_pop() {
+        let mut q = CalendarQueue::new();
+        assert_eq!(q.scan_steps(), 0);
+        q.push(1.0, 0, ev(0));
+        q.pop();
+        let after_first = q.scan_steps();
+        assert!(after_first >= 1, "pop must visit at least one day");
+        q.push(2.0, 1, ev(1));
+        q.pop();
+        assert!(q.scan_steps() > after_first);
     }
 
     #[test]

@@ -134,6 +134,12 @@ impl<Q: EventQueue> EngineImpl<Q> {
         self.clamped
     }
 
+    /// Cumulative bucket-scan depth of the queue backend (0 for the
+    /// heap). Drained into the `engine_bucket_scan_steps` obs gauge.
+    pub fn scan_steps(&self) -> u64 {
+        self.queue.scan_steps()
+    }
+
     /// Schedule `event` at absolute time `at`. A past or non-finite `at`
     /// (NaN, ±inf — always a driver bug) is clamped to `now` and counted
     /// in [`EngineImpl::clamped_events`] — the SAME policy in debug and

@@ -62,6 +62,13 @@ impl SchedulerPolicy {
         self.inner.observe(ev);
     }
 
+    /// Forward obs registration to the wrapped scheduler, so the policy's
+    /// assign timings land under the same `sched_<name>_*` metrics as in
+    /// MRv1 mode.
+    pub fn install_obs(&mut self, registry: &crate::obs::Registry) {
+        self.inner.install_obs(registry);
+    }
+
     pub fn export_model(&self) -> Option<crate::config::json::Json> {
         self.inner.export_model()
     }

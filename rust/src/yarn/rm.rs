@@ -30,8 +30,9 @@ use crate::job::queue::JobTable;
 use crate::job::task::{TaskKind, TaskRef, TaskState};
 use crate::job::JobId;
 use crate::metrics::Metrics;
+use crate::obs::{DriverObs, ObsOptions, Stopwatch};
 use crate::scheduler::api::{
-    Assignment, FailReason, SchedEvent, SchedView, SlotBudget,
+    Assignment, FailReason, OBS_EVENT_NAMES, SchedEvent, SchedView, SlotBudget,
 };
 use crate::sim::engine::{Engine, Time};
 use crate::sim::event::Event;
@@ -140,6 +141,9 @@ pub struct ResourceManager {
     /// Protocol audit tap, mirroring the MRv1 tracker: shadow auditor in
     /// debug builds, disabled in release.
     pub audit: AuditSink,
+    /// Observability tap, mirroring the MRv1 tracker: disabled (one
+    /// `Option` check per use) until [`ResourceManager::enable_obs`].
+    pub obs: DriverObs,
 }
 
 impl ResourceManager {
@@ -172,6 +176,7 @@ impl ResourceManager {
             fail_rng: crate::sim::rng::Pcg::new(seed, 0xFA17),
             arrivals_done: false,
             audit: AuditSink::default_for_build(),
+            obs: DriverObs::default(),
         };
         rm.emit_preamble();
         rm.schedule_next_arrival();
@@ -194,6 +199,7 @@ impl ResourceManager {
     /// the policy. Every `SchedEvent` the RM produces MUST go through here.
     fn emit(&mut self, ev: SchedEvent) {
         self.audit.sched(&ev);
+        self.obs.on_event(ev.obs_index(), ev.obs_name(), self.engine.now());
         self.policy.observe(&ev);
     }
 
@@ -224,6 +230,26 @@ impl ResourceManager {
             total_slots: self.cluster.total_slots(),
         }));
         self.audit = sink;
+    }
+
+    /// Switch on the observability layer (mirrors
+    /// `JobTracker::enable_obs`). Call before `run()`.
+    pub fn enable_obs(&mut self, opts: &ObsOptions) {
+        let registry = self.obs.enable(opts, &OBS_EVENT_NAMES);
+        self.policy.install_obs(&registry);
+        self.metrics.install_obs(&registry);
+    }
+
+    /// Drain engine counters into gauges and write the requested exporter
+    /// files. Call after `run()`; a no-op when obs was never enabled.
+    pub fn finish_obs(&mut self, opts: &ObsOptions) -> Result<()> {
+        if let Some((registry, tracer)) = self.obs.finish() {
+            registry.gauge("engine_events_dispatched").set(self.engine.processed());
+            registry.gauge("engine_clamped_events").set(self.engine.clamped_events());
+            registry.gauge("engine_bucket_scan_steps").set(self.engine.scan_steps());
+            crate::obs::export::write_all(opts, &registry, &tracer)?;
+        }
+        Ok(())
     }
 
     fn schedule_next_arrival(&mut self) {
@@ -436,6 +462,7 @@ impl ResourceManager {
             return; // dead NM: heartbeats resume on recovery
         }
         let now = self.engine.now();
+        let hb_sw = self.obs.is_enabled().then(Stopwatch::start);
         self.metrics.heartbeats += 1;
         self.cluster.node_mut(node_id).advance(now);
 
@@ -468,13 +495,16 @@ impl ResourceManager {
                 .filter(|id| self.jobs.get(*id).demand.fits_within(&headroom))
                 .collect();
             let node_feats = self.cluster.node(node_id).features();
-            let budget = {
+            let (budget, node_total_slots) = {
                 let node = self.cluster.node(node_id);
-                SlotBudget {
-                    maps: free_containers.min(node.free_slots(TaskKind::Map)),
-                    reduces: free_containers
-                        .min(node.free_slots(TaskKind::Reduce)),
-                }
+                (
+                    SlotBudget {
+                        maps: free_containers.min(node.free_slots(TaskKind::Map)),
+                        reduces: free_containers
+                            .min(node.free_slots(TaskKind::Reduce)),
+                    },
+                    node.spec.map_slots + node.spec.reduce_slots,
+                )
             };
             if budget.total() > 0 {
                 let (assignments, assign_nanos) = {
@@ -487,10 +517,10 @@ impl ResourceManager {
                     };
                     let node = self.cluster.node(node_id);
                     // real (not virtual) time: the policy's own compute
-                    // cost for E6 -- lint: allow(wallclock-in-sim)
-                    let t0 = std::time::Instant::now();
+                    // cost for E6
+                    let sw = Stopwatch::start();
                     let out = self.policy.assign(&view, node, budget);
-                    (out, t0.elapsed().as_nanos())
+                    (out, sw.elapsed_nanos())
                 };
                 let mut remaining = free_containers;
                 let mut launched = 0usize;
@@ -535,12 +565,28 @@ impl ResourceManager {
                 // metrics count launched containers, not proposals — the
                 // container cap and the fit re-check may drop proposals
                 self.metrics.record_assign(assign_nanos, launched);
+                if self.obs.is_enabled() {
+                    let total = u64::from(node_total_slots);
+                    let free = u64::from(budget.total());
+                    let util_pct =
+                        if total == 0 { 0 } else { (total - free) * 100 / total };
+                    self.obs.record_assign(
+                        now,
+                        assign_nanos,
+                        launched,
+                        queue.len(),
+                        util_pct,
+                    );
+                }
             }
         }
 
         if !self.arrivals_done || !self.jobs.all_complete() {
             self.engine
                 .schedule(self.cfg.heartbeat.next_beat(now), Event::Heartbeat(node_id));
+        }
+        if let Some(sw) = hb_sw {
+            self.obs.record_heartbeat(now, sw.elapsed_nanos());
         }
     }
 
