@@ -87,6 +87,11 @@ pub struct Workspace {
     /// Committed perf baselines (`BENCH_e6.json`, `BENCH_engine.json`), as
     /// present: `(file name, content)`.
     pub bench_baselines: Vec<(String, String)>,
+    /// Committed obs regression baseline (`BENCH_obs_baseline.prom`), if
+    /// present: `(file name, content)`.
+    pub obs_baseline: Option<(String, String)>,
+    /// Committed SLO specs (`slo/*.json`), as present: `(rel path, content)`.
+    pub slo_specs: Vec<(String, String)>,
 }
 
 fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
@@ -164,6 +169,24 @@ impl Workspace {
         for name in ["BENCH_e6.json", "BENCH_engine.json"] {
             if let Ok(text) = std::fs::read_to_string(root.join(name)) {
                 ws.bench_baselines.push((name.to_string(), text));
+            }
+        }
+
+        let prom = "BENCH_obs_baseline.prom";
+        if let Ok(text) = std::fs::read_to_string(root.join(prom)) {
+            ws.obs_baseline = Some((prom.to_string(), text));
+        }
+
+        if let Ok(entries) = std::fs::read_dir(root.join("slo")) {
+            let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+            paths.sort();
+            for p in paths {
+                if p.extension().map(|e| e == "json").unwrap_or(false) {
+                    let rel = rel_of(root, &p);
+                    let text = std::fs::read_to_string(&p)
+                        .with_context(|| format!("reading {rel}"))?;
+                    ws.slo_specs.push((rel, text));
+                }
             }
         }
 
@@ -784,7 +807,9 @@ fn lint_experiment_numbering(ws: &Workspace, out: &mut Vec<Finding>) {
 /// `BENCH_engine.json`) must exist and its schema must match what its bench
 /// emitter actually writes (key sets extracted from the bench source), so
 /// the in-repo perf trajectory cannot silently diverge from the tool that
-/// produces it. A pair is skipped when its bench source is absent.
+/// produces it. A pair is skipped when its bench source is absent. The
+/// committed obs artifacts (`BENCH_obs_baseline.prom`, `slo/*.json`) are
+/// held to the same standard by [`lint_obs_artifacts`].
 fn lint_bench_baseline(ws: &Workspace, out: &mut Vec<Finding>) {
     const PAIRS: [(&str, &str); 2] = [
         ("e6_decision_latency.rs", "BENCH_e6.json"),
@@ -792,6 +817,121 @@ fn lint_bench_baseline(ws: &Workspace, out: &mut Vec<Finding>) {
     ];
     for (bench_file, baseline_file) in PAIRS {
         lint_bench_pair(ws, bench_file, baseline_file, out);
+    }
+    lint_obs_artifacts(ws, out);
+}
+
+/// The observability half of `bench-baseline`: the committed obs regression
+/// baseline must parse with the crate's own Prometheus loader and carry
+/// every counter the drivers always emit, and each committed SLO spec must
+/// parse and only reference metrics the baseline (or a tracked bench file)
+/// can answer — so CI's `repro obs diff`/`check` gates cannot rot into
+/// comparing against garbage. Skipped when the obs SLO engine is absent
+/// (fixture workspaces).
+fn lint_obs_artifacts(ws: &Workspace, out: &mut Vec<Finding>) {
+    use crate::obs::slo::{SloRule, SloSpec};
+
+    if ws.find_src("obs/slo.rs").is_none() {
+        return;
+    }
+    const PROM: &str = "BENCH_obs_baseline.prom";
+    let mut complain = |file: &str, msg: String| {
+        out.push(Finding { lint: "bench-baseline", file: file.into(), line: 0, msg });
+    };
+    let dump = match &ws.obs_baseline {
+        None => {
+            complain(
+                PROM,
+                "missing — run the quick E10 sweep with --obs-dump and \
+                 commit cell 5 (see OBSERVABILITY.md)"
+                    .into(),
+            );
+            return;
+        }
+        Some((rel, text)) => match crate::obs::export::dump_from_prometheus(text) {
+            Ok(d) => d,
+            Err(e) => {
+                complain(rel, format!("does not parse as a Prometheus snapshot: {e}"));
+                return;
+            }
+        },
+    };
+    for name in crate::scheduler::api::OBS_EVENT_NAMES {
+        if dump.value(name).is_none() {
+            complain(PROM, format!("misses the '{name}' counter the drivers always emit"));
+        }
+    }
+    match dump.value("obs_collisions") {
+        None => complain(PROM, "misses the 'obs_collisions' counter".into()),
+        // a collision in the committed baseline means the registry that
+        // produced it was broken -- lint: allow(float-eq)
+        Some(v) if v != 0.0 => {
+            complain(PROM, format!("obs_collisions is {v}, expected 0"));
+        }
+        Some(_) => {}
+    }
+
+    if ws.slo_specs.is_empty() {
+        complain("slo/ci.json", "missing — CI's obs gate needs a committed SLO spec".into());
+        return;
+    }
+    // every metric an SLO rule names must be answerable, so a renamed
+    // counter cannot quietly turn a gate vacuous
+    let known =
+        |m: &str| dump.value(m).is_some() || dump.hists.contains_key(m);
+    for (rel, text) in &ws.slo_specs {
+        let spec = match SloSpec::parse(text) {
+            Ok(s) => s,
+            Err(e) => {
+                complain(rel, format!("does not parse as an SLO spec: {e}"));
+                continue;
+            }
+        };
+        for rule in &spec.rules {
+            match rule {
+                SloRule::Value { metric, .. }
+                | SloRule::Percentile { metric, .. }
+                | SloRule::Burn { metric, .. } => {
+                    if !known(metric) {
+                        complain(rel, format!("rule names '{metric}', absent from {PROM}"));
+                    }
+                }
+                SloRule::Ratio { num, den, .. } => {
+                    for m in [num, den] {
+                        if !known(m) {
+                            complain(rel, format!("rule names '{m}', absent from {PROM}"));
+                        }
+                    }
+                }
+                SloRule::Bench { file, key, .. } => {
+                    let Some((_, btext)) =
+                        ws.bench_baselines.iter().find(|(n, _)| n == file)
+                    else {
+                        complain(
+                            rel,
+                            format!("bench rule reads '{file}', not a tracked baseline"),
+                        );
+                        continue;
+                    };
+                    let has_key = Json::parse(btext)
+                        .ok()
+                        .as_ref()
+                        .and_then(|j| j.get("results"))
+                        .and_then(Json::as_obj)
+                        .is_some_and(|results| {
+                            results.values().any(|e| {
+                                e.get(key).and_then(Json::as_f64).is_some()
+                            })
+                        });
+                    if !has_key {
+                        complain(
+                            rel,
+                            format!("bench rule reads '{file}:{key}', but no result carries that key"),
+                        );
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -1323,6 +1463,84 @@ mod tests {
             r#"{"bench": "engine", "results": {"pending_1000": {"heap_ns": 95.0, "calendar_ns": 88.0}}}"#,
         );
         assert!(run_lints(&root2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn obs_artifacts_are_schema_checked() {
+        use crate::scheduler::api::OBS_EVENT_NAMES;
+
+        // without the obs SLO engine in the tree the whole check skips,
+        // so plain fixture workspaces stay green
+        let root = scratch("obs_skip");
+        put(&root, "rust/src/a.rs", "pub fn f() {}\n");
+        assert!(run_lints(&root).unwrap().is_empty());
+
+        // with it present, a missing baseline is its own finding
+        let root = scratch("obs_missing");
+        put(&root, "rust/src/obs/slo.rs", "// slo engine\n");
+        let f = run_lints(&root).unwrap();
+        assert!(
+            f.iter().any(|x| {
+                x.lint == "bench-baseline" && x.file == "BENCH_obs_baseline.prom"
+            }),
+            "{f:?}"
+        );
+
+        // a complete baseline + a spec whose rules all resolve is green
+        let mut prom = String::from("obs_collisions 0\n");
+        for n in OBS_EVENT_NAMES {
+            prom.push_str(&format!("{n} 12\n"));
+        }
+        let spec = "{\"slo\": [\
+            {\"kind\": \"value\", \"metric\": \"obs_collisions\", \"max\": 0},\
+            {\"kind\": \"bench\", \"file\": \"BENCH_engine.json\", \
+             \"key\": \"obs_overhead_pct\", \"max\": 5.0}]}";
+        let root = scratch("obs_ok");
+        put(&root, "rust/src/obs/slo.rs", "// slo engine\n");
+        put(&root, "BENCH_obs_baseline.prom", &prom);
+        put(&root, "slo/ci.json", spec);
+        put(
+            &root,
+            "BENCH_engine.json",
+            "{\"results\": {\"engine\": {\"obs_overhead_pct\": 3.2}}}",
+        );
+        assert!(run_lints(&root).unwrap().is_empty());
+
+        // a collision, missing driver counters, a rule naming a ghost
+        // metric, and a bench rule on an untracked file all fire
+        let root = scratch("obs_bad");
+        put(&root, "rust/src/obs/slo.rs", "// slo engine\n");
+        put(&root, "BENCH_obs_baseline.prom", "obs_collisions 3\n");
+        put(
+            &root,
+            "slo/ci.json",
+            "{\"slo\": [\
+              {\"kind\": \"value\", \"metric\": \"ghost_metric\", \"max\": 1},\
+              {\"kind\": \"bench\", \"file\": \"BENCH_nope.json\", \
+               \"key\": \"x\", \"max\": 1}]}",
+        );
+        let f = run_lints(&root).unwrap();
+        let msgs: Vec<&str> = f.iter().map(|x| x.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("obs_collisions is 3")), "{f:?}");
+        assert!(msgs.iter().any(|m| m.contains("'ghost_metric'")), "{f:?}");
+        assert!(msgs.iter().any(|m| m.contains("'BENCH_nope.json'")), "{f:?}");
+        assert!(
+            msgs.iter().any(|m| m.contains("'sched_ev_task_started'")),
+            "{f:?}"
+        );
+
+        // an unparseable spec is reported, not swallowed
+        let root = scratch("obs_garbage_spec");
+        put(&root, "rust/src/obs/slo.rs", "// slo engine\n");
+        put(&root, "BENCH_obs_baseline.prom", &prom);
+        put(&root, "slo/ci.json", "not json");
+        let f = run_lints(&root).unwrap();
+        assert!(
+            f.iter().any(|x| {
+                x.file == "slo/ci.json" && x.msg.contains("does not parse")
+            }),
+            "{f:?}"
+        );
     }
 
     #[test]

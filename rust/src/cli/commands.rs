@@ -30,6 +30,9 @@ USAGE:
                    [--mtbf SECS] [--mttr SECS] [obs flags]
   repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
   repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
+  repro obs diff   <a.prom|a.jsonl> <b.prom|b.jsonl> [--match PREFIX]
+                   [--fail-on PCT]
+  repro obs check  --slo slo.json <dump.prom|dump.jsonl>
   repro lint       [--root DIR] [--trace FILE.jsonl] [--skip-churn]
   repro info
 
@@ -40,9 +43,18 @@ Policies:   any scheduler name (unified trait), plus the yarn-fifo,
 Mixes:      balanced | cpu_heavy|io_heavy|mem_heavy|net_heavy|small | cpu:<f>
 Obs flags:  --obs-dump FILE.prom (Prometheus text snapshot)
             --obs-trace FILE.json (chrome://tracing spans)
-            --obs-jsonl FILE.jsonl (metrics + spans, one JSON per line)
+            --obs-jsonl FILE.jsonl (metrics + spans + windows, JSONL v2)
+            --obs-window SECS (close a metric-delta window every SECS
+                               sim seconds; exported to JSONL/CSV)
+            --obs-csv FILE.csv (long-format time-series of the windows)
             --obs-sample N (keep every Nth duration span, default 1)
             --verbose (enable warn/info driver logs, off by default)
+
+`repro obs diff a b` compares two dumps (Prometheus or JSONL): scalar
+deltas plus p50/p95/p99 shifts per histogram; `--match PREFIX` restricts
+to matching metric names, `--fail-on PCT` exits 1 when any matched
+change exceeds PCT percent. `repro obs check` evaluates a declarative
+SLO spec (see OBSERVABILITY.md) against a dump and exits 1 on violation.
 ";
 
 /// Dispatch a full command line (without argv[0]). Returns process exit code.
@@ -62,6 +74,7 @@ pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "yarn" => cmd_yarn(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "trace-run" => cmd_trace_run(&args),
+        "obs" => cmd_obs(&args),
         "lint" => cmd_lint(&args),
         "info" => cmd_info(),
         "help" | "--help" => {
@@ -119,10 +132,13 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
 
 /// Parse the shared `--obs-*` observability flags.
 fn obs_from_args(args: &Args) -> Result<crate::obs::ObsOptions> {
+    let window = args.opt_f64("obs-window", 0.0)?;
     Ok(crate::obs::ObsOptions {
         dump: args.opt("obs-dump").map(PathBuf::from),
         trace: args.opt("obs-trace").map(PathBuf::from),
         jsonl: args.opt("obs-jsonl").map(PathBuf::from),
+        window: (window > 0.0).then_some(window),
+        csv: args.opt("obs-csv").map(PathBuf::from),
         sample: args.opt_u64("obs-sample", 1)?.max(1),
         verbose: args.flag("verbose"),
     })
@@ -188,6 +204,7 @@ fn cmd_run(args: &Args) -> Result<i32> {
         (&cfg.obs.dump, "prometheus snapshot"),
         (&cfg.obs.trace, "chrome trace"),
         (&cfg.obs.jsonl, "obs jsonl"),
+        (&cfg.obs.csv, "time-series csv"),
     ] {
         if let Some(p) = p {
             println!("wrote {what} to {}", p.display());
@@ -382,6 +399,151 @@ fn cmd_trace_run(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `repro obs <diff|check>`: the offline half of the observatory —
+/// regression diffs between two metric dumps and declarative SLO gates
+/// over one.
+fn cmd_obs(args: &Args) -> Result<i32> {
+    match args.positionals.get(1).map(String::as_str) {
+        Some("diff") => cmd_obs_diff(args),
+        Some("check") => cmd_obs_check(args),
+        _ => Err(anyhow!(
+            "usage: repro obs diff <a> <b> [--match PREFIX] [--fail-on PCT]\n\
+             \x20      repro obs check --slo slo.json <dump>"
+        )),
+    }
+}
+
+/// Percent change from `old` to `new`; a metric appearing or vanishing
+/// counts as a 100% change so `--fail-on` still gates it.
+fn pct_change(old: f64, new: f64) -> f64 {
+    if old == new {
+        // bit-identical fast path
+        0.0
+    // appeared from nothing: treat as a 100% shift -- lint: allow(float-eq)
+    } else if old == 0.0 {
+        100.0
+    } else {
+        (new - old) / old.abs() * 100.0
+    }
+}
+
+fn cmd_obs_diff(args: &Args) -> Result<i32> {
+    let (Some(a_path), Some(b_path)) = (args.positionals.get(2), args.positionals.get(3)) else {
+        return Err(anyhow!("usage: repro obs diff <a> <b> [--match PREFIX] [--fail-on PCT]"));
+    };
+    let a = crate::obs::export::load_dump(Path::new(a_path))?;
+    let b = crate::obs::export::load_dump(Path::new(b_path))?;
+    let prefix = args.opt_or("match", "");
+    let fail_on = match args.opt("fail-on") {
+        Some(_) => Some(args.opt_f64("fail-on", 0.0)?),
+        None => None,
+    };
+
+    let mut worst: f64 = 0.0;
+    let mut unchanged = 0usize;
+    let mut t = Table::new(
+        &format!("obs diff: {a_path} -> {b_path}"),
+        &["metric", "old", "new", "delta_pct"],
+    );
+    let names: std::collections::BTreeSet<&String> =
+        a.scalars.keys().chain(b.scalars.keys()).collect();
+    for name in names {
+        if !name.starts_with(prefix) {
+            continue;
+        }
+        let old = a.value(name).unwrap_or(0.0);
+        let new = b.value(name).unwrap_or(0.0);
+        let pct = pct_change(old, new);
+        // only changed metrics earn a row -- lint: allow(float-eq)
+        if pct == 0.0 {
+            unchanged += 1;
+            continue;
+        }
+        worst = worst.max(pct.abs());
+        t.row(vec![
+            name.clone(),
+            fnum(old),
+            fnum(new),
+            format!("{pct:+.2}"),
+        ]);
+    }
+    let hist_names: std::collections::BTreeSet<&String> =
+        a.hists.keys().chain(b.hists.keys()).collect();
+    for name in hist_names {
+        if !name.starts_with(prefix) {
+            continue;
+        }
+        let pa = a.hists.get(name).map(crate::obs::Percentiles::of).unwrap_or_default();
+        let pb = b.hists.get(name).map(crate::obs::Percentiles::of).unwrap_or_default();
+        for (tag, old, new) in [
+            ("p50", pa.p50, pb.p50),
+            ("p95", pa.p95, pb.p95),
+            ("p99", pa.p99, pb.p99),
+        ] {
+            let pct = pct_change(old, new);
+            // zero shift earns no row -- lint: allow(float-eq)
+            if pct == 0.0 {
+                unchanged += 1;
+                continue;
+            }
+            worst = worst.max(pct.abs());
+            t.row(vec![
+                format!("{name}:{tag}"),
+                fnum(old),
+                fnum(new),
+                format!("{pct:+.2}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "{unchanged} matched sample(s) unchanged; worst shift {worst:.2}%{}",
+        if prefix.is_empty() {
+            String::new()
+        } else {
+            format!(" (filter: '{prefix}')")
+        }
+    );
+    if let Some(limit) = fail_on {
+        if worst > limit {
+            println!("obs diff: FAIL (worst {worst:.2}% > --fail-on {limit}%)");
+            return Ok(1);
+        }
+        println!("obs diff: within --fail-on {limit}%");
+    }
+    Ok(0)
+}
+
+fn cmd_obs_check(args: &Args) -> Result<i32> {
+    let slo_path = args
+        .opt("slo")
+        .ok_or_else(|| anyhow!("--slo slo.json required"))?;
+    let dump_path = args
+        .positionals
+        .get(2)
+        .ok_or_else(|| anyhow!("usage: repro obs check --slo slo.json <dump>"))?;
+    let spec = crate::obs::slo::SloSpec::load(Path::new(slo_path))?;
+    let dump = crate::obs::export::load_dump(Path::new(dump_path))?;
+    // bench rules resolve relative to the working directory (repo root
+    // in CI), same as the spec author sees them
+    let violations = spec.evaluate(&dump, Path::new("."));
+    for v in &violations {
+        println!("{dump_path}: {v}");
+    }
+    println!(
+        "obs check: {} rule(s), {} violation(s)",
+        spec.rules.len(),
+        violations.len()
+    );
+    if violations.is_empty() {
+        println!("obs check: PASS");
+        Ok(0)
+    } else {
+        println!("obs check: FAIL");
+        Ok(1)
+    }
+}
+
 /// `repro lint`: the project's own static analysis (LINTS.md) plus the
 /// SchedEvent protocol audit — offline over `--trace FILE` when given,
 /// otherwise the built-in fail/recover churn sweep over every scheduler
@@ -532,6 +694,97 @@ mod tests {
             0,
             "repro lint found problems in the repo or the recorded trace"
         );
+    }
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("repro_cli_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_prom(dir: &Path, file: &str, started: u64, failed: u64) -> PathBuf {
+        let r = crate::obs::Registry::new();
+        r.counter("sched_ev_task_started").add(started);
+        r.counter("sched_ev_task_failed").add(failed);
+        let h = r.histogram("driver_queue_depth");
+        for v in 0..started {
+            h.record(v);
+        }
+        let path = dir.join(file);
+        std::fs::write(&path, crate::obs::export::to_prometheus(&r.snapshot())).unwrap();
+        path
+    }
+
+    #[test]
+    fn obs_diff_gates_on_fail_on() {
+        let dir = scratch_dir("diff");
+        let a = write_prom(&dir, "a.prom", 100, 2);
+        let b = write_prom(&dir, "b.prom", 100, 3); // failed +50%
+        let same = |x: &Path, y: &Path, extra: &str| {
+            let cmd = format!("obs diff {} {} {extra}", x.display(), y.display());
+            dispatch(cmd.split_whitespace().map(String::from)).unwrap()
+        };
+        assert_eq!(same(&a, &a, ""), 0, "self-diff is clean");
+        assert_eq!(same(&a, &a, "--fail-on 0"), 0, "self-diff passes any gate");
+        assert_eq!(same(&a, &b, ""), 0, "no gate, report only");
+        assert_eq!(same(&a, &b, "--fail-on 10"), 1, "+50% breaches 10%");
+        assert_eq!(same(&a, &b, "--fail-on 60"), 0, "+50% fits under 60%");
+        assert_eq!(
+            same(&a, &b, "--match sched_ev_task_started --fail-on 10"),
+            0,
+            "the changed metric is filtered out by --match"
+        );
+        assert!(dispatch(vec!["obs".into()]).is_err(), "missing subcommand");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn obs_check_evaluates_the_slo_spec() {
+        let dir = scratch_dir("check");
+        let dump = write_prom(&dir, "m.prom", 100, 2);
+        let ok_spec = dir.join("ok.json");
+        std::fs::write(
+            &ok_spec,
+            r#"{"slo":[
+                {"kind":"value","metric":"obs_collisions","max":0},
+                {"kind":"ratio","num":"sched_ev_task_failed","den":"sched_ev_task_started","max":0.05}
+            ]}"#,
+        )
+        .unwrap();
+        let bad_spec = dir.join("bad.json");
+        std::fs::write(
+            &bad_spec,
+            r#"{"slo":[{"kind":"value","metric":"sched_ev_task_failed","max":1}]}"#,
+        )
+        .unwrap();
+        let check = |spec: &Path| {
+            let cmd = format!("obs check --slo {} {}", spec.display(), dump.display());
+            dispatch(cmd.split_whitespace().map(String::from)).unwrap()
+        };
+        assert_eq!(check(&ok_spec), 0);
+        assert_eq!(check(&bad_spec), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn windowed_run_via_cli_writes_the_csv() {
+        let dir = scratch_dir("window");
+        let csv = dir.join("ts.csv");
+        let jsonl = dir.join("o.jsonl");
+        let cmd = format!(
+            "run --scheduler fifo --nodes 4 --jobs 8 --seed 3 --obs-window 60 \
+             --obs-csv {} --obs-jsonl {}",
+            csv.display(),
+            jsonl.display()
+        );
+        assert_eq!(dispatch(cmd.split_whitespace().map(String::from)).unwrap(), 0);
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.starts_with("window,sim_start,sim_end,"));
+        assert!(text.lines().count() > 1, "windowed run must emit rows");
+        let doc = crate::obs::export::parse_jsonl(&std::fs::read_to_string(&jsonl).unwrap())
+            .expect("jsonl parses");
+        assert!(!doc.windows.is_empty(), "jsonl carries the window series");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

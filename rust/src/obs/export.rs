@@ -5,16 +5,23 @@
 //! testable without external tooling.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use crate::config::json::Json;
 use crate::errors::{Context, Result};
 
-use super::registry::{bucket_upper, HistSnapshot, Registry, Snapshot};
+use super::registry::{bucket_index, bucket_upper, HistSnapshot, Registry, Snapshot, N_BUCKETS};
 use super::span::Tracer;
+use super::timeseries::{self, WindowRecord};
 use super::ObsOptions;
 
-/// Version stamp of the JSONL obs stream (`{"ev":"obs","version":1}`).
-pub const OBS_VERSION: u64 = 1;
+/// Version stamp of the JSONL obs stream (`{"ev":"obs","version":2}`).
+/// v2 added per-window `{"ev":"window"}` records and sparse bucket
+/// payloads on `hist` lines; the parser still accepts v1 streams.
+pub const OBS_VERSION: u64 = 2;
+
+/// Oldest JSONL stream version [`parse_jsonl`] still understands.
+pub const OBS_MIN_VERSION: u64 = 1;
 
 fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -175,9 +182,48 @@ fn hist_json(name: &str, h: &HistSnapshot) -> Json {
     ])
 }
 
-/// Serialize the whole observation of a run — metric snapshot plus span
-/// stream — as versioned JSONL.
-pub fn to_jsonl(snap: &Snapshot, tracer: &Tracer) -> String {
+fn window_json(w: &WindowRecord) -> Json {
+    let pairs = |v: &[(String, u64)]| {
+        Json::Arr(
+            v.iter()
+                .map(|(n, x)| Json::Arr(vec![s(n), numu(*x)]))
+                .collect(),
+        )
+    };
+    let hists = Json::Arr(
+        w.hists
+            .iter()
+            .map(|(n, h)| {
+                let buckets: Vec<Json> = h
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| **c > 0)
+                    .map(|(i, c)| Json::Arr(vec![num(i as f64), numu(*c)]))
+                    .collect();
+                Json::Arr(vec![
+                    s(n),
+                    numu(h.count),
+                    numu(h.sum),
+                    Json::Arr(buckets),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("ev", s("window")),
+        ("i", numu(w.index)),
+        ("sim_start", Json::Num(w.sim_start)),
+        ("sim_end", Json::Num(w.sim_end)),
+        ("counters", pairs(&w.counters)),
+        ("gauges", pairs(&w.gauges)),
+        ("hists", hists),
+    ])
+}
+
+/// Serialize the whole observation of a run — metric snapshot, window
+/// series, and span stream — as versioned JSONL.
+pub fn to_jsonl(snap: &Snapshot, tracer: &Tracer, windows: &[WindowRecord]) -> String {
     let mut out = String::new();
     let mut push = |j: Json| {
         out.push_str(&j.to_string_compact());
@@ -205,6 +251,9 @@ pub fn to_jsonl(snap: &Snapshot, tracer: &Tracer) -> String {
     for (name, h) in &snap.histograms {
         push(hist_json(name, h));
     }
+    for w in windows {
+        push(window_json(w));
+    }
     for sp in tracer.spans() {
         push(obj(vec![
             ("ev", s("span")),
@@ -229,10 +278,15 @@ pub fn to_jsonl(snap: &Snapshot, tracer: &Tracer) -> String {
 /// Parsed-back JSONL obs stream, for round-trip tests and offline tools.
 #[derive(Clone, Debug, Default)]
 pub struct JsonlDoc {
+    pub version: u64,
     pub counters: BTreeMap<String, u64>,
     pub gauges: BTreeMap<String, u64>,
-    /// `name -> (count, sum)` per histogram.
+    /// `name -> (count, sum)` per histogram (kept for v1 consumers).
     pub histograms: BTreeMap<String, (u64, u64)>,
+    /// Full bucket payloads per histogram (v2 streams).
+    pub hist_buckets: BTreeMap<String, HistSnapshot>,
+    /// The per-window delta series, in emit order (v2 streams).
+    pub windows: Vec<WindowRecord>,
     pub spans: u64,
     pub instants: u64,
     pub dropped: u64,
@@ -249,6 +303,74 @@ fn get_u64(o: &BTreeMap<String, Json>, key: &str) -> Result<u64> {
     o.get(key)
         .and_then(|v| v.as_u64())
         .with_context(|| format!("bad field '{key}'"))
+}
+
+fn get_f64(o: &BTreeMap<String, Json>, key: &str) -> Result<f64> {
+    o.get(key)
+        .and_then(|v| v.as_f64())
+        .with_context(|| format!("bad field '{key}'"))
+}
+
+/// Decode a `[[index, count], ...]` sparse bucket array.
+fn parse_sparse_buckets(j: &Json) -> Result<[u64; N_BUCKETS]> {
+    let mut buckets = [0u64; N_BUCKETS];
+    for pair in j.as_arr().context("buckets is not an array")? {
+        let pair = pair.as_arr().context("bucket entry is not a pair")?;
+        let i = pair
+            .first()
+            .and_then(|v| v.as_u64())
+            .context("bucket index")? as usize;
+        let n = pair.get(1).and_then(|v| v.as_u64()).context("bucket count")?;
+        if i >= N_BUCKETS {
+            crate::bail!("bucket index {i} out of range");
+        }
+        buckets[i] = n;
+    }
+    Ok(buckets)
+}
+
+/// Decode a `[["name", value], ...]` pair array.
+fn parse_pairs(j: &Json) -> Result<Vec<(String, u64)>> {
+    let mut out = Vec::new();
+    for pair in j.as_arr().context("pairs is not an array")? {
+        let pair = pair.as_arr().context("pair entry is not an array")?;
+        let name = pair
+            .first()
+            .and_then(|v| v.as_str())
+            .context("pair name")?
+            .to_string();
+        let v = pair.get(1).and_then(|v| v.as_u64()).context("pair value")?;
+        out.push((name, v));
+    }
+    Ok(out)
+}
+
+fn parse_window(o: &BTreeMap<String, Json>) -> Result<WindowRecord> {
+    let mut w = WindowRecord {
+        index: get_u64(o, "i")?,
+        sim_start: get_f64(o, "sim_start")?,
+        sim_end: get_f64(o, "sim_end")?,
+        counters: parse_pairs(o.get("counters").context("window counters")?)?,
+        gauges: parse_pairs(o.get("gauges").context("window gauges")?)?,
+        hists: Vec::new(),
+    };
+    for h in o
+        .get("hists")
+        .and_then(|v| v.as_arr())
+        .context("window hists")?
+    {
+        let h = h.as_arr().context("window hist entry")?;
+        let name = h
+            .first()
+            .and_then(|v| v.as_str())
+            .context("window hist name")?
+            .to_string();
+        let count = h.get(1).and_then(|v| v.as_u64()).context("hist count")?;
+        let sum = h.get(2).and_then(|v| v.as_u64()).context("hist sum")?;
+        let buckets = parse_sparse_buckets(h.get(3).context("hist buckets")?)?;
+        w.hists.push((name, HistSnapshot { count, sum, buckets }));
+    }
+    Ok(w)
 }
 
 /// Parse a JSONL obs stream. Validates the versioned header line.
@@ -273,9 +395,12 @@ pub fn parse_jsonl(text: &str) -> Result<JsonlDoc> {
                 crate::bail!("obs stream has no header line");
             }
             let version = get_u64(o, "version")?;
-            if version != OBS_VERSION {
-                crate::bail!("obs stream version {version}, expected {OBS_VERSION}");
+            if !(OBS_MIN_VERSION..=OBS_VERSION).contains(&version) {
+                crate::bail!(
+                    "obs stream version {version}, expected {OBS_MIN_VERSION}..={OBS_VERSION}"
+                );
             }
+            doc.version = version;
             doc.dropped = get_u64(o, "dropped").unwrap_or(0);
             saw_header = true;
             continue;
@@ -288,9 +413,22 @@ pub fn parse_jsonl(text: &str) -> Result<JsonlDoc> {
                 doc.gauges.insert(get_name(o)?, get_u64(o, "value")?);
             }
             "hist" => {
-                doc.histograms
-                    .insert(get_name(o)?, (get_u64(o, "count")?, get_u64(o, "sum")?));
+                let name = get_name(o)?;
+                let count = get_u64(o, "count")?;
+                let sum = get_u64(o, "sum")?;
+                if let Some(b) = o.get("buckets") {
+                    doc.hist_buckets.insert(
+                        name.clone(),
+                        HistSnapshot {
+                            count,
+                            sum,
+                            buckets: parse_sparse_buckets(b)?,
+                        },
+                    );
+                }
+                doc.histograms.insert(name, (count, sum));
             }
+            "window" => doc.windows.push(parse_window(o)?),
             "span" => doc.spans += 1,
             "instant" => doc.instants += 1,
             other => crate::bail!("unknown obs event tag '{other}'"),
@@ -302,10 +440,147 @@ pub fn parse_jsonl(text: &str) -> Result<JsonlDoc> {
     Ok(doc)
 }
 
+// ---------------------------------------------------------------- dump
+
+/// A metric dump loaded back from disk — the common shape `repro obs
+/// diff`, `repro obs check`, and the SLO evaluator consume, whichever
+/// exporter wrote the file.
+#[derive(Clone, Debug, Default)]
+pub struct Dump {
+    /// Counters and gauges, flattened to `name -> value`.
+    pub scalars: BTreeMap<String, f64>,
+    /// Full histograms (percentile questions need the buckets).
+    pub hists: BTreeMap<String, HistSnapshot>,
+    /// The window series, when the dump carried one (JSONL v2 only).
+    pub windows: Vec<WindowRecord>,
+}
+
+impl Dump {
+    /// Look a metric up by name: scalars directly, histograms by their
+    /// exact `_count` / `_sum` derived samples.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        if let Some(v) = self.scalars.get(name) {
+            return Some(*v);
+        }
+        if let Some(stem) = name.strip_suffix("_count") {
+            if let Some(h) = self.hists.get(stem) {
+                return Some(h.count as f64);
+            }
+        }
+        if let Some(stem) = name.strip_suffix("_sum") {
+            if let Some(h) = self.hists.get(stem) {
+                return Some(h.sum as f64);
+            }
+        }
+        None
+    }
+}
+
+/// Rebuild a [`Dump`] from a Prometheus text snapshot: cumulative
+/// `_bucket{le="..."}` samples are de-cumulated back into per-bucket
+/// counts and the histogram's `_sum`/`_count`/`_bucket` samples leave
+/// the scalar table.
+pub fn dump_from_prometheus(text: &str) -> Result<Dump> {
+    let samples = parse_prometheus(text)?;
+    let mut dump = Dump::default();
+    // pass 1: find histogram stems and their cumulative bucket samples
+    let mut cumulative: BTreeMap<String, Vec<(usize, u64)>> = BTreeMap::new();
+    for (key, value) in &samples {
+        let Some((stem, label)) = key.split_once("_bucket{le=\"") else {
+            continue;
+        };
+        let le = label.trim_end_matches("\"}");
+        if le == "+Inf" {
+            cumulative.entry(stem.to_string()).or_default();
+            continue;
+        }
+        let le: u64 = le
+            .parse()
+            .with_context(|| format!("bad le label in '{key}'"))?;
+        cumulative
+            .entry(stem.to_string())
+            .or_default()
+            .push((bucket_index(le), *value as u64));
+    }
+    for (stem, mut cum) in cumulative {
+        cum.sort_unstable();
+        let mut h = HistSnapshot {
+            count: samples
+                .get(&format!("{stem}_count"))
+                .copied()
+                .unwrap_or(0.0) as u64,
+            sum: samples.get(&format!("{stem}_sum")).copied().unwrap_or(0.0) as u64,
+            buckets: [0; N_BUCKETS],
+        };
+        let mut prev = 0u64;
+        for (i, c) in cum {
+            if i < N_BUCKETS {
+                h.buckets[i] = c.saturating_sub(prev);
+            }
+            prev = c;
+        }
+        dump.hists.insert(stem, h);
+    }
+    // pass 2: everything not owned by a histogram is a scalar
+    for (key, value) in samples {
+        let owned = dump.hists.keys().any(|stem| {
+            key.strip_prefix(stem.as_str()).is_some_and(|rest| {
+                rest == "_sum" || rest == "_count" || rest.starts_with("_bucket{")
+            })
+        });
+        if !owned {
+            dump.scalars.insert(key, value);
+        }
+    }
+    Ok(dump)
+}
+
+/// Rebuild a [`Dump`] from a JSONL obs stream (v1 or v2).
+pub fn dump_from_jsonl(text: &str) -> Result<Dump> {
+    let doc = parse_jsonl(text)?;
+    let mut dump = Dump {
+        windows: doc.windows,
+        ..Dump::default()
+    };
+    for (name, v) in doc.counters.into_iter().chain(doc.gauges) {
+        dump.scalars.insert(name, v as f64);
+    }
+    for (name, h) in doc.hist_buckets {
+        dump.hists.insert(name, h);
+    }
+    // v1 streams carried only (count, sum); surface them as scalars so
+    // value() still answers `_count` / `_sum` questions
+    for (name, (count, sum)) in doc.histograms {
+        if !dump.hists.contains_key(&name) {
+            dump.scalars.insert(format!("{name}_count"), count as f64);
+            dump.scalars.insert(format!("{name}_sum"), sum as f64);
+        }
+    }
+    Ok(dump)
+}
+
+/// Load a dump from disk, sniffing the format: a JSON object on the
+/// first non-empty line means JSONL, anything else Prometheus text.
+pub fn load_dump(path: &Path) -> Result<Dump> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("");
+    if first.trim_start().starts_with('{') {
+        dump_from_jsonl(&text).with_context(|| format!("{} as obs jsonl", path.display()))
+    } else {
+        dump_from_prometheus(&text).with_context(|| format!("{} as prometheus", path.display()))
+    }
+}
+
 // --------------------------------------------------------------- files
 
 /// Write every export the options ask for. Called once, after the run.
-pub fn write_all(opts: &ObsOptions, registry: &Registry, tracer: &Tracer) -> Result<()> {
+pub fn write_all(
+    opts: &ObsOptions,
+    registry: &Registry,
+    tracer: &Tracer,
+    windows: &[WindowRecord],
+) -> Result<()> {
     let snap = registry.snapshot();
     if let Some(path) = &opts.dump {
         std::fs::write(path, to_prometheus(&snap))
@@ -316,7 +591,11 @@ pub fn write_all(opts: &ObsOptions, registry: &Registry, tracer: &Tracer) -> Res
             .with_context(|| format!("writing {}", path.display()))?;
     }
     if let Some(path) = &opts.jsonl {
-        std::fs::write(path, to_jsonl(&snap, tracer))
+        std::fs::write(path, to_jsonl(&snap, tracer, windows))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    if let Some(path) = &opts.csv {
+        std::fs::write(path, timeseries::to_csv(windows))
             .with_context(|| format!("writing {}", path.display()))?;
     }
     Ok(())
@@ -381,11 +660,24 @@ mod tests {
         assert_eq!(counts["i:sched_ev_task_started"], 3);
     }
 
+    fn sample_windows() -> Vec<WindowRecord> {
+        let r = Registry::new();
+        let c = r.counter("sched_ev_task_started");
+        let h = r.histogram("driver_assign_nanos");
+        let mut ws = crate::obs::timeseries::WindowSnapshotter::new(r.clone(), 10.0);
+        c.add(2);
+        h.record(1500);
+        ws.tick(10.0);
+        c.inc();
+        ws.flush(14.0)
+    }
+
     #[test]
     fn jsonl_round_trips() {
         let (r, t) = sample();
-        let text = to_jsonl(&r.snapshot(), &t);
+        let text = to_jsonl(&r.snapshot(), &t, &[]);
         let doc = parse_jsonl(&text).expect("parse obs jsonl");
+        assert_eq!(doc.version, OBS_VERSION);
         assert_eq!(doc.counters["sched_ev_task_started"], 3);
         assert_eq!(doc.counters["obs_collisions"], 0);
         assert_eq!(doc.gauges["engine_events_dispatched"], 42);
@@ -393,6 +685,24 @@ mod tests {
         assert_eq!(doc.spans, 2);
         assert_eq!(doc.instants, 3);
         assert_eq!(doc.dropped, 0);
+        assert!(doc.windows.is_empty());
+        // v2 hist lines carry their buckets exactly
+        let h = &doc.hist_buckets["driver_assign_nanos"];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn jsonl_v2_round_trips_the_window_series() {
+        let (r, t) = sample();
+        let windows = sample_windows();
+        let text = to_jsonl(&r.snapshot(), &t, &windows);
+        let doc = parse_jsonl(&text).expect("parse obs jsonl");
+        assert_eq!(doc.windows, windows, "windows must round-trip exactly");
+        assert_eq!(doc.windows[0].counters, vec![("sched_ev_task_started".to_string(), 2)]);
+        assert_eq!(doc.windows[1].counters, vec![("sched_ev_task_started".to_string(), 1)]);
+        assert_eq!(doc.windows[0].hists[0].1.count, 1);
+        assert_eq!(doc.windows[0].hists[0].1.sum, 1500);
     }
 
     #[test]
@@ -413,15 +723,65 @@ mod tests {
             dump: Some(dir.join("m.prom")),
             trace: Some(dir.join("t.json")),
             jsonl: Some(dir.join("o.jsonl")),
+            csv: Some(dir.join("ts.csv")),
             ..ObsOptions::default()
         };
-        write_all(&opts, &r, &t).expect("write exports");
+        write_all(&opts, &r, &t, &sample_windows()).expect("write exports");
         let prom = std::fs::read_to_string(dir.join("m.prom")).unwrap();
         assert!(parse_prometheus(&prom).is_ok());
         let trace = std::fs::read_to_string(dir.join("t.json")).unwrap();
         assert!(chrome_event_counts(&trace).is_ok());
         let jsonl = std::fs::read_to_string(dir.join("o.jsonl")).unwrap();
         assert!(parse_jsonl(&jsonl).is_ok());
+        let csv = std::fs::read_to_string(dir.join("ts.csv")).unwrap();
+        assert!(csv.starts_with("window,sim_start,sim_end,"));
+        assert!(csv.lines().count() > 1, "csv carries the window rows");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dump_from_prometheus_rebuilds_histogram_buckets() {
+        let (r, _) = sample();
+        let dump = dump_from_prometheus(&to_prometheus(&r.snapshot())).expect("load prom");
+        assert_eq!(dump.scalars["sched_ev_task_started"], 3.0);
+        assert_eq!(dump.scalars["engine_events_dispatched"], 42.0);
+        assert!(
+            !dump.scalars.keys().any(|k| k.contains("_bucket{")),
+            "bucket samples must fold into hists, not stay scalars"
+        );
+        let h = &dump.hists["driver_assign_nanos"];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 6000);
+        // de-cumulated: one zero, one in [1024,2047], one in [2048,4095]
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[11], 1);
+        assert_eq!(h.buckets[12], 1);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 3);
+        assert_eq!(dump.value("driver_assign_nanos_count"), Some(3.0));
+        assert_eq!(dump.value("driver_assign_nanos_sum"), Some(6000.0));
+    }
+
+    #[test]
+    fn dump_loaders_agree_across_formats() {
+        let dir = std::env::temp_dir().join(format!("obs_dump_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (r, t) = sample();
+        let windows = sample_windows();
+        let snap = r.snapshot();
+        std::fs::write(dir.join("m.prom"), to_prometheus(&snap)).unwrap();
+        std::fs::write(dir.join("o.jsonl"), to_jsonl(&snap, &t, &windows)).unwrap();
+        let a = load_dump(&dir.join("m.prom")).expect("prom dump");
+        let b = load_dump(&dir.join("o.jsonl")).expect("jsonl dump");
+        for key in ["sched_ev_task_started", "driver_assign_nanos_count"] {
+            assert_eq!(a.value(key), b.value(key), "{key}");
+        }
+        assert_eq!(
+            a.hists["driver_assign_nanos"], b.hists["driver_assign_nanos"],
+            "bucket payloads must agree between exporters"
+        );
+        assert!(a.windows.is_empty(), "prometheus has no time axis");
+        assert_eq!(b.windows, windows);
+        assert!(load_dump(&dir.join("missing.prom")).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

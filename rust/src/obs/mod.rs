@@ -22,17 +22,24 @@
 pub mod clock;
 pub mod export;
 pub mod log;
+pub mod percentile;
 pub mod registry;
+pub mod slo;
 pub mod span;
+pub mod timeseries;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 pub use clock::Stopwatch;
+pub use export::Dump;
+pub use percentile::Percentiles;
 pub use registry::{Counter, Gauge, HistSnapshot, Histogram, Registry, Snapshot};
 pub use span::{InstantRecord, SpanRecord, Tracer};
+pub use timeseries::{WindowRecord, WindowSnapshotter};
 
 /// What the user asked for on the command line (`--obs-dump`,
-/// `--obs-trace`, `--obs-jsonl`, `--obs-sample N`, `--verbose`).
+/// `--obs-trace`, `--obs-jsonl`, `--obs-window W`, `--obs-csv`,
+/// `--obs-sample N`, `--verbose`).
 #[derive(Clone, Debug)]
 pub struct ObsOptions {
     /// Prometheus text snapshot path (`--obs-dump metrics.prom`).
@@ -41,6 +48,12 @@ pub struct ObsOptions {
     pub trace: Option<PathBuf>,
     /// JSONL obs stream path (`--obs-jsonl obs.jsonl`).
     pub jsonl: Option<PathBuf>,
+    /// Window cadence in sim seconds (`--obs-window 120`): close a
+    /// metric-delta snapshot every W virtual seconds.
+    pub window: Option<f64>,
+    /// Time-series CSV path (`--obs-csv timeseries.csv`); requires
+    /// `window` to produce rows.
+    pub csv: Option<PathBuf>,
     /// Keep every Nth duration span (`--obs-sample N`; instants are
     /// always kept).
     pub sample: u64,
@@ -54,17 +67,45 @@ impl Default for ObsOptions {
             dump: None,
             trace: None,
             jsonl: None,
+            window: None,
+            csv: None,
             sample: 1,
             verbose: false,
         }
     }
 }
 
+/// `dir/name.ext` -> `dir/name.suffix.ext` (no extension: append it).
+fn suffix_path(path: &Path, suffix: &str) -> PathBuf {
+    let ext = path.extension().and_then(|e| e.to_str());
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("out");
+    let file = match ext {
+        Some(ext) => format!("{stem}.{suffix}.{ext}"),
+        None => format!("{stem}.{suffix}"),
+    };
+    path.with_file_name(file)
+}
+
 impl ObsOptions {
     /// True when any export file was requested — the signal drivers use
     /// to turn instrumentation on at all.
     pub fn any_output(&self) -> bool {
-        self.dump.is_some() || self.trace.is_some() || self.jsonl.is_some()
+        self.dump.is_some() || self.trace.is_some() || self.jsonl.is_some() || self.csv.is_some()
+    }
+
+    /// The options for sweep cell `i`: every output path gains a
+    /// `.cell-<i>` suffix (`metrics.prom` -> `metrics.cell-3.prom`) so a
+    /// multi-cell experiment no longer clobbers one file per cell.
+    pub fn for_cell(&self, i: usize) -> ObsOptions {
+        let suffix = format!("cell-{i}");
+        let re = |p: &Option<PathBuf>| p.as_ref().map(|p| suffix_path(p, &suffix));
+        ObsOptions {
+            dump: re(&self.dump),
+            trace: re(&self.trace),
+            jsonl: re(&self.jsonl),
+            csv: re(&self.csv),
+            ..self.clone()
+        }
     }
 }
 
@@ -74,6 +115,8 @@ struct DriverObsInner {
     tracer: Tracer,
     /// One counter per `SchedEvent` variant, indexed by `obs_index()`.
     events: Vec<Counter>,
+    /// Windowed delta snapshots (`--obs-window`), `None` when unwindowed.
+    snapshotter: Option<WindowSnapshotter>,
     heartbeat_nanos: Histogram,
     assign_nanos: Histogram,
     assign_batch_size: Histogram,
@@ -101,6 +144,9 @@ impl DriverObs {
         self.inner = Some(Box::new(DriverObsInner {
             tracer: Tracer::new(opts.sample),
             events,
+            snapshotter: opts
+                .window
+                .map(|w| WindowSnapshotter::new(registry.clone(), w)),
             heartbeat_nanos: registry.histogram("driver_heartbeat_nanos"),
             assign_nanos: registry.histogram("driver_assign_nanos"),
             assign_batch_size: registry.histogram("driver_assign_batch_size"),
@@ -113,6 +159,18 @@ impl DriverObs {
 
     pub fn is_enabled(&self) -> bool {
         self.inner.is_some()
+    }
+
+    /// Advance the window clock (no-op when obs is off or unwindowed).
+    /// Call from the event loop before dispatching the event at
+    /// `sim_now`; reads only, never schedules — the sim stays
+    /// bit-identical.
+    pub fn window_tick(&mut self, sim_now: f64) {
+        if let Some(inner) = self.inner.as_deref_mut() {
+            if let Some(ws) = inner.snapshotter.as_mut() {
+                ws.tick(sim_now);
+            }
+        }
     }
 
     /// Count one `SchedEvent` and stamp an unsampled instant for it.
@@ -156,15 +214,27 @@ impl DriverObs {
         }
     }
 
-    /// Tear down, returning the registry and tracer for export (engine
-    /// gauges are set by the driver between `finish` and `write_all`).
-    pub fn finish(&mut self) -> Option<(Registry, Tracer)> {
+    /// Tear down at sim time `sim_end`, returning the registry, tracer,
+    /// and the flushed window series for export (engine gauges are set by
+    /// the driver between `finish` and `write_all`).
+    pub fn finish(&mut self, sim_end: f64) -> Option<(Registry, Tracer, Vec<WindowRecord>)> {
         self.inner.take().map(|inner| {
             inner
                 .registry
                 .gauge("obs_spans_dropped")
                 .set(inner.tracer.dropped());
-            (inner.registry, inner.tracer)
+            let windows = match inner.snapshotter {
+                Some(mut ws) => {
+                    let windows = ws.flush(sim_end);
+                    inner
+                        .registry
+                        .gauge("obs_windows_dropped")
+                        .set(ws.dropped());
+                    windows
+                }
+                None => Vec::new(),
+            };
+            (inner.registry, inner.tracer, windows)
         })
     }
 }
@@ -219,7 +289,8 @@ mod tests {
         obs.on_event(0, "ev", 1.0);
         obs.record_heartbeat(1.0, 100);
         obs.record_assign(1.0, 100, 2, 5, 50);
-        assert!(obs.finish().is_none());
+        obs.window_tick(5.0);
+        assert!(obs.finish(5.0).is_none());
     }
 
     #[test]
@@ -238,9 +309,48 @@ mod tests {
         assert_eq!(registry.histogram("driver_assign_batch_size").sum(), 3);
         assert_eq!(registry.histogram("driver_queue_depth").sum(), 7);
         assert_eq!(registry.histogram("driver_slot_util_pct").sum(), 42);
-        let (_, tracer) = obs.finish().expect("was enabled");
+        let (_, tracer, windows) = obs.finish(5.0).expect("was enabled");
         assert_eq!(tracer.instants().len(), 4);
         assert_eq!(tracer.spans().len(), 2);
+        assert!(windows.is_empty(), "no --obs-window, no series");
+    }
+
+    #[test]
+    fn windowed_driver_obs_produces_the_delta_series() {
+        let mut obs = DriverObs::default();
+        let opts = ObsOptions {
+            window: Some(10.0),
+            ..ObsOptions::default()
+        };
+        obs.enable(&opts, &["ev_a"]);
+        obs.on_event(0, "ev_a", 1.0);
+        obs.window_tick(12.0); // closes [0,10)
+        obs.on_event(0, "ev_a", 12.5);
+        obs.on_event(0, "ev_a", 13.0);
+        let (registry, _, windows) = obs.finish(15.0).expect("was enabled");
+        assert_eq!(windows.len(), 2);
+        assert_eq!(windows[0].counters, vec![("ev_a".to_string(), 1)]);
+        assert_eq!(windows[1].counters, vec![("ev_a".to_string(), 2)]);
+        assert_eq!(windows[1].sim_end, 15.0);
+        assert_eq!(registry.gauge("obs_windows_dropped").get(), 0);
+    }
+
+    #[test]
+    fn for_cell_suffixes_every_output_path() {
+        let opts = ObsOptions {
+            dump: Some(PathBuf::from("out/metrics.prom")),
+            trace: Some(PathBuf::from("trace.json")),
+            jsonl: Some(PathBuf::from("obs.jsonl")),
+            csv: Some(PathBuf::from("ts")),
+            ..ObsOptions::default()
+        };
+        let cell = opts.for_cell(3);
+        assert_eq!(cell.dump.unwrap(), PathBuf::from("out/metrics.cell-3.prom"));
+        assert_eq!(cell.trace.unwrap(), PathBuf::from("trace.cell-3.json"));
+        assert_eq!(cell.jsonl.unwrap(), PathBuf::from("obs.cell-3.jsonl"));
+        assert_eq!(cell.csv.unwrap(), PathBuf::from("ts.cell-3"));
+        // disabled outputs stay disabled
+        assert!(ObsOptions::default().for_cell(1).dump.is_none());
     }
 
     #[test]

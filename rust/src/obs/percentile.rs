@@ -1,0 +1,157 @@
+//! Percentile estimation over the registry's power-of-two histogram
+//! buckets, shared by every consumer (`repro obs diff`, the SLO
+//! evaluator, the time-series CSV).
+//!
+//! A log-bucketed histogram cannot recover exact order statistics, so the
+//! estimate walks the cumulative bucket counts to the bucket holding the
+//! target rank and interpolates linearly inside it. The error is bounded
+//! by the bucket width: the estimate always lands inside
+//! `[bucket_lower, bucket_upper]` of the true value's bucket, i.e. within
+//! a factor of two. That is plenty for regression gating (a p99 that
+//! doubles crosses a bucket boundary by construction).
+
+use super::registry::{bucket_upper, HistSnapshot, N_BUCKETS};
+
+/// Inclusive lower bound of bucket `i` (0 for the zero bucket).
+fn bucket_lower(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        bucket_upper(i - 1).saturating_add(1)
+    }
+}
+
+/// Estimate the `p`-th percentile (0 < p <= 100) from raw bucket counts.
+/// Returns 0.0 for an empty histogram. `count` must equal the bucket sum
+/// (callers pass `HistSnapshot::count`, which the registry keeps exact).
+pub fn percentile_from_buckets(buckets: &[u64; N_BUCKETS], count: u64, p: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let p = p.clamp(0.0, 100.0);
+    // rank of the target observation, 1-based, nearest-rank flavor
+    let target = ((p / 100.0) * count as f64).ceil().max(1.0);
+    let mut cum = 0u64;
+    for (i, n) in buckets.iter().enumerate() {
+        if *n == 0 {
+            continue;
+        }
+        let prev = cum;
+        cum += n;
+        if (cum as f64) >= target {
+            let lo = bucket_lower(i) as f64;
+            let hi = bucket_upper(i) as f64;
+            // fraction of the way through this bucket's observations
+            let frac = (target - prev as f64) / *n as f64;
+            return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+        }
+    }
+    // counts disagreed with the buckets (sheared snapshot); report the max
+    bucket_upper(N_BUCKETS - 1) as f64
+}
+
+/// Estimate the `p`-th percentile of one histogram snapshot.
+pub fn estimate(h: &HistSnapshot, p: f64) -> f64 {
+    percentile_from_buckets(&h.buckets, h.count, p)
+}
+
+/// The standard p50/p95/p99 triple every consumer reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn of(h: &HistSnapshot) -> Percentiles {
+        Percentiles {
+            p50: estimate(h, 50.0),
+            p95: estimate(h, 95.0),
+            p99: estimate(h, 99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{bucket_index, Histogram};
+
+    fn hist_of(values: &[u64]) -> HistSnapshot {
+        let h = Histogram::detached();
+        for v in values {
+            h.record(*v);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = hist_of(&[]);
+        assert_eq!(estimate(&h, 50.0), 0.0);
+        assert_eq!(Percentiles::of(&h), Percentiles::default());
+    }
+
+    #[test]
+    fn single_value_lands_in_its_bucket() {
+        let h = hist_of(&[3000]);
+        for p in [1.0, 50.0, 99.0, 100.0] {
+            let est = estimate(&h, p);
+            let i = bucket_index(3000);
+            assert!(est >= bucket_lower(i) as f64, "p{p}: {est}");
+            assert!(est <= bucket_upper(i) as f64, "p{p}: {est}");
+        }
+    }
+
+    #[test]
+    fn estimates_bracket_the_true_value_by_bucket() {
+        // 100 observations 1..=100: true p50 = 50, p95 = 95, p99 = 99
+        let values: Vec<u64> = (1..=100).collect();
+        let h = hist_of(&values);
+        for (p, truth) in [(50.0, 50u64), (95.0, 95), (99.0, 99)] {
+            let est = estimate(&h, p);
+            let i = bucket_index(truth);
+            assert!(
+                est >= bucket_lower(i) as f64 && est <= bucket_upper(i) as f64,
+                "p{p} estimate {est} escaped bucket {i} of true value {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_p() {
+        let h = hist_of(&[0, 1, 5, 5, 70, 900, 900, 64_000, 1_000_000]);
+        let mut last = -1.0;
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let est = estimate(&h, p);
+            assert!(est >= last, "p{p}: {est} < {last}");
+            last = est;
+        }
+    }
+
+    #[test]
+    fn zero_heavy_histogram_keeps_p50_at_zero() {
+        let h = hist_of(&[0, 0, 0, 0, 0, 0, 0, 0, 0, 1_000_000]);
+        assert_eq!(estimate(&h, 50.0), 0.0);
+        assert!(estimate(&h, 99.0) > 0.0);
+    }
+
+    #[test]
+    fn interpolation_moves_within_one_bucket() {
+        // all mass in bucket [1024, 2047]: higher p -> later in the bucket
+        let h = hist_of(&[1100, 1300, 1500, 1700, 1900]);
+        let lo = estimate(&h, 10.0);
+        let hi = estimate(&h, 90.0);
+        assert!(lo < hi, "{lo} !< {hi}");
+        assert!(lo >= 1024.0 && hi <= 2047.0);
+    }
+
+    #[test]
+    fn sheared_snapshot_reports_the_max_bound() {
+        // count claims more observations than the buckets hold
+        let mut h = hist_of(&[5]);
+        h.count = 10;
+        assert_eq!(estimate(&h, 100.0), bucket_upper(N_BUCKETS - 1) as f64);
+    }
+}

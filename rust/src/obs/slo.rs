@@ -1,0 +1,461 @@
+//! Declarative SLO specs over metric dumps: the file format behind
+//! `repro obs check --slo slo.json <dump>` and the CI regression gate
+//! (`slo/ci.json`), replacing hardcoded thresholds scattered through
+//! bench code with one reviewable spec.
+//!
+//! A spec is a JSON object `{"slo": [rule, ...]}`; each rule has a
+//! `"kind"` discriminator:
+//!
+//! | kind         | fields                         | meaning                          |
+//! |--------------|--------------------------------|----------------------------------|
+//! | `value`      | `metric`, `max`?, `min`?       | bound a counter/gauge sample     |
+//! | `percentile` | `metric`, `p`, `max`?, `min`?  | bound a histogram percentile     |
+//! | `ratio`      | `num`, `den`, `max`            | bound `num / den` (0/0 passes)   |
+//! | `burn`       | `metric`, `max_per_window`     | bound a per-window counter delta |
+//! | `bench`      | `file`, `key`, `max`           | bound a `BENCH_*.json` result    |
+//!
+//! Missing metrics are violations, not skips — an SLO over a metric the
+//! run never registered is a spec bug worth failing loudly on. `burn`
+//! rules need a dump with a window series (JSONL v2 from a
+//! `--obs-window` run); evaluating one against a windowless dump is
+//! likewise a violation.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::errors::{Context, Result};
+
+use super::export::Dump;
+use super::percentile;
+use super::timeseries::max_window_delta;
+
+/// One rule of a spec. Bounds are inclusive: a sample *at* `max` passes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SloRule {
+    Value {
+        metric: String,
+        max: Option<f64>,
+        min: Option<f64>,
+    },
+    Percentile {
+        metric: String,
+        p: f64,
+        max: Option<f64>,
+        min: Option<f64>,
+    },
+    Ratio {
+        num: String,
+        den: String,
+        max: f64,
+    },
+    Burn {
+        metric: String,
+        max_per_window: f64,
+    },
+    Bench {
+        file: String,
+        key: String,
+        max: f64,
+    },
+}
+
+impl fmt::Display for SloRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SloRule::Value { metric, max, min } => {
+                write!(f, "value({metric}{})", bounds(max, min))
+            }
+            SloRule::Percentile { metric, p, max, min } => {
+                write!(f, "p{p:.0}({metric}{})", bounds(max, min))
+            }
+            SloRule::Ratio { num, den, max } => write!(f, "ratio({num}/{den} <= {max})"),
+            SloRule::Burn { metric, max_per_window } => {
+                write!(f, "burn({metric} <= {max_per_window}/window)")
+            }
+            SloRule::Bench { file, key, max } => write!(f, "bench({file}:{key} <= {max})"),
+        }
+    }
+}
+
+fn bounds(max: &Option<f64>, min: &Option<f64>) -> String {
+    let mut s = String::new();
+    if let Some(m) = max {
+        s.push_str(&format!(" <= {m}"));
+    }
+    if let Some(m) = min {
+        s.push_str(&format!(" >= {m}"));
+    }
+    s
+}
+
+/// One violated rule, with the observed value spelled out.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: String,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SLO {}: {}", self.rule, self.detail)
+    }
+}
+
+/// A parsed `{"slo": [...]}` spec.
+#[derive(Clone, Debug, Default)]
+pub struct SloSpec {
+    pub rules: Vec<SloRule>,
+}
+
+fn f64_field(o: &Json, key: &str) -> Result<f64> {
+    o.get(key)
+        .and_then(|v| v.as_f64())
+        .with_context(|| format!("slo rule: missing number '{key}'"))
+}
+
+fn opt_f64_field(o: &Json, key: &str) -> Option<f64> {
+    o.get(key).and_then(|v| v.as_f64())
+}
+
+fn str_field(o: &Json, key: &str) -> Result<String> {
+    o.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .with_context(|| format!("slo rule: missing string '{key}'"))
+}
+
+impl SloSpec {
+    /// Parse a spec document. Empty rule lists are rejected — a vacuous
+    /// gate that passes everything is a misconfiguration, not a spec.
+    pub fn parse(text: &str) -> Result<SloSpec> {
+        let doc = Json::parse(text).context("slo spec")?;
+        let rules_json = doc
+            .get("slo")
+            .and_then(|v| v.as_arr())
+            .context("slo spec: no 'slo' rule array")?;
+        let mut rules = Vec::new();
+        for (i, r) in rules_json.iter().enumerate() {
+            let kind = r
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("slo rule {i}: no 'kind'"))?;
+            let rule = match kind {
+                "value" => SloRule::Value {
+                    metric: str_field(r, "metric")?,
+                    max: opt_f64_field(r, "max"),
+                    min: opt_f64_field(r, "min"),
+                },
+                "percentile" => SloRule::Percentile {
+                    metric: str_field(r, "metric")?,
+                    p: f64_field(r, "p")?,
+                    max: opt_f64_field(r, "max"),
+                    min: opt_f64_field(r, "min"),
+                },
+                "ratio" => SloRule::Ratio {
+                    num: str_field(r, "num")?,
+                    den: str_field(r, "den")?,
+                    max: f64_field(r, "max")?,
+                },
+                "burn" => SloRule::Burn {
+                    metric: str_field(r, "metric")?,
+                    max_per_window: f64_field(r, "max_per_window")?,
+                },
+                "bench" => SloRule::Bench {
+                    file: str_field(r, "file")?,
+                    key: str_field(r, "key")?,
+                    max: f64_field(r, "max")?,
+                },
+                other => crate::bail!("slo rule {i}: unknown kind '{other}'"),
+            };
+            if let SloRule::Value { max: None, min: None, .. }
+            | SloRule::Percentile { max: None, min: None, .. } = &rule
+            {
+                crate::bail!("slo rule {i}: needs at least one of 'max'/'min'");
+            }
+            rules.push(rule);
+        }
+        if rules.is_empty() {
+            crate::bail!("slo spec: empty rule list gates nothing");
+        }
+        Ok(SloSpec { rules })
+    }
+
+    pub fn load(path: &Path) -> Result<SloSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        SloSpec::parse(&text).with_context(|| path.display().to_string())
+    }
+
+    /// Evaluate every rule against `dump`; `bench_root` anchors the
+    /// relative `file` of `bench` rules (the repo root in CI). Returns
+    /// the violations — empty means the SLO holds.
+    pub fn evaluate(&self, dump: &Dump, bench_root: &Path) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let mut violate = |rule: &SloRule, detail: String| {
+            out.push(Violation {
+                rule: rule.to_string(),
+                detail,
+            });
+        };
+        for rule in &self.rules {
+            match rule {
+                SloRule::Value { metric, max, min } => match dump.value(metric) {
+                    None => violate(rule, format!("metric '{metric}' not in dump")),
+                    Some(v) => check_bounds(rule, v, max, min, &mut violate),
+                },
+                SloRule::Percentile { metric, p, max, min } => match dump.hists.get(metric) {
+                    None => violate(rule, format!("histogram '{metric}' not in dump")),
+                    Some(h) => {
+                        let v = percentile::estimate(h, *p);
+                        check_bounds(rule, v, max, min, &mut violate);
+                    }
+                },
+                SloRule::Ratio { num, den, max } => {
+                    let (n, d) = (dump.value(num), dump.value(den));
+                    match (n, d) {
+                        (None, _) => violate(rule, format!("metric '{num}' not in dump")),
+                        (_, None) => violate(rule, format!("metric '{den}' not in dump")),
+                        (Some(n), Some(d)) => {
+                            // exact zero-denominator guard -- lint: allow(float-eq)
+                            if d == 0.0 {
+                                if n > 0.0 {
+                                    violate(rule, format!("{num}={n} with {den}=0"));
+                                }
+                            } else if n / d > *max {
+                                violate(rule, format!("{num}/{den} = {:.4} > {max}", n / d));
+                            }
+                        }
+                    }
+                }
+                SloRule::Burn { metric, max_per_window } => {
+                    if dump.windows.is_empty() {
+                        violate(
+                            rule,
+                            "dump has no window series (need --obs-window + JSONL)".into(),
+                        );
+                    } else {
+                        let worst = max_window_delta(&dump.windows, metric) as f64;
+                        if worst > *max_per_window {
+                            violate(
+                                rule,
+                                format!("worst window delta {worst} > {max_per_window}"),
+                            );
+                        }
+                    }
+                }
+                SloRule::Bench { file, key, max } => {
+                    match eval_bench(&bench_root.join(file), key, *max) {
+                        Ok(bad) => {
+                            for (result, v) in bad {
+                                violate(rule, format!("{result}.{key} = {v:.3} > {max}"));
+                            }
+                        }
+                        Err(e) => violate(rule, format!("{e:#}")),
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn check_bounds(
+    rule: &SloRule,
+    v: f64,
+    max: &Option<f64>,
+    min: &Option<f64>,
+    violate: &mut impl FnMut(&SloRule, String),
+) {
+    if let Some(m) = max {
+        if v > *m {
+            violate(rule, format!("observed {v:.3} > {m}"));
+        }
+    }
+    if let Some(m) = min {
+        if v < *m {
+            violate(rule, format!("observed {v:.3} < {m}"));
+        }
+    }
+}
+
+/// Check `results.*.<key> <= max` in a `BENCH_*.json` document; returns
+/// the offending `(result, value)` pairs. A missing file or a results
+/// table without the key anywhere is an error (the gate must not pass
+/// vacuously because a bench was renamed).
+fn eval_bench(path: &Path, key: &str, max: f64) -> Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("bench file {}", path.display()))?;
+    let doc = Json::parse(&text).with_context(|| path.display().to_string())?;
+    let results = doc
+        .get("results")
+        .and_then(|v| v.as_obj())
+        .with_context(|| format!("{}: no 'results' table", path.display()))?;
+    let mut bad = Vec::new();
+    let mut seen = false;
+    for (result, fields) in results {
+        if let Some(v) = fields.get(key).and_then(|v| v.as_f64()) {
+            seen = true;
+            if v > max {
+                bad.push((result.clone(), v));
+            }
+        }
+    }
+    if !seen {
+        crate::bail!("{}: no result carries '{key}'", path.display());
+    }
+    Ok(bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::dump_from_prometheus;
+    use crate::obs::registry::Registry;
+    use crate::obs::timeseries::WindowSnapshotter;
+
+    fn sample_dump() -> Dump {
+        let r = Registry::new();
+        r.counter("sched_ev_task_started").add(100);
+        r.counter("sched_ev_task_failed").add(4);
+        let h = r.histogram("driver_queue_depth");
+        for v in [1u64, 2, 3, 10, 200] {
+            h.record(v);
+        }
+        dump_from_prometheus(&super::super::export::to_prometheus(&r.snapshot())).unwrap()
+    }
+
+    #[test]
+    fn parse_accepts_every_kind_and_rejects_garbage() {
+        let spec = SloSpec::parse(
+            r#"{"slo":[
+                {"kind":"value","metric":"obs_collisions","max":0},
+                {"kind":"percentile","metric":"driver_queue_depth","p":99,"max":1000},
+                {"kind":"ratio","num":"sched_ev_task_failed","den":"sched_ev_task_started","max":0.25},
+                {"kind":"burn","metric":"sched_ev_task_failed","max_per_window":10},
+                {"kind":"bench","file":"BENCH_engine.json","key":"obs_overhead_pct","max":5.0}
+            ]}"#,
+        )
+        .expect("parse spec");
+        assert_eq!(spec.rules.len(), 5);
+        assert!(SloSpec::parse("{}").is_err(), "no slo array");
+        assert!(SloSpec::parse(r#"{"slo":[]}"#).is_err(), "vacuous gate");
+        assert!(
+            SloSpec::parse(r#"{"slo":[{"kind":"nope"}]}"#).is_err(),
+            "unknown kind"
+        );
+        assert!(
+            SloSpec::parse(r#"{"slo":[{"kind":"value","metric":"x"}]}"#).is_err(),
+            "no bound at all"
+        );
+    }
+
+    #[test]
+    fn value_and_ratio_rules_gate_the_dump() {
+        let dump = sample_dump();
+        let root = Path::new(".");
+        let ok = SloSpec::parse(
+            r#"{"slo":[
+                {"kind":"value","metric":"obs_collisions","max":0},
+                {"kind":"value","metric":"sched_ev_task_started","min":50},
+                {"kind":"ratio","num":"sched_ev_task_failed","den":"sched_ev_task_started","max":0.05}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(ok.evaluate(&dump, root).is_empty());
+        let bad = SloSpec::parse(
+            r#"{"slo":[
+                {"kind":"value","metric":"sched_ev_task_started","max":10},
+                {"kind":"ratio","num":"sched_ev_task_failed","den":"sched_ev_task_started","max":0.01},
+                {"kind":"value","metric":"no_such_metric","max":1}
+            ]}"#,
+        )
+        .unwrap();
+        let violations = bad.evaluate(&dump, root);
+        assert_eq!(violations.len(), 3);
+        assert!(violations[2].detail.contains("not in dump"));
+    }
+
+    #[test]
+    fn ratio_zero_over_zero_passes_but_n_over_zero_fails() {
+        let dump = sample_dump();
+        let spec = SloSpec::parse(
+            r#"{"slo":[{"kind":"ratio","num":"obs_collisions","den":"obs_collisions","max":0.1}]}"#,
+        )
+        .unwrap();
+        assert!(spec.evaluate(&dump, Path::new(".")).is_empty(), "0/0 is fine");
+        let spec = SloSpec::parse(
+            r#"{"slo":[{"kind":"ratio","num":"sched_ev_task_failed","den":"obs_collisions","max":0.1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.evaluate(&dump, Path::new(".")).len(), 1, "4/0 is not");
+    }
+
+    #[test]
+    fn percentile_rule_uses_the_bucket_estimate() {
+        let dump = sample_dump();
+        // p99 of {1,2,3,10,200} sits in 200's bucket [128,255]
+        let tight = SloSpec::parse(
+            r#"{"slo":[{"kind":"percentile","metric":"driver_queue_depth","p":99,"max":100}]}"#,
+        )
+        .unwrap();
+        assert_eq!(tight.evaluate(&dump, Path::new(".")).len(), 1);
+        let loose = SloSpec::parse(
+            r#"{"slo":[{"kind":"percentile","metric":"driver_queue_depth","p":99,"max":255}]}"#,
+        )
+        .unwrap();
+        assert!(loose.evaluate(&dump, Path::new(".")).is_empty());
+    }
+
+    #[test]
+    fn burn_rule_needs_windows_and_bounds_the_worst_one() {
+        let mut dump = sample_dump();
+        let spec = SloSpec::parse(
+            r#"{"slo":[{"kind":"burn","metric":"fails","max_per_window":2}]}"#,
+        )
+        .unwrap();
+        let v = spec.evaluate(&dump, Path::new("."));
+        assert_eq!(v.len(), 1, "windowless dump cannot satisfy a burn rule");
+        assert!(v[0].detail.contains("no window series"));
+
+        let r = Registry::new();
+        let c = r.counter("fails");
+        let mut ws = WindowSnapshotter::new(r, 10.0);
+        c.inc();
+        ws.tick(10.0);
+        c.add(5); // burn spike in window 1
+        ws.tick(20.0);
+        dump.windows = ws.flush(25.0);
+        let v = spec.evaluate(&dump, Path::new("."));
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("5"), "{}", v[0].detail);
+    }
+
+    #[test]
+    fn bench_rule_reads_the_committed_baseline_schema() {
+        let dir = std::env::temp_dir().join(format!("slo_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_x.json"),
+            r#"{"bench":"x","results":{"a":{"pct":3.0},"b":{"pct":6.0}}}"#,
+        )
+        .unwrap();
+        let spec = SloSpec::parse(
+            r#"{"slo":[{"kind":"bench","file":"BENCH_x.json","key":"pct","max":5.0}]}"#,
+        )
+        .unwrap();
+        let v = spec.evaluate(&Dump::default(), &dir);
+        assert_eq!(v.len(), 1, "only result b breaches");
+        assert!(v[0].detail.contains("b.pct"));
+        // missing key and missing file are violations, not silent passes
+        let spec = SloSpec::parse(
+            r#"{"slo":[
+                {"kind":"bench","file":"BENCH_x.json","key":"gone","max":5.0},
+                {"kind":"bench","file":"BENCH_missing.json","key":"pct","max":5.0}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.evaluate(&Dump::default(), &dir).len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,364 @@
+//! Sim-time-windowed metric snapshots: the time axis of the observatory.
+//!
+//! `--obs-window W` closes a window every `W` *simulated* seconds and
+//! records the per-window **delta** of every registered counter and
+//! histogram (gauges record their level). The snapshotter only reads the
+//! registry and the virtual clock — it schedules nothing on the engine,
+//! so a windowed run stays bit-identical to an unwindowed one — and the
+//! series is deterministic for sim-derived metrics: same seed + same
+//! window → the same records, bit for bit. (Histograms fed from the wall
+//! clock, e.g. `driver_heartbeat_nanos`, carry wall time and are
+//! deterministic only in their counts.)
+//!
+//! Memory is O(windows), bounded: the ring keeps the newest
+//! [`DEFAULT_WINDOW_CAP`] windows and counts what it sheds in
+//! `obs_windows_dropped`, so a pathological `--obs-window 0.001` on a
+//! week-long sim cannot take the process down.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::percentile::Percentiles;
+use super::registry::{HistSnapshot, Registry, Snapshot, N_BUCKETS};
+
+/// Ring capacity: newest windows win, older ones are shed and counted.
+pub const DEFAULT_WINDOW_CAP: usize = 1 << 12;
+
+/// One closed window: per-metric deltas over `[sim_start, sim_end)`.
+/// Zero-delta counters and zero-count histogram deltas are skipped (the
+/// series stays dense in *windows*, sparse in *metrics*); gauges record
+/// their level at window close.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowRecord {
+    pub index: u64,
+    pub sim_start: f64,
+    pub sim_end: f64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+/// Closes windows off the virtual clock and accumulates the bounded ring.
+/// Drive it with [`tick`](WindowSnapshotter::tick) from the event loop
+/// and [`flush`](WindowSnapshotter::flush) once at end of run.
+#[derive(Debug)]
+pub struct WindowSnapshotter {
+    registry: Registry,
+    window: f64,
+    next_boundary: f64,
+    index: u64,
+    prev: Snapshot,
+    ring: VecDeque<WindowRecord>,
+    cap: usize,
+    dropped: u64,
+}
+
+fn hist_delta(cur: &HistSnapshot, prev: Option<&HistSnapshot>) -> HistSnapshot {
+    match prev {
+        None => cur.clone(),
+        Some(p) => HistSnapshot {
+            count: cur.count.saturating_sub(p.count),
+            sum: cur.sum.wrapping_sub(p.sum),
+            buckets: std::array::from_fn(|i| cur.buckets[i].saturating_sub(p.buckets[i])),
+        },
+    }
+}
+
+impl WindowSnapshotter {
+    /// A snapshotter over `registry` closing a window every `window` sim
+    /// seconds (values `<= 0` are clamped to one second — a zero cadence
+    /// would spin the tick loop forever).
+    pub fn new(registry: Registry, window: f64) -> WindowSnapshotter {
+        WindowSnapshotter::with_cap(registry, window, DEFAULT_WINDOW_CAP)
+    }
+
+    pub fn with_cap(registry: Registry, window: f64, cap: usize) -> WindowSnapshotter {
+        let window = if window.is_finite() && window > 0.0 {
+            window
+        } else {
+            1.0
+        };
+        WindowSnapshotter {
+            registry,
+            window,
+            next_boundary: window,
+            index: 0,
+            prev: Snapshot::default(),
+            ring: VecDeque::new(),
+            cap: cap.max(1),
+            dropped: 0,
+        }
+    }
+
+    pub fn window_secs(&self) -> f64 {
+        self.window
+    }
+
+    /// Windows shed by the bounded ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Advance the window clock to `sim_now`, closing every boundary it
+    /// crossed (quiet stretches still produce windows, so the series is
+    /// dense). Call from the event loop *before* dispatching the event at
+    /// `sim_now`; reads only — never schedules.
+    pub fn tick(&mut self, sim_now: f64) {
+        while sim_now >= self.next_boundary {
+            let end = self.next_boundary;
+            self.close_window(end);
+            self.next_boundary += self.window;
+        }
+    }
+
+    /// Close the final partial window at end of run and hand the series
+    /// over for export.
+    pub fn flush(&mut self, sim_end: f64) -> Vec<WindowRecord> {
+        self.tick(sim_end);
+        let start = self.next_boundary - self.window;
+        if sim_end > start {
+            self.close_window(sim_end);
+        }
+        std::mem::take(&mut self.ring).into_iter().collect()
+    }
+
+    fn close_window(&mut self, sim_end: f64) {
+        let snap = self.registry.snapshot();
+        let mut rec = WindowRecord {
+            index: self.index,
+            sim_start: self.next_boundary - self.window,
+            sim_end,
+            ..WindowRecord::default()
+        };
+        let prev_counters: BTreeMap<&str, u64> = self
+            .prev
+            .counters
+            .iter()
+            .map(|(n, v)| (n.as_str(), *v))
+            .collect();
+        for (name, v) in &snap.counters {
+            let delta = v.saturating_sub(prev_counters.get(name.as_str()).copied().unwrap_or(0));
+            if delta > 0 {
+                rec.counters.push((name.clone(), delta));
+            }
+        }
+        for (name, v) in &snap.gauges {
+            if *v > 0 {
+                rec.gauges.push((name.clone(), *v));
+            }
+        }
+        let prev_hists: BTreeMap<&str, &HistSnapshot> = self
+            .prev
+            .histograms
+            .iter()
+            .map(|(n, h)| (n.as_str(), h))
+            .collect();
+        for (name, h) in &snap.histograms {
+            let d = hist_delta(h, prev_hists.get(name.as_str()).copied());
+            if d.count > 0 {
+                rec.hists.push((name.clone(), d));
+            }
+        }
+        self.prev = snap;
+        self.index += 1;
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(rec);
+    }
+}
+
+/// Render the window series as a long-format CSV
+/// (`window,sim_start,sim_end,kind,name,value,sum,p50,p95,p99`):
+/// counters/gauges fill `value`, histograms fill count/sum plus the
+/// interpolated percentile triple of that window's delta buckets.
+pub fn to_csv(windows: &[WindowRecord]) -> String {
+    let mut out = String::from("window,sim_start,sim_end,kind,name,value,sum,p50,p95,p99\n");
+    for w in windows {
+        let head = |kind: &str, name: &str| {
+            format!(
+                "{},{:.3},{:.3},{kind},{name}",
+                w.index, w.sim_start, w.sim_end
+            )
+        };
+        for (name, v) in &w.counters {
+            out.push_str(&format!("{},{v},,,,\n", head("counter", name)));
+        }
+        for (name, v) in &w.gauges {
+            out.push_str(&format!("{},{v},,,,\n", head("gauge", name)));
+        }
+        for (name, h) in &w.hists {
+            let p = Percentiles::of(h);
+            out.push_str(&format!(
+                "{},{},{},{:.1},{:.1},{:.1}\n",
+                head("hist", name),
+                h.count,
+                h.sum,
+                p.p50,
+                p.p95,
+                p.p99
+            ));
+        }
+    }
+    out
+}
+
+/// Sum one counter's deltas across the whole series (diff/SLO helper).
+pub fn counter_total(windows: &[WindowRecord], name: &str) -> u64 {
+    windows
+        .iter()
+        .flat_map(|w| &w.counters)
+        .filter(|(n, _)| n == name)
+        .map(|(_, v)| v)
+        .sum()
+}
+
+/// The maximum per-window delta of one counter (burn-rate evaluation).
+pub fn max_window_delta(windows: &[WindowRecord], name: &str) -> u64 {
+    windows
+        .iter()
+        .map(|w| {
+            w.counters
+                .iter()
+                .filter(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .sum::<u64>()
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Merge a window series back into one cumulative histogram per name —
+/// what lets a windowed JSONL dump answer whole-run percentile questions.
+pub fn merged_hists(windows: &[WindowRecord]) -> BTreeMap<String, HistSnapshot> {
+    let mut out: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+    for (name, h) in windows.iter().flat_map(|w| &w.hists) {
+        let m = out.entry(name.clone()).or_insert_with(|| HistSnapshot {
+            count: 0,
+            sum: 0,
+            buckets: [0; N_BUCKETS],
+        });
+        m.count += h.count;
+        m.sum = m.sum.wrapping_add(h.sum);
+        for i in 0..N_BUCKETS {
+            m.buckets[i] += h.buckets[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_carry_deltas_not_totals() {
+        let r = Registry::new();
+        let c = r.counter("ev");
+        let h = r.histogram("lat");
+        let mut ws = WindowSnapshotter::new(r, 10.0);
+        c.add(3);
+        h.record(100);
+        ws.tick(12.0); // closes [0,10)
+        c.add(2);
+        h.record(200);
+        h.record(300);
+        let wins = ws.flush(15.0); // closes [10,15)
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[0].counters, vec![("ev".to_string(), 3)]);
+        assert_eq!(wins[1].counters, vec![("ev".to_string(), 2)]);
+        assert_eq!(wins[0].hists[0].1.count, 1);
+        assert_eq!(wins[1].hists[0].1.count, 2);
+        assert_eq!(wins[1].hists[0].1.sum, 500);
+        assert_eq!(counter_total(&wins, "ev"), 5);
+        assert_eq!(max_window_delta(&wins, "ev"), 3);
+        let merged = merged_hists(&wins);
+        assert_eq!(merged["lat"].count, 3);
+        assert_eq!(merged["lat"].sum, 600);
+    }
+
+    #[test]
+    fn quiet_stretches_still_close_windows() {
+        let r = Registry::new();
+        let c = r.counter("ev");
+        let mut ws = WindowSnapshotter::new(r, 5.0);
+        c.inc();
+        ws.tick(23.0); // crosses 5, 10, 15, 20
+        let wins = ws.flush(23.0);
+        assert_eq!(wins.len(), 5, "4 full + 1 partial");
+        assert_eq!(wins[0].counters.len(), 1);
+        for w in &wins[1..4] {
+            assert!(w.counters.is_empty(), "quiet window must be empty");
+        }
+        assert_eq!(wins[4].sim_start, 20.0);
+        assert_eq!(wins[4].sim_end, 23.0);
+        let idx: Vec<u64> = wins.iter().map(|w| w.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn flush_without_trailing_activity_adds_no_empty_partial() {
+        let r = Registry::new();
+        r.counter("ev").inc();
+        let mut ws = WindowSnapshotter::new(r, 10.0);
+        ws.tick(20.0); // closes [0,10) and [10,20)
+        let wins = ws.flush(20.0); // boundary exactly: no partial after it
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[1].sim_end, 20.0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let r = Registry::new();
+        let c = r.counter("ev");
+        let mut ws = WindowSnapshotter::with_cap(r, 1.0, 3);
+        for t in 1..=10 {
+            c.inc();
+            ws.tick(t as f64 + 0.5);
+        }
+        assert_eq!(ws.dropped(), 7);
+        let wins = ws.flush(10.5);
+        assert!(wins.len() <= 4, "cap 3 + final partial");
+        assert_eq!(wins.last().unwrap().index, 10, "newest windows survive");
+    }
+
+    #[test]
+    fn bad_window_values_are_clamped() {
+        for w in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let ws = WindowSnapshotter::new(Registry::new(), w);
+            assert_eq!(ws.window_secs(), 1.0);
+        }
+    }
+
+    #[test]
+    fn csv_is_long_format_with_percentiles() {
+        let r = Registry::new();
+        r.counter("ev").add(4);
+        r.gauge("depth").set(7);
+        let h = r.histogram("lat");
+        h.record(1500);
+        let mut ws = WindowSnapshotter::new(r, 10.0);
+        ws.tick(10.0);
+        let wins = ws.flush(10.0);
+        let csv = to_csv(&wins);
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "window,sim_start,sim_end,kind,name,value,sum,p50,p95,p99"
+        );
+        assert!(csv.contains("0,0.000,10.000,counter,ev,4,,,,"));
+        assert!(csv.contains("0,0.000,10.000,gauge,depth,7,,,,"));
+        let hist_line = csv
+            .lines()
+            .find(|l| l.contains(",hist,lat,"))
+            .expect("hist row");
+        let cols: Vec<&str> = hist_line.split(',').collect();
+        assert_eq!(cols[5], "1", "count");
+        assert_eq!(cols[6], "1500", "sum");
+        // percentiles of a single 1500 land in its [1024,2047] bucket
+        for c in &cols[7..10] {
+            let v: f64 = c.parse().unwrap();
+            assert!((1024.0..=2047.0).contains(&v), "{v}");
+        }
+    }
+}

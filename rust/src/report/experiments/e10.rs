@@ -35,6 +35,7 @@ pub fn e10(opts: &ExpOpts) -> Vec<Table> {
             "spec_wins",
         ],
     );
+    let mut cell = 0usize;
     for mtbf in &mtbfs {
         for sched in SWEEP_SCHEDULERS {
             let mut cfg = RunConfig {
@@ -58,9 +59,11 @@ pub fn e10(opts: &ExpOpts) -> Vec<Table> {
                 ..Default::default()
             };
             cfg.tracker.failures = FailureConfig { mtbf: *mtbf, mttr: 90.0 };
-            // obs exporters overwrite per cell; the files that survive the
-            // sweep describe the last (highest-churn, bayes) run
-            cfg.obs = opts.obs.clone();
+            // each sweep cell gets its own suffixed exporter outputs
+            // (`metrics.prom` -> `metrics.cell-<i>.prom`), mtbf-major
+            // order, so no cell clobbers another's files
+            cfg.obs = opts.obs.for_cell(cell);
+            cell += 1;
             let r = run_once(&cfg);
             table.row(vec![
                 mtbf.map_or("none".to_string(), |m| format!("{m:.0}")),

@@ -243,11 +243,11 @@ impl ResourceManager {
     /// Drain engine counters into gauges and write the requested exporter
     /// files. Call after `run()`; a no-op when obs was never enabled.
     pub fn finish_obs(&mut self, opts: &ObsOptions) -> Result<()> {
-        if let Some((registry, tracer)) = self.obs.finish() {
+        if let Some((registry, tracer, windows)) = self.obs.finish(self.engine.now()) {
             registry.gauge("engine_events_dispatched").set(self.engine.processed());
             registry.gauge("engine_clamped_events").set(self.engine.clamped_events());
             registry.gauge("engine_bucket_scan_steps").set(self.engine.scan_steps());
-            crate::obs::export::write_all(opts, &registry, &tracer)?;
+            crate::obs::export::write_all(opts, &registry, &tracer, &windows)?;
         }
         Ok(())
     }
@@ -279,6 +279,9 @@ impl ResourceManager {
             if t > self.cfg.max_sim_time {
                 break;
             }
+            // close any window boundaries the clock just crossed; reads
+            // only, so the sim stays bit-identical with obs on
+            self.obs.window_tick(t);
             match ev {
                 Event::JobArrival => self.on_job_arrival(),
                 Event::Heartbeat(node) => self.on_heartbeat(node),

@@ -2,14 +2,22 @@
 //! acceptance invariants end to end — the chrome trace's instant counts
 //! match the `SchedEvent` totals the counters saw, the Prometheus
 //! snapshot parses, the JSONL stream round-trips against it, sampling is
-//! deterministic, and enabling obs leaves the simulation bit-identical.
+//! deterministic, enabling obs (windowed or not) leaves the simulation
+//! bit-identical, the window series is deterministic and sums back to
+//! the final counters, kind collisions never corrupt an export, and the
+//! E10 sweep writes per-cell suffixed files instead of clobbering.
 
 use std::path::{Path, PathBuf};
 
 use bayes_sched::cluster::Cluster;
 use bayes_sched::coordinator::builder::{build_tracker_with, RunConfig};
-use bayes_sched::obs::export::{chrome_event_counts, parse_jsonl, parse_prometheus};
-use bayes_sched::obs::ObsOptions;
+use bayes_sched::obs::export::{
+    chrome_event_counts, parse_jsonl, parse_prometheus, to_jsonl, to_prometheus,
+};
+use bayes_sched::obs::timeseries::counter_total;
+use bayes_sched::obs::{ObsOptions, Registry, Tracer};
+use bayes_sched::report::experiments::e10::e10;
+use bayes_sched::report::experiments::ExpOpts;
 use bayes_sched::scheduler::api::OBS_EVENT_NAMES;
 use bayes_sched::workload::generator::{generate, WorkloadConfig};
 
@@ -40,10 +48,17 @@ fn read(dir: &Path, file: &str) -> String {
 
 /// Run the small config with all three exporters on; return the makespan.
 fn run_to_files(dir: &Path, sample: u64) -> f64 {
+    run_with(dir, sample, None)
+}
+
+/// Same, optionally with the windowed snapshotter (and its CSV) on.
+fn run_with(dir: &Path, sample: u64, window: Option<f64>) -> f64 {
     let opts = ObsOptions {
         dump: Some(dir.join("metrics.prom")),
         trace: Some(dir.join("trace.json")),
         jsonl: Some(dir.join("obs.jsonl")),
+        csv: window.map(|_| dir.join("timeseries.csv")),
+        window,
         sample,
         verbose: false,
     };
@@ -134,4 +149,99 @@ fn sampling_is_deterministic_and_obs_never_perturbs_the_sim() {
     for d in [d1, d2, d3] {
         std::fs::remove_dir_all(&d).ok();
     }
+}
+
+#[test]
+fn windowed_snapshots_are_deterministic_and_sum_to_the_totals() {
+    let d1 = scratch("w1");
+    let d2 = scratch("w2");
+    let d0 = scratch("w0");
+    let m1 = run_with(&d1, 1, Some(60.0));
+    let m2 = run_with(&d2, 1, Some(60.0));
+    let m0 = run_to_files(&d0, 1);
+    // the snapshotter only reads the registry at window boundaries, so
+    // the sim is bit-identical with windows on, on again, and off
+    assert_eq!(m1.to_bits(), m2.to_bits());
+    assert_eq!(m1.to_bits(), m0.to_bits());
+
+    let w1 = parse_jsonl(&read(&d1, "obs.jsonl")).unwrap().windows;
+    let w2 = parse_jsonl(&read(&d2, "obs.jsonl")).unwrap().windows;
+    assert!(!w1.is_empty(), "the run must close at least one window");
+    assert_eq!(w1.len(), w2.len());
+    for (a, b) in w1.iter().zip(&w2) {
+        // sim-derived series match bit for bit across identical seeds;
+        // wall-clock histograms need not, so compare the counter deltas
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.sim_start.to_bits(), b.sim_start.to_bits());
+        assert_eq!(a.sim_end.to_bits(), b.sim_end.to_bits());
+        assert_eq!(a.counters, b.counters);
+    }
+
+    // every increment lands in exactly one window: the per-window deltas
+    // sum back to the final snapshot totals
+    let prom = parse_prometheus(&read(&d1, "metrics.prom")).unwrap();
+    for name in OBS_EVENT_NAMES {
+        let total = prom.get(name).copied().unwrap_or(0.0);
+        assert_eq!(counter_total(&w1, name) as f64, total, "{name}");
+    }
+
+    let csv = read(&d1, "timeseries.csv");
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next(),
+        Some("window,sim_start,sim_end,kind,name,value,sum,p50,p95,p99")
+    );
+    assert!(lines.count() > w1.len(), "windows emit one row per metric");
+    for d in [d1, d2, d0] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
+
+#[test]
+fn a_kind_collision_detaches_the_handle_but_exports_stay_whole() {
+    let registry = Registry::new();
+    registry.counter("metric_x").add(3);
+    let stray = registry.histogram("metric_x"); // wrong kind: collision
+    stray.record(42);
+    assert_eq!(stray.count(), 1, "detached handles still record");
+    registry.histogram("queue_depth").record(5);
+
+    // the real counter is untouched, the registry self-reports the
+    // collision, and the stray histogram never reaches an export
+    let snap = registry.snapshot();
+    let prom = parse_prometheus(&to_prometheus(&snap)).unwrap();
+    assert_eq!(prom["metric_x"], 3.0);
+    assert_eq!(prom["obs_collisions"], 1.0);
+    assert_eq!(prom["queue_depth_count"], 1.0);
+    assert!(!prom.contains_key("metric_x_count"));
+
+    // the JSONL exporter agrees sample for sample
+    let doc = parse_jsonl(&to_jsonl(&snap, &Tracer::new(1), &[])).unwrap();
+    assert_eq!(doc.counters["metric_x"], 3);
+    assert_eq!(doc.counters["obs_collisions"], 1);
+    assert_eq!(doc.histograms["queue_depth"].0, 1);
+}
+
+#[test]
+fn e10_cells_write_suffixed_exporter_files_for_every_cell() {
+    let dir = scratch("e10cells");
+    let opts = ExpOpts {
+        quick: true,
+        out_dir: None,
+        obs: ObsOptions {
+            dump: Some(dir.join("metrics.prom")),
+            ..ObsOptions::default()
+        },
+    };
+    e10(&opts);
+    // 2 mtbf points x 3 schedulers in quick mode, mtbf-major: cells 0..=5
+    for i in 0..6 {
+        let prom = parse_prometheus(&read(&dir, &format!("metrics.cell-{i}.prom")))
+            .unwrap_or_else(|e| panic!("cell {i}: {e}"));
+        assert_eq!(prom["obs_collisions"], 0.0, "cell {i}");
+        assert!(prom["sched_ev_task_started"] > 0.0, "cell {i}");
+    }
+    // nothing writes the unsuffixed path, so no cell clobbers another
+    assert!(!dir.join("metrics.prom").exists());
+    std::fs::remove_dir_all(&dir).ok();
 }
