@@ -1,0 +1,115 @@
+//! Bench trace_ingest_throughput: decode a generated trace back into
+//! `JobSpec`s three ways — the streaming pull-parser reader over JSONL,
+//! the same reader over the array format, and the legacy path that
+//! materializes the whole document as a `Json` tree first. Reports
+//! specs/sec and bytes/sec per arm and writes `BENCH_ingest.json` so the
+//! ingest trajectory is tracked across PRs; the streaming arms must not
+//! fall behind the tree arm (that would mean the pull parser stopped
+//! paying for itself).
+//!
+//!     cargo bench --bench trace_ingest_throughput
+
+use std::collections::BTreeMap;
+
+use bayes_sched::config::json::Json;
+use bayes_sched::report::bench::{bench, Measurement};
+use bayes_sched::workload::generator::{stream, WorkloadConfig};
+use bayes_sched::workload::trace::{TraceFormat, TraceReader, TraceWriter};
+
+/// `BENCH_SMOKE=1` shrinks the trace and iteration counts so CI can
+/// track the trajectory on every push.
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Serialize the workload once into an in-memory trace.
+fn encode(n_specs: usize, format: TraceFormat) -> Vec<u8> {
+    let cfg = WorkloadConfig { n_jobs: n_specs, seed: 42, ..Default::default() };
+    let mut buf: Vec<u8> = Vec::new();
+    let mut w = TraceWriter::new(&mut buf, format);
+    for spec in stream(&cfg) {
+        w.write_spec(&spec).unwrap();
+    }
+    w.finish().unwrap();
+    buf
+}
+
+/// Decode every spec with the streaming reader; returns the spec count.
+fn stream_decode(bytes: &[u8]) -> u64 {
+    let mut n = 0u64;
+    for spec in TraceReader::new(bytes).unwrap() {
+        std::hint::black_box(&spec.unwrap().name);
+        n += 1;
+    }
+    n
+}
+
+/// The legacy shape: materialize the whole array as a `Json` tree, then
+/// walk it touching each record's fields (what `trace::load` did before
+/// the pull parser).
+fn tree_decode(text: &str) -> u64 {
+    let doc = Json::parse(text).unwrap();
+    let arr = doc.as_arr().unwrap();
+    let mut n = 0u64;
+    for rec in arr {
+        std::hint::black_box(rec.get("name").and_then(Json::as_str).unwrap());
+        std::hint::black_box(rec.get("submit_time").and_then(Json::as_f64).unwrap());
+        n += 1;
+    }
+    n
+}
+
+fn rates(m: &Measurement, n_specs: usize, bytes: usize) -> (f64, f64) {
+    let secs = m.mean_ns / 1e9;
+    (n_specs as f64 / secs, bytes as f64 / secs)
+}
+
+fn main() {
+    println!("== trace ingest throughput: streaming pull parser vs Json tree ==");
+    let n_specs: usize = if smoke() { 2_000 } else { 50_000 };
+    let (warmup, iters) = if smoke() { (1, 5) } else { (3, 30) };
+
+    let jsonl = encode(n_specs, TraceFormat::Jsonl);
+    let array = encode(n_specs, TraceFormat::Array);
+    let array_text = String::from_utf8(array.clone()).unwrap();
+    assert_eq!(stream_decode(&jsonl), n_specs as u64);
+    assert_eq!(stream_decode(&array), n_specs as u64);
+    assert_eq!(tree_decode(&array_text), n_specs as u64);
+
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let arms: [(&str, Box<dyn FnMut() -> u64>, usize); 3] = [
+        ("jsonl_stream", Box::new(|| stream_decode(&jsonl)), jsonl.len()),
+        ("array_stream", Box::new(|| stream_decode(&array)), array.len()),
+        ("array_tree", Box::new(|| tree_decode(&array_text)), array.len()),
+    ];
+    for (label, mut decode, bytes) in arms {
+        let m = bench(&format!("ingest/{label}/{n_specs}"), warmup, iters, |_| {
+            std::hint::black_box(decode());
+        });
+        let (specs_per_sec, bytes_per_sec) = rates(&m, n_specs, bytes);
+        println!(
+            "  -> {label:>12}: {:.0} specs/s, {:.1} MB/s",
+            specs_per_sec,
+            bytes_per_sec / 1e6
+        );
+        let mut entry = BTreeMap::new();
+        entry.insert("mean_ns".to_string(), Json::Num(m.mean_ns));
+        entry.insert("specs_per_sec".to_string(), Json::Num(specs_per_sec));
+        entry.insert("bytes_per_sec".to_string(), Json::Num(bytes_per_sec));
+        results.insert(label.to_string(), Json::Obj(entry));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("trace_ingest_throughput".into()));
+    doc.insert("n_specs".to_string(), Json::Num(n_specs as f64));
+    // keep each insert on one line: the bench-baseline lint reads the
+    // schema straight out of this source (see LINTS.md)
+    let smoke_flag = if smoke() { 1.0 } else { 0.0 };
+    doc.insert("smoke".to_string(), Json::Num(smoke_flag));
+    doc.insert("results".to_string(), Json::Obj(results));
+    let json = Json::Obj(doc);
+    match std::fs::write("BENCH_ingest.json", json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_ingest.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_ingest.json: {e}"),
+    }
+}

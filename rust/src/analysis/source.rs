@@ -84,8 +84,8 @@ pub struct Workspace {
     pub benches: Vec<(String, String)>,
     /// `python/compile/constants.py` lines, if present.
     pub py_constants: Option<(String, Vec<String>)>,
-    /// Committed perf baselines (`BENCH_e6.json`, `BENCH_engine.json`), as
-    /// present: `(file name, content)`.
+    /// Committed perf baselines (`BENCH_e6.json`, `BENCH_engine.json`,
+    /// `BENCH_ingest.json`), as present: `(file name, content)`.
     pub bench_baselines: Vec<(String, String)>,
     /// Committed obs regression baseline (`BENCH_obs_baseline.prom`), if
     /// present: `(file name, content)`.
@@ -166,7 +166,7 @@ impl Workspace {
             ));
         }
 
-        for name in ["BENCH_e6.json", "BENCH_engine.json"] {
+        for name in ["BENCH_e6.json", "BENCH_engine.json", "BENCH_ingest.json"] {
             if let Ok(text) = std::fs::read_to_string(root.join(name)) {
                 ws.bench_baselines.push((name.to_string(), text));
             }
@@ -610,7 +610,12 @@ fn lint_float_eq(ws: &Workspace, out: &mut Vec<Finding>) {
 /// collection-free, and iterative — `sim/engine.rs`, `sim/calendar.rs`,
 /// and `sim/arena.rs` are the paths every experiment multiplies by
 /// millions of events, and a recursive pop/schedule path would turn a deep
-/// backlog into a stack overflow.
+/// backlog into a stack overflow. The streaming trace path is hot the
+/// same way (once per spec over million-record files): the JSON pull
+/// tokenizer (`config/json/pull.rs`) is held to the full list, and the
+/// record decoder (`workload/trace.rs`) to a narrower one — specs own
+/// their strings, so `String::`/`Vec::new` assembly is sanctioned there,
+/// but collections, formatting and wall clocks stay banned.
 fn lint_engine_hot_loop(ws: &Workspace, out: &mut Vec<Finding>) {
     const FORBIDDEN: [&str; 9] = [
         "BTreeMap",
@@ -623,16 +628,31 @@ fn lint_engine_hot_loop(ws: &Workspace, out: &mut Vec<Finding>) {
         "Instant",
         "SystemTime",
     ];
-    const HOT_FILES: [&str; 3] =
-        ["sim/engine.rs", "sim/calendar.rs", "sim/arena.rs"];
-    for suffix in HOT_FILES {
+    // per-record decode: everything above except owned-string assembly
+    const DECODE: [&str; 7] = [
+        "BTreeMap",
+        "HashMap",
+        "format!",
+        "to_string",
+        "vec![",
+        "Instant",
+        "SystemTime",
+    ];
+    const HOT_FILES: [(&str, &[&str]); 5] = [
+        ("sim/engine.rs", &FORBIDDEN),
+        ("sim/calendar.rs", &FORBIDDEN),
+        ("sim/arena.rs", &FORBIDDEN),
+        ("config/json/pull.rs", &FORBIDDEN),
+        ("workload/trace.rs", &DECODE),
+    ];
+    for (suffix, forbidden) in HOT_FILES {
         let Some(f) = ws.find_src(suffix) else { continue };
         for (i, line) in f.lines.iter().enumerate() {
             if f.in_test[i] {
                 continue;
             }
             let code = strip_code(line);
-            for pat in FORBIDDEN {
+            for pat in forbidden.iter().copied() {
                 if code.contains(pat) && !f.allowed(i, "engine-hot-loop") {
                     out.push(Finding {
                         lint: "engine-hot-loop",
@@ -804,16 +824,17 @@ fn lint_experiment_numbering(ws: &Workspace, out: &mut Vec<Finding>) {
 }
 
 /// `bench-baseline`: each tracked perf baseline (`BENCH_e6.json`,
-/// `BENCH_engine.json`) must exist and its schema must match what its bench
+/// `BENCH_engine.json`, `BENCH_ingest.json`) must exist and its schema must match what its bench
 /// emitter actually writes (key sets extracted from the bench source), so
 /// the in-repo perf trajectory cannot silently diverge from the tool that
 /// produces it. A pair is skipped when its bench source is absent. The
 /// committed obs artifacts (`BENCH_obs_baseline.prom`, `slo/*.json`) are
 /// held to the same standard by [`lint_obs_artifacts`].
 fn lint_bench_baseline(ws: &Workspace, out: &mut Vec<Finding>) {
-    const PAIRS: [(&str, &str); 2] = [
+    const PAIRS: [(&str, &str); 3] = [
         ("e6_decision_latency.rs", "BENCH_e6.json"),
         ("engine_events_per_sec.rs", "BENCH_engine.json"),
+        ("trace_ingest_throughput.rs", "BENCH_ingest.json"),
     ];
     for (bench_file, baseline_file) in PAIRS {
         lint_bench_pair(ws, bench_file, baseline_file, out);
@@ -1300,6 +1321,40 @@ mod tests {
             .collect();
         assert!(files.iter().any(|p| p.contains("calendar.rs")), "{f:?}");
         assert!(files.iter().any(|p| p.contains("arena.rs")), "{f:?}");
+    }
+
+    #[test]
+    fn engine_hot_loop_covers_the_streaming_trace_path() {
+        // the pull tokenizer is held to the full forbidden list; the
+        // record decoder to the narrow one — owned-string assembly is
+        // sanctioned there, collections and formatting are not
+        let root = scratch("hotloop_stream");
+        put(
+            &root,
+            "rust/src/config/json/pull.rs",
+            "pub fn f() -> String { String::new() }\n",
+        );
+        put(
+            &root,
+            "rust/src/workload/trace.rs",
+            "pub fn ok() -> String { String::with_capacity(8) }\n\
+             pub fn bad() -> String { format!(\"x\") }\n",
+        );
+        let f = run_lints(&root).unwrap();
+        let hits: Vec<(&str, usize)> = f
+            .iter()
+            .filter(|x| x.lint == "engine-hot-loop")
+            .map(|x| (x.file.as_str(), x.line))
+            .collect();
+        assert!(hits.iter().any(|(p, _)| p.contains("pull.rs")), "{f:?}");
+        assert!(
+            hits.iter().any(|(p, l)| p.contains("trace.rs") && *l == 2),
+            "{f:?}"
+        );
+        assert!(
+            !hits.iter().any(|(p, l)| p.contains("trace.rs") && *l == 1),
+            "String:: must stay sanctioned in the decoder: {f:?}"
+        );
     }
 
     #[test]

@@ -6,11 +6,11 @@ use crate::errors::{anyhow, Result};
 
 use crate::cluster::Cluster;
 use crate::config::types::load_run_config;
-use crate::coordinator::builder::{build_tracker_with, RunConfig};
+use crate::coordinator::builder::{build_tracker_streaming, RunConfig};
 use crate::report::experiments::{self, ExpOpts};
 use crate::report::table::{fnum, Table};
-use crate::workload::generator::{generate, Mix, WorkloadConfig};
-use crate::workload::trace;
+use crate::workload::generator::{stream, Mix, WorkloadConfig};
+use crate::workload::trace::{self, TraceFormat, TraceReader, TraceStats, TraceWriter};
 use crate::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
 
 use super::args::Args;
@@ -25,11 +25,16 @@ USAGE:
                    [--save-model FILE.json] [--load-model FILE.json]
                    [--record-events FILE.jsonl] [--explain] [obs flags]
   repro compare    [--jobs J] [--nodes N] [--seeds K] [--quick]
-  repro experiment <e1..e12|all> [--quick] [--out DIR] [obs flags]
+  repro experiment <e1..e14|all> [--quick] [--out DIR] [obs flags]
   repro yarn       [--policy P] [--jobs J] [--nodes N] [--seed S] [--explain]
-                   [--mtbf SECS] [--mttr SECS] [obs flags]
+                   [--mtbf SECS] [--mttr SECS] [--trace FILE] [obs flags]
   repro trace-gen  --out FILE [--jobs J] [--seed S] [--rate R] [--mix M]
+                   [--format array|jsonl]
   repro trace-run  --trace FILE [--scheduler S] [--nodes N] [--seed S]
+                   [obs flags]
+  repro trace convert <in> <out> [--format array|jsonl]
+  repro trace stats   <file>
+  repro trace head    <file> [--n N]
   repro obs diff   <a.prom|a.jsonl> <b.prom|b.jsonl> [--match PREFIX]
                    [--fail-on PCT]
   repro obs check  --slo slo.json <dump.prom|dump.jsonl>
@@ -55,6 +60,13 @@ deltas plus p50/p95/p99 shifts per histogram; `--match PREFIX` restricts
 to matching metric names, `--fail-on PCT` exits 1 when any matched
 change exceeds PCT percent. `repro obs check` evaluates a declarative
 SLO spec (see OBSERVABILITY.md) against a dump and exits 1 on violation.
+
+Traces stream end to end (TRACES.md): `trace-gen` writes specs as they
+are generated, `trace-run` replays them through the tracker one spec
+ahead of the virtual clock, and `repro trace convert/stats/head` are
+one-pass — none of them ever hold the whole trace in memory. Both the
+JSON-array and JSONL layouts are read transparently (sniffed from the
+first byte); `--format` picks the output layout.
 ";
 
 /// Dispatch a full command line (without argv[0]). Returns process exit code.
@@ -74,6 +86,7 @@ pub fn dispatch<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "yarn" => cmd_yarn(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "trace-run" => cmd_trace_run(&args),
+        "trace" => cmd_trace(&args),
         "obs" => cmd_obs(&args),
         "lint" => cmd_lint(&args),
         "info" => cmd_info(),
@@ -180,15 +193,18 @@ fn summary_table(rows: &[crate::report::experiments::common::RunSummary]) -> Tab
 fn cmd_run(args: &Args) -> Result<i32> {
     let cfg = config_from_args(args)?;
     let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
-    let specs = generate(&cfg.workload);
     println!(
         "running {} jobs on {} nodes ({} racks) with scheduler '{}'",
-        specs.len(),
+        cfg.workload.n_jobs,
         cfg.n_nodes,
         cfg.n_racks,
         cfg.scheduler
     );
-    let mut jt = build_tracker_with(&cfg, cluster, specs)?;
+    // specs stream into existence one arrival ahead of the clock — a
+    // large --jobs run never materializes its workload
+    let specs: Box<dyn Iterator<Item = crate::job::job::JobSpec>> =
+        Box::new(stream(&cfg.workload));
+    let mut jt = build_tracker_streaming(&cfg, cluster, specs)?;
     jt.metrics.explain = args.flag("explain");
     if args.opt("record-events").is_some() {
         jt.set_audit(crate::analysis::protocol::AuditSink::recording());
@@ -300,7 +316,7 @@ fn cmd_experiment(args: &Args) -> Result<i32> {
     let id = args
         .positionals
         .get(1)
-        .ok_or_else(|| anyhow!("experiment id required (e1..e12 or all)"))?;
+        .ok_or_else(|| anyhow!("experiment id required (e1..e14 or all)"))?;
     let opts = ExpOpts {
         quick: args.flag("quick"),
         out_dir: args.opt("out").map(PathBuf::from),
@@ -327,12 +343,26 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
     let policy = args.opt_or("policy", "yarn-bayes");
     let nodes = args.opt_u64("nodes", 40)? as u32;
     let seed = args.opt_u64("seed", 1)?;
-    let specs = generate(&WorkloadConfig {
-        n_jobs: args.opt_u64("jobs", 100)? as usize,
-        arrival_rate: args.opt_f64("rate", 0.5)?,
-        seed,
-        ..Default::default()
-    });
+    // --trace replays a saved trace; otherwise specs stream from the
+    // generator. Either way the workload is never materialized.
+    let mut trace_tap = None;
+    let specs: Box<dyn Iterator<Item = crate::job::job::JobSpec>> =
+        match args.opt("trace") {
+            Some(path) => {
+                let mut reader = TraceReader::open(Path::new(path))?;
+                let stats = TraceStats::default();
+                reader.install_stats(stats.clone());
+                let (specs, errs) = reader.into_stream();
+                trace_tap = Some((stats, errs, path.to_string()));
+                specs
+            }
+            None => Box::new(stream(&WorkloadConfig {
+                n_jobs: args.opt_u64("jobs", 100)? as usize,
+                arrival_rate: args.opt_f64("rate", 0.5)?,
+                seed,
+                ..Default::default()
+            })),
+        };
     let cluster = Cluster::homogeneous(nodes, (nodes / 10).max(1));
     let mut ycfg = YarnConfig::default();
     let mtbf = args.opt_f64("mtbf", 0.0)?;
@@ -340,7 +370,7 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
         ycfg.failures.mtbf = Some(mtbf);
     }
     ycfg.failures.mttr = args.opt_f64("mttr", ycfg.failures.mttr)?;
-    let mut rm = ResourceManager::new(
+    let mut rm = ResourceManager::new_streaming(
         cluster,
         yarn_policy_by_name(policy, 1.0)?,
         specs,
@@ -353,6 +383,19 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
         rm.enable_obs(&obs);
     }
     rm.run();
+    if let Some((stats, errs, path)) = &trace_tap {
+        if let Some(e) = errs.take() {
+            return Err(e.wrap(format!("replaying trace {path}")));
+        }
+        println!(
+            "replayed {} specs ({} bytes) from {path}",
+            stats.specs_read(),
+            stats.bytes_read()
+        );
+        if let Some(r) = rm.obs.registry() {
+            install_trace_stats(&r, stats);
+        }
+    }
     rm.finish_obs(&obs)?;
     let m = &rm.metrics;
     let mut t = Table::new(
@@ -371,6 +414,24 @@ fn cmd_yarn(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Parse `--format array|jsonl` (with `default` when absent).
+fn format_arg(args: &Args, default: TraceFormat) -> Result<TraceFormat> {
+    match args.opt("format") {
+        None => Ok(default),
+        Some(s) => TraceFormat::from_name(s)
+            .ok_or_else(|| anyhow!("unknown trace format '{s}' (array|jsonl)")),
+    }
+}
+
+/// Mirror finished ingest stats into a driver's live registry so the
+/// `trace_*` metrics ride the normal obs exporters.
+fn install_trace_stats(r: &crate::obs::Registry, stats: &TraceStats) {
+    r.counter("trace_specs_read").add(stats.specs_read());
+    r.counter("trace_bytes_read").add(stats.bytes_read());
+    r.counter("trace_ingest_nanos").add(stats.ingest_nanos());
+    r.gauge("trace_ingest_resident").set(stats.resident_peak());
+}
+
 fn cmd_trace_gen(args: &Args) -> Result<i32> {
     let out = args.opt("out").ok_or_else(|| anyhow!("--out FILE required"))?;
     let cfg = WorkloadConfig {
@@ -380,22 +441,136 @@ fn cmd_trace_gen(args: &Args) -> Result<i32> {
         n_users: args.opt_u64("users", 8)? as usize,
         seed: args.opt_u64("seed", 1)?,
     };
-    let specs = generate(&cfg);
-    trace::save(&specs, Path::new(out))?;
-    println!("wrote {} jobs to {out}", specs.len());
+    let format = format_arg(args, TraceFormat::Array)?;
+    // specs flow generator -> writer one at a time
+    let n = trace::save_stream(stream(&cfg), Path::new(out), format)?;
+    println!("wrote {n} jobs to {out} ({})", format.name());
     Ok(0)
 }
 
 fn cmd_trace_run(args: &Args) -> Result<i32> {
     let path = args.opt("trace").ok_or_else(|| anyhow!("--trace FILE required"))?;
-    let specs = trace::load(Path::new(path))?;
-    let mut cfg = config_from_args(args)?;
-    cfg.workload.n_jobs = specs.len();
+    let cfg = config_from_args(args)?;
     let cluster = Cluster::homogeneous(cfg.n_nodes, cfg.n_racks);
-    let mut jt = build_tracker_with(&cfg, cluster, specs)?;
+    let mut reader = TraceReader::open(Path::new(path))?;
+    let stats = TraceStats::default();
+    reader.install_stats(stats.clone());
+    let (specs, errs) = reader.into_stream();
+    let mut jt = build_tracker_streaming(&cfg, cluster, specs)?;
+    if cfg.obs.any_output() {
+        jt.enable_obs(&cfg.obs);
+    }
     jt.run();
+    if let Some(e) = errs.take() {
+        return Err(e.wrap(format!("replaying trace {path}")));
+    }
+    println!(
+        "replayed {} specs ({} bytes, peak ingest resident {} bytes)",
+        stats.specs_read(),
+        stats.bytes_read(),
+        stats.resident_peak()
+    );
+    if let Some(r) = jt.obs.registry() {
+        install_trace_stats(&r, &stats);
+    }
+    jt.finish_obs(&cfg.obs)?;
     let summary = crate::report::experiments::common::summarize(&jt, &cfg);
     println!("{}", summary_table(&[summary]).render());
+    Ok(0)
+}
+
+/// `repro trace <convert|stats|head>`: one-pass streaming trace tools —
+/// none of them ever hold more than one spec in memory.
+fn cmd_trace(args: &Args) -> Result<i32> {
+    match args.positionals.get(1).map(String::as_str) {
+        Some("convert") => cmd_trace_convert(args),
+        Some("stats") => cmd_trace_stats(args),
+        Some("head") => cmd_trace_head(args),
+        _ => Err(anyhow!(
+            "usage: repro trace convert <in> <out> [--format array|jsonl]\n\
+             \x20      repro trace stats <file>\n\
+             \x20      repro trace head <file> [--n N]"
+        )),
+    }
+}
+
+fn cmd_trace_convert(args: &Args) -> Result<i32> {
+    let (Some(src), Some(dst)) = (args.positionals.get(2), args.positionals.get(3))
+    else {
+        return Err(anyhow!(
+            "usage: repro trace convert <in> <out> [--format array|jsonl]"
+        ));
+    };
+    let reader = TraceReader::open(Path::new(src))?;
+    // default: translate to the other layout
+    let default = match reader.format() {
+        TraceFormat::Array => TraceFormat::Jsonl,
+        TraceFormat::Jsonl => TraceFormat::Array,
+    };
+    let format = format_arg(args, default)?;
+    let file = std::fs::File::create(Path::new(dst))?;
+    let mut w = TraceWriter::new(std::io::BufWriter::new(file), format);
+    let mut n = 0u64;
+    for spec in reader {
+        w.write_spec(&spec.map_err(|e| e.wrap(format!("reading {src}")))?)?;
+        n += 1;
+    }
+    let written = w.finish()?;
+    debug_assert_eq!(written, n);
+    println!("converted {n} specs: {src} -> {dst} ({})", format.name());
+    Ok(0)
+}
+
+fn cmd_trace_stats(args: &Args) -> Result<i32> {
+    let Some(path) = args.positionals.get(2) else {
+        return Err(anyhow!("usage: repro trace stats <file>"));
+    };
+    let mut reader = TraceReader::open(Path::new(path))?;
+    let format = reader.format();
+    let mut n = 0u64;
+    let mut maps = 0u64;
+    let mut reduces = 0u64;
+    let mut first_submit = f64::INFINITY;
+    let mut last_submit = f64::NEG_INFINITY;
+    let mut peak_resident = 0usize;
+    while let Some(item) = reader.next() {
+        let spec = item.map_err(|e| e.wrap(format!("reading {path}")))?;
+        n += 1;
+        maps += spec.map_works.len() as u64;
+        reduces += spec.reduce_works.len() as u64;
+        first_submit = first_submit.min(spec.submit_time);
+        last_submit = last_submit.max(spec.submit_time);
+        peak_resident = peak_resident.max(reader.resident_bytes());
+    }
+    let mut t = Table::new(
+        &format!("trace stats: {path}"),
+        &["format", "specs", "bytes", "maps", "reduces", "first_submit", "last_submit", "peak_resident"],
+    );
+    t.row(vec![
+        format.name().into(),
+        format!("{n}"),
+        format!("{}", reader.bytes_read()),
+        format!("{maps}"),
+        format!("{reduces}"),
+        if n == 0 { "-".into() } else { fnum(first_submit) },
+        if n == 0 { "-".into() } else { fnum(last_submit) },
+        format!("{peak_resident}"),
+    ]);
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn cmd_trace_head(args: &Args) -> Result<i32> {
+    let Some(path) = args.positionals.get(2) else {
+        return Err(anyhow!("usage: repro trace head <file> [--n N]"));
+    };
+    let n = args.opt_u64("n", 10)?;
+    let reader = TraceReader::open(Path::new(path))?;
+    let mut w = TraceWriter::new(std::io::stdout(), TraceFormat::Jsonl);
+    for item in reader.take(n as usize) {
+        w.write_spec(&item.map_err(|e| e.wrap(format!("reading {path}")))?)?;
+    }
+    w.finish()?;
     Ok(0)
 }
 
@@ -784,6 +959,46 @@ mod tests {
         let doc = crate::obs::export::parse_jsonl(&std::fs::read_to_string(&jsonl).unwrap())
             .expect("jsonl parses");
         assert!(!doc.windows.is_empty(), "jsonl carries the window series");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_convert_stats_head_via_cli() {
+        let dir = scratch_dir("trace");
+        let arr = dir.join("t.json");
+        let jl = dir.join("t.jsonl");
+        let gen_cmd = format!("trace-gen --out {} --jobs 6 --seed 5", arr.display());
+        assert_eq!(dispatch(gen_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+        let conv = format!("trace convert {} {}", arr.display(), jl.display());
+        assert_eq!(dispatch(conv.split_whitespace().map(String::from)).unwrap(), 0);
+        // the converted JSONL replays through the streaming tracker path
+        let run_cmd = format!(
+            "trace-run --trace {} --scheduler fifo --nodes 4",
+            jl.display()
+        );
+        assert_eq!(dispatch(run_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+        let stats = format!("trace stats {}", jl.display());
+        assert_eq!(dispatch(stats.split_whitespace().map(String::from)).unwrap(), 0);
+        let head = format!("trace head {} --n 2", jl.display());
+        assert_eq!(dispatch(head.split_whitespace().map(String::from)).unwrap(), 0);
+        assert!(dispatch(vec!["trace".to_string()]).is_err(), "missing subcommand");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_trace_replays_through_yarn_via_cli() {
+        let dir = scratch_dir("ytrace");
+        let jl = dir.join("y.jsonl");
+        let gen_cmd = format!(
+            "trace-gen --out {} --jobs 5 --seed 7 --format jsonl",
+            jl.display()
+        );
+        assert_eq!(dispatch(gen_cmd.split_whitespace().map(String::from)).unwrap(), 0);
+        let yarn_cmd = format!(
+            "yarn --policy yarn-fifo --nodes 4 --trace {}",
+            jl.display()
+        );
+        assert_eq!(dispatch(yarn_cmd.split_whitespace().map(String::from)).unwrap(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,9 +1,19 @@
 //! Minimal JSON parser/writer (serde_json substitute — the offline crate
 //! cache has no serde facade).
 //!
-//! Supports the full JSON grammar except `\u` surrogate pairs are passed
-//! through unvalidated. Numbers parse to f64 (adequate for manifests,
-//! traces and metric dumps).
+//! Supports the full JSON grammar; `\u` escapes are validated (surrogate
+//! pairs decode to their scalar, lone surrogates are rejected). Numbers
+//! parse to f64 (adequate for manifests, traces and metric dumps).
+//!
+//! [`Json::parse`] is a thin tree-building wrapper over the streaming
+//! [`pull`] tokenizer — one iterative loop, no recursion, nesting capped
+//! at [`pull::MAX_DEPTH`]. The original recursive parser survives in
+//! [`reference`] as a differential oracle (`tests/json_differential.rs`
+//! pins that both accept/reject and value identically).
+
+pub(crate) mod escape;
+pub mod pull;
+pub mod reference;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -20,15 +30,13 @@ pub enum Json {
 }
 
 impl Json {
-    /// Parse a JSON document from text.
+    /// Parse a JSON document from text by driving the pull tokenizer.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing characters after document"));
-        }
+        let mut p = pull::PullParser::from_slice(text.as_bytes());
+        let v = build_from(&mut p)?;
+        // the parser is in its end-of-document state: this errors on
+        // trailing characters and returns None at clean EOF
+        p.next()?;
         Ok(v)
     }
 
@@ -41,8 +49,11 @@ impl Json {
 
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
-            // integrality test is exact by design -- lint: allow(float-eq)
-            if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
+            // strict upper bound: `u64::MAX as f64` rounds UP to 2^64,
+            // so admitting equality would saturate `f as u64` for values
+            // one ulp past the true max. integrality test is exact by
+            // design -- lint: allow(float-eq)
+            if f >= 0.0 && f.fract() == 0.0 && f < u64::MAX as f64 {
                 Some(f as u64)
             } else {
                 None
@@ -101,14 +112,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                // integers print without '.0' -- lint: allow(float-eq)
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -147,6 +151,68 @@ impl Json {
     }
 }
 
+/// Build an owned tree from a pull stream positioned at a value —
+/// iterative (explicit frame stack), one token at a time.
+fn build_from<R: std::io::Read>(p: &mut pull::PullParser<R>) -> Result<Json, JsonError> {
+    enum Frame {
+        Arr(Vec<Json>),
+        Obj(BTreeMap<String, Json>, Option<String>),
+    }
+    let mut stack: Vec<Frame> = Vec::new();
+    loop {
+        let completed: Json = {
+            let tok = match p.next()? {
+                Some(t) => t,
+                None => {
+                    return Err(JsonError {
+                        offset: p.offset(),
+                        msg: "unexpected end of input".into(),
+                    })
+                }
+            };
+            match tok {
+                pull::Token::BeginArr => {
+                    stack.push(Frame::Arr(Vec::new()));
+                    continue;
+                }
+                pull::Token::BeginObj => {
+                    stack.push(Frame::Obj(BTreeMap::new(), None));
+                    continue;
+                }
+                pull::Token::Key(k) => {
+                    let k = k.to_string();
+                    if let Some(Frame::Obj(_, pending)) = stack.last_mut() {
+                        *pending = Some(k);
+                    }
+                    continue;
+                }
+                pull::Token::Null => Json::Null,
+                pull::Token::Bool(b) => Json::Bool(b),
+                pull::Token::Num(n) => Json::Num(n),
+                pull::Token::Str(s) => Json::Str(s.to_string()),
+                pull::Token::EndArr => match stack.pop() {
+                    Some(Frame::Arr(a)) => Json::Arr(a),
+                    _ => unreachable!("pull parser balances arrays"),
+                },
+                pull::Token::EndObj => match stack.pop() {
+                    Some(Frame::Obj(m, _)) => Json::Obj(m),
+                    _ => unreachable!("pull parser balances objects"),
+                },
+            }
+        };
+        match stack.last_mut() {
+            None => return Ok(completed),
+            Some(Frame::Arr(a)) => a.push(completed),
+            Some(Frame::Obj(m, pending)) => match pending.take() {
+                Some(key) => {
+                    m.insert(key, completed);
+                }
+                None => unreachable!("pull parser emits a key before each member"),
+            },
+        }
+    }
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');
@@ -156,7 +222,20 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Write one f64 the canonical way: integers below 1e15 print without a
+/// trailing `.0`. Shared with the streaming trace writer.
+pub(crate) fn write_num(out: &mut String, n: f64) {
+    // integers print without '.0' -- lint: allow(float-eq)
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+/// Write one string with JSON escaping. Shared with the streaming trace
+/// writer.
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -186,193 +265,6 @@ impl fmt::Display for JsonError {
 }
 
 impl std::error::Error for JsonError {}
-
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError { offset: self.i, msg: msg.to_string() }
-    }
-
-    fn peek(&self) -> Option<u8> {
-        self.b.get(self.i).copied()
-    }
-
-    fn skip_ws(&mut self) {
-        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
-            self.i += 1;
-        }
-    }
-
-    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected '{}'", c as char)))
-        }
-    }
-
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
-            self.i += word.len();
-            Ok(v)
-        } else {
-            Err(self.err(&format!("expected '{word}'")))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            Some(_) => Err(self.err("unexpected character")),
-            None => Err(self.err("unexpected end of input")),
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'[')?;
-        let mut out = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.i += 1;
-            return Ok(Json::Arr(out));
-        }
-        loop {
-            self.skip_ws();
-            out.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b']') => {
-                    self.i += 1;
-                    return Ok(Json::Arr(out));
-                }
-                _ => return Err(self.err("expected ',' or ']'")),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'{')?;
-        let mut out = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
-            return Ok(Json::Obj(out));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.eat(b':')?;
-            self.skip_ws();
-            let val = self.value()?;
-            out.insert(key, val);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(out));
-                }
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            match self.peek() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => {
-                    self.i += 1;
-                    return Ok(s);
-                }
-                Some(b'\\') => {
-                    self.i += 1;
-                    match self.peek() {
-                        Some(b'"') => s.push('"'),
-                        Some(b'\\') => s.push('\\'),
-                        Some(b'/') => s.push('/'),
-                        Some(b'n') => s.push('\n'),
-                        Some(b't') => s.push('\t'),
-                        Some(b'r') => s.push('\r'),
-                        Some(b'b') => s.push('\u{8}'),
-                        Some(b'f') => s.push('\u{c}'),
-                        Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("truncated \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.i += 4;
-                        }
-                        _ => return Err(self.err("bad escape")),
-                    }
-                    self.i += 1;
-                }
-                Some(_) => {
-                    // copy a full UTF-8 scalar
-                    let rest = &self.b[self.i..];
-                    let text = std::str::from_utf8(rest)
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = text
-                        .chars()
-                        .next()
-                        .ok_or_else(|| self.err("unterminated string"))?;
-                    s.push(c);
-                    self.i += c.len_utf8();
-                }
-            }
-        }
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        let text = std::str::from_utf8(&self.b[start..self.i])
-            .map_err(|_| self.err("invalid number"))?;
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
-    }
-}
 
 #[cfg(test)]
 mod tests {
@@ -437,6 +329,52 @@ mod tests {
         assert_eq!(Json::Num(3.0).as_u64(), Some(3));
         assert_eq!(Json::Num(3.5).as_u64(), None);
         assert_eq!(Json::Num(-1.0).as_u64(), None);
+    }
+
+    #[test]
+    fn as_u64_rejects_two_to_the_64() {
+        // u64::MAX as f64 rounds UP to 2^64 — the old `<=` bound admitted
+        // it and the cast saturated to u64::MAX. Values >= 2^64 must be
+        // rejected.
+        let two_64 = 18446744073709551616.0; // 2^64 == u64::MAX as f64
+        assert_eq!(Json::Num(two_64).as_u64(), None);
+        assert_eq!(Json::Num(two_64 * 2.0).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        // the largest f64 strictly below 2^64 is fine
+        let below = 18446744073709549568.0; // 2^64 - 2048
+        assert_eq!(Json::Num(below).as_u64(), Some(18446744073709549568));
+        assert_eq!(Json::Num(9.007199254740992e15).as_u64(), Some(1 << 53));
+    }
+
+    #[test]
+    fn surrogate_escapes_validate_in_both_parsers() {
+        for text in [
+            r#""\ud83d\ude00""#, // valid pair -> 😀
+            r#""\ud83d""#,       // lone high
+            r#""\ude00""#,       // lone low
+            r#""\ud83dx""#,      // high followed by raw char
+            r#""\ud83d\n""#,     // high followed by a different escape
+            r#""A""#,       // plain scalar
+        ] {
+            let a = Json::parse(text);
+            let b = reference::parse(text);
+            assert_eq!(a.is_ok(), b.is_ok(), "disagree on {text}");
+            if let (Ok(a), Ok(b)) = (&a, &b) {
+                assert_eq!(a, b, "values disagree on {text}");
+            }
+        }
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap().as_str().unwrap(),
+            "\u{1F600}"
+        );
+    }
+
+    #[test]
+    fn deep_documents_error_instead_of_overflowing() {
+        let deep = "[".repeat(pull::MAX_DEPTH + 1) + &"]".repeat(pull::MAX_DEPTH + 1);
+        assert!(Json::parse(&deep).is_err());
+        assert!(reference::parse(&deep).is_err());
     }
 }
 

@@ -1,0 +1,78 @@
+//! Shared `\u` escape decoding used by BOTH JSON parsers — the pull
+//! tokenizer ([`super::pull`]) and the recursive tree oracle
+//! ([`super::reference`]) — so surrogate handling cannot drift between
+//! them. The parsers own the byte fetching; this module owns the
+//! classification and combination rules.
+
+/// One decoded UTF-16 code unit from a `\uXXXX` escape, classified.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum UnitClass {
+    /// A plain BMP scalar (not a surrogate).
+    Scalar(char),
+    /// High (lead) surrogate `0xD800..=0xDBFF` — must be immediately
+    /// followed by a low surrogate escape.
+    High(u16),
+    /// Low (trail) surrogate `0xDC00..=0xDFFF` — invalid on its own.
+    Low(u16),
+}
+
+/// Parse 4 ASCII hex digits into a UTF-16 code unit. Strict: exactly
+/// `[0-9a-fA-F]`, no signs or whitespace (unlike `from_str_radix`,
+/// which admits a leading `+`).
+pub(crate) fn hex4(h: [u8; 4]) -> Option<u16> {
+    let mut v: u16 = 0;
+    for b in h {
+        let d = match b {
+            b'0'..=b'9' => b - b'0',
+            b'a'..=b'f' => b - b'a' + 10,
+            b'A'..=b'F' => b - b'A' + 10,
+            _ => return None,
+        };
+        v = (v << 4) | d as u16;
+    }
+    Some(v)
+}
+
+/// Classify a decoded UTF-16 unit. Non-surrogate BMP units are always
+/// valid scalars; the fallback is unreachable.
+pub(crate) fn classify(unit: u16) -> UnitClass {
+    match unit {
+        0xD800..=0xDBFF => UnitClass::High(unit),
+        0xDC00..=0xDFFF => UnitClass::Low(unit),
+        u => UnitClass::Scalar(char::from_u32(u as u32).unwrap_or('\u{fffd}')),
+    }
+}
+
+/// Combine a validated surrogate pair into its scalar value. The result
+/// is always in `0x10000..=0x10FFFF`, so the fallback is unreachable.
+pub(crate) fn combine(hi: u16, lo: u16) -> char {
+    let c = 0x10000 + (((hi as u32 - 0xD800) << 10) | (lo as u32 - 0xDC00));
+    char::from_u32(c).unwrap_or('\u{fffd}')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex4_strict() {
+        assert_eq!(hex4(*b"0041"), Some(0x41));
+        assert_eq!(hex4(*b"FFff"), Some(0xFFFF));
+        assert_eq!(hex4(*b"+123"), None, "no signs, unlike from_str_radix");
+        assert_eq!(hex4(*b"12g4"), None);
+    }
+
+    #[test]
+    fn classify_splits_the_planes() {
+        assert_eq!(classify(0x41), UnitClass::Scalar('A'));
+        assert_eq!(classify(0xD83D), UnitClass::High(0xD83D));
+        assert_eq!(classify(0xDE00), UnitClass::Low(0xDE00));
+    }
+
+    #[test]
+    fn combine_reaches_the_astral_planes() {
+        assert_eq!(combine(0xD83D, 0xDE00), '\u{1F600}');
+        assert_eq!(combine(0xD800, 0xDC00), '\u{10000}');
+        assert_eq!(combine(0xDBFF, 0xDFFF), '\u{10FFFF}');
+    }
+}

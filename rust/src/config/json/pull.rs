@@ -1,0 +1,609 @@
+//! Non-recursive pull tokenizer over any `std::io::Read` source — the
+//! picojson `SliceParser`/`StreamParser` split collapsed into one
+//! generic parser (`&[u8]` implements `Read`, so the slice path is the
+//! stream path with a trivial source).
+//!
+//! Design rules (enforced by the `engine-hot-loop` lint on this file):
+//!
+//! - **No recursion.** Nesting is tracked by a fixed bitstack (one bit
+//!   per level: set = object, clear = array), so a pathologically deep
+//!   document errors at [`MAX_DEPTH`] instead of overflowing the stack.
+//! - **No per-token heap allocation.** The read buffer is one fixed
+//!   chunk; string and number tokens decode into reusable scratch
+//!   buffers that are cleared, not reallocated, per token. Resident
+//!   memory is O(largest token), never O(document) —
+//!   [`PullParser::resident_bytes`] reports it so tests can pin the
+//!   bound.
+//!
+//! Grammar quirks are bit-compatible with the recursive tree oracle in
+//! [`super::reference`] (differential-tested in
+//! `tests/json_differential.rs`): the number text is collected by the
+//! same character classes and handed to `str::parse::<f64>` (so `"1."`
+//! and `"01"` parse, `"1e999"` is `inf`), raw control characters inside
+//! strings pass through, and both share the `\u` escape decoder in
+//! [`super::escape`] (surrogate pairs combine, lone surrogates reject).
+
+use std::io::Read;
+
+use super::escape::{classify, combine, hex4, UnitClass};
+use super::JsonError;
+
+/// Maximum container nesting either parser accepts.
+pub const MAX_DEPTH: usize = 512;
+
+/// Size of the bounded read buffer.
+const CHUNK: usize = 8 * 1024;
+
+/// One structural event from the token stream. Borrowing tokens
+/// (`Key`, `Str`) point into the parser's scratch buffer and are valid
+/// until the next [`PullParser::next`] call.
+#[derive(Debug, PartialEq)]
+pub enum Token<'a> {
+    BeginObj,
+    EndObj,
+    BeginArr,
+    EndArr,
+    /// An object key; the following `:` is already consumed.
+    Key(&'a str),
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(&'a str),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum State {
+    /// Expecting the document's root value.
+    TopValue,
+    /// Expecting a value (after `:` or after `,` inside an array).
+    Value,
+    /// Just opened `[`: a value or an immediate `]`.
+    FirstInArr,
+    /// Just opened `{`: a key or an immediate `}`.
+    FirstInObj,
+    /// After `,` inside an object: a key is required.
+    KeyNext,
+    /// After a complete value inside a container: `,` or the closer.
+    CommaOrEnd,
+    /// Root value complete; only whitespace may follow.
+    Done,
+}
+
+/// Streaming JSON tokenizer. See the module docs for the memory and
+/// grammar contract.
+pub struct PullParser<R: Read> {
+    src: R,
+    /// Bounded read buffer (fixed `CHUNK` bytes, refilled in place).
+    buf: Vec<u8>,
+    /// Valid prefix of `buf`.
+    len: usize,
+    /// Cursor into `buf`.
+    pos: usize,
+    /// Absolute byte offset of `buf[0]` in the source.
+    base: usize,
+    eof: bool,
+    /// Decoded bytes of the current string/key token (reused).
+    scratch: Vec<u8>,
+    /// Raw text of the current number token (reused).
+    numbuf: Vec<u8>,
+    /// Container bitstack: bit set = object, clear = array.
+    stack: [u64; MAX_DEPTH / 64],
+    depth: usize,
+    state: State,
+}
+
+impl<'a> PullParser<&'a [u8]> {
+    /// Parse from an in-memory slice (`&[u8]` is a `Read` source).
+    pub fn from_slice(b: &'a [u8]) -> PullParser<&'a [u8]> {
+        PullParser::new(b)
+    }
+}
+
+impl<R: Read> PullParser<R> {
+    pub fn new(src: R) -> PullParser<R> {
+        let mut buf = Vec::with_capacity(CHUNK);
+        buf.resize(CHUNK, 0);
+        PullParser {
+            src,
+            buf,
+            len: 0,
+            pos: 0,
+            base: 0,
+            eof: false,
+            scratch: Vec::with_capacity(64),
+            numbuf: Vec::with_capacity(32),
+            stack: [0; MAX_DEPTH / 64],
+            depth: 0,
+            state: State::TopValue,
+        }
+    }
+
+    /// Absolute byte offset of the next unconsumed byte.
+    pub fn offset(&self) -> usize {
+        self.base + self.pos
+    }
+
+    /// Bytes resident in this parser right now: the fixed chunk plus the
+    /// reusable token scratch — O(largest token), never O(document).
+    pub fn resident_bytes(&self) -> usize {
+        self.buf.capacity()
+            + self.scratch.capacity()
+            + self.numbuf.capacity()
+            + std::mem::size_of::<[u64; MAX_DEPTH / 64]>()
+    }
+
+    /// After a document completed (the previous [`PullParser::next`]
+    /// returned the root's last token), re-arm the parser to read
+    /// another document from the same source. Byte accounting
+    /// continues; this is how JSONL streams replay record after record.
+    pub fn reset_document(&mut self) {
+        debug_assert_eq!(self.state, State::Done, "reset mid-document");
+        self.state = State::TopValue;
+    }
+
+    /// True when nothing but whitespace remains in the source.
+    pub fn at_eof(&mut self) -> Result<bool, JsonError> {
+        self.skip_ws()?;
+        Ok(self.peek()?.is_none())
+    }
+
+    /// Skip whitespace and peek the next byte without consuming it —
+    /// lets callers sniff the document shape (`[` vs `{`) before
+    /// pulling tokens.
+    pub fn sniff(&mut self) -> Result<Option<u8>, JsonError> {
+        self.skip_ws()?;
+        self.peek()
+    }
+
+    /// Pull the next token. `Ok(None)` only at a clean end of document
+    /// with no trailing bytes; every malformed input is an `Err`.
+    #[allow(clippy::should_implement_trait)] // lending: Token borrows self
+    pub fn next(&mut self) -> Result<Option<Token<'_>>, JsonError> {
+        self.skip_ws()?;
+        match self.state {
+            State::Done => match self.peek()? {
+                None => Ok(None),
+                Some(_) => Err(self.err("trailing characters after document")),
+            },
+            State::TopValue | State::Value => self.value_token(),
+            State::FirstInArr => {
+                if self.peek()? == Some(b']') {
+                    self.bump();
+                    self.pop_level();
+                    return Ok(Some(Token::EndArr));
+                }
+                self.value_token()
+            }
+            State::FirstInObj => {
+                if self.peek()? == Some(b'}') {
+                    self.bump();
+                    self.pop_level();
+                    return Ok(Some(Token::EndObj));
+                }
+                self.key_token()
+            }
+            State::KeyNext => self.key_token(),
+            State::CommaOrEnd => {
+                let in_obj = self.top_is_obj();
+                match self.peek()? {
+                    Some(b',') => {
+                        self.bump();
+                        self.skip_ws()?;
+                        if in_obj {
+                            self.state = State::KeyNext;
+                            self.key_token()
+                        } else {
+                            self.state = State::Value;
+                            self.value_token()
+                        }
+                    }
+                    Some(b'}') if in_obj => {
+                        self.bump();
+                        self.pop_level();
+                        Ok(Some(Token::EndObj))
+                    }
+                    Some(b']') if !in_obj => {
+                        self.bump();
+                        self.pop_level();
+                        Ok(Some(Token::EndArr))
+                    }
+                    _ => Err(self.err(if in_obj {
+                        "expected ',' or '}'"
+                    } else {
+                        "expected ',' or ']'"
+                    })),
+                }
+            }
+        }
+    }
+
+    fn err(&self, msg: &'static str) -> JsonError {
+        JsonError { offset: self.base + self.pos, msg: msg.into() }
+    }
+
+    /// Refill the chunk buffer; only called when `pos == len`.
+    fn fill(&mut self) -> Result<(), JsonError> {
+        self.base += self.len;
+        self.pos = 0;
+        self.len = 0;
+        while !self.eof {
+            match self.src.read(&mut self.buf) {
+                Ok(0) => self.eof = true,
+                Ok(n) => {
+                    self.len = n;
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(self.err("i/o error while reading source")),
+            }
+        }
+        Ok(())
+    }
+
+    fn peek(&mut self) -> Result<Option<u8>, JsonError> {
+        if self.pos == self.len {
+            if self.eof {
+                return Ok(None);
+            }
+            self.fill()?;
+            if self.len == 0 {
+                return Ok(None);
+            }
+        }
+        Ok(Some(self.buf[self.pos]))
+    }
+
+    fn bump(&mut self) {
+        self.pos += 1;
+    }
+
+    fn skip_ws(&mut self) -> Result<(), JsonError> {
+        while matches!(self.peek()?, Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.bump();
+        }
+        Ok(())
+    }
+
+    fn push_level(&mut self, is_obj: bool) -> Result<(), JsonError> {
+        if self.depth == MAX_DEPTH {
+            return Err(self.err("document too deep"));
+        }
+        let (word, bit) = (self.depth / 64, self.depth % 64);
+        if is_obj {
+            self.stack[word] |= 1 << bit;
+        } else {
+            self.stack[word] &= !(1 << bit);
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn top_is_obj(&self) -> bool {
+        let d = self.depth - 1;
+        (self.stack[d / 64] >> (d % 64)) & 1 == 1
+    }
+
+    fn pop_level(&mut self) {
+        self.depth -= 1;
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    /// Set the state that follows a completed scalar value.
+    fn after_value(&mut self) {
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    fn value_token(&mut self) -> Result<Option<Token<'_>>, JsonError> {
+        match self.peek()? {
+            Some(b'n') => {
+                self.expect_lit(b"null", "expected 'null'")?;
+                self.after_value();
+                Ok(Some(Token::Null))
+            }
+            Some(b't') => {
+                self.expect_lit(b"true", "expected 'true'")?;
+                self.after_value();
+                Ok(Some(Token::Bool(true)))
+            }
+            Some(b'f') => {
+                self.expect_lit(b"false", "expected 'false'")?;
+                self.after_value();
+                Ok(Some(Token::Bool(false)))
+            }
+            Some(b'"') => {
+                self.read_string()?;
+                self.after_value();
+                Ok(Some(Token::Str(self.scratch_str()?)))
+            }
+            Some(b'[') => {
+                self.bump();
+                self.push_level(false)?;
+                self.state = State::FirstInArr;
+                Ok(Some(Token::BeginArr))
+            }
+            Some(b'{') => {
+                self.bump();
+                self.push_level(true)?;
+                self.state = State::FirstInObj;
+                Ok(Some(Token::BeginObj))
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.read_number()?;
+                self.after_value();
+                Ok(Some(Token::Num(n)))
+            }
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn key_token(&mut self) -> Result<Option<Token<'_>>, JsonError> {
+        if self.peek()? != Some(b'"') {
+            return Err(self.err("expected '\"'"));
+        }
+        self.read_string()?;
+        self.skip_ws()?;
+        if self.peek()? != Some(b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.bump();
+        self.state = State::Value;
+        Ok(Some(Token::Key(self.scratch_str()?)))
+    }
+
+    fn expect_lit(&mut self, word: &[u8], msg: &'static str) -> Result<(), JsonError> {
+        for &w in word {
+            if self.peek()? != Some(w) {
+                return Err(self.err(msg));
+            }
+            self.bump();
+        }
+        Ok(())
+    }
+
+    /// Decode one string (cursor on the opening quote) into `scratch`.
+    fn read_string(&mut self) -> Result<(), JsonError> {
+        self.bump();
+        self.scratch.clear();
+        loop {
+            match self.peek()? {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.bump();
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.bump();
+                    self.read_escape()?;
+                }
+                Some(c) => {
+                    // raw bytes (incl. control chars, matching the
+                    // oracle); UTF-8 is validated once per token
+                    self.scratch.push(c);
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    /// Decode one escape (cursor on the byte after the backslash).
+    fn read_escape(&mut self) -> Result<(), JsonError> {
+        let simple = match self.peek()? {
+            Some(b'"') => '"',
+            Some(b'\\') => '\\',
+            Some(b'/') => '/',
+            Some(b'n') => '\n',
+            Some(b't') => '\t',
+            Some(b'r') => '\r',
+            Some(b'b') => '\u{8}',
+            Some(b'f') => '\u{c}',
+            Some(b'u') => {
+                self.bump();
+                let c = match classify(self.read_hex4()?) {
+                    UnitClass::Scalar(c) => c,
+                    UnitClass::Low(_) => {
+                        return Err(self.err("lone low surrogate in \\u escape"))
+                    }
+                    UnitClass::High(hi) => {
+                        if self.peek()? != Some(b'\\') {
+                            return Err(self.err("unpaired surrogate in \\u escape"));
+                        }
+                        self.bump();
+                        if self.peek()? != Some(b'u') {
+                            return Err(self.err("unpaired surrogate in \\u escape"));
+                        }
+                        self.bump();
+                        match classify(self.read_hex4()?) {
+                            UnitClass::Low(lo) => combine(hi, lo),
+                            _ => {
+                                return Err(self.err("unpaired surrogate in \\u escape"))
+                            }
+                        }
+                    }
+                };
+                self.push_char(c);
+                return Ok(());
+            }
+            _ => return Err(self.err("bad escape")),
+        };
+        self.push_char(simple);
+        self.bump();
+        Ok(())
+    }
+
+    /// Consume exactly 4 hex digits into a UTF-16 unit.
+    fn read_hex4(&mut self) -> Result<u16, JsonError> {
+        let mut h = [0u8; 4];
+        for slot in &mut h {
+            match self.peek()? {
+                None => return Err(self.err("truncated \\u escape")),
+                Some(c) => {
+                    *slot = c;
+                    self.bump();
+                }
+            }
+        }
+        hex4(h).ok_or_else(|| self.err("bad \\u escape"))
+    }
+
+    fn push_char(&mut self, c: char) {
+        let mut tmp = [0u8; 4];
+        self.scratch.extend_from_slice(c.encode_utf8(&mut tmp).as_bytes());
+    }
+
+    fn scratch_str(&self) -> Result<&str, JsonError> {
+        std::str::from_utf8(&self.scratch).map_err(|_| self.err("invalid utf-8"))
+    }
+
+    /// Collect number text by the oracle's character classes and defer
+    /// to `str::parse::<f64>` — identical accept/reject and values.
+    fn read_number(&mut self) -> Result<f64, JsonError> {
+        self.numbuf.clear();
+        if self.peek()? == Some(b'-') {
+            self.numbuf.push(b'-');
+            self.bump();
+        }
+        while let Some(c) = self.peek()? {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            self.numbuf.push(c);
+            self.bump();
+        }
+        if self.peek()? == Some(b'.') {
+            self.numbuf.push(b'.');
+            self.bump();
+            while let Some(c) = self.peek()? {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                self.numbuf.push(c);
+                self.bump();
+            }
+        }
+        if matches!(self.peek()?, Some(b'e' | b'E')) {
+            self.numbuf.push(b'e');
+            self.bump();
+            if matches!(self.peek()?, Some(b'+' | b'-')) {
+                if self.peek()? == Some(b'-') {
+                    self.numbuf.push(b'-');
+                }
+                self.bump();
+            }
+            while let Some(c) = self.peek()? {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                self.numbuf.push(c);
+                self.bump();
+            }
+        }
+        let text =
+            std::str::from_utf8(&self.numbuf).map_err(|_| self.err("invalid number"))?;
+        text.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens(text: &str) -> Result<Vec<String>, JsonError> {
+        let mut p = PullParser::from_slice(text.as_bytes());
+        let mut out = Vec::new();
+        while let Some(t) = p.next()? {
+            out.push(format!("{t:?}"));
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn tokenizes_a_nested_document() {
+        let toks = tokens(r#"{"a": [1, true, null], "b": "x"}"#).unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                "BeginObj",
+                "Key(\"a\")",
+                "BeginArr",
+                "Num(1.0)",
+                "Bool(true)",
+                "Null",
+                "EndArr",
+                "Key(\"b\")",
+                "Str(\"x\")",
+                "EndObj",
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_containers_and_scalar_roots() {
+        assert_eq!(tokens("[]").unwrap(), vec!["BeginArr", "EndArr"]);
+        assert_eq!(tokens("{}").unwrap(), vec!["BeginObj", "EndObj"]);
+        assert_eq!(tokens(" 42 ").unwrap(), vec!["Num(42.0)"]);
+    }
+
+    #[test]
+    fn rejects_structural_garbage() {
+        for bad in ["", "[1,]", "{\"a\":1,}", "[1 2]", "{\"a\" 1}", "1 2", "[}", "{]"] {
+            assert!(tokens(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn depth_cap_is_exact() {
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(tokens(&ok).is_ok());
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let err = tokens(&deep).unwrap_err();
+        assert!(err.msg.contains("too deep"), "{err}");
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_and_lone_ones_reject() {
+        assert_eq!(
+            tokens(r#""\ud83d\ude00""#).unwrap(),
+            vec!["Str(\"\u{1F600}\")"]
+        );
+        assert!(tokens(r#""\ud83d""#).is_err());
+        assert!(tokens(r#""\ude00""#).is_err());
+        assert!(tokens(r#""\ud83dx""#).is_err());
+        assert!(tokens(r#""\ud83d\n""#).is_err());
+    }
+
+    #[test]
+    fn resident_bytes_is_bounded_by_chunk_plus_scratch() {
+        let doc = format!("[{}]", (0..10_000).map(|i| i.to_string()).collect::<Vec<_>>().join(","));
+        let mut p = PullParser::from_slice(doc.as_bytes());
+        let mut peak = 0;
+        loop {
+            let more = p.next().unwrap().is_some();
+            peak = peak.max(p.resident_bytes());
+            if !more {
+                break;
+            }
+        }
+        assert!(peak < 2 * CHUNK, "resident {peak} should be ~one chunk");
+        assert_eq!(p.offset(), doc.len());
+    }
+
+    #[test]
+    fn reset_document_streams_jsonl() {
+        let src = "{\"a\": 1}\n{\"a\": 2}\n";
+        let mut p = PullParser::new(src.as_bytes());
+        let mut roots = 0;
+        while !p.at_eof().unwrap() {
+            if roots > 0 {
+                p.reset_document();
+            }
+            while let Some(t) = p.next().unwrap() {
+                if t == Token::EndObj {
+                    break;
+                }
+            }
+            roots += 1;
+        }
+        assert_eq!(roots, 2);
+    }
+}

@@ -110,6 +110,25 @@ pub fn build_tracker_with(
     ))
 }
 
+/// Build over a streaming spec source (bounded-memory trace replay):
+/// the specs never materialize as a vector. The iterator must yield
+/// nondecreasing `submit_time`s, like [`JobTracker::new_streaming`]
+/// requires.
+pub fn build_tracker_streaming(
+    cfg: &RunConfig,
+    cluster: Cluster,
+    specs: Box<dyn Iterator<Item = JobSpec>>,
+) -> Result<JobTracker> {
+    let sched = build_scheduler(cfg)?;
+    Ok(JobTracker::new_streaming(
+        cluster,
+        sched,
+        specs,
+        cfg.workload.seed,
+        cfg.tracker.clone(),
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -4,5 +4,8 @@
 pub mod builder;
 pub mod jobtracker;
 
-pub use builder::{build_scheduler, build_tracker, build_tracker_with, RunConfig};
+pub use builder::{
+    build_scheduler, build_tracker, build_tracker_streaming, build_tracker_with,
+    RunConfig,
+};
 pub use jobtracker::{JobTracker, TrackerConfig};

@@ -161,6 +161,13 @@ impl DriverObs {
         self.inner.is_some()
     }
 
+    /// A handle to the live registry (None when obs is off) — lets a
+    /// driver register extra instrument families (e.g. the `trace_*`
+    /// ingest metrics) into the same export surface.
+    pub fn registry(&self) -> Option<Registry> {
+        self.inner.as_ref().map(|i| i.registry.clone())
+    }
+
     /// Advance the window clock (no-op when obs is off or unwindowed).
     /// Call from the event loop before dispatching the event at
     /// `sim_now`; reads only, never schedules — the sim stays

@@ -1,0 +1,176 @@
+//! E14: streaming trace replay — write a heavy-tailed (lognormal task
+//! works) JSONL trace of 1,000,000 specs (20k in `--quick`), then replay
+//! it through BOTH drivers (MRv1 tracker, YARN RM) under fifo and bayes,
+//! never materializing the spec vector: the trace streams from disk one
+//! record ahead of the virtual clock.
+//!
+//! The report pairs each cell's makespan with the ingest-side memory
+//! proof: `ingest_resident_b` is the peak bytes resident in the decode
+//! path (the `trace_ingest_resident` gauge — a fixed parser chunk plus
+//! per-record scratch), and `peak_active`/`resident_end` show the arena
+//! staying O(active jobs). Together they bound the replay's footprint by
+//! the cluster state, not the trace length.
+
+use crate::cluster::Cluster;
+use crate::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use crate::job::job::JobSpec;
+use crate::job::profile::JobClass;
+use crate::obs::Stopwatch;
+use crate::report::table::{fnum, Table};
+use crate::workload::generator::{stream, Mix, WorkloadConfig};
+use crate::workload::trace::{self, TraceErrorSlot, TraceFormat, TraceReader, TraceStats};
+use crate::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+use super::common::ExpOpts;
+
+/// Open the trace for one replay cell: streaming spec source + its
+/// ingest stats + the slot that would catch a malformed record.
+fn open_trace(
+    path: &std::path::Path,
+) -> (Box<dyn Iterator<Item = JobSpec>>, TraceStats, TraceErrorSlot) {
+    // the experiment wrote this file moments ago -- lint: allow(unwrap-in-lib)
+    let mut reader = TraceReader::open(path).unwrap();
+    let stats = TraceStats::default();
+    reader.install_stats(stats.clone());
+    let (specs, errs) = reader.into_stream();
+    (specs, stats, errs)
+}
+
+struct CellReport {
+    makespan: f64,
+    peak_active: usize,
+    resident_end: usize,
+    wall: f64,
+}
+
+fn report_row(
+    table: &mut Table,
+    driver: &str,
+    sched: &str,
+    n_jobs: usize,
+    cell: &CellReport,
+    stats: &TraceStats,
+    errs: &TraceErrorSlot,
+) {
+    if let Some(e) = errs.take() {
+        crate::obs_log!(crate::obs::log::ERROR, "e14 trace replay error: {e}");
+    }
+    table.row(vec![
+        driver.into(),
+        sched.into(),
+        format!("{n_jobs}"),
+        fnum(cell.makespan),
+        format!("{}", stats.specs_read()),
+        fnum(stats.ingest_nanos() as f64 / 1e6),
+        format!("{}", stats.resident_peak()),
+        format!("{}", cell.peak_active),
+        format!("{}", cell.resident_end),
+        fnum(cell.wall),
+    ]);
+}
+
+pub fn e14(opts: &ExpOpts) -> Vec<Table> {
+    let n_jobs = opts.scaled(1_000_000, 20_000);
+    let n_nodes = opts.scaled(10_000, 500) as u32;
+    // same ~60%-of-service calibration as E13 so the backlog stays bounded
+    let arrival_rate = if opts.quick { 20.0 } else { 450.0 };
+    let workload = WorkloadConfig {
+        n_jobs,
+        arrival_rate,
+        mix: Mix::only(JobClass::Small),
+        n_users: 8,
+        seed: 14,
+    };
+    let path = std::env::temp_dir()
+        .join(format!("bayes_sched_e14_{}.jsonl", std::process::id()));
+
+    // phase 1: stream generator -> JSONL writer (no spec vector here either)
+    let w0 = Stopwatch::start();
+    let written = trace::save_stream(stream(&workload), &path, TraceFormat::Jsonl)
+        // a temp-dir write failing is fatal -- lint: allow(unwrap-in-lib)
+        .unwrap();
+    let write_s = w0.elapsed_secs();
+    let trace_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+
+    let mut info = Table::new(
+        "E14 trace",
+        &["format", "specs", "bytes", "write_s"],
+    );
+    info.row(vec![
+        "jsonl".into(),
+        format!("{written}"),
+        format!("{trace_bytes}"),
+        fnum(write_s),
+    ]);
+
+    let mut table = Table::new(
+        "E14 streaming trace replay: bounded-memory ingest through both drivers",
+        &[
+            "driver",
+            "scheduler",
+            "jobs",
+            "makespan_s",
+            "specs_read",
+            "ingest_ms",
+            "ingest_resident_b",
+            "peak_active",
+            "resident_end",
+            "wall_s",
+        ],
+    );
+
+    // phase 2: replay the same file through both drivers x {fifo, bayes}
+    for sched in ["fifo", "bayes"] {
+        // MRv1 tracker
+        let (specs, stats, errs) = open_trace(&path);
+        let cluster = Cluster::homogeneous(n_nodes, (n_nodes / 40).max(1));
+        // by_name covers every registered name -- lint: allow(unwrap-in-lib)
+        let scheduler = crate::scheduler::by_name(sched, workload.seed).unwrap();
+        let cfg = TrackerConfig {
+            queue_cap: 128,
+            reclaim_jobs: true,
+            ..Default::default()
+        };
+        let sw = Stopwatch::start();
+        let mut jt =
+            JobTracker::new_streaming(cluster, scheduler, specs, workload.seed, cfg);
+        jt.run();
+        let cell = CellReport {
+            makespan: jt.metrics.makespan,
+            peak_active: jt.jobs.peak_active(),
+            resident_end: jt.jobs.resident(),
+            wall: sw.elapsed_secs(),
+        };
+        report_row(&mut table, "mrv1", sched, n_jobs, &cell, &stats, &errs);
+
+        // YARN RM
+        let (specs, stats, errs) = open_trace(&path);
+        let cluster = Cluster::homogeneous(n_nodes, (n_nodes / 40).max(1));
+        // the yarn- aliases are registered names -- lint: allow(unwrap-in-lib)
+        let policy = yarn_policy_by_name(&format!("yarn-{sched}"), 1.0).unwrap();
+        let ycfg = YarnConfig {
+            queue_cap: 128,
+            reclaim_jobs: true,
+            ..Default::default()
+        };
+        let sw = Stopwatch::start();
+        let mut rm = ResourceManager::new_streaming(
+            cluster,
+            policy,
+            specs,
+            workload.seed,
+            ycfg,
+        );
+        rm.run();
+        let cell = CellReport {
+            makespan: rm.metrics.makespan,
+            peak_active: rm.jobs.peak_active(),
+            resident_end: rm.jobs.resident(),
+            wall: sw.elapsed_secs(),
+        };
+        report_row(&mut table, "yarn", sched, n_jobs, &cell, &stats, &errs);
+    }
+
+    std::fs::remove_file(&path).ok();
+    vec![info, table]
+}

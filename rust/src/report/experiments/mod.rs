@@ -1,8 +1,9 @@
-//! Experiment drivers E1–E13 (DESIGN.md §4): each regenerates one derived
+//! Experiment drivers E1–E14 (DESIGN.md §4): each regenerates one derived
 //! table from the paper's claims and writes a CSV when an output directory
 //! is configured. E10 is the failure sweep (failure-aware vs failure-blind
 //! bayes on an MTBF grid); the YARN policy comparison lives in E12; E13 is
-//! the million-job scale proof of the arena + calendar-queue core.
+//! the million-job scale proof of the arena + calendar-queue core; E14 is
+//! the bounded-memory streaming trace replay through both drivers.
 
 pub mod common;
 pub mod e1_e2;
@@ -10,6 +11,7 @@ pub mod e10;
 pub mod e11;
 pub mod e12;
 pub mod e13;
+pub mod e14;
 pub mod e3_e4;
 pub mod e5_e7;
 pub mod e8_e9;
@@ -19,9 +21,9 @@ pub use common::ExpOpts;
 use crate::report::table::Table;
 
 /// All experiment ids.
-pub const ALL: [&str; 13] = [
+pub const ALL: [&str; 14] = [
     "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12",
-    "e13",
+    "e13", "e14",
 ];
 
 /// Run one experiment by id.
@@ -40,6 +42,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Option<Vec<Table>> {
         "e11" => e11::e11(opts),
         "e12" => e12::e12(opts),
         "e13" => e13::e13(opts),
+        "e14" => e14::e14(opts),
         _ => return None,
     };
     if let Some(dir) = &opts.out_dir {

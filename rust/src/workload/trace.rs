@@ -1,112 +1,577 @@
-//! Trace serialization: persist generated workloads as JSON so experiments
-//! can replay the exact same job stream across schedulers and seeds.
+//! Streaming trace serialization: persist workloads as JSON and replay
+//! them with **bounded memory** — one [`JobSpec`] decoded per pull from
+//! the tokenizer in `config/json/pull.rs`, never the whole array.
+//!
+//! Two on-disk formats (documented in `TRACES.md` at the repo root):
+//!
+//! - **Array** (`[ {...}, {...} ]`): the original format, one JSON
+//!   document holding every spec.
+//! - **JSONL** (`{...}\n{...}\n`): one compact spec object per line —
+//!   seekable, resumable, `cat`-able; `repro trace convert` translates
+//!   between the two.
+//!
+//! [`TraceReader`] sniffs the format from the first structural byte and
+//! iterates `Result<JobSpec>` with error-at-record granularity: the
+//! first malformed record yields its `Err` and fuses the stream.
+//! [`TraceWriter`] streams specs out through a reused line buffer — no
+//! `Json` tree is ever built in either direction. The `engine-hot-loop`
+//! lint holds this file to the per-record allocation budget (the specs
+//! themselves own heap data; nothing else may).
 
+use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::errors::{anyhow, Context, Result};
+use crate::errors::{anyhow, bail, Context, Result};
 
 use crate::bayes::features::JobFeatures;
 use crate::bayes::utility::Priority;
+use crate::config::json;
+use crate::config::json::pull::{PullParser, Token};
 use crate::config::json::Json;
 use crate::job::job::JobSpec;
 use crate::job::profile::JobClass;
+use crate::obs::{Counter, Gauge, Registry, Stopwatch};
 
-/// Serialize one spec.
-fn spec_to_json(s: &JobSpec) -> Json {
-    let mut o = std::collections::BTreeMap::new();
-    o.insert("name".into(), Json::Str(s.name.clone()));
-    o.insert("user".into(), Json::Str(s.user.clone()));
-    o.insert("pool".into(), Json::Str(s.pool.clone()));
-    o.insert("queue".into(), Json::Str(s.queue.clone()));
-    o.insert("class".into(), Json::Str(s.class.name().into()));
-    o.insert("priority".into(), Json::Num(s.priority as i32 as f64));
-    o.insert(
-        "profile".into(),
-        Json::Arr(vec![
-            Json::Num(s.profile.cpu),
-            Json::Num(s.profile.mem),
-            Json::Num(s.profile.io),
-            Json::Num(s.profile.net),
-        ]),
-    );
-    o.insert(
-        "map_works".into(),
-        Json::Arr(s.map_works.iter().map(|w| Json::Num(*w)).collect()),
-    );
-    o.insert(
-        "reduce_works".into(),
-        Json::Arr(s.reduce_works.iter().map(|w| Json::Num(*w)).collect()),
-    );
-    o.insert("submit_time".into(), Json::Num(s.submit_time));
-    Json::Obj(o)
+/// On-disk trace layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One JSON array holding every spec (the original format).
+    Array,
+    /// One compact spec object per line.
+    Jsonl,
 }
 
-fn spec_from_json(j: &Json) -> Result<JobSpec> {
-    let str_field = |k: &str| -> Result<String> {
-        Ok(j.get(k)
-            .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("missing string field '{k}'"))?
-            .to_string())
-    };
-    let f64s = |k: &str| -> Result<Vec<f64>> {
-        j.get(k)
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing array field '{k}'"))?
-            .iter()
-            .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-number in '{k}'")))
-            .collect()
-    };
-    let class_name = str_field("class")?;
+impl TraceFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceFormat::Array => "array",
+            TraceFormat::Jsonl => "jsonl",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TraceFormat> {
+        match s {
+            "array" | "json" => Some(TraceFormat::Array),
+            "jsonl" => Some(TraceFormat::Jsonl),
+            _ => None,
+        }
+    }
+}
+
+/// Ingest instrumentation: shared handles updated by [`TraceReader`]
+/// while the caller keeps a clone to export after the run. Detached by
+/// default (always counting, exported nowhere) — `registered` binds the
+/// `trace_*` metric names into a [`Registry`] (see OBSERVABILITY.md).
+#[derive(Clone, Debug)]
+pub struct TraceStats {
+    specs_read: Counter,
+    bytes_read: Counter,
+    ingest_nanos: Counter,
+    resident: Gauge,
+}
+
+impl Default for TraceStats {
+    fn default() -> TraceStats {
+        TraceStats {
+            specs_read: Counter::detached(),
+            bytes_read: Counter::detached(),
+            ingest_nanos: Counter::detached(),
+            resident: Gauge::detached(),
+        }
+    }
+}
+
+impl TraceStats {
+    /// Stats wired to the registry's `trace_specs_read`,
+    /// `trace_bytes_read`, `trace_ingest_nanos` counters and the
+    /// `trace_ingest_resident` gauge.
+    pub fn registered(r: &Registry) -> TraceStats {
+        TraceStats {
+            specs_read: r.counter("trace_specs_read"),
+            bytes_read: r.counter("trace_bytes_read"),
+            ingest_nanos: r.counter("trace_ingest_nanos"),
+            resident: r.gauge("trace_ingest_resident"),
+        }
+    }
+
+    /// Records decoded so far.
+    pub fn specs_read(&self) -> u64 {
+        self.specs_read.get()
+    }
+
+    /// Source bytes consumed so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.get()
+    }
+
+    /// Wall nanoseconds spent inside the reader (decode + I/O).
+    pub fn ingest_nanos(&self) -> u64 {
+        self.ingest_nanos.get()
+    }
+
+    /// Peak parser-resident bytes — the O(active) memory proof: stays
+    /// near one read chunk regardless of trace length.
+    pub fn resident_peak(&self) -> u64 {
+        self.resident.get()
+    }
+}
+
+/// Shared slot capturing the first decode error of an infallible spec
+/// stream (see [`TraceReader::into_stream`]). Check after the run.
+#[derive(Clone, Debug, Default)]
+pub struct TraceErrorSlot(std::rc::Rc<std::cell::RefCell<Option<crate::errors::Error>>>);
+
+impl TraceErrorSlot {
+    fn park(&self, e: crate::errors::Error) {
+        *self.0.borrow_mut() = Some(e);
+    }
+
+    /// The parked error, if the stream hit one.
+    pub fn take(&self) -> Option<crate::errors::Error> {
+        self.0.borrow_mut().take()
+    }
+}
+
+/// Streaming trace reader: `Iterator<Item = Result<JobSpec>>` decoding
+/// one spec per pull. Resident memory is O(one record): the tokenizer's
+/// fixed chunk plus per-spec buffers (`resident_bytes` reports it).
+pub struct TraceReader<R: Read> {
+    parser: PullParser<R>,
+    format: TraceFormat,
+    records: u64,
+    finished: bool,
+    last_offset: u64,
+    peak_resident: u64,
+    stats: Option<TraceStats>,
+}
+
+impl TraceReader<std::fs::File> {
+    /// Open a trace file, sniffing Array vs JSONL from the first byte.
+    pub fn open(path: &Path) -> Result<TraceReader<std::fs::File>> {
+        let file = std::fs::File::open(path)
+            .with_context(|| anyhow!("opening trace {path:?}"))?;
+        TraceReader::new(file)
+    }
+}
+
+impl<R: Read> TraceReader<R> {
+    /// Wrap any byte source, sniffing the format from the first
+    /// structural byte: `[` is an Array trace, `{` a JSONL stream.
+    pub fn new(src: R) -> Result<TraceReader<R>> {
+        let mut parser = PullParser::new(src);
+        let (format, finished) = match parser.sniff()? {
+            Some(b'[') => (TraceFormat::Array, false),
+            Some(b'{') => (TraceFormat::Jsonl, false),
+            None => (TraceFormat::Jsonl, true),
+            Some(_) => bail!("trace must be a JSON array or a JSONL stream"),
+        };
+        let mut r = TraceReader {
+            parser,
+            format,
+            records: 0,
+            finished,
+            last_offset: 0,
+            peak_resident: 0,
+            stats: None,
+        };
+        if format == TraceFormat::Array && !finished {
+            // consume the opening '[' so each iteration pulls one element
+            match next_tok(&mut r.parser)? {
+                Token::BeginArr => {}
+                _ => bail!("trace must be a JSON array or a JSONL stream"),
+            }
+        }
+        Ok(r)
+    }
+
+    /// The sniffed on-disk layout.
+    pub fn format(&self) -> TraceFormat {
+        self.format
+    }
+
+    /// Records decoded so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Source bytes consumed so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.parser.offset() as u64
+    }
+
+    /// Bytes resident in the decode path right now — bounded by the
+    /// tokenizer chunk plus the largest single token, never the trace.
+    pub fn resident_bytes(&self) -> usize {
+        self.parser.resident_bytes()
+    }
+
+    /// Attach ingest instrumentation (a clone of `stats` stays with the
+    /// caller for export).
+    pub fn install_stats(&mut self, stats: TraceStats) {
+        self.stats = Some(stats);
+    }
+
+    /// Split into an infallible spec iterator (what the drivers'
+    /// streaming constructors take) plus the slot that catches the
+    /// first malformed-record error — check it after the run.
+    pub fn into_stream(self) -> (Box<dyn Iterator<Item = JobSpec>>, TraceErrorSlot)
+    where
+        R: 'static,
+    {
+        let slot = TraceErrorSlot::default();
+        let park = slot.clone();
+        let it = self.map_while(move |item| match item {
+            Ok(spec) => Some(spec),
+            Err(e) => {
+                park.park(e);
+                None
+            }
+        });
+        (Box::new(it), slot)
+    }
+
+    /// Pull one record; `Ok(None)` at a clean end of trace.
+    fn pull_record(&mut self) -> Result<Option<JobSpec>> {
+        match self.format {
+            TraceFormat::Array => {
+                enum Head {
+                    End,
+                    Obj,
+                }
+                let head = match next_tok(&mut self.parser)? {
+                    Token::EndArr => Head::End,
+                    Token::BeginObj => Head::Obj,
+                    _ => bail!("trace record must be a JSON object"),
+                };
+                match head {
+                    Head::End => {
+                        // end-of-document state errors on trailing bytes
+                        self.parser.next()?;
+                        Ok(None)
+                    }
+                    Head::Obj => decode_spec_body(&mut self.parser).map(Some),
+                }
+            }
+            TraceFormat::Jsonl => {
+                if self.parser.at_eof()? {
+                    return Ok(None);
+                }
+                if self.records > 0 {
+                    self.parser.reset_document();
+                }
+                let opened = matches!(next_tok(&mut self.parser)?, Token::BeginObj);
+                if !opened {
+                    bail!("trace record must be a JSON object");
+                }
+                decode_spec_body(&mut self.parser).map(Some)
+            }
+        }
+    }
+}
+
+impl<R: Read> Iterator for TraceReader<R> {
+    type Item = Result<JobSpec>;
+
+    fn next(&mut self) -> Option<Result<JobSpec>> {
+        if self.finished {
+            return None;
+        }
+        let sw = self.stats.as_ref().map(|_| Stopwatch::start());
+        let pulled = self.pull_record();
+        let out = match pulled {
+            Ok(Some(spec)) => {
+                self.records += 1;
+                Some(Ok(spec))
+            }
+            Ok(None) => {
+                self.finished = true;
+                None
+            }
+            Err(e) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+        };
+        if let (Some(stats), Some(sw)) = (&self.stats, sw) {
+            let offset = self.parser.offset() as u64;
+            stats.bytes_read.add(offset - self.last_offset);
+            self.last_offset = offset;
+            stats.ingest_nanos.add(sw.elapsed_nanos());
+            let resident = self.parser.resident_bytes() as u64;
+            if resident > self.peak_resident {
+                self.peak_resident = resident;
+            }
+            stats.resident.set(self.peak_resident);
+            if matches!(out, Some(Ok(_))) {
+                stats.specs_read.inc();
+            }
+        }
+        out
+    }
+}
+
+/// Pull the next token, treating a clean EOF as truncation.
+fn next_tok<R: Read>(p: &mut PullParser<R>) -> Result<Token<'_>> {
+    match p.next()? {
+        Some(t) => Ok(t),
+        None => Err(anyhow!("unexpected end of trace")),
+    }
+}
+
+/// Which spec field a key names (tag first, then pull the value — the
+/// borrowed key token cannot outlive the next parser call).
+enum Field {
+    Name,
+    User,
+    Pool,
+    Queue,
+    Class,
+    PriorityIdx,
+    Profile,
+    MapWorks,
+    ReduceWorks,
+    SubmitTime,
+    Unknown,
+}
+
+/// Decode the remainder of a spec object (its `BeginObj` is consumed).
+fn decode_spec_body<R: Read>(p: &mut PullParser<R>) -> Result<JobSpec> {
+    let mut name: Option<String> = None;
+    let mut user: Option<String> = None;
+    let mut pool: Option<String> = None;
+    let mut queue: Option<String> = None;
+    let mut class_name: Option<String> = None;
+    let mut priority: Option<f64> = None;
+    let mut profile: Option<Vec<f64>> = None;
+    let mut map_works: Option<Vec<f64>> = None;
+    let mut reduce_works: Option<Vec<f64>> = None;
+    let mut submit_time: Option<f64> = None;
+    loop {
+        let field = match next_tok(p)? {
+            Token::EndObj => break,
+            Token::Key(k) => match k {
+                "name" => Field::Name,
+                "user" => Field::User,
+                "pool" => Field::Pool,
+                "queue" => Field::Queue,
+                "class" => Field::Class,
+                "priority" => Field::PriorityIdx,
+                "profile" => Field::Profile,
+                "map_works" => Field::MapWorks,
+                "reduce_works" => Field::ReduceWorks,
+                "submit_time" => Field::SubmitTime,
+                _ => Field::Unknown,
+            },
+            _ => bail!("malformed trace record"),
+        };
+        match field {
+            Field::Name => name = Some(read_str(p, "name")?),
+            Field::User => user = Some(read_str(p, "user")?),
+            Field::Pool => pool = Some(read_str(p, "pool")?),
+            Field::Queue => queue = Some(read_str(p, "queue")?),
+            Field::Class => class_name = Some(read_str(p, "class")?),
+            Field::PriorityIdx => priority = Some(read_num(p, "priority")?),
+            Field::Profile => profile = Some(read_nums(p, "profile")?),
+            Field::MapWorks => map_works = Some(read_nums(p, "map_works")?),
+            Field::ReduceWorks => reduce_works = Some(read_nums(p, "reduce_works")?),
+            Field::SubmitTime => submit_time = Some(read_num(p, "submit_time")?),
+            Field::Unknown => skip_value(p)?,
+        }
+    }
+    let class_name = class_name.ok_or_else(|| anyhow!("missing string field 'class'"))?;
     let class = JobClass::from_name(&class_name)
         .ok_or_else(|| anyhow!("unknown job class '{class_name}'"))?;
-    let prof = f64s("profile")?;
+    let prof = profile.ok_or_else(|| anyhow!("missing array field 'profile'"))?;
     if prof.len() != 4 {
-        return Err(anyhow!("profile must have 4 entries"));
+        bail!("profile must have 4 entries");
     }
-    let priority = j
-        .get("priority")
-        .and_then(Json::as_u64)
+    let priority = priority
+        .and_then(|f| Json::Num(f).as_u64())
         .ok_or_else(|| anyhow!("missing priority"))?;
     Ok(JobSpec {
-        name: str_field("name")?,
-        user: str_field("user")?,
-        pool: str_field("pool")?,
-        queue: str_field("queue")?,
+        name: name.ok_or_else(|| anyhow!("missing string field 'name'"))?,
+        user: user.ok_or_else(|| anyhow!("missing string field 'user'"))?,
+        pool: pool.ok_or_else(|| anyhow!("missing string field 'pool'"))?,
+        queue: queue.ok_or_else(|| anyhow!("missing string field 'queue'"))?,
         class,
         priority: Priority::from_index(priority as usize),
         profile: JobFeatures { cpu: prof[0], mem: prof[1], io: prof[2], net: prof[3] },
-        map_works: f64s("map_works")?,
-        reduce_works: f64s("reduce_works")?,
-        submit_time: j
-            .get("submit_time")
-            .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("missing submit_time"))?,
+        map_works: map_works.ok_or_else(|| anyhow!("missing array field 'map_works'"))?,
+        reduce_works: reduce_works
+            .ok_or_else(|| anyhow!("missing array field 'reduce_works'"))?,
+        submit_time: submit_time.ok_or_else(|| anyhow!("missing submit_time"))?,
     })
 }
 
-/// Serialize a whole trace.
-pub fn to_json(specs: &[JobSpec]) -> Json {
-    Json::Arr(specs.iter().map(spec_to_json).collect())
+fn read_str<R: Read>(p: &mut PullParser<R>, k: &'static str) -> Result<String> {
+    match next_tok(p)? {
+        Token::Str(s) => Ok(s.to_owned()),
+        _ => Err(anyhow!("missing string field '{k}'")),
+    }
 }
 
-/// Parse a whole trace.
-pub fn from_json(j: &Json) -> Result<Vec<JobSpec>> {
-    j.as_arr()
-        .ok_or_else(|| anyhow!("trace must be a JSON array"))?
-        .iter()
-        .map(spec_from_json)
-        .collect()
+fn read_num<R: Read>(p: &mut PullParser<R>, k: &'static str) -> Result<f64> {
+    match next_tok(p)? {
+        Token::Num(n) => Ok(n),
+        _ => Err(anyhow!("non-number field '{k}'")),
+    }
 }
 
+fn read_nums<R: Read>(p: &mut PullParser<R>, k: &'static str) -> Result<Vec<f64>> {
+    let opened = matches!(next_tok(p)?, Token::BeginArr);
+    if !opened {
+        bail!("missing array field '{k}'");
+    }
+    let mut out: Vec<f64> = Vec::with_capacity(8);
+    loop {
+        enum El {
+            Num(f64),
+            End,
+        }
+        let el = match next_tok(p)? {
+            Token::Num(n) => El::Num(n),
+            Token::EndArr => El::End,
+            _ => bail!("non-number in '{k}'"),
+        };
+        match el {
+            El::Num(n) => out.push(n),
+            El::End => return Ok(out),
+        }
+    }
+}
+
+/// Skip one complete value of any shape (for unknown keys).
+fn skip_value<R: Read>(p: &mut PullParser<R>) -> Result<()> {
+    let mut depth = 0usize;
+    loop {
+        let done = match next_tok(p)? {
+            Token::BeginArr | Token::BeginObj => {
+                depth += 1;
+                false
+            }
+            Token::EndArr | Token::EndObj => {
+                depth -= 1;
+                depth == 0
+            }
+            Token::Key(_) => false,
+            _ => depth == 0,
+        };
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+/// Streaming trace writer: serializes one spec at a time through a
+/// reused line buffer — no `Json` tree, O(one record) memory.
+pub struct TraceWriter<W: Write> {
+    out: W,
+    format: TraceFormat,
+    count: u64,
+    line: String,
+}
+
+impl<W: Write> TraceWriter<W> {
+    pub fn new(out: W, format: TraceFormat) -> TraceWriter<W> {
+        TraceWriter { out, format, count: 0, line: String::with_capacity(256) }
+    }
+
+    /// Append one spec.
+    pub fn write_spec(&mut self, s: &JobSpec) -> Result<()> {
+        self.line.clear();
+        match self.format {
+            TraceFormat::Array => {
+                self.line.push_str(if self.count == 0 { "[\n  " } else { ",\n  " });
+                append_spec(&mut self.line, s);
+            }
+            TraceFormat::Jsonl => {
+                append_spec(&mut self.line, s);
+                self.line.push('\n');
+            }
+        }
+        self.out.write_all(self.line.as_bytes()).context("writing trace")?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Close the trace (writes the array terminator) and flush.
+    pub fn finish(mut self) -> Result<u64> {
+        if self.format == TraceFormat::Array {
+            let tail: &[u8] = if self.count == 0 { b"[]\n" } else { b"\n]\n" };
+            self.out.write_all(tail).context("writing trace")?;
+        }
+        self.out.flush().context("writing trace")?;
+        Ok(self.count)
+    }
+}
+
+/// Serialize one spec compactly, keys in the historical (alphabetical)
+/// order, reusing the shared number/string writers from `config/json`.
+fn append_spec(out: &mut String, s: &JobSpec) {
+    out.push_str("{\"class\":");
+    json::write_escaped(out, s.class.name());
+    out.push_str(",\"map_works\":");
+    append_nums(out, &s.map_works);
+    out.push_str(",\"name\":");
+    json::write_escaped(out, &s.name);
+    out.push_str(",\"pool\":");
+    json::write_escaped(out, &s.pool);
+    out.push_str(",\"priority\":");
+    json::write_num(out, s.priority as i32 as f64);
+    out.push_str(",\"profile\":[");
+    json::write_num(out, s.profile.cpu);
+    out.push(',');
+    json::write_num(out, s.profile.mem);
+    out.push(',');
+    json::write_num(out, s.profile.io);
+    out.push(',');
+    json::write_num(out, s.profile.net);
+    out.push_str("],\"queue\":");
+    json::write_escaped(out, &s.queue);
+    out.push_str(",\"reduce_works\":");
+    append_nums(out, &s.reduce_works);
+    out.push_str(",\"submit_time\":");
+    json::write_num(out, s.submit_time);
+    out.push_str(",\"user\":");
+    json::write_escaped(out, &s.user);
+    out.push('}');
+}
+
+fn append_nums(out: &mut String, xs: &[f64]) {
+    out.push('[');
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        json::write_num(out, *x);
+    }
+    out.push(']');
+}
+
+/// Save a materialized trace in the Array format (historical API).
 pub fn save(specs: &[JobSpec], path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(specs).to_string_pretty())
-        .with_context(|| format!("writing trace {path:?}"))
+    save_stream(specs.iter().cloned(), path, TraceFormat::Array).map(|_| ())
 }
 
+/// Stream specs to disk in either format without materializing them;
+/// returns the record count.
+pub fn save_stream<I>(specs: I, path: &Path, format: TraceFormat) -> Result<u64>
+where
+    I: IntoIterator<Item = JobSpec>,
+{
+    let file = std::fs::File::create(path)
+        .with_context(|| anyhow!("creating trace {path:?}"))?;
+    let mut w = TraceWriter::new(std::io::BufWriter::new(file), format);
+    for spec in specs {
+        w.write_spec(&spec)?;
+    }
+    w.finish()
+}
+
+/// Load a whole trace into memory (historical API; replay paths should
+/// prefer [`TraceReader`] + the drivers' streaming constructors).
 pub fn load(path: &Path) -> Result<Vec<JobSpec>> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading trace {path:?}"))?;
-    from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    TraceReader::open(path)?.collect()
 }
 
 #[cfg(test)]
@@ -114,22 +579,55 @@ mod tests {
     use super::*;
     use crate::workload::generator::{generate, WorkloadConfig};
 
+    fn to_text(specs: &[JobSpec], format: TraceFormat) -> String {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut w = TraceWriter::new(&mut buf, format);
+        for s in specs {
+            w.write_spec(s).unwrap();
+        }
+        w.finish().unwrap();
+        String::from_utf8(buf).unwrap()
+    }
+
+    fn decode(text: &str) -> Result<Vec<JobSpec>> {
+        TraceReader::new(text.as_bytes())?.collect()
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
         let specs = generate(&WorkloadConfig { n_jobs: 30, ..Default::default() });
-        let parsed = from_json(&Json::parse(&to_json(&specs).to_string_pretty()).unwrap())
-            .unwrap();
-        assert_eq!(specs.len(), parsed.len());
-        for (a, b) in specs.iter().zip(&parsed) {
-            assert_eq!(a.name, b.name);
-            assert_eq!(a.user, b.user);
-            assert_eq!(a.class, b.class);
-            assert_eq!(a.priority, b.priority);
-            assert_eq!(a.map_works, b.map_works);
-            assert_eq!(a.reduce_works, b.reduce_works);
-            assert_eq!(a.submit_time, b.submit_time);
-            assert!((a.profile.cpu - b.profile.cpu).abs() < 1e-12);
+        for format in [TraceFormat::Array, TraceFormat::Jsonl] {
+            let parsed = decode(&to_text(&specs, format)).unwrap();
+            assert_eq!(specs.len(), parsed.len());
+            for (a, b) in specs.iter().zip(&parsed) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.user, b.user);
+                assert_eq!(a.pool, b.pool);
+                assert_eq!(a.queue, b.queue);
+                assert_eq!(a.class, b.class);
+                assert_eq!(a.priority, b.priority);
+                assert_eq!(a.map_works, b.map_works);
+                assert_eq!(a.reduce_works, b.reduce_works);
+                assert_eq!(a.submit_time, b.submit_time);
+                // all four profile fields, not just cpu
+                assert!((a.profile.cpu - b.profile.cpu).abs() < 1e-12);
+                assert!((a.profile.mem - b.profile.mem).abs() < 1e-12);
+                assert!((a.profile.io - b.profile.io).abs() < 1e-12);
+                assert!((a.profile.net - b.profile.net).abs() < 1e-12);
+            }
         }
+    }
+
+    #[test]
+    fn array_output_is_valid_json_and_the_old_parser_agrees() {
+        let specs = generate(&WorkloadConfig { n_jobs: 4, ..Default::default() });
+        let text = to_text(&specs, TraceFormat::Array);
+        let tree = Json::parse(&text).unwrap();
+        assert_eq!(tree.as_arr().unwrap().len(), 4);
+        assert_eq!(
+            tree.as_arr().unwrap()[0].get("name").unwrap().as_str().unwrap(),
+            specs[0].name
+        );
     }
 
     #[test]
@@ -140,11 +638,100 @@ mod tests {
         let loaded = load(&path).unwrap();
         assert_eq!(loaded.len(), 5);
         assert_eq!(loaded[0].name, specs[0].name);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_file_roundtrip_and_sniffing() {
+        let specs = generate(&WorkloadConfig { n_jobs: 7, ..Default::default() });
+        let path = std::env::temp_dir().join("bayes_sched_trace_test.jsonl");
+        let n = save_stream(specs.iter().cloned(), &path, TraceFormat::Jsonl).unwrap();
+        assert_eq!(n, 7);
+        let mut r = TraceReader::open(&path).unwrap();
+        assert_eq!(r.format(), TraceFormat::Jsonl);
+        let loaded: Vec<JobSpec> = r.by_ref().collect::<Result<_>>().unwrap();
+        assert_eq!(loaded.len(), 7);
+        assert_eq!(loaded[6].name, specs[6].name);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_traces_parse_in_both_formats() {
+        assert_eq!(decode("[]").unwrap().len(), 0);
+        assert_eq!(decode("").unwrap().len(), 0);
+        assert_eq!(decode("  \n ").unwrap().len(), 0);
     }
 
     #[test]
     fn rejects_malformed() {
-        assert!(from_json(&Json::parse(r#"{"not": "array"}"#).unwrap()).is_err());
-        assert!(from_json(&Json::parse(r#"[{"name": "x"}]"#).unwrap()).is_err());
+        // scalar root: neither format
+        assert!(TraceReader::new(&b"42"[..]).is_err());
+        // wrong shapes fuse at the offending record
+        assert!(decode(r#"{"not": "a spec"}"#).is_err());
+        assert!(decode(r#"[{"name": "x"}]"#).is_err());
+        assert!(decode(r#"[[1,2]]"#).is_err());
+        // truncated array
+        assert!(decode(r#"[{"name":"x""#).is_err());
+    }
+
+    #[test]
+    fn error_at_record_granularity() {
+        let specs = generate(&WorkloadConfig { n_jobs: 3, ..Default::default() });
+        let mut text = to_text(&specs, TraceFormat::Jsonl);
+        text.push_str("{\"broken\": true}\n");
+        let items: Vec<Result<JobSpec>> =
+            TraceReader::new(text.as_bytes()).unwrap().collect();
+        assert_eq!(items.len(), 4);
+        assert!(items[..3].iter().all(|r| r.is_ok()));
+        assert!(items[3].is_err(), "bad record surfaces as Err");
+    }
+
+    #[test]
+    fn into_stream_parks_the_error_and_stats_count() {
+        let specs = generate(&WorkloadConfig { n_jobs: 3, ..Default::default() });
+        let mut text = to_text(&specs, TraceFormat::Jsonl);
+        text.push_str("{\"broken\": true}\n");
+        let owned: Vec<u8> = text.into_bytes();
+        let mut reader = TraceReader::new(std::io::Cursor::new(owned)).unwrap();
+        let stats = TraceStats::default();
+        reader.install_stats(stats.clone());
+        let (stream, slot) = reader.into_stream();
+        assert_eq!(stream.count(), 3, "good prefix streams through");
+        assert!(slot.take().is_some(), "the broken record is parked");
+        assert_eq!(stats.specs_read(), 3);
+        assert!(stats.bytes_read() > 0);
+        assert!(stats.resident_peak() > 0);
+    }
+
+    #[test]
+    fn unknown_fields_are_skipped() {
+        let specs = generate(&WorkloadConfig { n_jobs: 1, ..Default::default() });
+        let mut text = to_text(&specs, TraceFormat::Jsonl);
+        // graft unknown scalar + container fields into the record
+        text = text.replacen(
+            "{\"class\":",
+            "{\"x_meta\":{\"a\":[1,2,{\"b\":null}]},\"x_tag\":\"v\",\"class\":",
+            1,
+        );
+        let parsed = decode(&text).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].name, specs[0].name);
+    }
+
+    #[test]
+    fn resident_memory_stays_bounded() {
+        let specs = generate(&WorkloadConfig { n_jobs: 200, ..Default::default() });
+        let text = to_text(&specs, TraceFormat::Jsonl);
+        let total = text.len();
+        let mut r = TraceReader::new(text.as_bytes()).unwrap();
+        let mut peak = 0usize;
+        while let Some(item) = r.next() {
+            item.unwrap();
+            peak = peak.max(r.resident_bytes());
+        }
+        assert!(
+            peak < total / 2,
+            "decode path resident {peak} must stay far below the {total}-byte trace"
+        );
     }
 }

@@ -61,6 +61,14 @@ pub struct YarnConfig {
     /// A task failing this many times kills its application.
     pub max_task_attempts: u32,
     pub max_sim_time: Time,
+    /// Per-heartbeat queue-view cap (mirrors
+    /// `TrackerConfig::queue_cap`): one heartbeat scores at most this
+    /// many jobs, so scheduling work is O(cap) even with a deep backlog.
+    pub queue_cap: usize,
+    /// Recycle drained jobs' arena slots (mirrors
+    /// `TrackerConfig::reclaim_jobs`) — required for O(active) memory on
+    /// million-job streaming replays.
+    pub reclaim_jobs: bool,
 }
 
 impl Default for YarnConfig {
@@ -73,6 +81,8 @@ impl Default for YarnConfig {
             fit_headroom: 1.0,
             max_task_attempts: 4,
             max_sim_time: 1e7,
+            queue_cap: usize::MAX,
+            reclaim_jobs: false,
         }
     }
 }
@@ -123,9 +133,16 @@ pub struct ResourceManager {
     /// Declared resource usage per node (fit-check bookkeeping — actual
     /// usage lives in the Node's contention state).
     declared: Vec<crate::cluster::resources::Resources>,
-    pending_specs: std::vec::IntoIter<JobSpec>,
+    /// Workload in submit-time order, drained into arrival events. A
+    /// boxed iterator so streaming replays
+    /// ([`ResourceManager::new_streaming`]) pull specs into existence
+    /// one ahead of the virtual clock instead of materializing them all.
+    pending_specs: Box<dyn Iterator<Item = JobSpec>>,
     /// Spec whose arrival event is in flight (submitted when it fires).
     next_spec: Option<JobSpec>,
+    /// Scratch buffer for the per-heartbeat queue view (reused across
+    /// heartbeats; capped at `cfg.queue_cap`).
+    queue_scratch: Vec<JobId>,
     pending_feedback: Vec<Vec<PendingFeedback>>,
     /// OOM-doomed attempts, per node: excluded from completion
     /// rescheduling so their pending TaskFail stays valid (same per-node
@@ -155,9 +172,34 @@ impl ResourceManager {
         cfg: YarnConfig,
     ) -> ResourceManager {
         specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
+        ResourceManager::new_streaming(
+            cluster,
+            policy,
+            Box::new(specs.into_iter()),
+            seed,
+            cfg,
+        )
+    }
+
+    /// Build an RM over a streaming workload (mirrors
+    /// [`crate::coordinator::jobtracker::JobTracker::new_streaming`]):
+    /// `specs` is pulled one job ahead of the virtual clock, so a
+    /// million-job replay never holds more than one unsubmitted spec in
+    /// memory. The iterator MUST yield specs in nondecreasing
+    /// `submit_time` order (workload generators and saved traces
+    /// qualify; an out-of-order spec would have its arrival clamped to
+    /// `now` and counted in `engine.clamped_events()`).
+    pub fn new_streaming(
+        cluster: Cluster,
+        policy: SchedulerPolicy,
+        specs: Box<dyn Iterator<Item = JobSpec>>,
+        seed: u64,
+        cfg: YarnConfig,
+    ) -> ResourceManager {
         let n = cluster.len();
         let hdfs =
             Namespace::new(cluster.topology.n_nodes, cluster.topology.n_racks, seed);
+        let reclaim = cfg.reclaim_jobs;
         let mut rm = ResourceManager {
             engine: Engine::new(),
             cluster,
@@ -168,8 +210,9 @@ impl ResourceManager {
             cfg,
             failures: FailureHistory::new(),
             declared: vec![crate::cluster::resources::Resources::ZERO; n],
-            pending_specs: specs.into_iter(),
+            pending_specs: specs,
             next_spec: None,
+            queue_scratch: Vec::new(),
             pending_feedback: (0..n).map(|_| Vec::new()).collect(),
             doomed: vec![Vec::new(); n],
             inflight_feats: vec![Vec::new(); n],
@@ -178,6 +221,7 @@ impl ResourceManager {
             audit: AuditSink::default_for_build(),
             obs: DriverObs::default(),
         };
+        rm.jobs.set_reclaim(reclaim);
         rm.emit_preamble();
         rm.schedule_next_arrival();
         for node in rm.cluster.topology.all_nodes() {
@@ -489,14 +533,13 @@ impl ResourceManager {
             .max_containers_per_node
             .saturating_sub(self.cluster.node(node_id).running().len() as u32);
         if free_containers > 0 {
-            // requests that fit the free *declared* headroom right now
+            // requests that fit the free *declared* headroom right now —
+            // the (possibly capped) queue view reuses the scratch buffer,
+            // so a warm heartbeat allocates nothing
             let headroom = self.headroom(node_id);
-            let queue: Vec<JobId> = self
-                .jobs
-                .schedulable()
-                .into_iter()
-                .filter(|id| self.jobs.get(*id).demand.fits_within(&headroom))
-                .collect();
+            let mut queue = std::mem::take(&mut self.queue_scratch);
+            self.jobs.schedulable_prefix(self.cfg.queue_cap, &mut queue);
+            queue.retain(|id| self.jobs.get(*id).demand.fits_within(&headroom));
             let node_feats = self.cluster.node(node_id).features();
             let (budget, node_total_slots) = {
                 let node = self.cluster.node(node_id);
@@ -582,6 +625,7 @@ impl ResourceManager {
                     );
                 }
             }
+            self.queue_scratch = queue;
         }
 
         if !self.arrivals_done || !self.jobs.all_complete() {
@@ -936,5 +980,33 @@ mod tests {
     #[test]
     fn unknown_policy_rejected() {
         assert!(yarn_policy_by_name("nope", 1.0).is_err());
+    }
+
+    #[test]
+    fn streaming_replay_reclaims_job_slots() {
+        let cluster = Cluster::homogeneous(6, 2);
+        let cfg = WorkloadConfig {
+            n_jobs: 20,
+            arrival_rate: 0.5,
+            seed: 11,
+            ..Default::default()
+        };
+        let mut rm = ResourceManager::new_streaming(
+            cluster,
+            yarn_policy_by_name("yarn-fifo", 1.0).unwrap(),
+            Box::new(crate::workload::generator::stream(&cfg)),
+            11,
+            YarnConfig { queue_cap: 64, reclaim_jobs: true, ..Default::default() },
+        );
+        rm.run();
+        assert!(rm.jobs.all_complete(), "streamed workload must drain");
+        assert_eq!(rm.metrics.completed_jobs() + rm.jobs.failed_count(), 20);
+        // reclamation keeps the arena at O(active), not O(submitted)
+        assert!(
+            rm.jobs.resident() < 20,
+            "resident {} should shrink below the 20 submitted jobs",
+            rm.jobs.resident()
+        );
+        assert!(rm.jobs.peak_active() <= 20);
     }
 }

@@ -1,0 +1,250 @@
+//! Differential fuzz suite: the streaming pull tokenizer (which now
+//! backs `Json::parse`) against the original recursive parser kept as
+//! an oracle in `config::json::reference`. Both must agree on
+//! accept/reject AND on the parsed value for every document here —
+//! including hostile ones: deep nesting at the cap, huge numbers,
+//! truncated prefixes, invalid `\u` escapes, raw control bytes, and a
+//! reader that delivers the document one byte per `read()` call.
+
+use std::io::Read;
+
+use bayes_sched::config::json::pull::{PullParser, MAX_DEPTH};
+use bayes_sched::config::json::{reference, Json};
+
+/// Assert the oracle and the pull-backed parser agree on `text`.
+fn agree(text: &str) {
+    let tree = reference::parse(text);
+    let pull = Json::parse(text);
+    match (&tree, &pull) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "values differ for {text:?}"),
+        (Err(_), Err(_)) => {}
+        _ => panic!("disagreement on {text:?}: tree={tree:?} pull={pull:?}"),
+    }
+}
+
+/// Documents both parsers accept (also fed to the truncation sweep).
+const VALID: &[&str] = &[
+    "null",
+    "true",
+    "false",
+    "0",
+    "-0",
+    "3.5",
+    "1e3",
+    "1E3",
+    "2.5e-2",
+    "-12.75e+1",
+    "[]",
+    "{}",
+    r#""""#,
+    r#""a""#,
+    r#""\n\t\\\/\"\b\f\r""#,
+    r#""Aé""#,
+    "\"\u{3c0} and text\"",
+    r#"{"a":[1,{"b":null},"x"],"c":true,"d":[[],{}]}"#,
+    "  [ 1 ,\t2 , \n3 ]  ",
+    r#"[[],[[]],{"":{}}]"#,
+    r#"{"a":1,"a":2}"#,
+    "[0.5,-2e10,1e999]",
+];
+
+/// Documents both parsers reject.
+const INVALID: &[&str] = &[
+    "",
+    "   ",
+    "nul",
+    "tru",
+    "truex",
+    "[1,]",
+    "[,1]",
+    "[1 2]",
+    "[1,2",
+    r#"{"a":}"#,
+    r#"{"a"1}"#,
+    r#"{"a":1,}"#,
+    "{a:1}",
+    r#"{"a":1"#,
+    "\"abc",
+    r#""\q""#,
+    "-",
+    "+1",
+    ".5",
+    "1e",
+    "1e+",
+    "1 2",
+    "[] []",
+    "{}x",
+    "]",
+    "}",
+    ",",
+    ":",
+];
+
+#[test]
+fn corpus_agrees() {
+    for doc in VALID {
+        agree(doc);
+        assert!(Json::parse(doc).is_ok(), "expected accept: {doc:?}");
+    }
+    for doc in INVALID {
+        agree(doc);
+        assert!(Json::parse(doc).is_err(), "expected reject: {doc:?}");
+    }
+}
+
+#[test]
+fn every_truncated_prefix_agrees() {
+    for doc in VALID {
+        for i in 0..doc.len() {
+            if doc.is_char_boundary(i) {
+                agree(&doc[..i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn deep_nesting_errors_at_the_shared_cap() {
+    let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+    let a = reference::parse(&ok).expect("oracle accepts depth == MAX_DEPTH");
+    let b = Json::parse(&ok).expect("pull accepts depth == MAX_DEPTH");
+    assert_eq!(a, b);
+
+    let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+    assert!(reference::parse(&deep).is_err());
+    assert!(Json::parse(&deep).is_err());
+
+    // mixed object nesting hits the same cap
+    let n = MAX_DEPTH + 1;
+    let mixed = r#"{"k":"#.repeat(n) + "1" + &"}".repeat(n);
+    assert!(reference::parse(&mixed).is_err());
+    assert!(Json::parse(&mixed).is_err());
+}
+
+#[test]
+fn huge_numbers_agree_and_as_u64_respects_the_boundary() {
+    for doc in [
+        "18446744073709551616",  // 2^64
+        "18446744073709551615",  // u64::MAX (rounds up to 2^64 in f64)
+        "9007199254740992",      // 2^53: exactly representable
+        "1e999",                 // overflows to +inf in both
+        "-1e999",
+        "1e-999",
+        "123456789012345678901234567890",
+    ] {
+        agree(doc);
+    }
+    // 2^53 round-trips exactly
+    assert_eq!(
+        Json::parse("9007199254740992").unwrap().as_u64(),
+        Some(9_007_199_254_740_992)
+    );
+    // at and past 2^64 the f64 saturates — as_u64 must refuse, not clamp
+    assert_eq!(Json::parse("18446744073709551616").unwrap().as_u64(), None);
+    assert_eq!(Json::parse("18446744073709551615").unwrap().as_u64(), None);
+    assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+    assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+    assert_eq!(Json::parse("1e999").unwrap().as_u64(), None);
+    assert_eq!(Json::parse("0").unwrap().as_u64(), Some(0));
+}
+
+#[test]
+fn surrogate_escapes_agree() {
+    // a valid pair decodes to the astral scalar in both parsers
+    let pair = concat!(r#""\ud83d"#, r#"\ude00""#);
+    agree(pair);
+    assert_eq!(
+        Json::parse(pair).unwrap(),
+        Json::Str("\u{1F600}".to_string())
+    );
+
+    // lone and mismatched surrogates, bad hex, truncated escapes
+    let high_then_scalar = concat!(r#""\ud83d"#, r#"A""#);
+    let high_then_escape = concat!(r#""\ud83d"#, r#"\n""#);
+    for doc in [
+        r#""\ud83d""#,        // lone high
+        r#""\ude00""#,        // lone low
+        r#""\ud83dAB""#,      // high then raw chars
+        high_then_scalar,     // high then non-low unit
+        high_then_escape,     // high then a non-\u escape
+        r#""\u12G4""#,        // bad hex digit
+        r#""\u12"#,           // truncated escape + unterminated string
+        r#""\u""#,
+    ] {
+        agree(doc);
+        assert!(Json::parse(doc).is_err(), "expected reject: {doc:?}");
+    }
+}
+
+#[test]
+fn raw_control_characters_pass_through_identically() {
+    // both parsers deliberately let raw control bytes through inside
+    // strings (documented in pull.rs) — what matters is they agree
+    for (doc, want) in [
+        ("\"a\u{0001}b\"", "a\u{0001}b"),
+        ("\"a\u{0000}\"", "a\u{0000}"),
+        ("\"line\nbreak\"", "line\nbreak"),
+    ] {
+        agree(doc);
+        assert_eq!(
+            Json::parse(doc).unwrap(),
+            Json::Str(want.to_string()),
+            "{doc:?}"
+        );
+    }
+}
+
+#[test]
+fn invalid_utf8_bytes_error_in_the_pull_parser() {
+    // the oracle takes &str so raw invalid UTF-8 can only reach the
+    // byte-oriented pull parser — it must error, not panic or mangle
+    for doc in [&b"\"\xff\""[..], &b"[\"\xc3\x28\"]"[..], &b"{\xff}"[..]] {
+        let mut p = PullParser::from_slice(doc);
+        let r = (|| -> Result<(), bayes_sched::config::json::JsonError> {
+            while p.next()?.is_some() {}
+            Ok(())
+        })();
+        assert!(r.is_err(), "expected reject: {doc:?}");
+    }
+}
+
+/// A reader that returns one byte per `read()` call — worst-case
+/// chunking for the pull parser's buffered refill path.
+struct OneByte<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl Read for OneByte<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() || buf.is_empty() {
+            return Ok(0);
+        }
+        buf[0] = self.data[self.pos];
+        self.pos += 1;
+        Ok(1)
+    }
+}
+
+fn tokens<R: Read>(mut p: PullParser<R>) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    loop {
+        match p.next() {
+            Ok(Some(t)) => out.push(format!("{t:?}")),
+            Ok(None) => return Ok(out),
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+}
+
+#[test]
+fn one_byte_reads_token_identically_to_the_slice_path() {
+    for doc in VALID.iter().chain(INVALID.iter()) {
+        let whole = tokens(PullParser::from_slice(doc.as_bytes()));
+        let chunked = tokens(PullParser::new(OneByte {
+            data: doc.as_bytes(),
+            pos: 0,
+        }));
+        assert_eq!(whole, chunked, "chunking changed the outcome for {doc:?}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Memory-regression suite for streaming trace replay: a generated
+//! JSONL trace flows through both drivers without ever materializing
+//! the spec vector, the parser's resident footprint stays a small
+//! constant (chunk + per-record scratch, not O(file)), and the job
+//! arena stays O(active) thanks to slot reclamation.
+
+use std::path::PathBuf;
+
+use bayes_sched::cluster::Cluster;
+use bayes_sched::coordinator::jobtracker::{JobTracker, TrackerConfig};
+use bayes_sched::job::profile::JobClass;
+use bayes_sched::scheduler;
+use bayes_sched::workload::generator::{stream, Mix, WorkloadConfig};
+use bayes_sched::workload::trace::{self, TraceFormat, TraceReader, TraceStats};
+use bayes_sched::yarn::{yarn_policy_by_name, ResourceManager, YarnConfig};
+
+const N_JOBS: usize = 1_500;
+
+fn workload() -> WorkloadConfig {
+    WorkloadConfig {
+        n_jobs: N_JOBS,
+        // ~40% of the Small-class service rate on 32 nodes: backlog
+        // stays bounded, so peak_active pins reclamation, not overload
+        arrival_rate: 1.0,
+        mix: Mix::only(JobClass::Small),
+        n_users: 8,
+        seed: 77,
+    }
+}
+
+fn write_trace(tag: &str) -> (PathBuf, u64) {
+    let path = std::env::temp_dir().join(format!(
+        "bayes_sched_stream_test_{tag}_{}.jsonl",
+        std::process::id()
+    ));
+    let n = trace::save_stream(stream(&workload()), &path, TraceFormat::Jsonl)
+        .expect("writing trace");
+    assert_eq!(n, N_JOBS as u64);
+    let bytes = std::fs::metadata(&path).expect("trace metadata").len();
+    (path, bytes)
+}
+
+#[test]
+fn tracker_replay_is_bounded_in_memory() {
+    let (path, trace_bytes) = write_trace("mrv1");
+
+    let mut reader = TraceReader::open(&path).expect("opening trace");
+    let stats = TraceStats::default();
+    reader.install_stats(stats.clone());
+    let (specs, errs) = reader.into_stream();
+
+    let cfg = TrackerConfig {
+        queue_cap: 64,
+        reclaim_jobs: true,
+        ..Default::default()
+    };
+    let mut jt = JobTracker::new_streaming(
+        Cluster::homogeneous(32, 4),
+        scheduler::by_name("fifo", 77).unwrap(),
+        specs,
+        77,
+        cfg,
+    );
+    jt.run();
+    std::fs::remove_file(&path).ok();
+
+    assert!(errs.take().is_none(), "trace replay hit a decode error");
+    assert!(jt.jobs.all_complete());
+    assert_eq!(stats.specs_read(), N_JOBS as u64);
+    assert_eq!(stats.bytes_read(), trace_bytes);
+
+    // the decode path holds a fixed chunk plus one record of scratch —
+    // far below the file, which is the whole point of streaming
+    assert!(trace_bytes > 200_000, "trace suspiciously small: {trace_bytes}");
+    let peak = stats.resident_peak();
+    assert!(peak > 0, "resident gauge never set");
+    assert!(
+        peak < 64 * 1024 && peak < trace_bytes / 8,
+        "parser resident {peak} B is not bounded (trace is {trace_bytes} B)"
+    );
+
+    // arena reclamation: slots recycle, so the high-water mark and the
+    // end-of-run residency both sit far below the job count
+    assert!(
+        jt.jobs.peak_active() < N_JOBS / 4,
+        "peak_active {} suggests specs were materialized",
+        jt.jobs.peak_active()
+    );
+    assert!(
+        jt.jobs.resident() < N_JOBS / 4,
+        "resident {} jobs at end of run",
+        jt.jobs.resident()
+    );
+}
+
+#[test]
+fn yarn_replay_is_bounded_in_memory() {
+    let (path, trace_bytes) = write_trace("yarn");
+
+    let mut reader = TraceReader::open(&path).expect("opening trace");
+    let stats = TraceStats::default();
+    reader.install_stats(stats.clone());
+    let (specs, errs) = reader.into_stream();
+
+    let cfg = YarnConfig {
+        queue_cap: 64,
+        reclaim_jobs: true,
+        ..Default::default()
+    };
+    let mut rm = ResourceManager::new_streaming(
+        Cluster::homogeneous(32, 4),
+        yarn_policy_by_name("yarn-fifo", 1.0).unwrap(),
+        specs,
+        77,
+        cfg,
+    );
+    rm.run();
+    std::fs::remove_file(&path).ok();
+
+    assert!(errs.take().is_none(), "trace replay hit a decode error");
+    assert!(rm.jobs.all_complete());
+    assert_eq!(stats.specs_read(), N_JOBS as u64);
+
+    let peak = stats.resident_peak();
+    assert!(
+        peak > 0 && peak < 64 * 1024 && peak < trace_bytes / 8,
+        "parser resident {peak} B is not bounded (trace is {trace_bytes} B)"
+    );
+    assert!(rm.jobs.peak_active() < N_JOBS / 4);
+    assert!(rm.jobs.resident() < N_JOBS / 4);
+}
+
+#[test]
+fn streaming_replay_matches_vector_replay() {
+    // same trace, streamed vs loaded wholesale: identical completion
+    // counts and makespan — streaming changes memory, not behaviour
+    let (path, _) = write_trace("equiv");
+
+    let all = trace::load(&path).expect("loading trace");
+    let mut a = JobTracker::new(
+        Cluster::homogeneous(16, 2),
+        scheduler::by_name("fifo", 77).unwrap(),
+        all,
+        77,
+        TrackerConfig::default(),
+    );
+    a.run();
+
+    let reader = TraceReader::open(&path).expect("opening trace");
+    let (specs, errs) = reader.into_stream();
+    let mut b = JobTracker::new_streaming(
+        Cluster::homogeneous(16, 2),
+        scheduler::by_name("fifo", 77).unwrap(),
+        specs,
+        77,
+        TrackerConfig::default(),
+    );
+    b.run();
+    std::fs::remove_file(&path).ok();
+
+    assert!(errs.take().is_none());
+    assert_eq!(
+        a.metrics.completed_jobs(),
+        b.metrics.completed_jobs(),
+        "streaming and vector replay diverged"
+    );
+    // identical event sequence => identical clock -- lint: allow(float-eq)
+    assert_eq!(a.metrics.makespan, b.metrics.makespan);
+}
